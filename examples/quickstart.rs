@@ -1,0 +1,107 @@
+//! Quickstart: compress a model's KV cache with CSKV and generate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full public API surface end-to-end on a small scale:
+//! 1. load (or fall back from) TinyLM weights;
+//! 2. collect calibration activations;
+//! 3. ASVD-initialize + layer-wise fine-tune the low-rank factors (§2.2);
+//! 4. generate with the bi-branch cache (§2.1) and compare memory + output
+//!    against the uncompressed cache.
+
+use std::sync::Arc;
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::data::corpus::{calibration_docs, CorpusConfig};
+use cskv::data::{tasks, vocab};
+use cskv::finetune::{build_factors, FinetuneConfig};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, QuantMode};
+use cskv::model::{engine::Engine, ModelWeights};
+use cskv::util::prng::Pcg64;
+use cskv::util::table::bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Model weights: use the pretrained checkpoint if present, else a
+    //    random init (the mechanics are identical; accuracy is only
+    //    meaningful with `make pretrain`).
+    let wpath = cskv::runs_dir().join("tinylm.bin");
+    let weights = match ModelWeights::load(&wpath) {
+        Ok(w) => {
+            println!("using trained weights {}", wpath.display());
+            w
+        }
+        Err(_) => {
+            println!("no trained weights — using random init (run `make pretrain` for real accuracy)");
+            ModelWeights::init(&cskv::model::ModelConfig::tiny(), 7)
+        }
+    };
+    let engine = Engine::new(Arc::new(weights));
+    let cfg = engine.w.cfg.clone();
+
+    // 2. Calibration activations (stands in for the paper's Pile subset).
+    println!("collecting calibration activations…");
+    let docs = calibration_docs(&CorpusConfig::default(), 16, 99);
+    let calib = engine.collect_calibration(&docs, 2048, 1);
+
+    // 3. Channel shrinking at 80% compression with ASVD init + recon FT.
+    let plan = KvCompressionPlan::uniform(0.8);
+    println!(
+        "fine-tuning low-rank factors: keep {}/{} channels per K/V",
+        plan.rank_k(cfg.d_model),
+        cfg.d_model
+    );
+    let report = build_factors(
+        &engine.w,
+        &calib,
+        plan,
+        &FinetuneConfig {
+            init: InitMethod::asvd_default(),
+            steps: 200,
+            ..Default::default()
+        },
+    );
+    println!("layer-wise reconstruction loss (Eq. 2): {:.6}", report.final_total_loss);
+    let factors = Arc::new(report.factors);
+
+    // 4. Generate on a long-context retrieval prompt with both caches.
+    let mut rng = Pcg64::new(42);
+    let sample = tasks::line_retrieval_ctx(384, &mut rng);
+    println!(
+        "\nprompt: {} tokens; query: {}",
+        sample.ctx_len,
+        vocab::detokenize(&sample.prompt[sample.prompt.len() - 3..])
+    );
+    println!("expected answer: {}", vocab::detokenize(&sample.answer));
+
+    let mut full = FullCache::new(cfg.n_layers, cfg.d_model);
+    let (out_full, stats_full) = engine.generate(&sample.prompt, vocab::VALUE_LEN, &mut full);
+    let mut cskv = CskvCache::new(
+        Arc::clone(&factors),
+        cfg.d_model,
+        CskvConfig {
+            window: 32,
+            quant: QuantMode::None,
+        },
+    );
+    let (out_cskv, stats_cskv) = engine.generate(&sample.prompt, vocab::VALUE_LEN, &mut cskv);
+
+    println!(
+        "\nfull cache   : {} | kv = {}",
+        vocab::detokenize(&out_full),
+        bytes(stats_full.kv_bytes_final)
+    );
+    println!(
+        "cskv 80%     : {} | kv = {}  ({:.1}% saved)",
+        vocab::detokenize(&out_cskv),
+        bytes(stats_cskv.kv_bytes_final),
+        (1.0 - stats_cskv.kv_bytes_final as f64 / stats_full.kv_bytes_final as f64) * 100.0
+    );
+    println!(
+        "correct: full={} cskv={}",
+        tasks::score_exact(&out_full, &sample.answer),
+        tasks::score_exact(&out_cskv, &sample.answer),
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real small workload:
+//!
+//! 1. **Train** TinyLM through the PJRT `train_step` artifact (L2 JAX
+//!    fwd/bwd lowered once; the L3 Rust trainer drives the loop and logs
+//!    the loss curve).
+//! 2. **Compress**: calibrate → ASVD init → layer-wise reconstruction
+//!    fine-tuning (§2.2).
+//! 3. **Serve** batched long-context retrieval requests through the
+//!    coordinator with (a) the full cache and (b) the CSKV bi-branch
+//!    cache under the same KV budget, reporting accuracy, latency
+//!    percentiles, throughput and KV memory.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_and_serve -- --steps 120
+//! ```
+//! (`--steps 0` reuses runs/tinylm.bin if present.)
+
+use std::sync::Arc;
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::data::corpus::{calibration_docs, CorpusConfig};
+use cskv::data::tasks;
+use cskv::eval::experiments::{factors_for, Env};
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::ModelWeights;
+use cskv::runtime::trainer::{TrainConfig, Trainer};
+use cskv::runtime::Runtime;
+use cskv::util::cli::Args;
+use cskv::util::prng::Pcg64;
+use cskv::util::table::{bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 120);
+    let wpath = cskv::runs_dir().join("tinylm.bin");
+
+    // ---- 1. TRAIN (L3 drives the AOT train_step) -----------------------
+    if steps > 0 || !wpath.exists() {
+        let rt = Runtime::load_default()?;
+        let mut trainer = Trainer::new(&rt, args.get_u64("seed", 1234))?;
+        println!("training TinyLM for {steps} steps through PJRT train_step…");
+        let losses = trainer.train(&TrainConfig {
+            steps: steps.max(30),
+            lr: args.get_f64("lr", 3e-3) as f32,
+            seed: args.get_u64("seed", 1234),
+            log_every: 20,
+        })?;
+        trainer.weights.save(&wpath)?;
+        println!(
+            "loss curve: {:.3} → {:.3} over {} steps (full curve in runs/pretrain_loss.csv)",
+            losses[0],
+            losses.last().unwrap(),
+            losses.len()
+        );
+        let csv: String = losses.iter().enumerate().map(|(i, l)| format!("{i},{l}\n")).collect();
+        std::fs::write(cskv::runs_dir().join("pretrain_loss.csv"), format!("step,loss\n{csv}"))?;
+    } else {
+        println!("reusing existing {}", wpath.display());
+    }
+
+    // ---- 2. COMPRESS -----------------------------------------------------
+    let env = Env::load_default()?;
+    let plan = KvCompressionPlan::uniform(args.get_f64("ratio", 0.8));
+    println!(
+        "building CSKV factors: keep {}/{} channels, ASVD init + recon fine-tune…",
+        plan.rank_k(env.d_model()),
+        env.d_model()
+    );
+    let factors = factors_for(&env, plan, InitMethod::asvd_default(), 250, QatMode::Off);
+
+    // Sanity: reconstruction quality on calibration data.
+    let docs = calibration_docs(&CorpusConfig::default(), 4, 5);
+    let calib = env.engine.collect_calibration(&docs, 1024, 2);
+    for (li, lf) in factors.layers.iter().enumerate() {
+        println!(
+            "  layer {li}: rel K err {:.4}, rel V err {:.4}",
+            lf.k.relative_error(&calib[li], &env.engine.w.layers[li].wk),
+            lf.v.relative_error(&calib[li], &env.engine.w.layers[li].wv)
+        );
+    }
+
+    // ---- 3. SERVE --------------------------------------------------------
+    let n_req = args.get_usize("requests", 24);
+    let ctx = args.get_usize("ctx", 384);
+    let kv_budget = env.engine.w.cfg.kv_bytes_full(512) * 2; // ~2 full seqs
+    let weights: Arc<ModelWeights> = Arc::clone(&env.engine.w);
+
+    let mk_setup = |use_cskv: bool| -> Setup {
+        let w = Arc::clone(&weights);
+        let f = Arc::clone(&factors);
+        Box::new(move || {
+            let engine = cskv::model::engine::Engine::new(w);
+            let factory: BackendFactory = Box::new(move || {
+                let c = engine.w.cfg.clone();
+                let policy: Box<dyn KvCachePolicy> = if use_cskv {
+                    Box::new(CskvCache::new(
+                        Arc::clone(&f),
+                        c.d_model,
+                        CskvConfig { window: 32, quant: QuantMode::None },
+                    ))
+                } else {
+                    Box::new(FullCache::new(c.n_layers, c.d_model))
+                };
+                Ok(Box::new(RustSequenceBackend::new(engine.clone(), policy)))
+            });
+            Ok(factory)
+        })
+    };
+
+    let mut t = Table::new(
+        &format!("serving {n_req} retrieval requests (ctx≈{ctx}, KV budget {})", bytes(kv_budget)),
+        &["cache", "accuracy", "tok/s", "p50 ttft", "p95 ttft", "max conc.", "kv peak"],
+    );
+    for (label, use_cskv) in [("full", false), ("CSKV 80%", true)] {
+        let coord = Coordinator::start(
+            mk_setup(use_cskv),
+            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(kv_budget) },
+        );
+        let mut rng = Pcg64::new(31);
+        let mut answers = Vec::new();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|_| {
+                let s = tasks::line_retrieval_ctx(ctx, &mut rng);
+                answers.push(s.answer.clone());
+                coord.submit(s.prompt, cskv::data::vocab::VALUE_LEN)
+            })
+            .collect();
+        let mut correct = 0;
+        for (rx, ans) in rxs.into_iter().zip(answers) {
+            let r = rx.recv()?;
+            if tasks::score_exact(&r.tokens, &ans) {
+                correct += 1;
+            }
+        }
+        let snap = coord.shutdown();
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", correct as f64 / n_req as f64),
+            format!("{:.1}", snap.throughput_tok_s()),
+            format!("{:.3}s", snap.ttft_s.percentile(50.0)),
+            format!("{:.3}s", snap.ttft_s.percentile(95.0)),
+            snap.active_peak.to_string(),
+            bytes(snap.kv_bytes_peak),
+        ]);
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("e2e_serving.csv"))?;
+    println!("E2E complete — recorded in runs/e2e_serving.csv (see EXPERIMENTS.md §E2E)");
+    Ok(())
+}

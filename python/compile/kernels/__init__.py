@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping)."""

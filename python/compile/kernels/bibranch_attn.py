@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: fused bi-branch historical attention (§2.1, Fig. 1b).
+
+The paper's decode hot spot: attend a single query against the compressed
+history ``C`` (``[max_seq, r]``) *without materializing* the reconstructed
+keys/values ``K̂ = C·B_K``, ``V̂ = C·B_V`` in slow memory.
+
+Schedule (flash-attention-style, TPU mapping in DESIGN.md):
+
+* ``B_K``/``B_V`` (``[r, d]``, tiny) and the query stay resident in VMEM.
+* ``C`` streams HBM→VMEM in ``(BLOCK_N, r)`` tiles via the BlockSpec grid.
+* Per tile: ``K̂_tile = C_tile · B_K`` on the MXU, RoPE at absolute
+  positions (history row index == absolute position, since the compressed
+  cache stores *every* token), per-head scores against ``q``, and an
+  **online softmax** update of the ``(o, m, l)`` accumulators held in the
+  output refs (the sequential TPU grid makes read-modify-write safe).
+* Rows ``>= hist`` are masked (the window branch owns them).
+
+The kernel returns the *partial* softmax state ``(o, m, l)`` so the L2
+model can merge it with the dense window branch and the current token
+(``model._merge_softmax``) — exactly how the paper's bi-branch concat is
+realized without ever concatenating.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+NEG = -1e30
+
+
+def _rope_tile(k, pos, n_heads, base):
+    """Rotate-half RoPE on a [BN, d_model] tile at integer positions [BN]."""
+    bn, dm = k.shape
+    d = dm // n_heads
+    half = d // 2
+    kh = k.reshape(bn, n_heads, d)
+    theta = base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / d)
+    ang = pos.astype(jnp.float32)[:, None] * theta[None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    cos = jnp.cos(ang)[:, None, :]
+    a, b = kh[..., :half], kh[..., half:]
+    rot = jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return rot.reshape(bn, dm)
+
+
+def _make_kernel(n_heads: int, rope_base: float):
+    def kernel(hist_ref, q_ref, ck_ref, bk_ref, cv_ref, bv_ref, o_ref, m_ref, l_ref):
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        hist = hist_ref[0]
+        q = q_ref[...]  # [H, dh]
+        dh = q.shape[-1]
+        d = n_heads * dh
+
+        # MXU: reconstruct this tile of keys/values from the low-rank cache.
+        khat = ck_ref[...] @ bk_ref[...]  # [BN, d]
+        vhat = cv_ref[...] @ bv_ref[...]  # [BN, d]
+
+        # RoPE at absolute positions (= row indices of the full history).
+        pos = t * BLOCK_N + jnp.arange(BLOCK_N)
+        khat = _rope_tile(khat, pos, n_heads, rope_base)
+
+        kh = khat.reshape(BLOCK_N, n_heads, dh)
+        vh = vhat.reshape(BLOCK_N, n_heads, dh)
+        scores = jnp.einsum("nhd,hd->hn", kh, q) / jnp.sqrt(float(dh))  # [H, BN]
+        valid = (pos < hist)[None, :]
+        scores = jnp.where(valid, scores, NEG)
+
+        # Online softmax update.
+        m_old = m_ref[...]
+        l_old = l_ref[...]
+        o_old = o_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(scores, axis=1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(valid, p, 0.0)
+        l_ref[...] = l_old * alpha + jnp.sum(p, axis=1)
+        o_ref[...] = o_old * alpha[:, None] + jnp.einsum("hn,nhd->hd", p, vh)
+        m_ref[...] = m_new
+
+    return kernel
+
+
+def hist_attention(q, ck, bk, cv, bv, hist, n_heads, rope_base):
+    """Partial attention of ``q`` over the compressed history.
+
+    q: [d_model]; ck: [max_seq, rk]; bk: [rk, d]; cv: [max_seq, rv];
+    bv: [rv, d]; hist: scalar i32 (valid history rows).
+
+    Returns (o [H, dh], m [H], l [H]) — unnormalized online-softmax state.
+    """
+    max_seq, rk = ck.shape
+    _, rv = cv.shape
+    d = bk.shape[1]
+    dh = d // n_heads
+    assert max_seq % BLOCK_N == 0, f"max_seq {max_seq} must be a multiple of {BLOCK_N}"
+    grid = (max_seq // BLOCK_N,)
+    hist_arr = jnp.asarray(hist, jnp.int32).reshape(1)
+    qh = q.reshape(n_heads, dh)
+    kernel = _make_kernel(n_heads, rope_base)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # hist scalar
+            pl.BlockSpec((n_heads, dh), lambda i: (0, 0)),  # q resident
+            pl.BlockSpec((BLOCK_N, rk), lambda i: (i, 0)),  # C_K streamed
+            pl.BlockSpec((rk, d), lambda i: (0, 0)),        # B_K resident
+            pl.BlockSpec((BLOCK_N, rv), lambda i: (i, 0)),  # C_V streamed
+            pl.BlockSpec((rv, d), lambda i: (0, 0)),        # B_V resident
+        ],
+        out_specs=[
+            pl.BlockSpec((n_heads, dh), lambda i: (0, 0)),
+            pl.BlockSpec((n_heads,), lambda i: (0,)),
+            pl.BlockSpec((n_heads,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_heads, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n_heads,), jnp.float32),
+            jax.ShapeDtypeStruct((n_heads,), jnp.float32),
+        ],
+        interpret=True,
+    )(hist_arr, qh, ck, bk, cv, bv)
+    return o, m, l
+
+
+def vmem_bytes(rk: int, rv: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid step: two C tiles + both B
+    factors + q + accumulators + two reconstructed tiles."""
+    return dtype_bytes * (
+        BLOCK_N * (rk + rv)      # streamed C tiles
+        + (rk + rv) * d          # resident B factors
+        + 3 * d                  # q + o accumulator (+ m/l, negligible)
+        + 2 * BLOCK_N * d        # reconstructed K̂/V̂ tiles
+    )

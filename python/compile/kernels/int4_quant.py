@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: KIVI-style int4 group fake-quantization (Table 5).
+
+Quantizes one group of compressed features to asymmetric int4 and back:
+per-channel statistics for keys, per-token for values (KIVI's layout).
+The Rust layer owns the *packed storage* (`rust/src/compress/quant.rs`);
+this kernel is the compute-path equivalent used inside quantized decode
+variants, and its numerics are pinned against ``ref.py`` and the Rust
+implementation (same scale/zero convention: 15 levels, asymmetric).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_per_channel(x_ref, o_ref):
+    x = x_ref[...]
+    lo = jnp.min(x, axis=0, keepdims=True)
+    hi = jnp.max(x, axis=0, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / 15.0
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, 15)
+    o_ref[...] = q * scale + lo
+
+
+def _kernel_per_token(x_ref, o_ref):
+    x = x_ref[...]
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / 15.0
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, 15)
+    o_ref[...] = q * scale + lo
+
+
+def fake_quant(x, axis: str):
+    """Quantize-dequantize a ``[group, r]`` block.
+
+    axis: "per_channel" (keys) or "per_token" (values).
+    """
+    kernel = _kernel_per_channel if axis == "per_channel" else _kernel_per_token
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: the channel-shrinking projection ``C = X · A``.
+
+This is the producer of the compressed cache (§2.1): every token's
+attention input is projected from ``d_model`` to ``rank`` channels and the
+*intermediate feature* is stored.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``A`` (`[d, r]`, ≤ 64 KiB for
+TinyLM) is pinned in VMEM for the whole kernel; ``X`` streams HBM→VMEM in
+``(BLOCK_ROWS, d)`` tiles via the BlockSpec index map; each tile runs one
+``[BLOCK_ROWS, d] × [d, r]`` MXU matmul. ``interpret=True`` is mandatory on
+CPU (real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin
+cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, a_ref, o_ref):
+    # One row-tile of X against the VMEM-resident A.
+    o_ref[...] = x_ref[...] @ a_ref[...]
+
+
+def project(x, a):
+    """``C = X · A`` with X ``[n, d]``, A ``[d, r]`` → ``[n, r]``.
+
+    ``n`` need not divide BLOCK_ROWS; the tail tile is padded by Pallas.
+    """
+    n, d = x.shape
+    d2, r = a.shape
+    assert d == d2, f"shape mismatch {x.shape} @ {a.shape}"
+    if n <= BLOCK_ROWS:
+        # Single-tile fast path (decode: n == 1).
+        return pl.pallas_call(
+            _kernel,
+            out_shape=jax.ShapeDtypeStruct((n, r), x.dtype),
+            interpret=True,
+        )(x, a)
+    grid = (pl.cdiv(n, BLOCK_ROWS),)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),  # A resident across tiles
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), x.dtype),
+        interpret=True,
+    )(x, a)
+
+
+def vmem_bytes(d: int, r: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid step (perf model for DESIGN.md):
+    one X tile + resident A + one C tile."""
+    return dtype_bytes * (BLOCK_ROWS * d + d * r + BLOCK_ROWS * r)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every L1 kernel — the build-time correctness
+signal (``python/tests/test_kernels.py`` pins kernels against these, and
+the Rust engine is in turn pinned against the lowered artifacts)."""
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def project_ref(x, a):
+    """Oracle for ``lowrank_proj.project``."""
+    return x @ a
+
+
+def rope_ref(x, positions, n_heads, base):
+    """Rotate-half RoPE (identical to model.rope; duplicated so the kernel
+    oracle has no dependency on the model module)."""
+    t, dm = x.shape
+    d = dm // n_heads
+    half = d // 2
+    xh = x.reshape(t, n_heads, d)
+    theta = base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / d)
+    ang = positions.astype(jnp.float32)[:, None] * theta[None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    cos = jnp.cos(ang)[:, None, :]
+    a, b = xh[..., :half], xh[..., half:]
+    rot = jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return rot.reshape(t, dm)
+
+
+def hist_attention_ref(q, ck, bk, cv, bv, hist, n_heads, rope_base):
+    """Oracle for ``bibranch_attn.hist_attention``: materialize K̂/V̂ fully,
+    then compute the same unnormalized online-softmax state."""
+    max_seq = ck.shape[0]
+    d = bk.shape[1]
+    dh = d // n_heads
+    khat = ck @ bk
+    vhat = cv @ bv
+    pos = jnp.arange(max_seq)
+    khat = rope_ref(khat, pos, n_heads, rope_base)
+    qh = q.reshape(n_heads, dh)
+    kh = khat.reshape(max_seq, n_heads, dh)
+    vh = vhat.reshape(max_seq, n_heads, dh)
+    scores = jnp.einsum("nhd,hd->hn", kh, qh) / jnp.sqrt(float(dh))
+    valid = (pos < hist)[None, :]
+    scores = jnp.where(valid, scores, NEG)
+    m = jnp.maximum(jnp.max(scores, axis=1), NEG)
+    p = jnp.where(valid, jnp.exp(scores - m[:, None]), 0.0)
+    l = jnp.sum(p, axis=1)
+    o = jnp.einsum("hn,nhd->hd", p, vh)
+    return o, m, l
+
+
+def softmax_attention_ref(q, k, v, n_heads):
+    """Plain single-query attention (for validating online-softmax merges):
+    q: [d]; k, v: [n, d] (keys already RoPE'd). Returns [d]."""
+    n, d = k.shape
+    dh = d // n_heads
+    qh = q.reshape(n_heads, dh)
+    kh = k.reshape(n, n_heads, dh)
+    vh = v.reshape(n, n_heads, dh)
+    scores = jnp.einsum("nhd,hd->hn", kh, qh) / jnp.sqrt(float(dh))
+    p = jnp.exp(scores - jnp.max(scores, axis=1, keepdims=True))
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    return jnp.einsum("hn,nhd->hd", p, vh).reshape(d)
+
+
+def fake_quant_ref(x, axis: str):
+    """Oracle for ``int4_quant.fake_quant`` (and the Rust quantizer)."""
+    ax = 0 if axis == "per_channel" else 1
+    lo = jnp.min(x, axis=ax, keepdims=True)
+    hi = jnp.max(x, axis=ax, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / 15.0
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, 15)
+    return q * scale + lo

@@ -1,0 +1,395 @@
+"""Layer-2: TinyLM in JAX — forward/backward and the serving step functions.
+
+This module is BUILD-TIME ONLY: `aot.py` lowers the jitted entry points to
+HLO text once (``make artifacts``); the Rust coordinator executes them via
+PJRT and Python never runs on the request path.
+
+The architecture mirrors ``rust/src/model/engine.rs`` exactly (pre-norm,
+RMSNorm, rotate-half RoPE, causal MHA, SiLU MLP, untied head); the Rust
+test-suite cross-validates logits between the two implementations through
+the AOT artifacts.
+
+Parameter flattening follows ``ModelWeights::flat_order`` on the Rust side:
+``embed, [ln1, wq, wk, wv, wo, ln2, w1, w2] * n_layers, ln_f, lm_head``.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bibranch_attn, lowrank_proj
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 512
+    rope_base: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json_dict(self):
+        return {
+            "vocab_size": self.vocab_size,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+            "rope_base": self.rope_base,
+            "eps": self.eps,
+        }
+
+
+TINY = ModelConfig()
+WIDE = ModelConfig(d_model=192, n_heads=6, d_ff=768)
+TEST_SMALL = ModelConfig(d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=128)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig):
+    """Flat (name, shape) list — the interchange contract with Rust."""
+    shapes = [("embed", (cfg.vocab_size, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"layers.{i}.ln1", (1, cfg.d_model)),
+            (f"layers.{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"layers.{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"layers.{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"layers.{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"layers.{i}.ln2", (1, cfg.d_model)),
+            (f"layers.{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"layers.{i}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [("ln_f", (1, cfg.d_model)), ("lm_head", (cfg.d_model, cfg.vocab_size))]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key):
+    """GPT-style init, matching ModelWeights::init statistically."""
+    params = []
+    out_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if ".ln" in name or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".wo") or name.endswith(".w2"):
+            params.append(jax.random.normal(sub, shape, jnp.float32) * out_std)
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+def unflatten(cfg: ModelConfig, params):
+    """Split the flat list into (embed, layers, ln_f, lm_head)."""
+    embed = params[0]
+    layers = []
+    for i in range(cfg.n_layers):
+        o = 1 + i * 8
+        layers.append(
+            dict(
+                ln1=params[o],
+                wq=params[o + 1],
+                wk=params[o + 2],
+                wv=params[o + 3],
+                wo=params[o + 4],
+                ln2=params[o + 5],
+                w1=params[o + 6],
+                w2=params[o + 7],
+            )
+        )
+    return embed, layers, params[-2], params[-1]
+
+
+# --------------------------------------------------------------------------
+# Primitives (must match rust/src/tensor/ops.rs)
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, gain, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain.reshape(-1)
+
+
+def rope(x, positions, n_heads, base):
+    """Rotate-half RoPE. x: [T, d_model]; positions: [T]."""
+    t, dm = x.shape
+    d = dm // n_heads
+    half = d // 2
+    xh = x.reshape(t, n_heads, d)
+    theta = base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / d)
+    ang = positions.astype(jnp.float32)[:, None] * theta[None, :]  # [T, half]
+    sin = jnp.sin(ang)[:, None, :]  # [T, 1, half]
+    cos = jnp.cos(ang)[:, None, :]
+    a, b = xh[..., :half], xh[..., half:]
+    rot = jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return rot.reshape(t, dm)
+
+
+def attention_causal(q, k, v, n_heads):
+    """q,k,v: [T, d_model] (already RoPE'd). Causal MHA."""
+    t, d = q.shape
+    dh = d // n_heads
+    qh = q.reshape(t, n_heads, dh).transpose(1, 0, 2)  # [H,T,dh]
+    kh = k.reshape(t, n_heads, dh).transpose(1, 0, 2)
+    vh = v.reshape(t, n_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("htd,hsd->hts", qh, kh) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", probs, vh)
+    return out.transpose(1, 0, 2).reshape(t, d)
+
+
+# --------------------------------------------------------------------------
+# Training forward (pure jnp — differentiable)
+# --------------------------------------------------------------------------
+
+def forward_tokens(cfg: ModelConfig, params, tokens):
+    """tokens: [T] int32 -> logits [T, vocab]. Single sequence."""
+    embed, layers, ln_f, lm_head = unflatten(cfg, params)
+    x = embed[tokens]
+    pos = jnp.arange(tokens.shape[0])
+    for lw in layers:
+        xn = rmsnorm(x, lw["ln1"], cfg.eps)
+        q = rope(xn @ lw["wq"], pos, cfg.n_heads, cfg.rope_base)
+        k = rope(xn @ lw["wk"], pos, cfg.n_heads, cfg.rope_base)
+        v = xn @ lw["wv"]
+        x = x + attention_causal(q, k, v, cfg.n_heads) @ lw["wo"]
+        xn2 = rmsnorm(x, lw["ln2"], cfg.eps)
+        x = x + jax.nn.silu(xn2 @ lw["w1"]) @ lw["w2"]
+    return rmsnorm(x, ln_f, cfg.eps) @ lm_head
+
+
+def forward_batch(cfg: ModelConfig, params, tokens):
+    """tokens: [B, T] -> logits [B, T, vocab]."""
+    return jax.vmap(lambda t: forward_tokens(cfg, params, t))(tokens)
+
+
+def loss_fn(cfg: ModelConfig, params, x, y, mask):
+    """Masked mean cross-entropy. x,y: [B,T] int32; mask: [B,T] f32."""
+    logits = forward_batch(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, x, y, mask, lr):
+    """One Adam step. Flat lists in, flat lists out (PJRT-friendly).
+
+    Returns (new_params, new_m, new_v, loss).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y, mask))(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step.astype(jnp.float32) + 1.0
+    b1t = 1.0 - b1 ** t
+    b2t = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        update = (mi / b1t) / (jnp.sqrt(vi / b2t) + eps)
+        new_p.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode steps (what the Rust coordinator executes)
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """tokens: [T] int32 (PAD-padded to max_seq; causal masking makes the
+    padding harmless for earlier rows).
+
+    Returns (logits [T,V], xnorms [L,T,d], ks [L,T,d] (pre-RoPE),
+    vs [L,T,d]) — everything Rust needs to seed any cache policy.
+    """
+    embed, layers, ln_f, lm_head = unflatten(cfg, params)
+    x = embed[tokens]
+    pos = jnp.arange(tokens.shape[0])
+    xnorms, ks, vs = [], [], []
+    for lw in layers:
+        xn = rmsnorm(x, lw["ln1"], cfg.eps)
+        q = rope(xn @ lw["wq"], pos, cfg.n_heads, cfg.rope_base)
+        k_pre = xn @ lw["wk"]
+        k = rope(k_pre, pos, cfg.n_heads, cfg.rope_base)
+        v = xn @ lw["wv"]
+        x = x + attention_causal(q, k, v, cfg.n_heads) @ lw["wo"]
+        xn2 = rmsnorm(x, lw["ln2"], cfg.eps)
+        x = x + jax.nn.silu(xn2 @ lw["w1"]) @ lw["w2"]
+        xnorms.append(xn)
+        ks.append(k_pre)
+        vs.append(v)
+    logits = rmsnorm(x, ln_f, cfg.eps) @ lm_head
+    return logits, jnp.stack(xnorms), jnp.stack(ks), jnp.stack(vs)
+
+
+def _merge_softmax(o1, m1, l1, o2, m2, l2):
+    """Merge two online-softmax partial states (per head).
+
+    o: [H, dh] weighted sums; m: [H] running max; l: [H] normalizers.
+    """
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    o = o1 * a1[:, None] + o2 * a2[:, None]
+    l = l1 * a1 + l2 * a2
+    return o, m, l
+
+
+def _dense_attn_partial(q, k, v, n_heads, valid):
+    """Partial online-softmax attention state of q against (k, v) rows with
+    mask ``valid`` [N] (bool). q: [d]; k,v: [N, d]. Returns (o, m, l)."""
+    n, d = k.shape
+    dh = d // n_heads
+    qh = q.reshape(n_heads, dh)
+    kh = k.reshape(n, n_heads, dh)
+    vh = v.reshape(n, n_heads, dh)
+    scores = jnp.einsum("hd,nhd->hn", qh, kh) / jnp.sqrt(float(dh))
+    scores = jnp.where(valid[None, :], scores, -1e30)
+    m = jnp.max(scores, axis=1)
+    m = jnp.maximum(m, -1e30)  # all-masked guard
+    p = jnp.exp(scores - m[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l = jnp.sum(p, axis=1)
+    o = jnp.einsum("hn,nhd->hd", p, vh)
+    return o, m, l
+
+
+def decode_full(cfg: ModelConfig, params, token, pos, k_buf, v_buf):
+    """One decode step against a full-precision cache.
+
+    token: [] i32; pos: [] i32 (number of tokens already cached);
+    k_buf/v_buf: [L, max_seq, d] with post-RoPE keys, rows >= pos invalid.
+
+    Returns (logits [V], k_new [L, d] post-RoPE, v_new [L, d]).
+    Rust writes k_new/v_new into row ``pos`` of its buffers.
+    """
+    embed, layers, ln_f, lm_head = unflatten(cfg, params)
+    x = embed[token]
+    k_news, v_news = [], []
+    idx = jnp.arange(cfg.max_seq)
+    for li, lw in enumerate(layers):
+        xn = rmsnorm(x.reshape(1, -1), lw["ln1"], cfg.eps)[0]
+        posv = pos.reshape(1)
+        q = rope((xn @ lw["wq"]).reshape(1, -1), posv, cfg.n_heads, cfg.rope_base)[0]
+        k_new = rope((xn @ lw["wk"]).reshape(1, -1), posv, cfg.n_heads, cfg.rope_base)[0]
+        v_new = xn @ lw["wv"]
+        # Attention over cached rows [0,pos) plus the new token itself.
+        o1, m1, l1 = _dense_attn_partial(q, k_buf[li], v_buf[li], cfg.n_heads, idx < pos)
+        o2, m2, l2 = _dense_attn_partial(
+            q, k_new.reshape(1, -1), v_new.reshape(1, -1), cfg.n_heads,
+            jnp.ones((1,), bool),
+        )
+        o, _m, l = _merge_softmax(o1, m1, l1, o2, m2, l2)
+        attn = (o / l[:, None]).reshape(-1)
+        x = x + attn @ lw["wo"]
+        xn2 = rmsnorm(x.reshape(1, -1), lw["ln2"], cfg.eps)[0]
+        x = x + jax.nn.silu(xn2 @ lw["w1"]) @ lw["w2"]
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = rmsnorm(x.reshape(1, -1), ln_f, cfg.eps)[0] @ lm_head
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def decode_cskv(
+    cfg: ModelConfig,
+    params,
+    ak, bk, av, bv,           # factors: ak/av [L, d, r]; bk/bv [L, r, d]
+    token, n, win_len,        # scalars i32: tokens so far / window fill
+    ck_buf, cv_buf,           # [L, max_seq, r] compressed history
+    win_k, win_v,             # [L, win, d] (win_k pre-RoPE), rolling window
+    win_pos,                  # [L, win] i32 absolute positions of window rows
+):
+    """One CSKV bi-branch decode step (§2.1, Figure 1b).
+
+    The historical branch (`ck_buf` rows `[0, n - win_len)`) is attended
+    through the fused Pallas kernel `bibranch_attn`: tiles of C are
+    reconstructed as K̂ = C·B in fast memory and folded into an online
+    softmax, so K̂ never materializes in slow memory. The window branch is
+    dense and exact.
+
+    Returns (logits [V], ck_new [L,r], cv_new [L,r], k_new [L,d] pre-RoPE,
+    v_new [L,d]). Rust appends the ck/cv rows and rolls the window.
+    """
+    embed, layers, ln_f, lm_head = unflatten(cfg, params)
+    x = embed[token]
+    ck_news, cv_news, k_news, v_news = [], [], [], []
+    hist = n - win_len  # rows of compressed history to attend
+    for li, lw in enumerate(layers):
+        xn = rmsnorm(x.reshape(1, -1), lw["ln1"], cfg.eps)[0]
+        posv = n.reshape(1)
+        q = rope((xn @ lw["wq"]).reshape(1, -1), posv, cfg.n_heads, cfg.rope_base)[0]
+        k_new = xn @ lw["wk"]  # pre-RoPE (the window stores pre-RoPE keys)
+        v_new = xn @ lw["wv"]
+        # L1 kernel: compressed features for the new token.
+        ck_new = lowrank_proj.project(xn.reshape(1, -1), ak[li])[0]
+        cv_new = lowrank_proj.project(xn.reshape(1, -1), av[li])[0]
+
+        # --- historical branch: fused reconstruct+attend over C·B -------
+        o1, m1, l1 = bibranch_attn.hist_attention(
+            q, ck_buf[li], bk[li], cv_buf[li], bv[li],
+            hist, cfg.n_heads, cfg.rope_base,
+        )
+        # --- window branch (dense, exact) --------------------------------
+        widx = jnp.arange(win_k.shape[1])
+        wvalid = widx < win_len
+        wk_roped = rope(win_k[li], win_pos[li], cfg.n_heads, cfg.rope_base)
+        o2, m2, l2 = _dense_attn_partial(q, wk_roped, win_v[li], cfg.n_heads, wvalid)
+        # --- the new token attends to itself ------------------------------
+        k_self = rope(k_new.reshape(1, -1), posv, cfg.n_heads, cfg.rope_base)
+        o3, m3, l3 = _dense_attn_partial(
+            q, k_self, v_new.reshape(1, -1), cfg.n_heads, jnp.ones((1,), bool)
+        )
+        o, m_, l = _merge_softmax(o1, m1, l1, o2, m2, l2)
+        o, m_, l = _merge_softmax(o, m_, l, o3, m3, l3)
+        attn = (o / l[:, None]).reshape(-1)
+
+        x = x + attn @ lw["wo"]
+        xn2 = rmsnorm(x.reshape(1, -1), lw["ln2"], cfg.eps)[0]
+        x = x + jax.nn.silu(xn2 @ lw["w1"]) @ lw["w2"]
+        ck_news.append(ck_new)
+        cv_news.append(cv_new)
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = rmsnorm(x.reshape(1, -1), ln_f, cfg.eps)[0] @ lm_head
+    return (
+        logits,
+        jnp.stack(ck_news),
+        jnp.stack(cv_news),
+        jnp.stack(k_news),
+        jnp.stack(v_news),
+    )
+
+
+# --------------------------------------------------------------------------
+# Jitted entry points for AOT lowering
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig):
+    return jax.jit(partial(train_step, cfg))
+
+
+def make_prefill(cfg: ModelConfig):
+    return jax.jit(partial(prefill, cfg))
+
+
+def make_decode_full(cfg: ModelConfig):
+    return jax.jit(partial(decode_full, cfg))
+
+
+def make_decode_cskv(cfg: ModelConfig):
+    return jax.jit(partial(decode_cskv, cfg))

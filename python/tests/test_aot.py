@@ -1,0 +1,85 @@
+"""AOT pipeline: HLO text emission and manifest integrity.
+
+Full lowering of the TINY config is exercised by ``make artifacts``; here
+we lower the small test config end-to-end (fast) and sanity-check the
+shipped manifest when artifacts exist.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+class TestLowering:
+    def test_hlo_text_roundtrips_small_fn(self):
+        import jax
+
+        fn = jax.jit(lambda x, y: (x @ y + 1.0,))
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        text = aot.to_hlo_text(fn.lower(spec, spec))
+        assert "HloModule" in text
+        assert "f32[4,4]" in text
+
+    def test_decode_cskv_lowering_small(self):
+        cfg = M.TEST_SMALL
+        lowered, inputs, outputs, static = aot.build_decode_cskv(cfg, rank=8)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert static["rank"] == 8
+        # input count: params + 4 factors + 3 scalars + 5 buffers
+        assert len(inputs) == len(M.param_shapes(cfg)) + 12
+        assert outputs[0]["name"] == "logits"
+
+    def test_prefill_lowering_small(self):
+        cfg = M.TEST_SMALL
+        lowered, inputs, outputs, static = aot.build_prefill(cfg)
+        text = aot.to_hlo_text(lowered)
+        assert f"f32[{cfg.n_layers},{cfg.max_seq},{cfg.d_model}]" in text
+        assert [o["name"] for o in outputs] == ["logits", "xnorms", "ks", "vs"]
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestShippedManifest:
+    def test_manifest_consistent_with_files(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["format"] == "hlo-text-v1"
+        assert man["model"]["d_model"] == 128
+        for name, exe in man["executables"].items():
+            path = os.path.join(ARTIFACTS, exe["file"])
+            assert os.path.exists(path), f"{name}: missing {exe['file']}"
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{name}: not HLO text"
+            assert len(exe["inputs"]) > 0 and len(exe["outputs"]) > 0
+
+    def test_train_step_io_counts(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        if "train_step" not in man["executables"]:
+            pytest.skip("train_step skipped at lowering time")
+        exe = man["executables"]["train_step"]
+        n_params = len(M.param_shapes(M.TINY))
+        assert len(exe["inputs"]) == 3 * n_params + 5
+        assert len(exe["outputs"]) == 3 * n_params + 1
+
+    def test_decode_cskv_ranks_exported(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        ranks = sorted(
+            exe["static"]["rank"]
+            for name, exe in man["executables"].items()
+            if name.startswith("decode_cskv")
+        )
+        # 50% and 80% compression of d_model=128.
+        assert ranks == [26, 64]

@@ -1,0 +1,177 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed cases pin the exact serving shapes
+used by the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bibranch_attn, int4_quant, lowrank_proj, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# lowrank_proj
+# ---------------------------------------------------------------------------
+
+class TestLowrankProj:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(1, 300),
+        d=st.sampled_from([16, 32, 128]),
+        r=st.sampled_from([4, 26, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, n, d, r, seed):
+        rng = np.random.default_rng(seed)
+        x, a = rand(rng, n, d), rand(rng, d, r)
+        got = lowrank_proj.project(x, a)
+        want = ref.project_ref(x, a)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+    def test_serving_shapes(self):
+        # The exact shapes the decode_cskv artifact uses (d=128, r=26/64).
+        rng = np.random.default_rng(0)
+        for r in (26, 64):
+            x, a = rand(rng, 1, 128), rand(rng, 128, r)
+            got = lowrank_proj.project(x, a)
+            assert got.shape == (1, r)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(ref.project_ref(x, a)), atol=1e-4
+            )
+
+    def test_tail_tile_padding(self):
+        # n not a multiple of BLOCK_ROWS exercises the padded tail tile.
+        rng = np.random.default_rng(1)
+        n = lowrank_proj.BLOCK_ROWS * 2 + 3
+        x, a = rand(rng, n, 32), rand(rng, 32, 8)
+        np.testing.assert_allclose(
+            np.asarray(lowrank_proj.project(x, a)),
+            np.asarray(ref.project_ref(x, a)),
+            atol=1e-3,
+        )
+
+    def test_vmem_estimate_positive(self):
+        assert lowrank_proj.vmem_bytes(128, 26) > 0
+
+
+# ---------------------------------------------------------------------------
+# bibranch_attn
+# ---------------------------------------------------------------------------
+
+class TestBibranchAttn:
+    @settings(**SETTINGS)
+    @given(
+        hist=st.integers(0, 512),
+        rk=st.sampled_from([8, 26, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, hist, rk, seed):
+        rng = np.random.default_rng(seed)
+        H, dh, maxT = 4, 32, 512
+        d = H * dh
+        q = rand(rng, d)
+        ck, bk = rand(rng, maxT, rk), rand(rng, rk, d)
+        cv, bv = rand(rng, maxT, rk), rand(rng, rk, d)
+        o1, m1, l1 = bibranch_attn.hist_attention(q, ck, bk, cv, bv, hist, H, 10000.0)
+        o2, m2, l2 = ref.hist_attention_ref(q, ck, bk, cv, bv, hist, H, 10000.0)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-2, atol=1e-3)
+
+    def test_empty_history_is_neutral(self):
+        # hist=0: the partial state must be the online-softmax identity
+        # (o=0, l=0, m=NEG) so merging it changes nothing.
+        rng = np.random.default_rng(2)
+        H, dh, rk, maxT = 4, 8, 6, 64
+        d = H * dh
+        o, m, l = bibranch_attn.hist_attention(
+            rand(rng, d), rand(rng, maxT, rk), rand(rng, rk, d),
+            rand(rng, maxT, rk), rand(rng, rk, d), 0, H, 10000.0,
+        )
+        assert float(jnp.max(jnp.abs(o))) == 0.0
+        assert float(jnp.max(jnp.abs(l))) == 0.0
+        assert float(jnp.max(m)) <= bibranch_attn.NEG / 2
+
+    def test_merge_recovers_full_attention(self):
+        """Splitting the cache into hist+window and merging partial states
+        must equal dense attention over the concatenation — the algebra the
+        bi-branch decode relies on."""
+        from compile import model as M
+
+        rng = np.random.default_rng(3)
+        H, dh, maxT = 4, 8, 64
+        d = H * dh
+        hist, extra = 40, 10
+        q = rand(rng, d)
+        # Low-rank history (exact: full-rank factors = identity).
+        eye = jnp.eye(d)
+        k_all = rand(rng, hist + extra, d)
+        v_all = rand(rng, hist + extra, d)
+        pos = jnp.arange(hist + extra)
+        k_roped = ref.rope_ref(k_all, pos, H, 10000.0)
+        # hist part through the kernel (identity factors, pre-RoPE rows).
+        ck = jnp.zeros((maxT, d)).at[:hist].set(k_all[:hist])
+        cv = jnp.zeros((maxT, d)).at[:hist].set(v_all[:hist])
+        o1, m1, l1 = bibranch_attn.hist_attention(q, ck, eye, cv, eye, hist, H, 10000.0)
+        # window part dense.
+        o2, m2, l2 = M._dense_attn_partial(
+            q, k_roped[hist:], v_all[hist:], H, jnp.ones((extra,), bool)
+        )
+        o, m, l = M._merge_softmax(o1, m1, l1, o2, m2, l2)
+        got = (o / l[:, None]).reshape(d)
+        want = ref.softmax_attention_ref(q, k_roped, v_all, H)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+    def test_vmem_estimate_fits_tpu_budget(self):
+        # The DESIGN.md claim: the schedule fits a ~16 MiB VMEM easily.
+        assert bibranch_attn.vmem_bytes(26, 26, 128) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# int4_quant
+# ---------------------------------------------------------------------------
+
+class TestInt4Quant:
+    @settings(**SETTINGS)
+    @given(
+        g=st.integers(2, 64),
+        r=st.integers(2, 64),
+        axis=st.sampled_from(["per_channel", "per_token"]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, g, r, axis, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, g, r)
+        np.testing.assert_allclose(
+            np.asarray(int4_quant.fake_quant(x, axis)),
+            np.asarray(ref.fake_quant_ref(x, axis)),
+            atol=1e-5,
+        )
+
+    @settings(**SETTINGS)
+    @given(axis=st.sampled_from(["per_channel", "per_token"]), seed=st.integers(0, 2**31))
+    def test_error_within_half_step(self, axis, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, 32, 26)
+        dq = np.asarray(int4_quant.fake_quant(x, axis))
+        ax = 0 if axis == "per_channel" else 1
+        xn = np.asarray(x)
+        step = (xn.max(axis=ax) - xn.min(axis=ax)).max() / 15.0
+        assert np.abs(dq - xn).max() <= step / 2 + 1e-5
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 16, 8)
+        once = int4_quant.fake_quant(x, "per_token")
+        twice = int4_quant.fake_quant(once, "per_token")
+        np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-5)

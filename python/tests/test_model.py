@@ -1,0 +1,186 @@
+"""L2 model correctness: shapes, decode-path consistency, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.TEST_SMALL
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, 12), jnp.int32)
+    return cfg, params, toks
+
+
+class TestForward:
+    def test_logit_shapes(self, setup):
+        cfg, params, toks = setup
+        logits = M.forward_tokens(cfg, params, toks)
+        assert logits.shape == (12, cfg.vocab_size)
+        batched = M.forward_batch(cfg, params, jnp.stack([toks, toks]))
+        assert batched.shape == (2, 12, cfg.vocab_size)
+        np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(logits), atol=1e-5)
+
+    def test_causality(self, setup):
+        """Changing a later token must not affect earlier logits."""
+        cfg, params, toks = setup
+        a = M.forward_tokens(cfg, params, toks)
+        mutated = toks.at[8].set((toks[8] + 1) % cfg.vocab_size)
+        b = M.forward_tokens(cfg, params, mutated)
+        np.testing.assert_allclose(np.asarray(a[:8]), np.asarray(b[:8]), atol=1e-5)
+        assert not np.allclose(np.asarray(a[8:]), np.asarray(b[8:]))
+
+    def test_prefill_padding_harmless(self, setup):
+        cfg, params, toks = setup
+        want = M.forward_tokens(cfg, params, toks)
+        padded = jnp.pad(toks, (0, cfg.max_seq - toks.shape[0]))
+        logits, xns, ks, vs = M.prefill(cfg, params, padded)
+        np.testing.assert_allclose(
+            np.asarray(logits[:12]), np.asarray(want), atol=2e-3
+        )
+        assert xns.shape == (cfg.n_layers, cfg.max_seq, cfg.d_model)
+
+
+class TestDecodeConsistency:
+    def _seed_buffers(self, cfg, params, toks, t0):
+        padded = jnp.pad(toks[:t0], (0, cfg.max_seq - t0))
+        _, xns, ks, vs = M.prefill(cfg, params, padded)
+        kbuf = np.zeros((cfg.n_layers, cfg.max_seq, cfg.d_model), np.float32)
+        vbuf = np.zeros_like(kbuf)
+        pos = jnp.arange(t0)
+        for li in range(cfg.n_layers):
+            kbuf[li, :t0] = np.asarray(M.rope(ks[li, :t0], pos, cfg.n_heads, cfg.rope_base))
+            vbuf[li, :t0] = np.asarray(vs[li, :t0])
+        return xns, ks, vs, kbuf, vbuf
+
+    def test_decode_full_matches_forward(self, setup):
+        cfg, params, toks = setup
+        want = M.forward_tokens(cfg, params, toks)
+        t0 = 4
+        _, _, _, kbuf, vbuf = self._seed_buffers(cfg, params, toks, t0)
+        for i in range(t0, toks.shape[0]):
+            lg, kn, vn = M.decode_full(
+                cfg, params, toks[i], jnp.int32(i), jnp.asarray(kbuf), jnp.asarray(vbuf)
+            )
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(want[i]), atol=3e-3)
+            kbuf[:, i] = np.asarray(kn)
+            vbuf[:, i] = np.asarray(vn)
+
+    def test_decode_cskv_exact_factors_matches_forward(self, setup):
+        """With factors that reproduce W_K/W_V exactly (A=W, B=I), the
+        bi-branch decode must equal the dense forward pass."""
+        cfg, params, toks = setup
+        want = M.forward_tokens(cfg, params, toks)
+        d = cfg.d_model
+        eye = jnp.eye(d)
+        ak = jnp.stack([params[1 + li * 8 + 2] for li in range(cfg.n_layers)])  # wk
+        av = jnp.stack([params[1 + li * 8 + 3] for li in range(cfg.n_layers)])  # wv
+        bk = jnp.stack([eye] * cfg.n_layers)
+        bv = bk
+        t0, win = 4, 8
+        padded = jnp.pad(toks[:t0], (0, cfg.max_seq - t0))
+        _, xns, _, _ = M.prefill(cfg, params, padded)
+        ck = np.zeros((cfg.n_layers, cfg.max_seq, d), np.float32)
+        cv = np.zeros_like(ck)
+        for li in range(cfg.n_layers):
+            ck[li, :t0] = np.asarray(xns[li, :t0] @ ak[li])
+            cv[li, :t0] = np.asarray(xns[li, :t0] @ av[li])
+        win_k = np.zeros((cfg.n_layers, win, d), np.float32)
+        win_v = np.zeros_like(win_k)
+        win_pos = np.zeros((cfg.n_layers, win), np.int32)
+        n = t0
+        for i in range(t0, toks.shape[0]):
+            lg, ckn, cvn, kn, vn = M.decode_cskv(
+                cfg, params, ak, bk, av, bv,
+                toks[i], jnp.int32(n), jnp.int32(0),
+                jnp.asarray(ck), jnp.asarray(cv),
+                jnp.asarray(win_k), jnp.asarray(win_v), jnp.asarray(win_pos),
+            )
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(want[i]), atol=5e-3)
+            ck[:, n] = np.asarray(ckn)
+            cv[:, n] = np.asarray(cvn)
+            n += 1
+
+    def test_decode_cskv_window_branch(self, setup):
+        """Window rows must be used verbatim: with garbage factors but the
+        whole history inside the window, decode must still be exact."""
+        cfg, params, toks = setup
+        want = M.forward_tokens(cfg, params, toks)
+        d = cfg.d_model
+        rng = np.random.default_rng(7)
+        r = 4
+        junk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+        ak, av = junk(cfg.n_layers, d, r), junk(cfg.n_layers, d, r)
+        bk, bv = junk(cfg.n_layers, r, d), junk(cfg.n_layers, r, d)
+        t0, win = 4, 16
+        padded = jnp.pad(toks[:t0], (0, cfg.max_seq - t0))
+        _, xns, ks, vs = M.prefill(cfg, params, padded)
+        ck = np.zeros((cfg.n_layers, cfg.max_seq, r), np.float32)
+        cv = np.zeros_like(ck)
+        win_k = np.zeros((cfg.n_layers, win, d), np.float32)
+        win_v = np.zeros_like(win_k)
+        win_pos = np.zeros((cfg.n_layers, win), np.int32)
+        # Put ALL t0 tokens in the window (win_len = t0).
+        for li in range(cfg.n_layers):
+            win_k[li, :t0] = np.asarray(ks[li, :t0])
+            win_v[li, :t0] = np.asarray(vs[li, :t0])
+            win_pos[li, :t0] = np.arange(t0)
+        n, win_len = t0, t0
+        for i in range(t0, min(toks.shape[0], t0 + win - t0)):
+            lg, ckn, cvn, kn, vn = M.decode_cskv(
+                cfg, params, ak, bk, av, bv,
+                toks[i], jnp.int32(n), jnp.int32(win_len),
+                jnp.asarray(ck), jnp.asarray(cv),
+                jnp.asarray(win_k), jnp.asarray(win_v), jnp.asarray(win_pos),
+            )
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(want[i]), atol=5e-3)
+            # Roll the new token into the window (window not yet full).
+            for li in range(cfg.n_layers):
+                win_k[li, win_len] = np.asarray(kn[li])
+                win_v[li, win_len] = np.asarray(vn[li])
+                win_pos[li, win_len] = n
+            win_len += 1
+            n += 1
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, setup):
+        cfg, params, _ = setup
+        rng = np.random.default_rng(5)
+        B, T = 2, 24
+        x = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, T)), jnp.int32)
+        y = jnp.roll(x, -1, axis=1)
+        mask = jnp.ones((B, T), jnp.float32)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        p = params
+        losses = []
+        for step in range(12):
+            p, m, v, loss = M.train_step(cfg, p, m, v, jnp.int32(step), x, y, mask, jnp.float32(2e-3))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_mask_excludes_positions(self, setup):
+        cfg, params, _ = setup
+        rng = np.random.default_rng(6)
+        B, T = 1, 16
+        x = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, T)), jnp.int32)
+        y = jnp.roll(x, -1, axis=1)
+        full = M.loss_fn(cfg, params, x, y, jnp.ones((B, T), jnp.float32))
+        # Masking everything but one position changes the loss value.
+        m1 = jnp.zeros((B, T), jnp.float32).at[0, 3].set(1.0)
+        partial = M.loss_fn(cfg, params, x, y, m1)
+        assert not np.isclose(float(full), float(partial))
+
+    def test_param_shapes_contract(self):
+        cfg = M.TINY
+        shapes = M.param_shapes(cfg)
+        assert shapes[0] == ("embed", (256, 128))
+        assert shapes[1][0] == "layers.0.ln1"
+        assert shapes[-1] == ("lm_head", (128, 256))
+        assert len(shapes) == 3 + 8 * cfg.n_layers

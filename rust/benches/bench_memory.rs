@@ -1,0 +1,100 @@
+//! Memory accounting — the paper's intro claim and per-method KV
+//! footprints.
+//!
+//! Part A (analytic, LLaMA-2-7B scale): reproduces "200K tokens ⇒ ~100GB
+//! KV cache vs 14GB weights; >10× compression needed for a 24GB GPU".
+//! Part B (measured, TinyLM): the *actual* bytes reported by every cache
+//! policy after generation, cross-checked against the analytic model.
+//!
+//! Run: `cargo bench --bench bench_memory`
+
+use std::sync::Arc;
+
+use cskv::baselines::{H2oCache, StreamingLlmCache};
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::eval::experiments::{factors_for, Env};
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::memory::{ArchSpec, GB};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::util::bench::print_bench_header;
+use cskv::util::cli::Args;
+use cskv::util::prng::Pcg64;
+use cskv::util::table::{bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_memory",
+        "CSKV paper §1 intro claim + abstract's 80%/95% memory reductions",
+    );
+
+    // ---- Part A: analytic at LLaMA-2-7B scale -------------------------
+    let arch = ArchSpec::llama2_7b();
+    let mut t = Table::new(
+        "KV memory at LLaMA-2-7B scale (fp16, analytic)",
+        &["context", "weights", "full KV", "CSKV 80%", "CSKV 80%+int4", "pruned 80%"],
+    );
+    for tokens in [8_192usize, 32_768, 100_000, 200_000] {
+        t.row(&[
+            format!("{tokens}"),
+            format!("{:.1}GB", arch.weight_bytes() as f64 / GB),
+            format!("{:.1}GB", arch.kv_bytes_full(tokens) as f64 / GB),
+            format!("{:.1}GB", arch.kv_bytes_cskv(tokens, 0.2, 32, false) as f64 / GB),
+            format!("{:.1}GB", arch.kv_bytes_cskv(tokens, 0.2, 32, true) as f64 / GB),
+            format!("{:.1}GB", arch.kv_bytes_pruned(tokens, 0.2) as f64 / GB),
+        ]);
+    }
+    t.print();
+    let full200k = arch.kv_bytes_full(200_000) as f64 / GB;
+    println!(
+        "intro claim: 200K tokens ⇒ {:.0}GB KV (paper: ~100GB), weights {:.0}GB (paper: 14GB)\n",
+        full200k,
+        arch.weight_bytes() as f64 / GB
+    );
+
+    // ---- Part B: measured on TinyLM ------------------------------------
+    let env = Env::load_default()?;
+    let cfg = env.engine.w.cfg.clone();
+    let plan = KvCompressionPlan::uniform(0.8);
+    let f = factors_for(&env, plan, InitMethod::asvd_default(), 0, QatMode::Off);
+
+    let mut t = Table::new(
+        "Measured KV bytes after generating 3 tokens (TinyLM, fp32)",
+        &["context", "full", "StreamingLLM 80%", "H2O 80%", "CSKV 80%", "CSKV 80% int4", "cskv saving"],
+    );
+    let mut rng = Pcg64::new(9);
+    for ctx in args.get_list_usize("ctx", &[128, 256, 509]) {
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        let run = |mut p: Box<dyn KvCachePolicy>| -> usize {
+            let _ = env.engine.generate(&prompt, 3, p.as_mut());
+            p.kv_bytes()
+        };
+        let full = run(Box::new(FullCache::new(cfg.n_layers, cfg.d_model)));
+        let budget = (ctx / 5).max(6);
+        let sl = run(Box::new(StreamingLlmCache::new(cfg.n_layers, cfg.d_model, 4, budget)));
+        let h2o = run(Box::new(H2oCache::new(cfg.n_layers, cfg.d_model, budget)));
+        let cs = run(Box::new(CskvCache::new(
+            Arc::clone(&f),
+            cfg.d_model,
+            CskvConfig { window: 32, quant: QuantMode::None },
+        )));
+        let csq = run(Box::new(CskvCache::new(
+            Arc::clone(&f),
+            cfg.d_model,
+            CskvConfig { window: 32, quant: QuantMode::Int4 },
+        )));
+        t.row(&[
+            ctx.to_string(),
+            bytes(full),
+            bytes(sl),
+            bytes(h2o),
+            bytes(cs),
+            bytes(csq),
+            format!("{:.1}%", (1.0 - cs as f64 / full as f64) * 100.0),
+        ]);
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("memory.csv"))?;
+    println!("saved runs/memory.csv");
+    Ok(())
+}

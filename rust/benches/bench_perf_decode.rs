@@ -1,0 +1,146 @@
+//! §Perf — decode latency/throughput and serving concurrency.
+//!
+//! Three measurements:
+//! 1. micro: per-token decode latency vs context length, full vs CSKV
+//!    cache (rust engine) — shows the materialize/attention cost model.
+//! 2. serving: coordinator throughput under a fixed KV budget, full vs
+//!    CSKV backends — the operational payoff (more concurrency at equal
+//!    memory).
+//! 3. PJRT: per-step latency of the AOT `decode_full` vs `decode_cskv_r26`
+//!    executables (the served artifacts; skipped if artifacts missing).
+//!
+//! Run: `cargo bench --bench bench_perf_decode [-- --fast]`
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::coordinator::pjrt_backend::{PjrtContext, PjrtCskvSession, PjrtFullSession};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend, SequenceBackend};
+use cskv::data::tasks;
+use cskv::eval::experiments::{factors_for, Env};
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::runtime::Runtime;
+use cskv::util::bench::{print_bench_header, Bencher};
+use cskv::util::cli::Args;
+use cskv::util::prng::Pcg64;
+use cskv::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_perf_decode",
+        "§Perf: decode latency + KV-budget serving throughput (headline ops win)",
+    );
+    let fast = args.get_flag("fast");
+    let env = Env::load_default()?;
+    let cfg = env.engine.w.cfg.clone();
+    let plan = KvCompressionPlan::uniform(0.8);
+    let factors = factors_for(&env, plan, InitMethod::asvd_default(), 0, QatMode::Off);
+
+    // ---- 1. micro: decode step latency vs context ----------------------
+    let mut b = if fast { Bencher::fast() } else { Bencher::new() };
+    let mut rng = Pcg64::new(3);
+    for ctx in [128usize, 256, 509] {
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        {
+            let mut p = FullCache::new(cfg.n_layers, cfg.d_model);
+            let _ = env.engine.prefill(&prompt, Some(&mut p as &mut dyn KvCachePolicy));
+            b.time(&format!("rust decode/token full ctx={ctx}"), || {
+                let _ = env.engine.decode_step(&mut p, 42, ctx);
+            });
+        }
+        {
+            let mut p = CskvCache::new(
+                Arc::clone(&factors),
+                cfg.d_model,
+                CskvConfig { window: 32, quant: QuantMode::None },
+            );
+            let _ = env.engine.prefill(&prompt, Some(&mut p as &mut dyn KvCachePolicy));
+            b.time(&format!("rust decode/token cskv80 ctx={ctx}"), || {
+                let _ = env.engine.decode_step(&mut p, 42, ctx);
+            });
+        }
+    }
+
+    // ---- 2. serving throughput under a KV budget -----------------------
+    let n_req = if fast { 8 } else { 24 };
+    let budget = cfg.kv_bytes_full(512) * 2; // fits ~2 full-cache seqs
+    let engine = env.engine.clone();
+    let f2 = Arc::clone(&factors);
+    let mk_setup = |use_cskv: bool| -> Setup {
+        let engine = engine.clone();
+        let f = Arc::clone(&f2);
+        Box::new(move || {
+            let factory: BackendFactory = Box::new(move || {
+                let c = engine.w.cfg.clone();
+                let policy: Box<dyn KvCachePolicy> = if use_cskv {
+                    Box::new(CskvCache::new(
+                        Arc::clone(&f),
+                        c.d_model,
+                        CskvConfig { window: 32, quant: QuantMode::None },
+                    ))
+                } else {
+                    Box::new(FullCache::new(c.n_layers, c.d_model))
+                };
+                Ok(Box::new(RustSequenceBackend::new(engine.clone(), policy)))
+            });
+            Ok(factory)
+        })
+    };
+    let mut t = Table::new(
+        &format!("serving under KV budget = {} (max_batch 16, {n_req} reqs, ctx≈384)", cskv::util::table::bytes(budget)),
+        &["backend", "throughput tok/s", "p95 ttft (s)", "max concurrency", "kv peak"],
+    );
+    for (label, use_cskv) in [("full", false), ("cskv80", true)] {
+        let coord = Coordinator::start(
+            mk_setup(use_cskv),
+            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(budget) },
+        );
+        let mut rng = Pcg64::new(17);
+        let rxs: Vec<_> = (0..n_req)
+            .map(|_| coord.submit(tasks::line_retrieval_ctx(384, &mut rng).prompt, 8))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let snap = coord.shutdown();
+        t.row(&[
+            label.to_string(),
+            format!("{:.1}", snap.throughput_tok_s()),
+            format!("{:.3}", snap.ttft_s.percentile(95.0)),
+            snap.active_peak.to_string(),
+            cskv::util::table::bytes(snap.kv_bytes_peak),
+        ]);
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("perf_serving.csv"))?;
+
+    // ---- 3. PJRT artifact decode latency -------------------------------
+    if cskv::artifacts_dir().join("manifest.json").exists() {
+        let rt = Runtime::load_default()?;
+        rt.warmup(&["prefill", "decode_full", "decode_cskv_r26"])?;
+        let ctx26 = Rc::new(PjrtContext::new(rt, Arc::clone(&env.engine.w))?);
+        let mut rngp = Pcg64::new(21);
+        let prompt: Vec<usize> = (0..384).map(|_| rngp.range(16, 250)).collect();
+
+        let mut full = PjrtFullSession::new(Rc::clone(&ctx26));
+        full.prefill(&prompt)?;
+        b.time("pjrt decode_full step (ctx 384)", || {
+            let _ = full.decode_next().unwrap();
+        });
+
+        let f26 = factors_for(&env, KvCompressionPlan::uniform(0.8), InitMethod::asvd_default(), 0, QatMode::Off);
+        let mut cskv_sess = PjrtCskvSession::new(ctx26, f26)?;
+        cskv_sess.prefill(&prompt)?;
+        b.time("pjrt decode_cskv_r26 step (ctx 384, fused pallas)", || {
+            let _ = cskv_sess.decode_next().unwrap();
+        });
+    } else {
+        println!("(artifacts missing — PJRT section skipped; run `make artifacts`)");
+    }
+    println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
+    Ok(())
+}

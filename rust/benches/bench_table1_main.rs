@@ -1,0 +1,80 @@
+//! Table 1 — main results: {model} × {50%, 80%} × {StreamingLLM, H2O,
+//! ASVD, CSKV} on LongEval / LongBench / LVEval (scaled suites).
+//!
+//! Run: `cargo bench --bench bench_table1_main [-- --samples 25 --fast]`
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::eval::experiments::{build_sets, eval_cell, factors_for, Env, Method, FT_STEPS};
+use cskv::eval::Suite;
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::QuantMode;
+use cskv::util::bench::print_bench_header;
+use cskv::util::cli::Args;
+use cskv::util::table::{acc, Table};
+
+fn run_model_block(env: &Env, n_samples: usize, seed: u64, table: &mut Table) {
+    let columns = Suite::table1_columns();
+    let sets = build_sets(env, &columns, n_samples, seed);
+    let header: Vec<String> = columns.iter().map(|(n, _)| n.clone()).collect();
+    eprintln!("[{}] suites: {}", env.label, header.join(", "));
+
+    let mut row = |cratio: &str, method: &Method| {
+        let mut cells = vec![env.label.clone(), cratio.to_string(), method.label().to_string()];
+        for ((_, suite), set) in columns.iter().zip(&sets) {
+            let r = eval_cell(env, set, suite, method);
+            cells.push(acc(r.agreement()));
+        }
+        table.row(&cells);
+    };
+
+    row("0%", &Method::Full);
+    for ratio in [0.5f64, 0.8] {
+        let plan = KvCompressionPlan::uniform(ratio);
+        let asvd_f = factors_for(env, plan, InitMethod::asvd_default(), 0, QatMode::Off);
+        let cskv_f = factors_for(env, plan, InitMethod::asvd_default(), FT_STEPS, QatMode::Off);
+        let pct = format!("{}%", (ratio * 100.0) as u32);
+        row(&pct, &Method::StreamingLlm { ratio });
+        row(&pct, &Method::H2o { ratio });
+        row(&pct, &Method::Asvd { factors: asvd_f });
+        row(
+            &pct,
+            &Method::Cskv {
+                factors: cskv_f,
+                window: 32,
+                quant: QuantMode::None,
+            },
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_table1_main",
+        "CSKV paper Table 1 (methods × ratios × long-context suites)",
+    );
+    let n_samples = if args.get_flag("fast") {
+        args.get_usize("samples", 8)
+    } else {
+        args.get_usize("samples", 25)
+    };
+    let seed = args.get_u64("seed", 42);
+
+    let mut header = vec!["Model".to_string(), "C.Ratio".to_string(), "Method".to_string()];
+    header.extend(Suite::table1_columns().into_iter().map(|(n, _)| n));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Table 1: long-context performance", &hdr_refs);
+
+    let env = Env::load_default()?;
+    run_model_block(&env, n_samples, seed, &mut table);
+    if let Some(env_b) = Env::load_secondary() {
+        run_model_block(&env_b, n_samples, seed, &mut table);
+    } else {
+        eprintln!("(secondary model runs/tinylm_b.bin absent — single-model table)");
+    }
+
+    table.print();
+    table.save_csv(&cskv::runs_dir().join("table1.csv"))?;
+    println!("saved runs/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Table 2 — initialization ablation: {Random, SVD, ASVD (+Oracle ext.)}
+//! × ratio {50,60,70,80}% → LongEval average accuracy.
+//!
+//! Run: `cargo bench --bench bench_table2_init [-- --fast]`
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::eval::experiments::{build_sets, eval_cell, factors_for, Env, Method, FT_STEPS};
+use cskv::eval::Suite;
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::QuantMode;
+use cskv::util::bench::print_bench_header;
+use cskv::util::cli::Args;
+use cskv::util::table::{acc, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header("bench_table2_init", "CSKV paper Table 2 (init methods)");
+    let n = if args.get_flag("fast") { 8 } else { args.get_usize("samples", 25) };
+    let seed = args.get_u64("seed", 43);
+    let env = Env::load_default()?;
+
+    let columns = Suite::ablation_columns();
+    let sets = build_sets(&env, &columns, n, seed);
+    let avg_of = |method: &Method| -> f64 {
+        let mut s = 0.0;
+        for ((_, suite), set) in columns.iter().zip(&sets) {
+            s += eval_cell(&env, set, suite, method).agreement();
+        }
+        s / columns.len() as f64
+    };
+
+    let mut t = Table::new("Table 2: init method ablation (LongEval avg)", &[
+        "C.Ratio", "Init.Method", "Avg.Acc",
+    ]);
+    t.row(&["0%".into(), "-".into(), acc(avg_of(&Method::Full))]);
+
+    let inits: &[(&str, InitMethod)] = &[
+        ("Random", InitMethod::Random),
+        ("SVD", InitMethod::Svd),
+        ("ASVD", InitMethod::asvd_default()),
+        ("Oracle (ext.)", InitMethod::Oracle),
+    ];
+    for ratio in [0.5f64, 0.6, 0.7, 0.8] {
+        let plan = KvCompressionPlan::uniform(ratio);
+        for (label, init) in inits {
+            let f = factors_for(&env, plan, *init, FT_STEPS, QatMode::Off);
+            let m = Method::Cskv {
+                factors: f,
+                window: 32,
+                quant: QuantMode::None,
+            };
+            t.row(&[
+                format!("{}%", (ratio * 100.0) as u32),
+                label.to_string(),
+                acc(avg_of(&m)),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("table2.csv"))?;
+    println!("saved runs/table2.csv");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Table 3 — window-size ablation at 80% compression: m ∈ {2..256}
+//! (scaled from the paper's {2..4096} to our 512-token context).
+//!
+//! Run: `cargo bench --bench bench_table3_window [-- --fast]`
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::eval::experiments::{build_sets, eval_cell, factors_for, Env, Method, FT_STEPS};
+use cskv::eval::Suite;
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::QuantMode;
+use cskv::util::bench::print_bench_header;
+use cskv::util::cli::Args;
+use cskv::util::table::{acc, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header("bench_table3_window", "CSKV paper Table 3 (window size)");
+    let n = if args.get_flag("fast") { 8 } else { args.get_usize("samples", 25) };
+    let seed = args.get_u64("seed", 44);
+    let env = Env::load_default()?;
+
+    let columns = Suite::ablation_columns();
+    let sets = build_sets(&env, &columns, n, seed);
+    let avg_of = |method: &Method| -> f64 {
+        columns
+            .iter()
+            .zip(&sets)
+            .map(|((_, suite), set)| eval_cell(&env, set, suite, method).agreement())
+            .sum::<f64>()
+            / columns.len() as f64
+    };
+
+    let mut t = Table::new(
+        "Table 3: window size at 80% compression (LongEval avg)",
+        &["C.Ratio", "Window Size", "Avg.Acc"],
+    );
+    t.row(&["0%".into(), "-".into(), acc(avg_of(&Method::Full))]);
+
+    let plan = KvCompressionPlan::uniform(0.8);
+    let f = factors_for(&env, plan, InitMethod::asvd_default(), FT_STEPS, QatMode::Off);
+    let windows: Vec<usize> = args.get_list_usize("windows", &[2, 4, 8, 16, 32, 64, 128, 256]);
+    for w in windows {
+        let m = Method::Cskv {
+            factors: std::sync::Arc::clone(&f),
+            window: w,
+            quant: QuantMode::None,
+        };
+        t.row(&["80%".into(), w.to_string(), acc(avg_of(&m))]);
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("table3.csv"))?;
+    println!("saved runs/table3.csv");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Table 4 — K/V compression-ratio allocation at total {50%, 75%}:
+//! every paper split from K-heavy to V-heavy.
+//!
+//! Run: `cargo bench --bench bench_table4_allocation [-- --fast]`
+
+use cskv::compress::ratio::table4_allocations;
+use cskv::compress::InitMethod;
+use cskv::eval::experiments::{build_sets, eval_cell, factors_for, Env, Method, FT_STEPS};
+use cskv::eval::Suite;
+use cskv::finetune::recon::QatMode;
+use cskv::kvcache::QuantMode;
+use cskv::util::bench::print_bench_header;
+use cskv::util::cli::Args;
+use cskv::util::table::{acc, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_table4_allocation",
+        "CSKV paper Table 4 (K/V ratio allocation)",
+    );
+    let n = if args.get_flag("fast") { 8 } else { args.get_usize("samples", 25) };
+    let seed = args.get_u64("seed", 45);
+    let env = Env::load_default()?;
+
+    let columns = Suite::ablation_columns();
+    let sets = build_sets(&env, &columns, n, seed);
+    let avg_of = |method: &Method| -> f64 {
+        columns
+            .iter()
+            .zip(&sets)
+            .map(|((_, suite), set)| eval_cell(&env, set, suite, method).agreement())
+            .sum::<f64>()
+            / columns.len() as f64
+    };
+
+    let mut t = Table::new(
+        "Table 4: K/V allocation (keep fractions; LongEval avg)",
+        &["C.Ratio", "KV C.Ratio", "Avg.Acc"],
+    );
+    t.row(&["0%".into(), "-".into(), acc(avg_of(&Method::Full))]);
+
+    for total in [0.5f64, 0.75] {
+        for plan in table4_allocations(total) {
+            let f = factors_for(&env, plan, InitMethod::asvd_default(), FT_STEPS, QatMode::Off);
+            let m = Method::Cskv {
+                factors: f,
+                window: 32,
+                quant: QuantMode::None,
+            };
+            t.row(&[
+                format!("{}%", (total * 100.0) as u32),
+                format!(
+                    "K({:.2}%) V({:.2}%)",
+                    plan.keep_k * 100.0,
+                    plan.keep_v * 100.0
+                ),
+                acc(avg_of(&m)),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("table4.csv"))?;
+    println!("saved runs/table4.csv");
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! H2O (Heavy-Hitter Oracle) baseline.
+//!
+//! Keeps a token budget split between (a) *heavy hitters* — tokens with the
+//! largest cumulative attention mass — and (b) the most recent tokens.
+//! Attention mass is seeded from the prefill pass
+//! ([`crate::kvcache::KvCachePolicy::observe_prefill_attn`]) and updated
+//! every decode step, exactly the greedy eviction of Zhang et al. (2023).
+//! Like the paper's evaluation we aggregate scores across heads (the
+//! official implementation evicts per-head; aggregate eviction is the
+//! standard architecture-agnostic variant — DESIGN.md §2).
+
+use crate::tensor::Mat;
+
+use crate::kvcache::{CacheView, GrowMat, KvCachePolicy};
+
+pub struct H2oCache {
+    budget: usize,
+    /// Recent tokens protected from eviction (half the budget, per paper).
+    recent: usize,
+    layers: Vec<LayerState>,
+}
+
+struct LayerState {
+    k: GrowMat,
+    v: GrowMat,
+    abs_pos: Vec<usize>,
+    score: Vec<f32>,
+    n: usize,
+}
+
+impl H2oCache {
+    pub fn new(n_layers: usize, d_model: usize, budget: usize) -> Self {
+        assert!(budget >= 2);
+        H2oCache {
+            budget,
+            recent: budget / 2,
+            layers: (0..n_layers)
+                .map(|_| LayerState {
+                    k: GrowMat::new(d_model),
+                    v: GrowMat::new(d_model),
+                    abs_pos: Vec::new(),
+                    score: Vec::new(),
+                    n: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn evict(&mut self, layer: usize) {
+        let budget = self.budget;
+        let recent = self.recent;
+        let l = &mut self.layers[layer];
+        while l.abs_pos.len() > budget {
+            // Lowest cumulative score among non-recent entries.
+            let cutoff = l.abs_pos.len() - recent;
+            let mut worst = 0;
+            let mut worst_score = f32::INFINITY;
+            for i in 0..cutoff {
+                if l.score[i] < worst_score {
+                    worst_score = l.score[i];
+                    worst = i;
+                }
+            }
+            l.k.remove_row(worst);
+            l.v.remove_row(worst);
+            l.abs_pos.remove(worst);
+            l.score.remove(worst);
+        }
+    }
+}
+
+impl KvCachePolicy for H2oCache {
+    fn name(&self) -> String {
+        format!("h2o(budget={})", self.budget)
+    }
+
+    fn ingest_prefill(&mut self, layer: usize, _xnorm: &Mat, k: &Mat, v: &Mat) -> Option<(Mat, Mat)> {
+        let l = &mut self.layers[layer];
+        l.k.push_mat(k);
+        l.v.push_mat(v);
+        l.abs_pos.extend(0..k.rows);
+        l.score.extend(std::iter::repeat(0.0).take(k.rows));
+        l.n = k.rows;
+        // Eviction is deferred to observe_prefill_attn so scores exist.
+        None
+    }
+
+    fn observe_prefill_attn(&mut self, layer: usize, mass: &[f32]) {
+        {
+            let l = &mut self.layers[layer];
+            debug_assert_eq!(mass.len(), l.score.len());
+            for (s, &m) in l.score.iter_mut().zip(mass) {
+                *s += m;
+            }
+        }
+        self.evict(layer);
+    }
+
+    fn append(&mut self, layer: usize, _xnorm: &[f32], k: &[f32], v: &[f32]) {
+        {
+            let l = &mut self.layers[layer];
+            let pos = l.n;
+            l.k.push_row(k);
+            l.v.push_row(v);
+            l.abs_pos.push(pos);
+            l.score.push(0.0);
+            l.n += 1;
+        }
+        self.evict(layer);
+    }
+
+    fn materialize(&self, layer: usize) -> CacheView {
+        let l = &self.layers[layer];
+        CacheView {
+            k: l.k.to_mat(),
+            v: l.v.to_mat(),
+            // H2O keeps original (absolute) positions.
+            rope_pos: l.abs_pos.clone(),
+            abs_pos: l.abs_pos.clone(),
+        }
+    }
+
+    fn observe_decode_attn(&mut self, layer: usize, abs_pos: &[usize], probs: &[f32]) {
+        let l = &mut self.layers[layer];
+        debug_assert_eq!(abs_pos.len(), probs.len());
+        // abs_pos here mirrors materialize() order, which is l.abs_pos.
+        for (i, &p) in probs.iter().enumerate() {
+            if i < l.score.len() {
+                debug_assert_eq!(l.abs_pos[i], abs_pos[i]);
+                l.score[i] += p;
+            }
+        }
+    }
+
+    fn len(&self, layer: usize) -> usize {
+        self.layers[layer].abs_pos.len()
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            // score vector is bookkeeping, but charge it honestly anyway
+            .map(|l| l.k.bytes() + l.v.bytes() + l.score.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn setup(budget: usize, t: usize, heavy: &[usize]) -> H2oCache {
+        let d = 4;
+        let mut rng = Pcg64::new(1);
+        let mut c = H2oCache::new(1, d, budget);
+        let x = Mat::randn(t, d, 1.0, &mut rng);
+        let k = Mat::randn(t, d, 1.0, &mut rng);
+        let v = Mat::randn(t, d, 1.0, &mut rng);
+        c.ingest_prefill(0, &x, &k, &v);
+        let mut mass = vec![0.1f32; t];
+        for &h in heavy {
+            mass[h] = 10.0;
+        }
+        c.observe_prefill_attn(0, &mass);
+        c
+    }
+
+    #[test]
+    fn heavy_hitters_survive_eviction() {
+        let c = setup(8, 32, &[3, 7]);
+        let view = c.materialize(0);
+        assert_eq!(view.len(), 8);
+        assert!(view.abs_pos.contains(&3), "heavy hitter 3 kept: {:?}", view.abs_pos);
+        assert!(view.abs_pos.contains(&7), "heavy hitter 7 kept");
+        // Recent half (last 4 positions) protected.
+        for p in 28..32 {
+            assert!(view.abs_pos.contains(&p), "recent {p} kept");
+        }
+        // Positions are absolute (not re-based).
+        assert_eq!(view.rope_pos, view.abs_pos);
+    }
+
+    #[test]
+    fn decode_scores_update_ranking() {
+        let mut c = setup(8, 16, &[2]);
+        // Pick a surviving non-heavy, non-recent position and attend to it
+        // strongly during decode.
+        let view = c.materialize(0);
+        let boosted = view.abs_pos[1]; // survivor right after heavy-hitter 2
+        assert_ne!(boosted, 2);
+        let mut probs = vec![0.01f32; view.len()];
+        probs[1] = 5.0;
+        c.observe_decode_attn(0, &view.abs_pos, &probs);
+        // Append enough tokens to force evictions.
+        let mut rng = Pcg64::new(2);
+        for _ in 0..6 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            c.append(0, &row, &row, &row);
+        }
+        let view = c.materialize(0);
+        assert_eq!(view.len(), 8);
+        assert!(view.abs_pos.contains(&2), "prefill heavy hitter kept");
+        assert!(
+            view.abs_pos.contains(&boosted),
+            "decode-boosted token {boosted} kept: {:?}",
+            view.abs_pos
+        );
+    }
+
+    #[test]
+    fn budget_enforced_during_decode() {
+        let mut c = setup(6, 12, &[]);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            c.append(0, &row, &row, &row);
+            assert_eq!(c.len(0), 6);
+        }
+        // Newest token always kept (it's in the recent window).
+        assert_eq!(*c.materialize(0).abs_pos.last().unwrap(), 31);
+    }
+
+    #[test]
+    fn total_seen_vs_kept() {
+        let c = setup(4, 20, &[0]);
+        assert_eq!(c.len(0), 4);
+        assert_eq!(c.layers[0].n, 20);
+    }
+}

@@ -1,0 +1,21 @@
+//! Baseline KV-cache compression methods the paper compares against
+//! (Table 1):
+//!
+//! * [`streaming`] — StreamingLLM [Xiao et al., 2024]: attention sinks +
+//!   recent window, cache-relative RoPE positions.
+//! * [`h2o`] — H2O [Zhang et al., 2023]: heavy-hitter tokens selected by
+//!   cumulative attention mass + a recent window.
+//! * [`asvd`] — ASVD [Yuan et al., 2024] applied to `W_K`/`W_V` only
+//!   (the paper's footnote 2): whole-projection low-rank replacement, no
+//!   bi-branch window, no fine-tuning — also used for CSKV's init.
+//!
+//! All are [`crate::kvcache::KvCachePolicy`] implementations and are
+//! evaluated through exactly the same engine/harness as CSKV.
+
+pub mod asvd;
+pub mod h2o;
+pub mod streaming;
+
+pub use asvd::AsvdCache;
+pub use h2o::H2oCache;
+pub use streaming::StreamingLlmCache;

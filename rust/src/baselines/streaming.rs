@@ -1,0 +1,178 @@
+//! StreamingLLM baseline: attention sinks + recent-window eviction.
+//!
+//! Keeps the first `n_sink` tokens (attention sinks) plus the most recent
+//! tokens within a total token budget. Evicted tokens are gone forever —
+//! the failure mode the paper highlights on retrieval tasks (the queried
+//! line is usually outside the window).
+//!
+//! RoPE positions are **cache-relative** ("we use positions within the
+//! cache rather than those in the original text" — StreamingLLM §3.2),
+//! which is what lets the model run past its trained length.
+
+use crate::tensor::Mat;
+
+use crate::kvcache::{CacheView, GrowMat, KvCachePolicy};
+
+pub struct StreamingLlmCache {
+    n_sink: usize,
+    budget: usize,
+    layers: Vec<LayerState>,
+}
+
+struct LayerState {
+    k: GrowMat,
+    v: GrowMat,
+    abs_pos: Vec<usize>,
+    /// Total tokens seen (kept + evicted).
+    n: usize,
+}
+
+impl StreamingLlmCache {
+    /// `budget` = max kept tokens (sinks included); the paper's Table 1
+    /// rows use `budget = (1 - ratio) × prompt_len`.
+    pub fn new(n_layers: usize, d_model: usize, n_sink: usize, budget: usize) -> Self {
+        assert!(budget > n_sink, "budget must exceed sink count");
+        StreamingLlmCache {
+            n_sink,
+            budget,
+            layers: (0..n_layers)
+                .map(|_| LayerState {
+                    k: GrowMat::new(d_model),
+                    v: GrowMat::new(d_model),
+                    abs_pos: Vec::new(),
+                    n: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn evict(&mut self, layer: usize) {
+        let n_sink = self.n_sink;
+        let budget = self.budget;
+        let l = &mut self.layers[layer];
+        while l.abs_pos.len() > budget {
+            // Drop the oldest non-sink entry.
+            l.k.remove_row(n_sink);
+            l.v.remove_row(n_sink);
+            l.abs_pos.remove(n_sink);
+        }
+    }
+}
+
+impl KvCachePolicy for StreamingLlmCache {
+    fn name(&self) -> String {
+        format!("streamingllm(sink={},budget={})", self.n_sink, self.budget)
+    }
+
+    fn ingest_prefill(&mut self, layer: usize, _xnorm: &Mat, k: &Mat, v: &Mat) -> Option<(Mat, Mat)> {
+        {
+            let l = &mut self.layers[layer];
+            l.k.push_mat(k);
+            l.v.push_mat(v);
+            l.abs_pos.extend(0..k.rows);
+            l.n = k.rows;
+        }
+        self.evict(layer);
+        None
+    }
+
+    fn append(&mut self, layer: usize, _xnorm: &[f32], k: &[f32], v: &[f32]) {
+        {
+            let l = &mut self.layers[layer];
+            let pos = l.n;
+            l.k.push_row(k);
+            l.v.push_row(v);
+            l.abs_pos.push(pos);
+            l.n += 1;
+        }
+        self.evict(layer);
+    }
+
+    fn materialize(&self, layer: usize) -> CacheView {
+        let l = &self.layers[layer];
+        let n = l.abs_pos.len();
+        CacheView {
+            k: l.k.to_mat(),
+            v: l.v.to_mat(),
+            // Cache-relative positions: 0..n in cache order.
+            rope_pos: (0..n).collect(),
+            abs_pos: l.abs_pos.clone(),
+        }
+    }
+
+    fn query_rope_pos(&self, layer: usize, _abs_pos: usize) -> usize {
+        // The query sits one past the newest cache slot.
+        self.layers[layer].abs_pos.len()
+    }
+
+    fn len(&self, layer: usize) -> usize {
+        self.layers[layer].abs_pos.len()
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn ingest(c: &mut StreamingLlmCache, t: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::randn(t, d, 1.0, &mut rng);
+        let k = Mat::randn(t, d, 1.0, &mut rng);
+        let v = Mat::randn(t, d, 1.0, &mut rng);
+        c.ingest_prefill(0, &x, &k, &v);
+        (k, v)
+    }
+
+    #[test]
+    fn keeps_sinks_and_recent() {
+        let mut c = StreamingLlmCache::new(1, 4, 2, 6);
+        let (k, _) = ingest(&mut c, 20, 4, 1);
+        let view = c.materialize(0);
+        view.validate();
+        assert_eq!(view.len(), 6);
+        // sinks 0,1 + recent 16..20
+        assert_eq!(view.abs_pos, vec![0, 1, 16, 17, 18, 19]);
+        assert_eq!(view.k.row(0), k.row(0));
+        assert_eq!(view.k.row(5), k.row(19));
+        // cache-relative rope positions
+        assert_eq!(view.rope_pos, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(c.query_rope_pos(0, 20), 6);
+    }
+
+    #[test]
+    fn decode_eviction_maintains_budget() {
+        let mut c = StreamingLlmCache::new(2, 4, 1, 5);
+        ingest(&mut c, 8, 4, 2);
+        let mut rng = Pcg64::new(3);
+        for step in 0..10 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            c.append(0, &row, &row, &row);
+            assert_eq!(c.len(0), 5);
+            let view = c.materialize(0);
+            // newest token always present
+            assert_eq!(*view.abs_pos.last().unwrap(), 8 + step);
+            // sink always present
+            assert_eq!(view.abs_pos[0], 0);
+        }
+    }
+
+    #[test]
+    fn memory_is_budget_bound() {
+        let mut c = StreamingLlmCache::new(1, 8, 2, 10);
+        ingest(&mut c, 100, 8, 4);
+        assert_eq!(c.kv_bytes(), 10 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn short_prompts_not_evicted() {
+        let mut c = StreamingLlmCache::new(1, 4, 2, 16);
+        ingest(&mut c, 5, 4, 5);
+        assert_eq!(c.len(0), 5);
+        assert_eq!(c.materialize(0).abs_pos, vec![0, 1, 2, 3, 4]);
+    }
+}

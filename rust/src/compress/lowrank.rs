@@ -1,0 +1,216 @@
+//! Low-rank factor pairs for the key/value projections.
+//!
+//! The paper approximates `W ∈ R^{h_in×h_out}` with `A ∈ R^{h_in×h_comp}`
+//! and `B ∈ R^{h_comp×h_out}` and **stores `C = X·A` as the compressed
+//! cache**; `K̂ = C·B` is reconstructed tile-wise during attention.
+
+use crate::tensor::{matmul, Mat};
+
+/// One `A, B` factor pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LowRankFactors {
+    /// Down-projection `[d_in, rank]` — producer of the compressed cache.
+    pub a: Mat,
+    /// Up-projection `[rank, d_out]` — reconstruction at attention time.
+    pub b: Mat,
+}
+
+impl LowRankFactors {
+    pub fn new(a: Mat, b: Mat) -> Self {
+        assert_eq!(a.cols, b.rows, "rank mismatch between A and B");
+        LowRankFactors { a, b }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.cols
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.b.cols
+    }
+
+    /// Compress a batch of activations: `C = X·A` (`[n, rank]`).
+    pub fn compress(&self, x: &Mat) -> Mat {
+        x.matmul(&self.a)
+    }
+
+    /// Compress a single token's activation row.
+    pub fn compress_row(&self, x: &[f32]) -> Vec<f32> {
+        matmul::matvec_t(&self.a, x)
+    }
+
+    /// Reconstruct `K̂ = C·B` (`[n, d_out]`).
+    pub fn reconstruct(&self, c: &Mat) -> Mat {
+        c.matmul(&self.b)
+    }
+
+    /// Effective weight `A·B` (for ASVD-style whole-weight replacement).
+    pub fn effective_weight(&self) -> Mat {
+        self.a.matmul(&self.b)
+    }
+
+    /// Reconstruction error `‖X·W − X·A·B‖ / ‖X·W‖` on given activations.
+    pub fn relative_error(&self, x: &Mat, w: &Mat) -> f32 {
+        let exact = x.matmul(w);
+        let approx = self.reconstruct(&self.compress(x));
+        approx.sub(&exact).frob_norm() / exact.frob_norm().max(1e-12)
+    }
+}
+
+/// K + V factors for one transformer layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerFactors {
+    pub k: LowRankFactors,
+    pub v: LowRankFactors,
+}
+
+/// Factors for every layer + provenance metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelFactors {
+    pub layers: Vec<LayerFactors>,
+    /// Human-readable provenance ("asvd r=26/26 ft=400" etc.) recorded into
+    /// experiment outputs.
+    pub provenance: String,
+}
+
+const MAGIC: &[u8; 8] = b"CSKVFAC1";
+
+impl ModelFactors {
+    pub fn rank_k(&self) -> usize {
+        self.layers[0].k.rank()
+    }
+
+    pub fn rank_v(&self) -> usize {
+        self.layers[0].v.rank()
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        let prov = self.provenance.as_bytes();
+        buf.extend_from_slice(&(prov.len() as u64).to_le_bytes());
+        buf.extend_from_slice(prov);
+        buf.extend_from_slice(&(self.layers.len() as u64).to_le_bytes());
+        for l in &self.layers {
+            l.k.a.write_to(&mut buf);
+            l.k.b.write_to(&mut buf);
+            l.v.a.write_to(&mut buf);
+            l.v.b.write_to(&mut buf);
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let buf = std::fs::read(path)?;
+        anyhow::ensure!(buf.len() > 24 && &buf[..8] == MAGIC, "bad factors file");
+        let mut pos = 8;
+        let plen = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        let provenance = String::from_utf8(buf[pos..pos + plen].to_vec())?;
+        pos += plen;
+        let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ka = Mat::read_from(&buf, &mut pos)?;
+            let kb = Mat::read_from(&buf, &mut pos)?;
+            let va = Mat::read_from(&buf, &mut pos)?;
+            let vb = Mat::read_from(&buf, &mut pos)?;
+            layers.push(LayerFactors {
+                k: LowRankFactors::new(ka, kb),
+                v: LowRankFactors::new(va, vb),
+            });
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in factors file");
+        Ok(ModelFactors { layers, provenance })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn compress_reconstruct_shapes() {
+        let mut rng = Pcg64::new(1);
+        let f = LowRankFactors::new(
+            Mat::randn(16, 4, 1.0, &mut rng),
+            Mat::randn(4, 16, 1.0, &mut rng),
+        );
+        let x = Mat::randn(10, 16, 1.0, &mut rng);
+        let c = f.compress(&x);
+        assert_eq!((c.rows, c.cols), (10, 4));
+        let k = f.reconstruct(&c);
+        assert_eq!((k.rows, k.cols), (10, 16));
+        assert_eq!(f.rank(), 4);
+    }
+
+    #[test]
+    fn compress_row_matches_batch() {
+        let mut rng = Pcg64::new(2);
+        let f = LowRankFactors::new(
+            Mat::randn(8, 3, 1.0, &mut rng),
+            Mat::randn(3, 8, 1.0, &mut rng),
+        );
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        let c = f.compress(&x);
+        for i in 0..5 {
+            let row = f.compress_row(x.row(i));
+            for j in 0..3 {
+                assert!((row[j] - c.at(i, j)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_when_full_rank_factors_of_w() {
+        let mut rng = Pcg64::new(3);
+        let w = Mat::randn(12, 12, 1.0, &mut rng);
+        let d = crate::tensor::svd::svd(&w);
+        let (a, b) = d.factors(12);
+        let f = LowRankFactors::new(a, b);
+        let x = Mat::randn(30, 12, 1.0, &mut rng);
+        assert!(f.relative_error(&x, &w) < 1e-3);
+    }
+
+    #[test]
+    fn factors_roundtrip_disk() {
+        let mut rng = Pcg64::new(4);
+        let mut mk = move || {
+            LowRankFactors::new(
+                Mat::randn(8, 2, 1.0, &mut rng),
+                Mat::randn(2, 8, 1.0, &mut rng),
+            )
+        };
+        let mut rng2 = Pcg64::new(5);
+        let _ = &mut rng2;
+        let mf = ModelFactors {
+            layers: vec![
+                LayerFactors { k: mk(), v: mk() },
+                LayerFactors { k: mk(), v: mk() },
+            ],
+            provenance: "test r=2".into(),
+        };
+        let dir = std::env::temp_dir().join("cskv_test_factors");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("f.bin");
+        mf.save(&p).unwrap();
+        let mf2 = ModelFactors::load(&p).unwrap();
+        assert_eq!(mf, mf2);
+        assert_eq!(mf2.rank_k(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_mismatch_panics() {
+        let a = Mat::zeros(8, 3);
+        let b = Mat::zeros(4, 8);
+        let _ = LowRankFactors::new(a, b);
+    }
+}

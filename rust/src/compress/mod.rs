@@ -1,0 +1,19 @@
+//! Channel-shrinking compression machinery (§2 of the paper).
+//!
+//! * [`lowrank`] — the `A·B` factor pair that replaces `W_K`/`W_V`; the
+//!   intermediate feature `C = X·A` is what the compressed cache stores.
+//! * [`ratio`] — compression-ratio bookkeeping, including the Table 4
+//!   K/V allocation arithmetic (keep fractions, ranks, memory math).
+//! * [`svd_init`] — Random / SVD / ASVD / Oracle initialization of the
+//!   factors (§2.2 + the Table 2 ablation; Oracle is our extension).
+//! * [`quant`] — KIVI-style int4 group quantization (per-channel keys,
+//!   per-token values) for the Table 5 integration.
+
+pub mod lowrank;
+pub mod quant;
+pub mod ratio;
+pub mod svd_init;
+
+pub use lowrank::{LayerFactors, LowRankFactors, ModelFactors};
+pub use ratio::KvCompressionPlan;
+pub use svd_init::InitMethod;

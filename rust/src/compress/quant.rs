@@ -1,0 +1,226 @@
+//! KIVI-style int4 group quantization of the compressed cache (Table 5).
+//!
+//! Following the paper's §C.4 setup: asymmetric 4-bit quantization applied
+//! to the *compressed* features `C`, **per-channel** for keys (statistics
+//! over the token axis within a group) and **per-token** for values.
+//! Tokens are quantized in groups of [`GROUP`] once a group fills; the
+//! residual (< GROUP newest tokens) stays fp32, exactly like KIVI's
+//! residual window.
+
+use crate::tensor::Mat;
+
+/// Group length in tokens (the paper sets window = residual = 32).
+pub const GROUP: usize = 32;
+
+/// Quantization statistic axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantAxis {
+    /// Scale/zero per column (channel) across the group's tokens — keys.
+    PerChannel,
+    /// Scale/zero per row (token) across channels — values.
+    PerToken,
+}
+
+/// A quantized `[rows, cols]` block: packed int4 codes + affine params.
+#[derive(Clone, Debug)]
+pub struct QuantizedBlock {
+    pub rows: usize,
+    pub cols: usize,
+    pub axis: QuantAxis,
+    /// Two 4-bit codes per byte, row-major.
+    packed: Vec<u8>,
+    scale: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+fn params_len(rows: usize, cols: usize, axis: QuantAxis) -> usize {
+    match axis {
+        QuantAxis::PerChannel => cols,
+        QuantAxis::PerToken => rows,
+    }
+}
+
+/// Quantize a dense block to int4.
+pub fn quantize_block(m: &Mat, axis: QuantAxis) -> QuantizedBlock {
+    let (rows, cols) = (m.rows, m.cols);
+    let np = params_len(rows, cols, axis);
+    let mut mins = vec![f32::INFINITY; np];
+    let mut maxs = vec![f32::NEG_INFINITY; np];
+    for i in 0..rows {
+        for j in 0..cols {
+            let p = match axis {
+                QuantAxis::PerChannel => j,
+                QuantAxis::PerToken => i,
+            };
+            let v = m.at(i, j);
+            mins[p] = mins[p].min(v);
+            maxs[p] = maxs[p].max(v);
+        }
+    }
+    let mut scale = vec![0.0f32; np];
+    let mut zero = vec![0.0f32; np];
+    for p in 0..np {
+        let range = (maxs[p] - mins[p]).max(1e-8);
+        scale[p] = range / 15.0;
+        zero[p] = mins[p];
+    }
+    let n = rows * cols;
+    let mut packed = vec![0u8; n.div_ceil(2)];
+    for i in 0..rows {
+        for j in 0..cols {
+            let p = match axis {
+                QuantAxis::PerChannel => j,
+                QuantAxis::PerToken => i,
+            };
+            let q = (((m.at(i, j) - zero[p]) / scale[p]).round() as i32).clamp(0, 15) as u8;
+            let idx = i * cols + j;
+            if idx % 2 == 0 {
+                packed[idx / 2] |= q;
+            } else {
+                packed[idx / 2] |= q << 4;
+            }
+        }
+    }
+    QuantizedBlock {
+        rows,
+        cols,
+        axis,
+        packed,
+        scale,
+        zero,
+    }
+}
+
+impl QuantizedBlock {
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let idx = i * self.cols + j;
+                let byte = self.packed[idx / 2];
+                let q = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                let p = match self.axis {
+                    QuantAxis::PerChannel => j,
+                    QuantAxis::PerToken => i,
+                };
+                *out.at_mut(i, j) = q as f32 * self.scale[p] + self.zero[p];
+            }
+        }
+        out
+    }
+
+    /// Dequantize a row range `[lo, hi)` only (tile-wise reconstruction).
+    pub fn dequantize_rows(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        let mut out = Mat::zeros(hi - lo, self.cols);
+        for i in lo..hi {
+            for j in 0..self.cols {
+                let idx = i * self.cols + j;
+                let byte = self.packed[idx / 2];
+                let q = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                let p = match self.axis {
+                    QuantAxis::PerChannel => j,
+                    QuantAxis::PerToken => i,
+                };
+                *out.at_mut(i - lo, j) = q as f32 * self.scale[p] + self.zero[p];
+            }
+        }
+        out
+    }
+
+    /// True storage footprint: packed codes + affine params.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + (self.scale.len() + self.zero.len()) * 4
+    }
+}
+
+/// Quantize–dequantize (straight-through fake quant) — the QAT loss path
+/// and the PTQ evaluation path share this.
+pub fn fake_quant(m: &Mat, axis: QuantAxis) -> Mat {
+    quantize_block(m, axis).dequantize()
+}
+
+/// Worst-case absolute quantization error for a block (half a step).
+pub fn max_quant_step(m: &Mat, axis: QuantAxis) -> f32 {
+    let q = quantize_block(m, axis);
+    q.scale.iter().fold(0.0f32, |a, &s| a.max(s)) * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Pcg64::new(1);
+        for axis in [QuantAxis::PerChannel, QuantAxis::PerToken] {
+            let m = Mat::randn(32, 16, 1.0, &mut rng);
+            let q = quantize_block(&m, axis);
+            let d = q.dequantize();
+            // Error per element must be within half a quantization step.
+            let step = max_quant_step(&m, axis);
+            assert!(
+                m.max_abs_diff(&d) <= step + 1e-5,
+                "axis={axis:?} err={} step={step}",
+                m.max_abs_diff(&d)
+            );
+        }
+    }
+
+    #[test]
+    fn per_channel_robust_to_channel_scale_outliers() {
+        // A channel with huge magnitude must not destroy other channels —
+        // the reason KIVI uses per-channel for keys.
+        let mut rng = Pcg64::new(2);
+        let mut m = Mat::randn(32, 8, 1.0, &mut rng);
+        m.scale_col(0, 100.0);
+        let dc = fake_quant(&m, QuantAxis::PerChannel).sub(&m);
+        let dt = fake_quant(&m, QuantAxis::PerToken).sub(&m);
+        // Error on the non-outlier columns:
+        let ec = dc.cols_slice(1, 8).frob_norm();
+        let et = dt.cols_slice(1, 8).frob_norm();
+        assert!(ec < et / 3.0, "per-channel {ec} should beat per-token {et}");
+    }
+
+    #[test]
+    fn per_token_robust_to_token_outliers() {
+        let mut rng = Pcg64::new(3);
+        let mut m = Mat::randn(16, 8, 1.0, &mut rng);
+        m.scale_row(0, 100.0);
+        let dt = fake_quant(&m, QuantAxis::PerToken).sub(&m);
+        let dc = fake_quant(&m, QuantAxis::PerChannel).sub(&m);
+        let et = dt.rows_slice(1, 16).frob_norm();
+        let ec = dc.rows_slice(1, 16).frob_norm();
+        assert!(et < ec / 3.0, "per-token {et} should beat per-channel {ec}");
+    }
+
+    #[test]
+    fn packing_is_4bit() {
+        let mut rng = Pcg64::new(4);
+        let m = Mat::randn(GROUP, 26, 1.0, &mut rng);
+        let q = quantize_block(&m, QuantAxis::PerChannel);
+        // 32*26 codes = 416 bytes packed, + 2*26 f32 params = 208 bytes
+        assert_eq!(q.bytes(), (GROUP * 26) / 2 + 2 * 26 * 4);
+        // 8× reduction on codes vs f32 (modulo params overhead)
+        assert!(q.bytes() * 4 < GROUP * 26 * 4);
+    }
+
+    #[test]
+    fn dequantize_rows_matches_full() {
+        let mut rng = Pcg64::new(5);
+        let m = Mat::randn(20, 6, 1.0, &mut rng);
+        let q = quantize_block(&m, QuantAxis::PerChannel);
+        let full = q.dequantize();
+        let part = q.dequantize_rows(5, 13);
+        assert!(part.allclose(&full.rows_slice(5, 13), 1e-6));
+    }
+
+    #[test]
+    fn constant_block_exact() {
+        let m = Mat::from_vec(4, 4, vec![3.5; 16]);
+        let d = fake_quant(&m, QuantAxis::PerToken);
+        assert!(d.allclose(&m, 1e-5));
+    }
+}

@@ -1,0 +1,148 @@
+//! Compression-ratio arithmetic, including Table 4's K/V allocation.
+//!
+//! Terminology (matching the paper):
+//! * **compression ratio** `ρ` — fraction of KV memory removed
+//!   (80% ⇒ the compressed cache is 5× smaller).
+//! * **keep fraction** — `1 − ρ` per cache, i.e. `h_comp / h_out`.
+//!
+//! Table 4 lists *keep fractions per cache*: "K(87.5%) V(12.5%)" at total
+//! ratio 50% means `keep_k + keep_v = 2·(1 − ρ_total)`.
+
+/// Per-model-layer compression plan for keys and values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvCompressionPlan {
+    /// Kept channel fraction of the key cache (`h_comp_k / h_out`).
+    pub keep_k: f64,
+    /// Kept channel fraction of the value cache.
+    pub keep_v: f64,
+}
+
+impl KvCompressionPlan {
+    /// Uniform plan: both caches compressed at `ratio` (the paper's main
+    /// Table 1 setting).
+    pub fn uniform(ratio: f64) -> Self {
+        assert!((0.0..1.0).contains(&ratio), "ratio must be in [0,1)");
+        KvCompressionPlan {
+            keep_k: 1.0 - ratio,
+            keep_v: 1.0 - ratio,
+        }
+    }
+
+    /// Table 4 allocation: fix the *total* ratio, give the key cache keep
+    /// fraction `keep_k`; the value keep fraction is implied.
+    pub fn with_allocation(total_ratio: f64, keep_k: f64) -> Self {
+        let budget = 2.0 * (1.0 - total_ratio);
+        let keep_v = budget - keep_k;
+        assert!(
+            keep_k > 0.0 && keep_v > 0.0 && keep_k <= 1.0 && keep_v <= 1.0,
+            "infeasible allocation: total={total_ratio} keep_k={keep_k} -> keep_v={keep_v}"
+        );
+        KvCompressionPlan { keep_k, keep_v }
+    }
+
+    /// Total compression ratio across K and V.
+    pub fn total_ratio(&self) -> f64 {
+        1.0 - (self.keep_k + self.keep_v) / 2.0
+    }
+
+    /// Channel rank of the compressed key cache for hidden size `d`.
+    pub fn rank_k(&self, d: usize) -> usize {
+        rank_for_keep(d, self.keep_k)
+    }
+
+    pub fn rank_v(&self, d: usize) -> usize {
+        rank_for_keep(d, self.keep_v)
+    }
+
+    /// Additional ratio multiplier from int4 quantization of the
+    /// compressed cache (4 bits vs 32: ×8 smaller ⇒ Table 5's
+    /// "50% origin → 87.5% total" plus int4's own overhead ignored, as in
+    /// the paper's headline arithmetic).
+    pub fn total_ratio_with_int4(&self) -> f64 {
+        1.0 - (1.0 - self.total_ratio()) / 8.0
+    }
+}
+
+/// Round a keep fraction to a channel rank (≥1 so the cache stays usable).
+pub fn rank_for_keep(d: usize, keep: f64) -> usize {
+    ((d as f64 * keep).round() as usize).clamp(1, d)
+}
+
+/// All Table 4 allocation rows for a given total ratio, as (keep_k, keep_v)
+/// pairs in the paper's order (K-heavy → V-heavy).
+pub fn table4_allocations(total_ratio: f64) -> Vec<KvCompressionPlan> {
+    let budget = 2.0 * (1.0 - total_ratio);
+    (1..8)
+        .rev()
+        .map(|i| {
+            let keep_k = budget * i as f64 / 8.0;
+            KvCompressionPlan::with_allocation(total_ratio, keep_k)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_paper_settings() {
+        let p = KvCompressionPlan::uniform(0.8);
+        assert!((p.total_ratio() - 0.8).abs() < 1e-12);
+        // d=128 at 80% ⇒ rank 26
+        assert_eq!(p.rank_k(128), 26);
+        assert_eq!(p.rank_v(128), 26);
+    }
+
+    #[test]
+    fn table4_rows_at_50() {
+        // K(87.5%) V(12.5%) from the paper.
+        let p = KvCompressionPlan::with_allocation(0.5, 0.875);
+        assert!((p.keep_v - 0.125).abs() < 1e-12);
+        assert!((p.total_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table4_rows_at_75() {
+        // K(43.75%) V(6.25%) from the paper.
+        let p = KvCompressionPlan::with_allocation(0.75, 0.4375);
+        assert!((p.keep_v - 0.0625).abs() < 1e-9);
+        assert!((p.total_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table4_generator_matches_paper_rows() {
+        let rows = table4_allocations(0.5);
+        assert_eq!(rows.len(), 7);
+        let expect_k = [0.875, 0.75, 0.625, 0.5, 0.375, 0.25, 0.125];
+        for (r, e) in rows.iter().zip(expect_k) {
+            assert!((r.keep_k - e).abs() < 1e-9, "{} vs {e}", r.keep_k);
+            assert!((r.total_ratio() - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn int4_total_matches_table5() {
+        for (origin, total) in [(0.5, 0.9375), (0.6, 0.95), (0.8, 0.975)] {
+            let p = KvCompressionPlan::uniform(origin);
+            assert!((p.total_ratio_with_int4() - total).abs() < 1e-9);
+        }
+        // NOTE: the paper reports 50%→87.5% by counting int4 as 4× (vs
+        // fp16 baseline); we store fp32, so int4 is 8×. EXPERIMENTS.md
+        // reconciles the two conventions.
+    }
+
+    #[test]
+    fn rank_clamps() {
+        assert_eq!(rank_for_keep(128, 0.0), 1);
+        assert_eq!(rank_for_keep(128, 1.0), 128);
+        assert_eq!(rank_for_keep(128, 0.2), 26);
+    }
+
+    #[test]
+    #[should_panic]
+    fn infeasible_allocation_panics() {
+        // total 50% ⇒ budget 1.0; keep_k=1.0 leaves nothing for V.
+        let _ = KvCompressionPlan::with_allocation(0.5, 1.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Factor initialization — §2.2 of the paper + the Table 2 ablation.
+//!
+//! * `Random`  — Kaiming-uniform A, B. The paper shows this fails to
+//!   converge (loss ~1e9, accuracy 0.00); reproduced by `bench_table2_init`.
+//! * `Svd`     — truncated SVD of `W`: `A = U_r √Σ_r`, `B = √Σ_r V_rᵀ`.
+//! * `Asvd`    — activation-aware SVD [Yuan et al., 2024], the paper's
+//!   default: scale input channels by `S = diag(mean|X_j|^α)` before the
+//!   SVD so directions that carry large activations are preserved.
+//!   `X·W = (X·S⁻¹)(S·W)`; with `SVD(S·W) = UΣVᵀ`,
+//!   `A = S⁻¹·U_r·√Σ_r`, `B = √Σ_r·V_rᵀ`.
+//! * `Oracle`  — closed-form rank-r minimizer of ‖XW − XAB‖_F via QR+SVD
+//!   (our extension; upper-bounds what reconstruction training can reach).
+
+use crate::tensor::linalg::oracle_lowrank;
+use crate::tensor::svd::svd;
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+
+use super::lowrank::LowRankFactors;
+
+/// Initialization method for the low-rank factors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitMethod {
+    Random,
+    Svd,
+    /// α is the activation-scaling exponent; the paper uses 0.5 with the
+    /// Absolute Mean Value statistic.
+    Asvd {
+        alpha: f32,
+    },
+    Oracle,
+}
+
+impl InitMethod {
+    pub fn asvd_default() -> Self {
+        InitMethod::Asvd { alpha: 0.5 }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            InitMethod::Random => "random".into(),
+            InitMethod::Svd => "svd".into(),
+            InitMethod::Asvd { alpha } => format!("asvd(a={alpha})"),
+            InitMethod::Oracle => "oracle".into(),
+        }
+    }
+}
+
+/// Initialize factors for one projection `w: [d_in, d_out]` at `rank`.
+///
+/// `calib_x` (`[n, d_in]`, the layer's attention-input activations) is
+/// required for `Asvd` and `Oracle`; ignored by the others.
+pub fn init_factors(
+    w: &Mat,
+    rank: usize,
+    method: InitMethod,
+    calib_x: Option<&Mat>,
+    seed: u64,
+) -> LowRankFactors {
+    let rank = rank.clamp(1, w.rows.min(w.cols));
+    match method {
+        InitMethod::Random => {
+            let mut rng = Pcg64::new(seed);
+            // Kaiming-uniform bound for each factor.
+            let bound_a = (6.0 / w.rows as f32).sqrt();
+            let bound_b = (6.0 / rank as f32).sqrt();
+            let mut a = Mat::zeros(w.rows, rank);
+            let mut b = Mat::zeros(rank, w.cols);
+            rng.fill_uniform(&mut a.data, bound_a);
+            rng.fill_uniform(&mut b.data, bound_b);
+            LowRankFactors::new(a, b)
+        }
+        InitMethod::Svd => {
+            let d = svd(w);
+            split_sqrt(&d, rank)
+        }
+        InitMethod::Asvd { alpha } => {
+            let x = calib_x.expect("ASVD init requires calibration activations");
+            assert_eq!(x.cols, w.rows, "calibration/weight shape mismatch");
+            // Absolute Mean Value scaling (paper's setting).
+            let s: Vec<f32> = x
+                .col_abs_mean()
+                .iter()
+                .map(|&m| m.max(1e-6).powf(alpha))
+                .collect();
+            // SW: scale rows of W by s.
+            let mut sw = w.clone();
+            for (i, &si) in s.iter().enumerate() {
+                sw.scale_row(i, si);
+            }
+            let d = svd(&sw);
+            let f = split_sqrt(&d, rank);
+            // A = S^{-1} * (U_r sqrt(Σ))
+            let mut a = f.a;
+            for (i, &si) in s.iter().enumerate() {
+                a.scale_row(i, 1.0 / si);
+            }
+            LowRankFactors::new(a, f.b)
+        }
+        InitMethod::Oracle => {
+            let x = calib_x.expect("Oracle init requires calibration activations");
+            let (a, b) = oracle_lowrank(x, w, rank);
+            LowRankFactors::new(a, b)
+        }
+    }
+}
+
+/// Split `U Σ Vᵀ` symmetrically: `A = U_r √Σ_r`, `B = √Σ_r V_rᵀ`.
+/// The symmetric split balances the factor norms, which conditions the
+/// subsequent Adam fine-tuning better than `UΣ · Vᵀ`.
+fn split_sqrt(d: &crate::tensor::svd::Svd, rank: usize) -> LowRankFactors {
+    let rank = rank.min(d.s.len());
+    let mut a = d.u.cols_slice(0, rank);
+    let mut bt = d.v.cols_slice(0, rank); // [d_out, r]
+    for j in 0..rank {
+        let sq = d.s[j].max(0.0).sqrt();
+        a.scale_col(j, sq);
+        bt.scale_col(j, sq);
+    }
+    LowRankFactors::new(a, bt.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted_problem(seed: u64, n: usize, d: usize) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::randn(n, d, 1.0, &mut rng);
+        let w = Mat::randn(d, d, 0.1, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn svd_init_is_eckart_young() {
+        let (_, w) = planted_problem(1, 64, 16);
+        let f = init_factors(&w, 16, InitMethod::Svd, None, 0);
+        // Full rank ⇒ exact.
+        assert!(f.effective_weight().allclose(&w, 1e-3));
+        let f4 = init_factors(&w, 4, InitMethod::Svd, None, 0);
+        // Truncation error equals the singular tail.
+        let s = crate::tensor::svd::singular_values(&w);
+        let tail = crate::tensor::svd::lowrank_error(&s, 4);
+        let err = f4.effective_weight().sub(&w).frob_norm();
+        assert!((err - tail).abs() / tail.max(1e-9) < 0.05, "{err} vs {tail}");
+    }
+
+    #[test]
+    fn asvd_beats_svd_with_skewed_activations() {
+        // Anisotropic X: ASVD should give lower X-weighted error than SVD.
+        let mut rng = Pcg64::new(2);
+        let d = 24;
+        let mut x = Mat::randn(200, d, 1.0, &mut rng);
+        for j in 0..d {
+            let s = if j < 3 { 8.0 } else { 0.05 };
+            x.scale_col(j, s);
+        }
+        let w = Mat::randn(d, d, 0.1, &mut rng);
+        let r = 6;
+        let fa = init_factors(&w, r, InitMethod::asvd_default(), Some(&x), 0);
+        let fs = init_factors(&w, r, InitMethod::Svd, None, 0);
+        let (ea, es) = (fa.relative_error(&x, &w), fs.relative_error(&x, &w));
+        assert!(ea < es, "asvd {ea} should beat svd {es}");
+    }
+
+    #[test]
+    fn oracle_lower_bounds_others() {
+        let mut rng = Pcg64::new(3);
+        let d = 20;
+        let mut x = Mat::randn(150, d, 1.0, &mut rng);
+        for j in 0..d {
+            x.scale_col(j, 1.0 + j as f32);
+        }
+        let w = Mat::randn(d, d, 0.1, &mut rng);
+        let r = 5;
+        let fo = init_factors(&w, r, InitMethod::Oracle, Some(&x), 0);
+        for m in [InitMethod::Svd, InitMethod::asvd_default()] {
+            let f = init_factors(&w, r, m, Some(&x), 0);
+            assert!(
+                fo.relative_error(&x, &w) <= f.relative_error(&x, &w) * 1.01,
+                "oracle must not lose to {m:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn random_init_has_large_error() {
+        let (x, w) = planted_problem(4, 100, 16);
+        let fr = init_factors(&w, 8, InitMethod::Random, None, 9);
+        let fs = init_factors(&w, 8, InitMethod::Svd, None, 0);
+        assert!(fr.relative_error(&x, &w) > 5.0 * fs.relative_error(&x, &w));
+    }
+
+    #[test]
+    fn rank_is_clamped() {
+        let (_, w) = planted_problem(5, 10, 8);
+        let f = init_factors(&w, 10_000, InitMethod::Svd, None, 0);
+        assert_eq!(f.rank(), 8);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (_, w) = planted_problem(6, 10, 8);
+        let a = init_factors(&w, 4, InitMethod::Random, None, 11);
+        let b = init_factors(&w, 4, InitMethod::Random, None, 11);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-sequence execution backends.
+//!
+//! A [`SequenceBackend`] owns everything one in-flight generation needs
+//! (cache state, position, last token) and exposes prefill/decode steps to
+//! the scheduler. Two families exist: [`RustSequenceBackend`] (the
+//! reference engine + any cache policy) and the PJRT sessions in
+//! [`super::pjrt_backend`] that execute the AOT artifacts.
+
+use crate::kvcache::KvCachePolicy;
+use crate::model::engine::Engine;
+use crate::tensor::ops;
+
+/// One in-flight sequence's execution state.
+pub trait SequenceBackend {
+    fn name(&self) -> String;
+
+    /// Run prefill over the prompt and return the first generated token.
+    fn prefill(&mut self, prompt: &[usize]) -> anyhow::Result<usize>;
+
+    /// Decode one more token (after `prefill`).
+    fn decode_next(&mut self) -> anyhow::Result<usize>;
+
+    /// Current KV footprint in bytes.
+    fn kv_bytes(&self) -> usize;
+}
+
+/// Rust reference engine + pluggable cache policy.
+pub struct RustSequenceBackend {
+    engine: Engine,
+    policy: Box<dyn KvCachePolicy>,
+    pos: usize,
+    last_token: usize,
+}
+
+impl RustSequenceBackend {
+    pub fn new(engine: Engine, policy: Box<dyn KvCachePolicy>) -> Self {
+        RustSequenceBackend {
+            engine,
+            policy,
+            pos: 0,
+            last_token: 0,
+        }
+    }
+}
+
+impl SequenceBackend for RustSequenceBackend {
+    fn name(&self) -> String {
+        format!("rust-engine/{}", self.policy.name())
+    }
+
+    fn prefill(&mut self, prompt: &[usize]) -> anyhow::Result<usize> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let rec = self.engine.prefill(prompt, Some(self.policy.as_mut()));
+        self.pos = prompt.len();
+        self.last_token = ops::argmax(rec.logits.row(prompt.len() - 1));
+        Ok(self.last_token)
+    }
+
+    fn decode_next(&mut self) -> anyhow::Result<usize> {
+        let logits = self
+            .engine
+            .decode_step(self.policy.as_mut(), self.last_token, self.pos);
+        self.pos += 1;
+        self.last_token = ops::argmax(&logits);
+        Ok(self.last_token)
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.policy.kv_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::FullCache;
+    use crate::model::{ModelConfig, ModelWeights};
+    use std::sync::Arc;
+
+    #[test]
+    fn backend_matches_engine_generate() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 3)));
+        let prompt = [1usize, 9, 17, 33];
+        let mut direct_cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want, _) = engine.generate(&prompt, 5, &mut direct_cache);
+
+        let mut be = RustSequenceBackend::new(
+            engine.clone(),
+            Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+        );
+        let mut got = vec![be.prefill(&prompt).unwrap()];
+        for _ in 1..5 {
+            got.push(be.decode_next().unwrap());
+        }
+        assert_eq!(got, want);
+        assert!(be.kv_bytes() > 0);
+        assert!(be.name().contains("full"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: counters, latency distributions, KV footprint.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+#[derive(Default)]
+struct Inner {
+    requests_completed: u64,
+    tokens_generated: u64,
+    queue_wait_s: Samples,
+    ttft_s: Samples,
+    tok_latency_s: Samples,
+    kv_bytes_peak: usize,
+    kv_bytes_current: usize,
+    active_peak: usize,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared between the coordinator and callers.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub queue_wait_s: Samples,
+    pub ttft_s: Samples,
+    pub tok_latency_s: Samples,
+    pub kv_bytes_peak: usize,
+    pub active_peak: usize,
+    pub wall_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {}",
+            self.requests_completed,
+            self.tokens_generated,
+            self.throughput_tok_s(),
+            self.ttft_s.summary("s"),
+            self.tok_latency_s.summary("s"),
+            crate::util::table::bytes(self.kv_bytes_peak),
+            self.active_peak,
+        )
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_completion(&self, queue_wait_s: f64, ttft_s: f64, tokens: usize, tok_latency_s: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_completed += 1;
+        g.tokens_generated += tokens as u64;
+        g.queue_wait_s.push(queue_wait_s);
+        g.ttft_s.push(ttft_s);
+        for &t in tok_latency_s {
+            g.tok_latency_s.push(t);
+        }
+        g.finished = Some(Instant::now());
+    }
+
+    pub fn record_kv(&self, current_bytes: usize, active: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.kv_bytes_current = current_bytes;
+        g.kv_bytes_peak = g.kv_bytes_peak.max(current_bytes);
+        g.active_peak = g.active_peak.max(active);
+    }
+
+    pub fn kv_bytes_current(&self) -> usize {
+        self.inner.lock().unwrap().kv_bytes_current
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let wall_s = match (g.started, g.finished) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            (Some(a), None) => a.elapsed().as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            requests_completed: g.requests_completed,
+            tokens_generated: g.tokens_generated,
+            queue_wait_s: g.queue_wait_s.clone(),
+            ttft_s: g.ttft_s.clone(),
+            tok_latency_s: g.tok_latency_s.clone(),
+            kv_bytes_peak: g.kv_bytes_peak,
+            active_peak: g.active_peak,
+            wall_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.mark_start();
+        m.record_kv(1000, 2);
+        m.record_kv(500, 1);
+        m.record_completion(0.01, 0.05, 3, &[0.01, 0.02]);
+        m.record_completion(0.02, 0.06, 2, &[0.015]);
+        let s = m.snapshot();
+        assert_eq!(s.requests_completed, 2);
+        assert_eq!(s.tokens_generated, 5);
+        assert_eq!(s.kv_bytes_peak, 1000);
+        assert_eq!(s.active_peak, 2);
+        assert_eq!(s.tok_latency_s.len(), 3);
+        assert!(s.throughput_tok_s() >= 0.0);
+        assert!(s.report().contains("requests=2"));
+    }
+}

@@ -1,0 +1,345 @@
+//! PJRT serving sessions — the AOT hot path.
+//!
+//! These backends execute the lowered artifacts (`prefill`, `decode_full`,
+//! `decode_cskv_r*`) via the PJRT CPU client. Rust owns all cache buffers
+//! (full K/V buffers, or the CSKV compressed history + rolling window) and
+//! feeds them to the fixed-shape executables each step; Python is never
+//! involved.
+//!
+//! Buffer-ownership contract per artifact (see `python/compile/model.py`):
+//! * `decode_full`  — Rust writes returned `k_new/v_new` (post-RoPE) into
+//!   row `pos` of its `[L, max_seq, d]` buffers.
+//! * `decode_cskv`  — Rust appends `ck_new/cv_new` to the compressed
+//!   history and rolls the pre-RoPE window (`win_k/win_v/win_pos`),
+//!   mirroring `kvcache::bibranch` exactly.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::compress::ModelFactors;
+use crate::data::vocab;
+use crate::model::ModelWeights;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::ops;
+use crate::tensor::Mat;
+
+use super::backend::SequenceBackend;
+
+/// Shared per-process serving state: runtime + marshalled weights.
+pub struct PjrtContext {
+    pub rt: Runtime,
+    pub weights: Arc<ModelWeights>,
+    params: Vec<Value>,
+}
+
+impl PjrtContext {
+    pub fn new(rt: Runtime, weights: Arc<ModelWeights>) -> anyhow::Result<Self> {
+        rt.manifest.model.validate_against_json(&weights.cfg.to_json())?;
+        let params: Vec<Value> = weights
+            .flat_order()
+            .iter()
+            .map(|(_, m)| Value::from_mat(m))
+            .collect();
+        Ok(PjrtContext { rt, weights, params })
+    }
+
+    fn cfg(&self) -> &crate::model::ModelConfig {
+        &self.weights.cfg
+    }
+
+    /// Run the prefill artifact on a (padded) prompt.
+    fn run_prefill(&self, prompt: &[usize]) -> anyhow::Result<(usize, Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
+        let cfg = self.cfg();
+        anyhow::ensure!(
+            !prompt.is_empty() && prompt.len() <= cfg.max_seq,
+            "prompt length {} out of range (max {})",
+            prompt.len(),
+            cfg.max_seq
+        );
+        let mut tokens: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        tokens.resize(cfg.max_seq, vocab::PAD as i32);
+        let mut inputs = self.params.clone();
+        inputs.push(Value::i32_vec(vec![cfg.max_seq], tokens));
+        let out = self.rt.execute("prefill", &inputs)?;
+        // outputs: logits [T,V], xnorms [L,T,d], ks [L,T,d], vs [L,T,d]
+        let logits = out[0].to_mat()?;
+        let first = ops::argmax(logits.row(prompt.len() - 1));
+        let take = |v: &Value| -> anyhow::Result<Vec<Mat>> {
+            (0..cfg.n_layers)
+                .map(|li| Ok(v.mat_at(li)?.rows_slice(0, prompt.len())))
+                .collect()
+        };
+        Ok((first, take(&out[1])?, take(&out[2])?, take(&out[3])?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-precision session
+// ---------------------------------------------------------------------------
+
+/// Serving session with an uncompressed KV cache (baseline).
+pub struct PjrtFullSession {
+    ctx: Rc<PjrtContext>,
+    k_buf: Vec<f32>, // [L, max_seq, d]
+    v_buf: Vec<f32>,
+    pos: usize,
+    last_token: usize,
+}
+
+impl PjrtFullSession {
+    pub fn new(ctx: Rc<PjrtContext>) -> Self {
+        let cfg = ctx.cfg();
+        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        PjrtFullSession {
+            ctx,
+            k_buf: vec![0.0; n],
+            v_buf: vec![0.0; n],
+            pos: 0,
+            last_token: 0,
+        }
+    }
+
+    fn write_row(buf: &mut [f32], li: usize, row: usize, max_seq: usize, d: usize, data: &[f32]) {
+        let off = (li * max_seq + row) * d;
+        buf[off..off + d].copy_from_slice(data);
+    }
+}
+
+impl SequenceBackend for PjrtFullSession {
+    fn name(&self) -> String {
+        "pjrt/decode_full".into()
+    }
+
+    fn prefill(&mut self, prompt: &[usize]) -> anyhow::Result<usize> {
+        let cfg = self.ctx.cfg().clone();
+        let (first, _xn, ks, vs) = self.ctx.run_prefill(prompt)?;
+        for li in 0..cfg.n_layers {
+            // Buffer stores post-RoPE keys.
+            let mut k = ks[li].clone();
+            ops::rope_rows(&mut k, cfg.n_heads, 0, cfg.rope_base);
+            for t in 0..prompt.len() {
+                Self::write_row(&mut self.k_buf, li, t, cfg.max_seq, cfg.d_model, k.row(t));
+                Self::write_row(&mut self.v_buf, li, t, cfg.max_seq, cfg.d_model, vs[li].row(t));
+            }
+        }
+        self.pos = prompt.len();
+        self.last_token = first;
+        Ok(first)
+    }
+
+    fn decode_next(&mut self) -> anyhow::Result<usize> {
+        let cfg = self.ctx.cfg().clone();
+        anyhow::ensure!(self.pos < cfg.max_seq, "sequence exceeded max_seq");
+        let shape = vec![cfg.n_layers, cfg.max_seq, cfg.d_model];
+        let mut inputs = self.ctx.params.clone();
+        inputs.push(Value::scalar_i32(self.last_token as i32));
+        inputs.push(Value::scalar_i32(self.pos as i32));
+        inputs.push(Value::f32_vec(shape.clone(), self.k_buf.clone()));
+        inputs.push(Value::f32_vec(shape, self.v_buf.clone()));
+        let out = self.ctx.rt.execute("decode_full", &inputs)?;
+        let logits = out[0].as_f32()?;
+        let k_new = out[1].as_f32()?;
+        let v_new = out[2].as_f32()?;
+        for li in 0..cfg.n_layers {
+            Self::write_row(
+                &mut self.k_buf,
+                li,
+                self.pos,
+                cfg.max_seq,
+                cfg.d_model,
+                &k_new[li * cfg.d_model..(li + 1) * cfg.d_model],
+            );
+            Self::write_row(
+                &mut self.v_buf,
+                li,
+                self.pos,
+                cfg.max_seq,
+                cfg.d_model,
+                &v_new[li * cfg.d_model..(li + 1) * cfg.d_model],
+            );
+        }
+        self.pos += 1;
+        self.last_token = ops::argmax(logits);
+        Ok(self.last_token)
+    }
+
+    fn kv_bytes(&self) -> usize {
+        // Semantic footprint: valid rows only (buffers are preallocated).
+        self.ctx.cfg().kv_bytes_full(self.pos)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSKV bi-branch session
+// ---------------------------------------------------------------------------
+
+/// Serving session with the CSKV bi-branch cache, executing the fused
+/// Pallas decode artifact `decode_cskv_r{rank}`.
+pub struct PjrtCskvSession {
+    ctx: Rc<PjrtContext>,
+    exe: String,
+    factors: Arc<ModelFactors>,
+    fac_vals: [Value; 4], // ak, bk, av, bv
+    rank: usize,
+    window: usize,
+    ck: Vec<f32>,  // [L, max_seq, r]
+    cv: Vec<f32>,
+    win_k: Vec<f32>, // [L, W, d] pre-RoPE
+    win_v: Vec<f32>,
+    win_pos: Vec<i32>, // [L, W]
+    n: usize,
+    win_len: usize,
+    last_token: usize,
+}
+
+impl PjrtCskvSession {
+    /// `factors` rank must match one of the exported artifacts.
+    pub fn new(ctx: Rc<PjrtContext>, factors: Arc<ModelFactors>) -> anyhow::Result<Self> {
+        let rank = factors.rank_k();
+        anyhow::ensure!(
+            factors.rank_v() == rank,
+            "PJRT cskv artifacts are exported with rank_k == rank_v (got {} vs {})",
+            rank,
+            factors.rank_v()
+        );
+        let exe = format!("decode_cskv_r{rank}");
+        let spec = ctx.rt.manifest.get(&exe)?;
+        let window = spec
+            .static_usize("window")
+            .ok_or_else(|| anyhow::anyhow!("{exe}: missing window"))?;
+        let cfg = ctx.cfg();
+        let (l, d, t) = (cfg.n_layers, cfg.d_model, cfg.max_seq);
+        anyhow::ensure!(factors.layers.len() == l, "factor layer count mismatch");
+        // Marshal factors once: ak/av [L,d,r]; bk/bv [L,r,d].
+        let stack = |f: &dyn Fn(usize) -> Mat| -> Value {
+            let mats: Vec<Mat> = (0..l).map(f).collect();
+            Value::from_mats(&mats.iter().collect::<Vec<_>>())
+        };
+        let fac_vals = [
+            stack(&|i| factors.layers[i].k.a.clone()),
+            stack(&|i| factors.layers[i].k.b.clone()),
+            stack(&|i| factors.layers[i].v.a.clone()),
+            stack(&|i| factors.layers[i].v.b.clone()),
+        ];
+        Ok(PjrtCskvSession {
+            ctx,
+            exe,
+            factors,
+            fac_vals,
+            rank,
+            window,
+            ck: vec![0.0; l * t * rank],
+            cv: vec![0.0; l * t * rank],
+            win_k: vec![0.0; l * window * d],
+            win_v: vec![0.0; l * window * d],
+            win_pos: vec![0; l * window],
+            n: 0,
+            win_len: 0,
+            last_token: 0,
+        })
+    }
+
+    fn push_window(&mut self, li: usize, k: &[f32], v: &[f32], pos: usize, d: usize) {
+        let w = self.window;
+        if self.win_len < w {
+            let off = (li * w + self.win_len) * d;
+            self.win_k[off..off + d].copy_from_slice(k);
+            self.win_v[off..off + d].copy_from_slice(v);
+            self.win_pos[li * w + self.win_len] = pos as i32;
+        } else {
+            // Shift left one slot (ring semantics, oldest evicted).
+            let base = li * w * d;
+            self.win_k.copy_within(base + d..base + w * d, base);
+            self.win_v.copy_within(base + d..base + w * d, base);
+            let pbase = li * w;
+            self.win_pos.copy_within(pbase + 1..pbase + w, pbase);
+            let off = base + (w - 1) * d;
+            self.win_k[off..off + d].copy_from_slice(k);
+            self.win_v[off..off + d].copy_from_slice(v);
+            self.win_pos[pbase + w - 1] = pos as i32;
+        }
+    }
+}
+
+impl SequenceBackend for PjrtCskvSession {
+    fn name(&self) -> String {
+        format!("pjrt/{} (w={})", self.exe, self.window)
+    }
+
+    fn prefill(&mut self, prompt: &[usize]) -> anyhow::Result<usize> {
+        let cfg = self.ctx.cfg().clone();
+        let (first, xns, ks, vs) = self.ctx.run_prefill(prompt)?;
+        let t = prompt.len();
+        let (d, r, maxt) = (cfg.d_model, self.rank, cfg.max_seq);
+        for li in 0..cfg.n_layers {
+            // Compressed history for every prompt token: C = xnorm · A.
+            let ckm = self.factors.layers[li].k.compress(&xns[li]);
+            let cvm = self.factors.layers[li].v.compress(&xns[li]);
+            for row in 0..t {
+                let off = (li * maxt + row) * r;
+                self.ck[off..off + r].copy_from_slice(ckm.row(row));
+                self.cv[off..off + r].copy_from_slice(cvm.row(row));
+            }
+        }
+        // Window: the last min(W, t) tokens at full precision (pre-RoPE).
+        self.win_len = 0;
+        let w0 = t.saturating_sub(self.window);
+        for pos in w0..t {
+            for li in 0..cfg.n_layers {
+                let k = ks[li].row(pos).to_vec();
+                let v = vs[li].row(pos).to_vec();
+                self.push_window(li, &k, &v, pos, d);
+            }
+            self.win_len = (self.win_len + 1).min(self.window);
+        }
+        self.n = t;
+        self.last_token = first;
+        Ok(first)
+    }
+
+    fn decode_next(&mut self) -> anyhow::Result<usize> {
+        let cfg = self.ctx.cfg().clone();
+        anyhow::ensure!(self.n < cfg.max_seq, "sequence exceeded max_seq");
+        let (l, d, r, t, w) = (cfg.n_layers, cfg.d_model, self.rank, cfg.max_seq, self.window);
+        let mut inputs = self.ctx.params.clone();
+        inputs.extend(self.fac_vals.iter().cloned());
+        inputs.push(Value::scalar_i32(self.last_token as i32));
+        inputs.push(Value::scalar_i32(self.n as i32));
+        inputs.push(Value::scalar_i32(self.win_len as i32));
+        inputs.push(Value::f32_vec(vec![l, t, r], self.ck.clone()));
+        inputs.push(Value::f32_vec(vec![l, t, r], self.cv.clone()));
+        inputs.push(Value::f32_vec(vec![l, w, d], self.win_k.clone()));
+        inputs.push(Value::f32_vec(vec![l, w, d], self.win_v.clone()));
+        inputs.push(Value::i32_vec(vec![l, w], self.win_pos.clone()));
+        let out = self.ctx.rt.execute(&self.exe, &inputs)?;
+        // outputs: logits, ck_new [L,r], cv_new [L,r], k_new [L,d], v_new [L,d]
+        let logits = out[0].as_f32()?;
+        let ck_new = out[1].as_f32()?.to_vec();
+        let cv_new = out[2].as_f32()?.to_vec();
+        let k_new = out[3].as_f32()?.to_vec();
+        let v_new = out[4].as_f32()?.to_vec();
+        let pos = self.n;
+        for li in 0..l {
+            let off = (li * t + pos) * r;
+            self.ck[off..off + r].copy_from_slice(&ck_new[li * r..(li + 1) * r]);
+            self.cv[off..off + r].copy_from_slice(&cv_new[li * r..(li + 1) * r]);
+            let kd = &k_new[li * d..(li + 1) * d].to_vec();
+            let vd = &v_new[li * d..(li + 1) * d].to_vec();
+            self.push_window(li, kd, vd, pos, d);
+        }
+        self.win_len = (self.win_len + 1).min(w);
+        self.n += 1;
+        self.last_token = ops::argmax(logits);
+        Ok(self.last_token)
+    }
+
+    fn kv_bytes(&self) -> usize {
+        let cfg = self.ctx.cfg();
+        let l = cfg.n_layers;
+        // compressed history (all n tokens) + full-precision window
+        l * self.n * 2 * self.rank * 4 + l * self.win_len * 2 * cfg.d_model * 4
+    }
+}
+
+// Integration coverage (needs compiled artifacts) lives in
+// rust/tests/integration_runtime.rs.

@@ -1,0 +1,61 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub n_new: usize,
+    pub submitted_at: Instant,
+    /// Channel the coordinator answers on.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    /// Queue wait before prefill started.
+    pub queue_wait_s: f64,
+    /// Time to first token (queue + prefill).
+    pub ttft_s: f64,
+    /// Total time in the system.
+    pub total_s: f64,
+    /// KV bytes held by this sequence at completion.
+    pub kv_bytes: usize,
+    pub backend: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_over_channel() {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: 7,
+            prompt: vec![1, 2, 3],
+            n_new: 4,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        req.reply
+            .send(Response {
+                id: req.id,
+                tokens: vec![9],
+                queue_wait_s: 0.0,
+                ttft_s: 0.1,
+                total_s: 0.2,
+                kv_bytes: 64,
+                backend: "test".into(),
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.tokens, vec![9]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Pretraining mixture + calibration sampler.
+//!
+//! Stands in for (a) the base models' pretraining data and (b) the paper's
+//! scaled-down-Pile fine-tuning/calibration set. The mixture is:
+//!
+//! * 50% LongEval-style line-retrieval documents (teaches the long-range
+//!   retrieval behaviour the paper's benchmarks probe),
+//! * 20% multi-fact QA documents,
+//! * 10% LVEval-style confusing-fact documents,
+//! * 20% bigram template language (keeps perplexity meaningful and the
+//!   activations diverse for calibration).
+//!
+//! Documents are generated to a fixed `seq_len`, padded with `PAD`; the
+//! training loss masks positions whose *target* is `PAD`.
+
+use super::tasks;
+use super::vocab as v;
+use crate::util::prng::Pcg64;
+
+/// A training batch in next-token-prediction layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// `[batch, seq]` input token ids, flattened row-major.
+    pub x: Vec<i32>,
+    /// `[batch, seq]` target ids (inputs shifted left).
+    pub y: Vec<i32>,
+    /// `[batch, seq]` loss mask (1.0 where the target counts).
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Configuration for the corpus generator.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub seq_len: usize,
+    /// Mixture weights: [line_retrieval, multifact_qa, confusing, language].
+    pub mix: [f32; 4],
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            seq_len: 512,
+            mix: [0.5, 0.2, 0.1, 0.2],
+        }
+    }
+}
+
+/// Generate one document of exactly `seq_len + 1` tokens (so x/y shift fits).
+///
+/// Retrieval documents place the full task followed by the answer and EOS,
+/// then pad; language documents fill the whole window.
+pub fn gen_document(cfg: &CorpusConfig, rng: &mut Pcg64) -> Vec<usize> {
+    let want = cfg.seq_len + 1;
+    let kind = rng.categorical(&cfg.mix);
+    let mut doc = match kind {
+        0 => {
+            // Random context length: vary retrieval distance during training
+            // so evaluation lengths are in-distribution.
+            let max_lines = tasks::lines_for_ctx(want - v::VALUE_LEN - 1);
+            let n_lines = rng.range(2, max_lines.max(3));
+            let s = tasks::line_retrieval(n_lines.min(v::N_KEYS), rng);
+            let mut d = s.prompt;
+            d.extend_from_slice(&s.answer);
+            d.push(v::EOS);
+            d
+        }
+        1 => {
+            let ctx = rng.range(want / 4, want - v::VALUE_LEN - 1);
+            let n_facts = rng.range(2, 9);
+            let s = tasks::multifact_qa(ctx, n_facts, rng);
+            let mut d = s.prompt;
+            d.extend_from_slice(&s.answer);
+            d.push(v::EOS);
+            d
+        }
+        2 => {
+            let ctx = rng.range(want / 2, want - v::VALUE_LEN - 1);
+            let s = tasks::confusing_retrieval(ctx, 2, rng);
+            let mut d = s.prompt;
+            d.extend_from_slice(&s.answer);
+            d.push(v::EOS);
+            d
+        }
+        _ => {
+            let mut d = vec![v::BOS];
+            tasks::push_filler(&mut d, want - 2, rng);
+            d.push(v::EOS);
+            d
+        }
+    };
+    doc.truncate(want);
+    while doc.len() < want {
+        doc.push(v::PAD);
+    }
+    doc
+}
+
+/// Loss weight for answer-digit targets. Retrieval answers are ~3 tokens
+/// out of ~500, so without upweighting the retrieval gradient vanishes
+/// into the filler LM signal and the model never learns to retrieve.
+pub const ANSWER_WEIGHT: f32 = 16.0;
+
+/// Pack documents back-to-back until the row is full: short retrieval
+/// tasks would otherwise leave >90% of every row as PAD, starving the
+/// model of retrieval examples (documents already start with BOS and end
+/// with EOS, so boundaries are marked).
+pub fn pack_row(cfg: &CorpusConfig, rng: &mut Pcg64) -> Vec<usize> {
+    let want = cfg.seq_len + 1;
+    let mut row = Vec::with_capacity(want + 64);
+    while row.len() < want {
+        let remaining = want - row.len();
+        // Bias document sizes: mostly short (packable) tasks, sometimes a
+        // long one that spans the remaining window (long-range retrieval
+        // must stay in-distribution for the 4k-10k-style eval lengths).
+        let doc_cfg = CorpusConfig {
+            seq_len: if rng.chance(0.25) {
+                remaining.max(32) - 1
+            } else {
+                rng.range(32, (remaining).clamp(33, 160)) // short task
+            },
+            mix: cfg.mix,
+        };
+        let mut doc = gen_document(&doc_cfg, rng);
+        // Strip padding before packing.
+        while doc.last() == Some(&v::PAD) {
+            doc.pop();
+        }
+        row.extend_from_slice(&doc);
+    }
+    row.truncate(want);
+    row
+}
+
+/// Generate a next-token training batch (packed rows).
+pub fn gen_batch(cfg: &CorpusConfig, batch: usize, rng: &mut Pcg64) -> Batch {
+    let seq = cfg.seq_len;
+    let mut x = Vec::with_capacity(batch * seq);
+    let mut y = Vec::with_capacity(batch * seq);
+    let mut mask = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let doc = pack_row(cfg, rng);
+        // Positions whose *target* is an answer digit (the VALUE_LEN
+        // tokens right after ANSWER) get boosted weight.
+        let mut w = vec![1.0f32; seq];
+        for a in 0..seq {
+            if doc[a] == v::ANSWER {
+                for t in a..(a + v::VALUE_LEN).min(seq) {
+                    w[t] = ANSWER_WEIGHT;
+                }
+            }
+        }
+        for t in 0..seq {
+            x.push(doc[t] as i32);
+            y.push(doc[t + 1] as i32);
+            mask.push(if doc[t + 1] == v::PAD { 0.0 } else { w[t] });
+        }
+    }
+    Batch {
+        x,
+        y,
+        mask,
+        batch,
+        seq,
+    }
+}
+
+/// Calibration documents for ASVD scaling + reconstruction fine-tuning:
+/// prompt-only prefixes (no answers needed — only activations are used).
+pub fn calibration_docs(cfg: &CorpusConfig, n_docs: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n_docs)
+        .map(|_| {
+            let mut d = gen_document(cfg, &mut rng);
+            // Strip padding — calibration runs variable-length prefills.
+            while d.last() == Some(&v::PAD) {
+                d.pop();
+            }
+            d
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_have_exact_length() {
+        let cfg = CorpusConfig::default();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            let d = gen_document(&cfg, &mut rng);
+            assert_eq!(d.len(), cfg.seq_len + 1);
+            assert!(d.iter().all(|&t| t < v::VOCAB_SIZE));
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let cfg = CorpusConfig {
+            seq_len: 64,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(2);
+        let b = gen_batch(&cfg, 3, &mut rng);
+        assert_eq!(b.x.len(), 3 * 64);
+        assert_eq!(b.y.len(), 3 * 64);
+        assert_eq!(b.mask.len(), 3 * 64);
+        // y is x shifted by one within each row (verify via regeneration:
+        // x[t+1] == y[t] wherever both are in range and not padding joints).
+        for row in 0..3 {
+            for t in 0..63 {
+                let xi = b.x[row * 64 + t + 1];
+                let yi = b.y[row * 64 + t];
+                assert_eq!(xi, yi);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_weights_answers_and_zeroes_pads() {
+        let cfg = CorpusConfig {
+            seq_len: 96,
+            mix: [1.0, 0.0, 0.0, 0.0],
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(3);
+        let b = gen_batch(&cfg, 4, &mut rng);
+        let mut saw_weighted = false;
+        for i in 0..b.x.len() {
+            if b.y[i] == v::PAD as i32 {
+                assert_eq!(b.mask[i], 0.0);
+            } else {
+                assert!(b.mask[i] == 1.0 || b.mask[i] == ANSWER_WEIGHT);
+            }
+            if b.mask[i] == ANSWER_WEIGHT {
+                saw_weighted = true;
+                assert!(v::is_digit(b.y[i] as usize), "boosted target must be a digit");
+            }
+        }
+        assert!(saw_weighted, "packed retrieval rows must contain answers");
+    }
+
+    #[test]
+    fn packed_rows_are_dense_with_tasks() {
+        let cfg = CorpusConfig::default();
+        let mut rng = Pcg64::new(13);
+        let row = pack_row(&cfg, &mut rng);
+        assert_eq!(row.len(), cfg.seq_len + 1);
+        // Packing should land several documents per row.
+        let n_bos = row.iter().filter(|&&t| t == v::BOS).count();
+        assert!(n_bos >= 2, "expected ≥2 packed docs, got {n_bos}");
+        assert!(!row.contains(&v::PAD));
+    }
+
+    #[test]
+    fn mixture_hits_all_kinds() {
+        let cfg = CorpusConfig {
+            seq_len: 128,
+            mix: [0.25, 0.25, 0.25, 0.25],
+        };
+        let mut rng = Pcg64::new(4);
+        let mut saw_query = false;
+        let mut saw_fact = false;
+        let mut saw_lang_only = false;
+        for _ in 0..40 {
+            let d = gen_document(&cfg, &mut rng);
+            if d.contains(&v::QUERY) {
+                saw_query = true;
+            }
+            if d.contains(&v::FACT) {
+                saw_fact = true;
+            }
+            if !d.contains(&v::QUERY) && !d.contains(&v::FACT) {
+                saw_lang_only = true;
+            }
+        }
+        assert!(saw_query && saw_fact && saw_lang_only);
+    }
+
+    #[test]
+    fn calibration_docs_strip_padding() {
+        let cfg = CorpusConfig::default();
+        let docs = calibration_docs(&cfg, 5, 7);
+        assert_eq!(docs.len(), 5);
+        for d in &docs {
+            assert_ne!(*d.last().unwrap(), v::PAD);
+            assert!(d.len() <= cfg.seq_len + 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = CorpusConfig::default();
+        let a = gen_batch(&cfg, 2, &mut Pcg64::new(9));
+        let b = gen_batch(&cfg, 2, &mut Pcg64::new(9));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic data: vocabulary, long-context task generators, and the
+//! pretraining/calibration corpus.
+//!
+//! The paper evaluates pretrained 7B models on LongEval/LongBench/LVEval and
+//! fine-tunes on a scaled-down Pile. None of those are available here
+//! (offline, CPU-only), so per DESIGN.md §2 we *train our own* small model
+//! (TinyLM) on a synthetic mixture whose evaluation tasks have the same
+//! structure as the paper's:
+//!
+//! * [`vocab`] — fixed token-id layout (special tokens, line keys, digits,
+//!   general vocabulary).
+//! * [`tasks`] — LongEval-style line retrieval, LongBench-style multi-fact
+//!   QA, LVEval-style confusing-fact retrieval.
+//! * [`corpus`] — the pretraining mixture (retrieval documents + template
+//!   language) and the calibration sampler for ASVD / reconstruction
+//!   fine-tuning.
+
+pub mod corpus;
+pub mod tasks;
+pub mod vocab;

@@ -1,0 +1,284 @@
+//! Long-context task generators — scaled analogues of the paper's three
+//! evaluation suites (DESIGN.md §2 documents the mapping).
+//!
+//! * [`line_retrieval`] — LongEval: "line <key>: REGISTER_CONTENT is
+//!   <digits>" documents followed by a retrieval query.
+//! * [`multifact_qa`] — LongBench-E: facts embedded in filler text, query
+//!   one fact; bucketed by context length.
+//! * [`confusing_retrieval`] — LVEval: the hardest bucket — maximum
+//!   distance to the queried fact plus near-miss distractor values that
+//!   reuse the answer's digit prefix (reproducing the paper's observed
+//!   "4244 vs 42440"-style failures).
+//!
+//! All generators emit token sequences directly in TinyLM's vocabulary.
+
+use super::vocab as v;
+use crate::util::prng::Pcg64;
+
+/// One evaluation sample: the model must greedily continue `prompt` with
+/// exactly `answer` (VALUE_LEN digit tokens).
+#[derive(Clone, Debug)]
+pub struct TaskSample {
+    pub prompt: Vec<usize>,
+    pub answer: Vec<usize>,
+    /// Prompt length in tokens (the paper buckets by this).
+    pub ctx_len: usize,
+}
+
+/// Tokens per retrieval line: LINE key REG IS d d d SEP.
+pub const LINE_TOKENS: usize = 5 + v::VALUE_LEN;
+/// Tokens of query suffix: QUERY key ANSWER.
+pub const QUERY_TOKENS: usize = 3;
+
+fn random_value(rng: &mut Pcg64) -> Vec<usize> {
+    (0..v::VALUE_LEN).map(|_| v::digit_token(rng.below(10))).collect()
+}
+
+fn push_line(out: &mut Vec<usize>, key: usize, value: &[usize]) {
+    out.push(v::LINE);
+    out.push(v::key_token(key));
+    out.push(v::REG);
+    out.push(v::IS);
+    out.extend_from_slice(value);
+    out.push(v::SEP);
+}
+
+fn push_fact(out: &mut Vec<usize>, key: usize, value: &[usize]) {
+    out.push(v::FACT);
+    out.push(v::key_token(key));
+    out.push(v::IS);
+    out.extend_from_slice(value);
+    out.push(v::SEP);
+}
+
+fn push_query(out: &mut Vec<usize>, key: usize) {
+    out.push(v::QUERY);
+    out.push(v::key_token(key));
+    out.push(v::ANSWER);
+}
+
+/// Number of lines that fits a line-retrieval prompt of `ctx_len` tokens.
+pub fn lines_for_ctx(ctx_len: usize) -> usize {
+    ctx_len.saturating_sub(1 + QUERY_TOKENS) / LINE_TOKENS
+}
+
+/// LongEval-style line retrieval with `n_lines` lines; the queried line is
+/// uniformly random, so expected retrieval distance grows with context.
+pub fn line_retrieval(n_lines: usize, rng: &mut Pcg64) -> TaskSample {
+    assert!(n_lines >= 1 && n_lines <= v::N_KEYS);
+    let keys = rng.sample_indices(v::N_KEYS, n_lines);
+    let mut prompt = vec![v::BOS];
+    let mut values = Vec::with_capacity(n_lines);
+    for &k in &keys {
+        let val = random_value(rng);
+        push_line(&mut prompt, k, &val);
+        values.push(val);
+    }
+    let qi = rng.below(n_lines);
+    push_query(&mut prompt, keys[qi]);
+    let ctx_len = prompt.len();
+    TaskSample {
+        prompt,
+        answer: values[qi].clone(),
+        ctx_len,
+    }
+}
+
+/// Line retrieval sized to approximately `ctx_len` prompt tokens.
+pub fn line_retrieval_ctx(ctx_len: usize, rng: &mut Pcg64) -> TaskSample {
+    line_retrieval(lines_for_ctx(ctx_len).max(1), rng)
+}
+
+/// LongBench-style multi-fact QA: `n_facts` facts at random positions in
+/// filler text; total prompt ≈ `ctx_len` tokens.
+pub fn multifact_qa(ctx_len: usize, n_facts: usize, rng: &mut Pcg64) -> TaskSample {
+    assert!(n_facts >= 1 && n_facts <= v::N_KEYS);
+    let fact_tokens = 4 + v::VALUE_LEN; // FACT key IS d.. SEP
+    let budget = ctx_len.saturating_sub(1 + QUERY_TOKENS + n_facts * fact_tokens);
+    let keys = rng.sample_indices(v::N_KEYS, n_facts);
+    let values: Vec<Vec<usize>> = (0..n_facts).map(|_| random_value(rng)).collect();
+
+    // Split the filler budget into n_facts+1 random chunks.
+    let mut cuts: Vec<usize> = (0..n_facts).map(|_| rng.below(budget + 1)).collect();
+    cuts.sort_unstable();
+    let mut prompt = vec![v::BOS];
+    let mut prev = 0;
+    for i in 0..n_facts {
+        push_filler(&mut prompt, cuts[i] - prev, rng);
+        push_fact(&mut prompt, keys[i], &values[i]);
+        prev = cuts[i];
+    }
+    push_filler(&mut prompt, budget - prev, rng);
+    let qi = rng.below(n_facts);
+    push_query(&mut prompt, keys[qi]);
+    let ctx = prompt.len();
+    TaskSample {
+        prompt,
+        answer: values[qi].clone(),
+        ctx_len: ctx,
+    }
+}
+
+/// LVEval-style: maximum retrieval distance (queried fact is the FIRST
+/// fact) plus `n_confusers` near-miss facts whose values share the
+/// answer's digit prefix but differ in the last digit.
+pub fn confusing_retrieval(ctx_len: usize, n_confusers: usize, rng: &mut Pcg64) -> TaskSample {
+    let fact_tokens = 4 + v::VALUE_LEN;
+    let n_facts = (1 + n_confusers + 2).min(v::N_KEYS);
+    let budget = ctx_len.saturating_sub(1 + QUERY_TOKENS + n_facts * fact_tokens);
+    let keys = rng.sample_indices(v::N_KEYS, n_facts);
+    let answer = random_value(rng);
+
+    let mut prompt = vec![v::BOS];
+    // Queried fact first — the longest possible retrieval distance.
+    push_fact(&mut prompt, keys[0], &answer);
+    for i in 1..n_facts {
+        // Fill remaining budget between facts evenly-ish.
+        let chunk = budget / (n_facts - 1);
+        push_filler(&mut prompt, chunk, rng);
+        let val = if i <= n_confusers {
+            // Near-miss: same prefix, different final digit.
+            let mut val = answer.clone();
+            let last = val[v::VALUE_LEN - 1] - v::DIGIT_BASE;
+            val[v::VALUE_LEN - 1] = v::digit_token((last + 1 + rng.below(9)) % 10);
+            val
+        } else {
+            random_value(rng)
+        };
+        push_fact(&mut prompt, keys[i], &val);
+    }
+    push_query(&mut prompt, keys[0]);
+    let ctx = prompt.len();
+    TaskSample {
+        prompt,
+        answer,
+        ctx_len: ctx,
+    }
+}
+
+/// Append `n` filler tokens drawn from the bigram language model used by
+/// the pretraining corpus (shared structure so filler is in-distribution).
+pub fn push_filler(out: &mut Vec<usize>, n: usize, rng: &mut Pcg64) {
+    let mut w = rng.below(v::N_WORDS);
+    for i in 0..n {
+        // End sentences occasionally with SEP for structure.
+        if i > 0 && rng.chance(0.1) {
+            out.push(v::SEP);
+            w = rng.below(v::N_WORDS);
+            continue;
+        }
+        out.push(v::word_token(w));
+        w = next_word(w, rng);
+    }
+}
+
+/// Deterministic-ish bigram transition: each word prefers a small set of
+/// successors, giving the LM mixture learnable structure.
+pub fn next_word(w: usize, rng: &mut Pcg64) -> usize {
+    let base = (w * 7 + 3) % v::N_WORDS;
+    (base + rng.below(4)) % v::N_WORDS
+}
+
+/// Exact-match scoring of generated digit tokens against the answer.
+pub fn score_exact(generated: &[usize], answer: &[usize]) -> bool {
+    generated.len() >= answer.len() && &generated[..answer.len()] == answer
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_retrieval_wellformed() {
+        let mut rng = Pcg64::new(1);
+        let s = line_retrieval(10, &mut rng);
+        assert_eq!(s.prompt[0], v::BOS);
+        assert_eq!(s.prompt.len(), 1 + 10 * LINE_TOKENS + QUERY_TOKENS);
+        assert_eq!(s.answer.len(), v::VALUE_LEN);
+        assert!(s.answer.iter().all(|&t| v::is_digit(t)));
+        // Query key must appear in a line, and the answer must be that
+        // line's value.
+        let qkey = s.prompt[s.prompt.len() - 2];
+        assert!(v::is_key(qkey));
+        let pos = s.prompt.iter().position(|&t| t == qkey).unwrap();
+        assert_eq!(&s.prompt[pos + 3..pos + 3 + v::VALUE_LEN], &s.answer[..]);
+    }
+
+    #[test]
+    fn line_retrieval_ctx_sizing() {
+        let mut rng = Pcg64::new(2);
+        for ctx in [64, 128, 256, 448] {
+            let s = line_retrieval_ctx(ctx, &mut rng);
+            assert!(s.ctx_len <= ctx, "{} > {ctx}", s.ctx_len);
+            assert!(s.ctx_len + LINE_TOKENS > ctx.saturating_sub(LINE_TOKENS));
+        }
+    }
+
+    #[test]
+    fn keys_are_unique_per_sample() {
+        let mut rng = Pcg64::new(3);
+        let s = line_retrieval(30, &mut rng);
+        let mut keys: Vec<usize> = s
+            .prompt
+            .iter()
+            .zip(s.prompt.iter().skip(1))
+            .filter(|(&a, _)| a == v::LINE)
+            .map(|(_, &b)| b)
+            .collect();
+        assert_eq!(keys.len(), 30);
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 30, "line keys must be distinct");
+    }
+
+    #[test]
+    fn multifact_qa_wellformed() {
+        let mut rng = Pcg64::new(4);
+        let s = multifact_qa(200, 5, &mut rng);
+        assert!(s.ctx_len <= 205, "ctx={}", s.ctx_len);
+        assert!(s.ctx_len >= 180, "ctx={}", s.ctx_len);
+        let qkey = s.prompt[s.prompt.len() - 2];
+        let pos = s.prompt.iter().position(|&t| t == qkey).unwrap();
+        // FACT key IS d d d
+        assert_eq!(s.prompt[pos - 1], v::FACT);
+        assert_eq!(&s.prompt[pos + 2..pos + 2 + v::VALUE_LEN], &s.answer[..]);
+    }
+
+    #[test]
+    fn confusing_retrieval_has_near_misses() {
+        let mut rng = Pcg64::new(5);
+        let s = confusing_retrieval(300, 2, &mut rng);
+        // The queried fact is the first fact.
+        assert_eq!(s.prompt[1], v::FACT);
+        let qkey = s.prompt[s.prompt.len() - 2];
+        assert_eq!(s.prompt[2], qkey);
+        // Near-miss values share the first VALUE_LEN-1 digits.
+        let prefix = &s.answer[..v::VALUE_LEN - 1];
+        let mut near = 0;
+        for i in 0..s.prompt.len() - v::VALUE_LEN {
+            if s.prompt[i] == v::IS
+                && s.prompt[i + 1..i + v::VALUE_LEN].iter().eq(prefix.iter())
+                && s.prompt[i + v::VALUE_LEN] != s.answer[v::VALUE_LEN - 1]
+                && v::is_digit(s.prompt[i + v::VALUE_LEN])
+            {
+                near += 1;
+            }
+        }
+        assert!(near >= 2, "expected ≥2 near-miss facts, got {near}");
+    }
+
+    #[test]
+    fn score_exact_behaviour() {
+        assert!(score_exact(&[1, 2, 3, 9], &[1, 2, 3]));
+        assert!(!score_exact(&[1, 2], &[1, 2, 3]));
+        assert!(!score_exact(&[1, 2, 4], &[1, 2, 3]));
+    }
+
+    #[test]
+    fn samples_are_seed_deterministic() {
+        let a = line_retrieval(8, &mut Pcg64::new(42));
+        let b = line_retrieval(8, &mut Pcg64::new(42));
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+}

@@ -1,0 +1,131 @@
+//! Fixed token-id vocabulary layout for TinyLM.
+//!
+//! The synthetic tasks construct token sequences directly (no string
+//! tokenizer is needed), but ids are organized into semantic ranges so
+//! generators and scorers share one source of truth, and `detokenize`
+//! renders sequences for debugging / failure-case inspection (the paper's
+//! §3.2 discussion of failure modes is reproduced with these renderings).
+
+/// Total vocabulary size (must match `python/compile/model.py`).
+pub const VOCAB_SIZE: usize = 256;
+
+// ----- special tokens -----------------------------------------------------
+pub const PAD: usize = 0;
+pub const BOS: usize = 1;
+pub const EOS: usize = 2;
+pub const SEP: usize = 3;
+/// "What is the REGISTER_CONTENT in line …?"
+pub const QUERY: usize = 4;
+/// "line"
+pub const LINE: usize = 5;
+/// "REGISTER_CONTENT"
+pub const REG: usize = 6;
+/// "is"
+pub const IS: usize = 7;
+/// answer delimiter
+pub const ANSWER: usize = 8;
+/// fact marker for the QA tasks
+pub const FACT: usize = 9;
+
+// ----- ranges ---------------------------------------------------------------
+
+/// Line/fact key ids (the "line 337" identifiers): 100 distinct keys.
+pub const KEY_BASE: usize = 16;
+pub const N_KEYS: usize = 100;
+
+/// Digit tokens 0..9 — answers are [`VALUE_LEN`]-digit sequences, which
+/// reproduces the paper's observed near-miss failures ("4244" vs "42440").
+pub const DIGIT_BASE: usize = KEY_BASE + N_KEYS; // 116
+pub const N_DIGITS: usize = 10;
+
+/// General vocabulary for the language-modeling mixture.
+pub const WORD_BASE: usize = DIGIT_BASE + N_DIGITS; // 126
+pub const N_WORDS: usize = VOCAB_SIZE - WORD_BASE; // 130
+
+/// Number of digit tokens per retrieval answer.
+pub const VALUE_LEN: usize = 3;
+
+pub fn key_token(k: usize) -> usize {
+    assert!(k < N_KEYS);
+    KEY_BASE + k
+}
+
+pub fn digit_token(d: usize) -> usize {
+    assert!(d < N_DIGITS);
+    DIGIT_BASE + d
+}
+
+pub fn word_token(w: usize) -> usize {
+    assert!(w < N_WORDS);
+    WORD_BASE + w
+}
+
+pub fn is_digit(tok: usize) -> bool {
+    (DIGIT_BASE..DIGIT_BASE + N_DIGITS).contains(&tok)
+}
+
+pub fn is_key(tok: usize) -> bool {
+    (KEY_BASE..KEY_BASE + N_KEYS).contains(&tok)
+}
+
+/// Render a token sequence for debugging and failure-case inspection.
+pub fn detokenize(tokens: &[usize]) -> String {
+    let mut out = String::new();
+    for &t in tokens {
+        let s = match t {
+            PAD => "<pad>".to_string(),
+            BOS => "<bos>".to_string(),
+            EOS => "<eos>".to_string(),
+            SEP => "·".to_string(),
+            QUERY => "QUERY".to_string(),
+            LINE => "line".to_string(),
+            REG => "REGISTER_CONTENT".to_string(),
+            IS => "is".to_string(),
+            ANSWER => "=>".to_string(),
+            FACT => "fact".to_string(),
+            t if is_key(t) => format!("k{}", t - KEY_BASE),
+            t if is_digit(t) => format!("{}", t - DIGIT_BASE),
+            t if t >= WORD_BASE && t < VOCAB_SIZE => format!("w{}", t - WORD_BASE),
+            t => format!("<{t}?>"),
+        };
+        out.push_str(&s);
+        out.push(' ');
+    }
+    out.trim_end().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_disjoint_and_fit() {
+        assert!(KEY_BASE > FACT);
+        assert_eq!(DIGIT_BASE, KEY_BASE + N_KEYS);
+        assert_eq!(WORD_BASE, DIGIT_BASE + N_DIGITS);
+        assert_eq!(WORD_BASE + N_WORDS, VOCAB_SIZE);
+        assert!(N_WORDS > 64, "need a reasonable LM vocabulary");
+    }
+
+    #[test]
+    fn classifiers_match_constructors() {
+        assert!(is_key(key_token(0)));
+        assert!(is_key(key_token(N_KEYS - 1)));
+        assert!(!is_key(digit_token(0)));
+        assert!(is_digit(digit_token(9)));
+        assert!(!is_digit(word_token(0)));
+    }
+
+    #[test]
+    fn detokenize_is_readable() {
+        let seq = vec![BOS, LINE, key_token(42), REG, IS, digit_token(4), digit_token(2), SEP];
+        let s = detokenize(&seq);
+        assert_eq!(s, "<bos> line k42 REGISTER_CONTENT is 4 2 ·");
+    }
+
+    #[test]
+    #[should_panic]
+    fn key_token_bounds_checked() {
+        let _ = key_token(N_KEYS);
+    }
+}

@@ -1,0 +1,256 @@
+//! Shared experiment plumbing for the paper-table benches.
+//!
+//! Provides the trained-model environment, disk-cached factor
+//! construction (so the table benches don't re-fine-tune identical
+//! configurations), and uniform policy factories for every method
+//! compared in the paper.
+
+use std::sync::Arc;
+
+use crate::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use crate::compress::{InitMethod, KvCompressionPlan, ModelFactors};
+use crate::data::corpus::{calibration_docs, CorpusConfig};
+use crate::eval::harness::{EvalSet, SuiteResult};
+use crate::eval::suites::Suite;
+use crate::finetune::recon::QatMode;
+use crate::finetune::{build_factors, FinetuneConfig};
+use crate::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use crate::model::{engine::Engine, ModelWeights};
+use crate::tensor::Mat;
+
+/// Trained-model experiment environment.
+pub struct Env {
+    pub engine: Engine,
+    /// Per-layer calibration activations (attention inputs).
+    pub calib: Vec<Mat>,
+    pub label: String,
+}
+
+impl Env {
+    /// Load trained weights + collect calibration activations.
+    pub fn load(weights_path: &std::path::Path, label: &str) -> anyhow::Result<Env> {
+        let w = ModelWeights::load(weights_path).map_err(|e| {
+            anyhow::anyhow!(
+                "{e:#}\nhint: run `make pretrain` (or `cskv pretrain`) to produce {}",
+                weights_path.display()
+            )
+        })?;
+        let engine = Engine::new(Arc::new(w));
+        let docs = calibration_docs(&CorpusConfig::default(), 24, 99);
+        let calib = engine.collect_calibration(&docs, 4096, 1);
+        Ok(Env {
+            engine,
+            calib,
+            label: label.to_string(),
+        })
+    }
+
+    /// The default environment (runs/tinylm.bin).
+    pub fn load_default() -> anyhow::Result<Env> {
+        Env::load(&crate::runs_dir().join("tinylm.bin"), "TinyLM")
+    }
+
+    /// Secondary-model environment if present (Table 1's second block).
+    pub fn load_secondary() -> Option<Env> {
+        let p = crate::runs_dir().join("tinylm_b.bin");
+        if p.exists() {
+            Env::load(&p, "TinyLM-B").ok()
+        } else {
+            None
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.engine.w.cfg.d_model
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.engine.w.cfg.n_layers
+    }
+}
+
+/// Build (or load from `runs/`) fine-tuned factors for a configuration.
+///
+/// Cache key includes the env label, plan ranks, init, steps and QAT mode —
+/// benches across tables share identical configurations for free.
+pub fn factors_for(
+    env: &Env,
+    plan: KvCompressionPlan,
+    init: InitMethod,
+    steps: usize,
+    qat: QatMode,
+) -> Arc<ModelFactors> {
+    let d = env.d_model();
+    let tag = format!(
+        "{}_rk{}_rv{}_{}_s{}_{:?}",
+        env.label,
+        plan.rank_k(d),
+        plan.rank_v(d),
+        init.name().replace(['(', ')', '=', '.'], ""),
+        steps,
+        qat
+    );
+    let path = crate::runs_dir().join(format!("factors_{tag}.bin"));
+    if let Ok(f) = ModelFactors::load(&path) {
+        return Arc::new(f);
+    }
+    let rep = build_factors(
+        &env.engine.w,
+        &env.calib,
+        plan,
+        &FinetuneConfig {
+            init,
+            steps,
+            qat,
+            ..Default::default()
+        },
+    );
+    let _ = rep.factors.save(&path);
+    Arc::new(rep.factors)
+}
+
+/// A method under comparison (one row group of Table 1).
+#[derive(Clone)]
+pub enum Method {
+    Full,
+    StreamingLlm { ratio: f64 },
+    H2o { ratio: f64 },
+    Asvd { factors: Arc<ModelFactors> },
+    Cskv {
+        factors: Arc<ModelFactors>,
+        window: usize,
+        quant: QuantMode,
+    },
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Full => "-",
+            Method::StreamingLlm { .. } => "StreamingLLM",
+            Method::H2o { .. } => "H2O",
+            Method::Asvd { .. } => "ASVD",
+            Method::Cskv { .. } => "CSKV (Ours)",
+        }
+    }
+
+    /// Per-sample policy factory for a suite with nominal context `ctx`.
+    /// Token-pruning budgets follow the paper: keep `(1−ratio)·ctx` tokens.
+    pub fn factory<'a>(
+        &'a self,
+        n_layers: usize,
+        d_model: usize,
+        ctx: usize,
+    ) -> Box<dyn FnMut() -> Box<dyn KvCachePolicy> + 'a> {
+        match self {
+            Method::Full => Box::new(move || Box::new(FullCache::new(n_layers, d_model))),
+            Method::StreamingLlm { ratio } => {
+                let budget = (((1.0 - ratio) * ctx as f64).round() as usize).max(6);
+                Box::new(move || {
+                    Box::new(StreamingLlmCache::new(n_layers, d_model, 4, budget))
+                })
+            }
+            Method::H2o { ratio } => {
+                let budget = (((1.0 - ratio) * ctx as f64).round() as usize).max(6);
+                Box::new(move || Box::new(H2oCache::new(n_layers, d_model, budget)))
+            }
+            Method::Asvd { factors } => {
+                Box::new(move || Box::new(AsvdCache::new(Arc::clone(factors))))
+            }
+            Method::Cskv {
+                factors,
+                window,
+                quant,
+            } => Box::new(move || {
+                Box::new(CskvCache::new(
+                    Arc::clone(factors),
+                    d_model,
+                    CskvConfig {
+                        window: *window,
+                        quant: *quant,
+                    },
+                ))
+            }),
+        }
+    }
+}
+
+/// Evaluate one (suite, method) grid cell on a shared sample set.
+pub fn eval_cell(env: &Env, set: &EvalSet, suite: &Suite, method: &Method) -> SuiteResult {
+    let mut factory = method.factory(env.n_layers(), env.d_model(), suite.ctx());
+    set.eval(&env.engine, &mut factory)
+}
+
+/// Standard fine-tune budget used by the table benches.
+pub const FT_STEPS: usize = 250;
+
+/// Build the shared per-suite sample sets once.
+pub fn build_sets(env: &Env, columns: &[(String, Suite)], n: usize, seed: u64) -> Vec<EvalSet> {
+    columns
+        .iter()
+        .map(|(_, s)| EvalSet::build(&env.engine, s.sample_set(n, seed)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn fake_env() -> Env {
+        let w = ModelWeights::init(&ModelConfig::test_small(), 33);
+        let engine = Engine::new(Arc::new(w));
+        let docs = calibration_docs(
+            &CorpusConfig {
+                seq_len: 64,
+                ..Default::default()
+            },
+            3,
+            1,
+        );
+        let calib = engine.collect_calibration(&docs, 256, 1);
+        Env {
+            engine,
+            calib,
+            label: "test".into(),
+        }
+    }
+
+    #[test]
+    fn factors_cache_roundtrip() {
+        let env = fake_env();
+        let plan = KvCompressionPlan::uniform(0.5);
+        let a = factors_for(&env, plan, InitMethod::Svd, 5, QatMode::Off);
+        let b = factors_for(&env, plan, InitMethod::Svd, 5, QatMode::Off);
+        assert_eq!(a.layers.len(), b.layers.len());
+        assert_eq!(a.rank_k(), b.rank_k());
+        // Second call must come from disk (identical values).
+        assert_eq!(a.layers[0].k.a, b.layers[0].k.a);
+    }
+
+    #[test]
+    fn all_methods_produce_policies() {
+        let env = fake_env();
+        let plan = KvCompressionPlan::uniform(0.5);
+        let f = factors_for(&env, plan, InitMethod::Svd, 0, QatMode::Off);
+        let methods = [
+            Method::Full,
+            Method::StreamingLlm { ratio: 0.5 },
+            Method::H2o { ratio: 0.5 },
+            Method::Asvd {
+                factors: Arc::clone(&f),
+            },
+            Method::Cskv {
+                factors: f,
+                window: 8,
+                quant: QuantMode::None,
+            },
+        ];
+        let suite = Suite::LongEval { ctx: 64 };
+        let set = EvalSet::build(&env.engine, suite.sample_set(2, 4));
+        for m in &methods {
+            let r = eval_cell(&env, &set, &suite, m);
+            assert_eq!(r.n_samples, 2);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared-prefill evaluation harness.
+//!
+//! Every method answers the same questions: a suite's sample set is fixed
+//! by seed, each sample's **exact prefill is computed once** and replayed
+//! into every replay-safe policy (CSKV, StreamingLLM, H2O, full — their
+//! prefill attention is exact, §2.1). Lossy-prefill policies (ASVD) rerun
+//! the forward pass per sample. Decode always runs per policy.
+
+use crate::data::tasks::{score_exact, TaskSample};
+use crate::data::vocab;
+use crate::kvcache::KvCachePolicy;
+use crate::model::engine::{Engine, PrefillRecord};
+use crate::tensor::ops;
+use crate::util::stats::Samples;
+
+/// Builds a fresh policy instance per sample.
+pub type PolicyFactory<'a> = dyn FnMut() -> Box<dyn KvCachePolicy> + 'a;
+
+/// Result of evaluating one policy on one suite.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub policy: String,
+    pub n_samples: usize,
+    pub n_correct: usize,
+    /// Samples whose full generation matches the uncompressed cache's
+    /// (robust secondary metric, independent of base-model quality).
+    pub n_agree_full: usize,
+    /// Mean KV bytes at the end of generation.
+    pub mean_kv_bytes: f64,
+    /// Decode latency samples (seconds per generated token).
+    pub decode_tok_s: Samples,
+}
+
+impl SuiteResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n_samples == 0 {
+            0.0
+        } else {
+            self.n_correct as f64 / self.n_samples as f64
+        }
+    }
+
+    /// Agreement with the uncompressed cache's generations.
+    pub fn agreement(&self) -> f64 {
+        if self.n_samples == 0 {
+            0.0
+        } else {
+            self.n_agree_full as f64 / self.n_samples as f64
+        }
+    }
+}
+
+/// A fixed sample set with cached exact prefills and the reference
+/// (full-cache) generations.
+pub struct EvalSet {
+    pub samples: Vec<TaskSample>,
+    records: Vec<PrefillRecord>,
+    /// Full-cache generations (the agreement reference).
+    reference: Vec<Vec<usize>>,
+}
+
+impl EvalSet {
+    /// Generate `samples` and run the exact prefill once per sample.
+    pub fn build(engine: &Engine, samples: Vec<TaskSample>) -> Self {
+        let records: Vec<PrefillRecord> = samples
+            .iter()
+            .map(|s| engine.prefill(&s.prompt, None))
+            .collect();
+        let cfg = &engine.w.cfg;
+        let reference = samples
+            .iter()
+            .zip(&records)
+            .map(|(s, rec)| {
+                let mut full =
+                    crate::kvcache::FullCache::new(cfg.n_layers, cfg.d_model);
+                replay_generate(engine, rec, s.prompt.len(), vocab::VALUE_LEN, &mut full)
+            })
+            .collect();
+        EvalSet {
+            samples,
+            records,
+            reference,
+        }
+    }
+
+    /// Evaluate one policy across the set.
+    pub fn eval(&self, engine: &Engine, factory: &mut PolicyFactory) -> SuiteResult {
+        let mut n_correct = 0;
+        let mut n_agree_full = 0;
+        let mut kv_bytes = 0.0f64;
+        let mut decode_tok_s = Samples::new();
+        let mut name = String::new();
+        for ((sample, rec), reference) in
+            self.samples.iter().zip(&self.records).zip(&self.reference)
+        {
+            let mut policy = factory();
+            name = policy.name();
+            let n_new = vocab::VALUE_LEN;
+            let generated = if policy.lossy_prefill() {
+                let (generated, stats) = engine.generate(&sample.prompt, n_new, policy.as_mut());
+                if stats.decode_steps > 0 {
+                    decode_tok_s.push(stats.decode_s / stats.decode_steps as f64);
+                }
+                generated
+            } else {
+                let t0 = std::time::Instant::now();
+                let generated = replay_generate(engine, rec, sample.prompt.len(), n_new, policy.as_mut());
+                let dt = t0.elapsed().as_secs_f64();
+                if n_new > 1 {
+                    decode_tok_s.push(dt / (n_new - 1) as f64);
+                }
+                generated
+            };
+            kv_bytes += policy.kv_bytes() as f64;
+            if score_exact(&generated, &sample.answer) {
+                n_correct += 1;
+            }
+            if generated == *reference {
+                n_agree_full += 1;
+            }
+        }
+        SuiteResult {
+            policy: name,
+            n_samples: self.samples.len(),
+            n_correct,
+            n_agree_full,
+            mean_kv_bytes: kv_bytes / self.samples.len().max(1) as f64,
+            decode_tok_s,
+        }
+    }
+}
+
+/// Replay a cached exact prefill into a replay-safe policy, then decode.
+///
+/// Panics (debug) if the policy tries to substitute prefill K/V — callers
+/// must route lossy-prefill policies through [`Engine::generate`].
+pub fn replay_generate(
+    engine: &Engine,
+    rec: &PrefillRecord,
+    prompt_len: usize,
+    n_new: usize,
+    policy: &mut dyn KvCachePolicy,
+) -> Vec<usize> {
+    debug_assert!(!policy.lossy_prefill());
+    for li in 0..engine.w.cfg.n_layers {
+        let rep = policy.ingest_prefill(li, &rec.xnorms[li], &rec.ks[li], &rec.vs[li]);
+        debug_assert!(rep.is_none(), "replay requires exact-prefill policies");
+        policy.observe_prefill_attn(li, &rec.attn_mass[li]);
+    }
+    let mut out = Vec::with_capacity(n_new);
+    let mut next = ops::argmax(rec.logits.row(prompt_len - 1));
+    for i in 0..n_new {
+        out.push(next);
+        if i + 1 == n_new {
+            break;
+        }
+        let logits = engine.decode_step(policy, next, prompt_len + i);
+        next = ops::argmax(&logits);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::suites::Suite;
+    use crate::kvcache::FullCache;
+    use crate::model::{ModelConfig, ModelWeights};
+    use std::sync::Arc;
+
+    fn tiny_engine() -> Engine {
+        Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), 1)))
+    }
+
+    #[test]
+    fn replay_matches_direct_generation() {
+        let e = tiny_engine();
+        let suite = Suite::LongEval { ctx: 64 };
+        let samples = suite.sample_set(3, 7);
+        let set = EvalSet::build(&e, samples.clone());
+        for (s, rec) in samples.iter().zip(&set.records) {
+            let cfg = &e.w.cfg;
+            let mut direct = FullCache::new(cfg.n_layers, cfg.d_model);
+            let (g_direct, _) = e.generate(&s.prompt, 3, &mut direct);
+            let mut replayed = FullCache::new(cfg.n_layers, cfg.d_model);
+            let g_replay = replay_generate(&e, rec, s.prompt.len(), 3, &mut replayed);
+            assert_eq!(g_direct, g_replay, "replay must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn eval_reports_consistent_counts() {
+        let e = tiny_engine();
+        let suite = Suite::LongBench { ctx: 60, n_facts: 3 };
+        let set = EvalSet::build(&e, suite.sample_set(4, 9));
+        let cfg = e.w.cfg.clone();
+        let mut factory = move || -> Box<dyn KvCachePolicy> {
+            Box::new(FullCache::new(cfg.n_layers, cfg.d_model))
+        };
+        let r = set.eval(&e, &mut factory);
+        assert_eq!(r.n_samples, 4);
+        assert!(r.n_correct <= 4);
+        assert!(r.mean_kv_bytes > 0.0);
+        assert!((0.0..=1.0).contains(&r.accuracy()));
+        assert_eq!(r.policy, "full");
+    }
+}

@@ -1,0 +1,17 @@
+//! Evaluation harnesses for the paper's three benchmark suites.
+//!
+//! * [`suites`] — the scaled task suites (LongEval lengths, LongBench
+//!   buckets, LVEval) and their sample generators.
+//! * [`harness`] — shared-prefill evaluation: one exact prefill per sample
+//!   is replayed into every replay-safe policy (CSKV, StreamingLLM, H2O,
+//!   full), while lossy-prefill policies (ASVD) rerun the forward pass.
+//! * [`svd_analysis`] — Figure 3: singular-value distribution of the key
+//!   cache on calibration data.
+
+pub mod experiments;
+pub mod harness;
+pub mod suites;
+pub mod svd_analysis;
+
+pub use harness::{EvalSet, PolicyFactory, SuiteResult};
+pub use suites::Suite;

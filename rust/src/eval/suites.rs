@@ -1,0 +1,120 @@
+//! The scaled benchmark suites (DESIGN.md §2 maps them to the paper's).
+//!
+//! | paper | here |
+//! |-------|------|
+//! | LongEval 200/300/400/500 lines (≈4k/6k/8k/10k tokens) | line retrieval at ctx ≈ 128/256/384/500 |
+//! | LongBench-E buckets 0-4k / 4-8k / 8k+ | multi-fact QA at ctx ≈ 150 / 300 / 470 |
+//! | LVEval 16k | confusing retrieval at ctx ≈ 500 (max distance + near-miss values) |
+
+use crate::data::tasks::{self, TaskSample};
+use crate::util::prng::Pcg64;
+
+/// One evaluation suite cell (a column of Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Suite {
+    /// LongEval-style line retrieval at a target context length.
+    LongEval { ctx: usize },
+    /// LongBench-style multi-fact QA bucket.
+    LongBench { ctx: usize, n_facts: usize },
+    /// LVEval-style hardest bucket.
+    LvEval { ctx: usize },
+}
+
+impl Suite {
+    /// The Table 1 column set, scaled to TinyLM's 512 context.
+    pub fn table1_columns() -> Vec<(String, Suite)> {
+        vec![
+            ("LongEval-4k".into(), Suite::LongEval { ctx: 128 }),
+            ("LongEval-6k".into(), Suite::LongEval { ctx: 256 }),
+            ("LongEval-8k".into(), Suite::LongEval { ctx: 384 }),
+            ("LongEval-10k".into(), Suite::LongEval { ctx: 500 }),
+            (
+                "LongBench-0-4k".into(),
+                Suite::LongBench {
+                    ctx: 150,
+                    n_facts: 5,
+                },
+            ),
+            (
+                "LongBench-4-8k".into(),
+                Suite::LongBench {
+                    ctx: 300,
+                    n_facts: 8,
+                },
+            ),
+            (
+                "LongBench-8k+".into(),
+                Suite::LongBench {
+                    ctx: 470,
+                    n_facts: 10,
+                },
+            ),
+            ("LVEval-16k".into(), Suite::LvEval { ctx: 500 }),
+        ]
+    }
+
+    /// The ablation suite (the paper's §C uses LongEval averages).
+    pub fn ablation_columns() -> Vec<(String, Suite)> {
+        vec![
+            ("LongEval-4k".into(), Suite::LongEval { ctx: 128 }),
+            ("LongEval-6k".into(), Suite::LongEval { ctx: 256 }),
+            ("LongEval-8k".into(), Suite::LongEval { ctx: 384 }),
+            ("LongEval-10k".into(), Suite::LongEval { ctx: 500 }),
+        ]
+    }
+
+    pub fn ctx(&self) -> usize {
+        match self {
+            Suite::LongEval { ctx } | Suite::LongBench { ctx, .. } | Suite::LvEval { ctx } => *ctx,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> TaskSample {
+        match *self {
+            Suite::LongEval { ctx } => tasks::line_retrieval_ctx(ctx, rng),
+            Suite::LongBench { ctx, n_facts } => tasks::multifact_qa(ctx, n_facts, rng),
+            Suite::LvEval { ctx } => tasks::confusing_retrieval(ctx, 3, rng),
+        }
+    }
+
+    /// Generate a fixed sample set (shared across all policies so every method
+    /// answers exactly the same questions).
+    pub fn sample_set(&self, n: usize, seed: u64) -> Vec<TaskSample> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| self.sample(&mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_columns_cover_all_suites() {
+        let cols = Suite::table1_columns();
+        assert_eq!(cols.len(), 8);
+        assert!(matches!(cols[0].1, Suite::LongEval { .. }));
+        assert!(matches!(cols[4].1, Suite::LongBench { .. }));
+        assert!(matches!(cols[7].1, Suite::LvEval { .. }));
+    }
+
+    #[test]
+    fn samples_respect_ctx() {
+        let mut rng = Pcg64::new(1);
+        for (_, s) in Suite::table1_columns() {
+            let t = s.sample(&mut rng);
+            assert!(t.ctx_len <= s.ctx() + 8, "{:?}: {} vs {}", s, t.ctx_len, s.ctx());
+            assert!(t.ctx_len >= s.ctx() / 2, "{:?}: {}", s, t.ctx_len);
+        }
+    }
+
+    #[test]
+    fn sample_set_is_deterministic() {
+        let s = Suite::LongEval { ctx: 128 };
+        let a = s.sample_set(5, 42);
+        let b = s.sample_set(5, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Training-efficient fine-tuning (§2.2, Figure 2).
+//!
+//! The paper's key cost saving: instead of retraining the LLM end-to-end,
+//! minimize the **layer-wise reconstruction loss**
+//! `L = MSE(X·W, X·A·B)` for each layer's key and value projections
+//! independently, starting from an (A)SVD initialization.
+//!
+//! * [`adam`] — the AdamW optimizer state (manual gradients; the loss is a
+//!   bilinear least-squares form so autodiff is unnecessary).
+//! * [`recon`] — the layer-wise trainer, loss-curve capture (Figure 4),
+//!   QAT (fake-quant in the loss path, Table 5) and the end-to-end
+//!   `build_factors` pipeline (calibrate → init → fine-tune).
+
+pub mod adam;
+pub mod recon;
+
+pub use recon::{build_factors, FinetuneConfig, FinetuneReport};

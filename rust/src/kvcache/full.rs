@@ -1,0 +1,92 @@
+//! The uncompressed baseline cache (the paper's "0%" rows).
+
+use crate::tensor::Mat;
+
+use super::{CacheView, GrowMat, KvCachePolicy};
+
+/// Stores every token's exact K/V for every layer.
+pub struct FullCache {
+    layers: Vec<LayerState>,
+}
+
+struct LayerState {
+    k: GrowMat,
+    v: GrowMat,
+}
+
+impl FullCache {
+    pub fn new(n_layers: usize, d_model: usize) -> Self {
+        FullCache {
+            layers: (0..n_layers)
+                .map(|_| LayerState {
+                    k: GrowMat::new(d_model),
+                    v: GrowMat::new(d_model),
+                })
+                .collect(),
+        }
+    }
+}
+
+impl KvCachePolicy for FullCache {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn ingest_prefill(&mut self, layer: usize, _xnorm: &Mat, k: &Mat, v: &Mat) -> Option<(Mat, Mat)> {
+        self.layers[layer].k.push_mat(k);
+        self.layers[layer].v.push_mat(v);
+        None
+    }
+
+    fn append(&mut self, layer: usize, _xnorm: &[f32], k: &[f32], v: &[f32]) {
+        self.layers[layer].k.push_row(k);
+        self.layers[layer].v.push_row(v);
+    }
+
+    fn materialize(&self, layer: usize) -> CacheView {
+        let l = &self.layers[layer];
+        let n = l.k.rows();
+        CacheView {
+            k: l.k.to_mat(),
+            v: l.v.to_mat(),
+            rope_pos: (0..n).collect(),
+            abs_pos: (0..n).collect(),
+        }
+    }
+
+    fn len(&self, layer: usize) -> usize {
+        self.layers[layer].k.rows()
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn stores_everything_exactly() {
+        let mut rng = Pcg64::new(1);
+        let mut c = FullCache::new(2, 8);
+        let k = Mat::randn(5, 8, 1.0, &mut rng);
+        let v = Mat::randn(5, 8, 1.0, &mut rng);
+        assert!(c.ingest_prefill(0, &k, &k, &v).is_none());
+        let krow: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let vrow: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        c.append(0, &krow, &krow, &vrow);
+        let view = c.materialize(0);
+        view.validate();
+        assert_eq!(view.len(), 6);
+        assert_eq!(view.k.row(2), k.row(2));
+        assert_eq!(view.v.row(5), &vrow[..]);
+        assert_eq!(view.rope_pos, (0..6).collect::<Vec<_>>());
+        // Layer 1 untouched.
+        assert_eq!(c.len(1), 0);
+        // 6 tokens * 2 tensors * 8 dims * 4B in layer 0.
+        assert_eq!(c.kv_bytes(), 6 * 2 * 8 * 4);
+    }
+}

@@ -1,0 +1,205 @@
+//! KV-cache policies — the seam where the paper's contribution (the
+//! bi-branch channel-shrunk cache) and every baseline plug into both the
+//! reference engine and the serving coordinator.
+//!
+//! Contract (shared by [`crate::model::engine::Engine`] and the
+//! coordinator):
+//!
+//! 1. After the exact prefill pass the engine hands each layer's
+//!    attention inputs (`xnorm`), pre-RoPE keys and values to
+//!    [`KvCachePolicy::ingest_prefill`]. A policy may return replacement
+//!    K/V to make *prefill attention itself* lossy (ASVD does; CSKV does
+//!    not — its prefill is exact by design, §2.1).
+//! 2. Each decode step appends one token via [`KvCachePolicy::append`]
+//!    and materializes the effective cache via
+//!    [`KvCachePolicy::materialize`]. Keys come back **pre-RoPE** along
+//!    with the RoPE position to use per row, so policies can use absolute
+//!    positions (CSKV, H2O, full) or cache-relative positions
+//!    (StreamingLLM) under one interface.
+//! 3. [`KvCachePolicy::kv_bytes`] reports the true storage footprint, so
+//!    every experiment compares methods at equal memory budgets.
+
+pub mod bibranch;
+pub mod full;
+pub mod memory;
+
+pub use bibranch::{CskvCache, CskvConfig, QuantMode};
+pub use full::FullCache;
+
+use crate::tensor::Mat;
+
+/// Effective cache contents for one layer's decode attention.
+#[derive(Clone, Debug)]
+pub struct CacheView {
+    /// Pre-RoPE keys `[n_eff, d_model]`.
+    pub k: Mat,
+    /// Values `[n_eff, d_model]`.
+    pub v: Mat,
+    /// RoPE position to apply to each key row.
+    pub rope_pos: Vec<usize>,
+    /// Absolute token index of each row (for attention-score attribution).
+    pub abs_pos: Vec<usize>,
+}
+
+impl CacheView {
+    pub fn len(&self) -> usize {
+        self.k.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.rows == 0
+    }
+
+    pub fn validate(&self) {
+        assert_eq!(self.k.rows, self.v.rows);
+        assert_eq!(self.k.rows, self.rope_pos.len());
+        assert_eq!(self.k.rows, self.abs_pos.len());
+    }
+}
+
+/// A pluggable KV-cache management policy (one instance per generation).
+pub trait KvCachePolicy: Send {
+    /// Display name used in experiment tables.
+    fn name(&self) -> String;
+
+    /// Ingest the prefill results for one layer. `xnorm`, `k`, `v` are
+    /// `[T, d_model]`; keys are pre-RoPE. Returning `Some((k', v'))`
+    /// replaces the K/V used for the prefill attention itself.
+    fn ingest_prefill(&mut self, layer: usize, xnorm: &Mat, k: &Mat, v: &Mat)
+        -> Option<(Mat, Mat)>;
+
+    /// Aggregated prefill attention mass per key position (summed over
+    /// heads and queries) — H2O's seeding signal.
+    fn observe_prefill_attn(&mut self, _layer: usize, _mass: &[f32]) {}
+
+    /// Append one decoded token's activations for one layer.
+    fn append(&mut self, layer: usize, xnorm: &[f32], k: &[f32], v: &[f32]);
+
+    /// Materialize the effective cache for attention at this step.
+    fn materialize(&self, layer: usize) -> CacheView;
+
+    /// Decode-time attention feedback aligned with `materialize`'s
+    /// `abs_pos` (H2O score accumulation).
+    fn observe_decode_attn(&mut self, _layer: usize, _abs_pos: &[usize], _probs: &[f32]) {}
+
+    /// RoPE position for the query at absolute position `abs_pos`
+    /// (StreamingLLM remaps to cache-relative coordinates).
+    fn query_rope_pos(&self, _layer: usize, abs_pos: usize) -> usize {
+        abs_pos
+    }
+
+    /// True if `ingest_prefill` substitutes lossy K/V (changing the
+    /// forward pass itself) — such policies cannot share a cached exact
+    /// prefill with others in the evaluation harness.
+    fn lossy_prefill(&self) -> bool {
+        false
+    }
+
+    /// Number of tokens represented in this layer's cache (for invariants;
+    /// eviction policies may *store* fewer).
+    fn len(&self, layer: usize) -> usize;
+
+    /// True storage footprint across all layers, in bytes.
+    fn kv_bytes(&self) -> usize;
+}
+
+/// Growable row-major matrix used by cache implementations.
+#[derive(Clone, Debug, Default)]
+pub struct GrowMat {
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl GrowMat {
+    pub fn new(cols: usize) -> Self {
+        GrowMat {
+            cols,
+            data: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.data.len() / self.cols
+        }
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn push_mat(&mut self, m: &Mat) {
+        assert_eq!(m.cols, self.cols);
+        self.data.extend_from_slice(&m.data);
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Remove row `i`, shifting the tail (eviction policies).
+    pub fn remove_row(&mut self, i: usize) {
+        let c = self.cols;
+        self.data.drain(i * c..(i + 1) * c);
+    }
+
+    /// Rows `[lo, hi)` as a `Mat` copy.
+    pub fn slice(&self, lo: usize, hi: usize) -> Mat {
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows(), self.cols, self.data.clone())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growmat_push_and_slice() {
+        let mut g = GrowMat::new(3);
+        g.push_row(&[1.0, 2.0, 3.0]);
+        g.push_row(&[4.0, 5.0, 6.0]);
+        g.push_row(&[7.0, 8.0, 9.0]);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.row(1), &[4.0, 5.0, 6.0]);
+        let s = g.slice(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.at(1, 0), 7.0);
+        assert_eq!(g.bytes(), 9 * 4);
+    }
+
+    #[test]
+    fn growmat_remove_row() {
+        let mut g = GrowMat::new(2);
+        for i in 0..4 {
+            g.push_row(&[i as f32, 10.0 + i as f32]);
+        }
+        g.remove_row(1);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.row(0), &[0.0, 10.0]);
+        assert_eq!(g.row(1), &[2.0, 12.0]);
+        assert_eq!(g.row(2), &[3.0, 13.0]);
+    }
+
+    #[test]
+    fn cacheview_validation() {
+        let v = CacheView {
+            k: Mat::zeros(2, 4),
+            v: Mat::zeros(2, 4),
+            rope_pos: vec![0, 1],
+            abs_pos: vec![0, 1],
+        };
+        v.validate();
+        assert_eq!(v.len(), 2);
+    }
+}

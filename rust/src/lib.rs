@@ -1,0 +1,68 @@
+//! # CSKV — Channel Shrinking for the KV Cache
+//!
+//! Full-system reproduction of *"CSKV: Training-Efficient Channel Shrinking
+//! for KV Cache in Long-Context Scenarios"* (Wang et al., 2024).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the channel-shrink
+//!   projection and the fused bi-branch decode attention.
+//! * **L2** — JAX model (`python/compile/model.py`): TinyLM forward/backward,
+//!   lowered once to HLO text under `artifacts/` by `python/compile/aot.py`.
+//! * **L3** — this crate: serving coordinator, bi-branch KV-cache manager,
+//!   compression (SVD/ASVD init, int4 quant), layer-wise reconstruction
+//!   fine-tuning, baselines (StreamingLLM, H2O, ASVD), synthetic long-context
+//!   benchmarks, and a PJRT runtime that executes the AOT artifacts.
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+//!
+//! ## Layout
+//!
+//! | module | contents |
+//! |--------|----------|
+//! | [`util`] | offline substrates: PRNG, JSON, CLI, threadpool, stats, bench harness, property testing |
+//! | [`tensor`] | matrix type, blocked matmul, Jacobi SVD, QR, NN ops |
+//! | [`data`] | synthetic corpus + long-context task generators, vocabulary |
+//! | [`model`] | TinyLM config/weights + pure-Rust reference engine |
+//! | [`kvcache`] | the paper's contribution: bi-branch cache + policy trait + memory accounting |
+//! | [`compress`] | low-rank factors, SVD/ASVD initialization, KIVI-style int4 |
+//! | [`baselines`] | StreamingLLM, H2O, ASVD-only cache policies |
+//! | [`finetune`] | layer-wise reconstruction trainer (Adam, QAT) |
+//! | [`eval`] | synthetic LongEval / LongBench / LVEval harnesses |
+//! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | request router, continuous batcher, scheduler, metrics |
+
+pub mod baselines;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod finetune;
+pub mod kvcache;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Returns the directory that holds AOT artifacts (`artifacts/` next to the
+/// manifest), honouring the `CSKV_ARTIFACTS` override.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("CSKV_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::PathBuf::from("artifacts"),
+    }
+}
+
+/// Returns the directory for run outputs (trained weights, experiment CSVs).
+pub fn runs_dir() -> std::path::PathBuf {
+    let p = match std::env::var("CSKV_RUNS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::PathBuf::from("runs"),
+    };
+    let _ = std::fs::create_dir_all(&p);
+    p
+}

@@ -1,0 +1,274 @@
+//! `cskv` — leader binary: pretraining, compression, evaluation, serving.
+//!
+//! Subcommands:
+//! * `info`      — show artifact manifest + model summary.
+//! * `pretrain`  — train TinyLM through the PJRT `train_step` artifact.
+//! * `compress`  — calibrate + ASVD-init + layer-wise fine-tune; saves factors.
+//! * `eval`      — run one suite × policy grid cell.
+//! * `serve`     — demo serving run through the coordinator.
+//!
+//! The benches (`cargo bench`) regenerate the paper's tables; this binary
+//! is the operational entry point a user scripts against.
+
+use std::sync::Arc;
+
+use cskv::compress::{InitMethod, KvCompressionPlan};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::data::corpus::{calibration_docs, CorpusConfig};
+use cskv::data::{tasks, vocab};
+use cskv::eval::{EvalSet, Suite};
+use cskv::finetune::{build_factors, FinetuneConfig};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, QuantMode};
+use cskv::model::{engine::Engine, ModelWeights};
+use cskv::runtime::trainer::{TrainConfig, Trainer};
+use cskv::runtime::Runtime;
+use cskv::util::cli::Args;
+use cskv::util::prng::Pcg64;
+use cskv::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.subcommand().unwrap_or("info").to_string();
+    match cmd.as_str() {
+        "info" => info(&args),
+        "pretrain" => pretrain(&args),
+        "compress" => compress(&args),
+        "eval" => eval(&args),
+        "serve" => serve(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}; try: info | pretrain | compress | eval | serve");
+            std::process::exit(2);
+        }
+    }?;
+    let unused = args.unused();
+    if !unused.is_empty() {
+        eprintln!("warning: unused flags {unused:?}");
+    }
+    Ok(())
+}
+
+fn info(_args: &Args) -> anyhow::Result<()> {
+    let dir = cskv::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match cskv::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "model: d_model={} layers={} heads={} vocab={} max_seq={} (~{} params)",
+                m.model.d_model,
+                m.model.n_layers,
+                m.model.n_heads,
+                m.model.vocab_size,
+                m.model.max_seq,
+                m.model.n_params()
+            );
+            let mut t = Table::new("executables", &["name", "file", "inputs", "outputs"]);
+            for (name, e) in &m.executables {
+                t.row(&[
+                    name.clone(),
+                    e.file.file_name().unwrap().to_string_lossy().to_string(),
+                    e.inputs.len().to_string(),
+                    e.outputs.len().to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("no artifacts ({e:#}); run `make artifacts`"),
+    }
+    let wpath = cskv::runs_dir().join("tinylm.bin");
+    match ModelWeights::load(&wpath) {
+        Ok(_) => println!("weights: {} (trained)", wpath.display()),
+        Err(_) => println!("weights: {} missing — run `cskv pretrain`", wpath.display()),
+    }
+    Ok(())
+}
+
+fn pretrain(args: &Args) -> anyhow::Result<()> {
+    let steps = args.get_usize("steps", 400);
+    let seed = args.get_u64("seed", 1234);
+    let lr = args.get_f64("lr", 3e-3) as f32;
+    let out = args.get_str("out", cskv::runs_dir().join("tinylm.bin").to_str().unwrap());
+    let rt = Runtime::load_default()?;
+    let mut trainer = Trainer::new(&rt, seed)?;
+    let losses = trainer.train(&TrainConfig {
+        steps,
+        lr,
+        seed,
+        log_every: args.get_usize("log-every", 20),
+    })?;
+    trainer.weights.save(std::path::Path::new(&out))?;
+    // Persist the loss curve for EXPERIMENTS.md.
+    let curve: String = losses
+        .iter()
+        .enumerate()
+        .map(|(i, l)| format!("{i},{l}\n"))
+        .collect();
+    std::fs::write(cskv::runs_dir().join("pretrain_loss.csv"), format!("step,loss\n{curve}"))?;
+    println!(
+        "pretrained {steps} steps: loss {:.4} -> {:.4}; weights -> {out}",
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN)
+    );
+    // Quick self-check: retrieval accuracy with the full cache.
+    let engine = Engine::new(Arc::new(ModelWeights::load(std::path::Path::new(&out))?));
+    let set = EvalSet::build(&engine, Suite::LongEval { ctx: 128 }.sample_set(20, 7));
+    let cfgm = engine.w.cfg.clone();
+    let mut factory = move || -> Box<dyn cskv::kvcache::KvCachePolicy> {
+        Box::new(FullCache::new(cfgm.n_layers, cfgm.d_model))
+    };
+    let r = set.eval(&engine, &mut factory);
+    println!("sanity: LongEval-128 accuracy (full cache) = {:.2}", r.accuracy());
+    Ok(())
+}
+
+fn load_engine(args: &Args) -> anyhow::Result<Engine> {
+    let wpath = args.get_str(
+        "weights",
+        cskv::runs_dir().join("tinylm.bin").to_str().unwrap(),
+    );
+    let w = ModelWeights::load(std::path::Path::new(&wpath))
+        .map_err(|e| anyhow::anyhow!("{e:#}\nhint: run `cskv pretrain` first"))?;
+    Ok(Engine::new(Arc::new(w)))
+}
+
+fn compress(args: &Args) -> anyhow::Result<()> {
+    let engine = load_engine(args)?;
+    let ratio = args.get_f64("ratio", 0.8);
+    let steps = args.get_usize("ft-steps", 200);
+    let init = match args.get_str("init", "asvd").as_str() {
+        "random" => InitMethod::Random,
+        "svd" => InitMethod::Svd,
+        "oracle" => InitMethod::Oracle,
+        _ => InitMethod::asvd_default(),
+    };
+    let n_calib = args.get_usize("calib-docs", 32);
+    let out = args.get_str(
+        "out",
+        cskv::runs_dir()
+            .join(format!("factors_r{:02}.bin", (ratio * 100.0) as u32))
+            .to_str()
+            .unwrap(),
+    );
+    println!("collecting calibration activations ({n_calib} docs)...");
+    let docs = calibration_docs(&CorpusConfig::default(), n_calib, 99);
+    let calib = engine.collect_calibration(&docs, 4096, 1);
+    let plan = KvCompressionPlan::uniform(ratio);
+    println!(
+        "fine-tuning factors: ratio {ratio} (rank {}/{}), init {}, {steps} steps/layer",
+        plan.rank_k(engine.w.cfg.d_model),
+        plan.rank_v(engine.w.cfg.d_model),
+        init.name()
+    );
+    let rep = build_factors(
+        &engine.w,
+        &calib,
+        plan,
+        &FinetuneConfig {
+            init,
+            steps,
+            seed: args.get_u64("seed", 0),
+            ..Default::default()
+        },
+    );
+    println!("final total reconstruction loss (Eq.2): {:.6}", rep.final_total_loss);
+    rep.factors.save(std::path::Path::new(&out))?;
+    println!("factors -> {out} ({})", rep.factors.provenance);
+    Ok(())
+}
+
+fn eval(args: &Args) -> anyhow::Result<()> {
+    let engine = load_engine(args)?;
+    let cfg = engine.w.cfg.clone();
+    let ctx = args.get_usize("ctx", 128);
+    let n = args.get_usize("samples", 25);
+    let seed = args.get_u64("seed", 42);
+    let suite = match args.get_str("suite", "longeval").as_str() {
+        "longbench" => Suite::LongBench { ctx, n_facts: 6 },
+        "lveval" => Suite::LvEval { ctx },
+        _ => Suite::LongEval { ctx },
+    };
+    let set = EvalSet::build(&engine, suite.sample_set(n, seed));
+
+    let policy = args.get_str("policy", "full");
+    let mut factory: Box<dyn FnMut() -> Box<dyn cskv::kvcache::KvCachePolicy>> = match policy.as_str() {
+        "full" => {
+            let c = cfg.clone();
+            Box::new(move || Box::new(FullCache::new(c.n_layers, c.d_model)))
+        }
+        "cskv" => {
+            let fpath = args.get_str(
+                "factors",
+                cskv::runs_dir().join("factors_r80.bin").to_str().unwrap(),
+            );
+            let f = Arc::new(cskv::compress::ModelFactors::load(std::path::Path::new(&fpath))?);
+            let window = args.get_usize("window", 32);
+            let c = cfg.clone();
+            Box::new(move || {
+                Box::new(CskvCache::new(
+                    Arc::clone(&f),
+                    c.d_model,
+                    CskvConfig {
+                        window,
+                        quant: QuantMode::None,
+                    },
+                ))
+            })
+        }
+        other => anyhow::bail!("unknown --policy {other:?} (full|cskv)"),
+    };
+    let r = set.eval(&engine, &mut factory);
+    println!(
+        "{} ctx={ctx} n={n}: policy={} accuracy={:.2} mean_kv={}",
+        args.get_str("suite", "longeval"),
+        r.policy,
+        r.accuracy(),
+        cskv::util::table::bytes(r.mean_kv_bytes as usize)
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let engine = load_engine(args)?;
+    let cfg = engine.w.cfg.clone();
+    let n_req = args.get_usize("requests", 16);
+    let n_new = args.get_usize("n-new", vocab::VALUE_LEN);
+    let budget_kb = args.get_usize("kv-budget-kb", 0);
+    let coord_cfg = CoordinatorConfig {
+        max_batch: args.get_usize("max-batch", 4),
+        kv_budget_bytes: if budget_kb == 0 { None } else { Some(budget_kb * 1024) },
+    };
+    let eng = engine.clone();
+    let coord = Coordinator::start(
+        Box::new(move || {
+            let engine = eng;
+            let factory: cskv::coordinator::server::BackendFactory = Box::new(move || {
+                let c = engine.w.cfg.clone();
+                Ok(Box::new(RustSequenceBackend::new(
+                    engine.clone(),
+                    Box::new(FullCache::new(c.n_layers, c.d_model)),
+                )))
+            });
+            Ok(factory)
+        }),
+        coord_cfg,
+    );
+    let mut rng = Pcg64::new(7);
+    let mut correct = 0usize;
+    let mut rxs = Vec::new();
+    let mut answers = Vec::new();
+    for _ in 0..n_req {
+        let s = tasks::line_retrieval_ctx(args.get_usize("ctx", 128), &mut rng);
+        answers.push(s.answer.clone());
+        rxs.push(coord.submit(s.prompt, n_new));
+    }
+    for (rx, ans) in rxs.into_iter().zip(answers) {
+        let resp = rx.recv()?;
+        if tasks::score_exact(&resp.tokens, &ans) {
+            correct += 1;
+        }
+    }
+    let snap = coord.shutdown();
+    println!("served {n_req} requests (ctx up to {}):", cfg.max_seq);
+    println!("  {}", snap.report());
+    println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
+    Ok(())
+}

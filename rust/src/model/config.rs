@@ -1,0 +1,176 @@
+//! Model architecture configuration.
+
+use crate::util::json::Json;
+
+/// TinyLM hyperparameters. Must stay in sync with
+/// `python/compile/model.py::ModelConfig` — the AOT manifest embeds the
+/// config used at lowering time and [`ModelConfig::validate_against_json`]
+/// checks it at artifact load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+    pub eps: f32,
+}
+
+impl ModelConfig {
+    /// The primary evaluation model (stands in for LongChat-7B-v1.5-32k).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            vocab_size: crate::data::vocab::VOCAB_SIZE,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 512,
+            rope_base: 10000.0,
+            eps: 1e-5,
+        }
+    }
+
+    /// The secondary, wider model (stands in for Mistral-7B-Instruct-v0.2).
+    pub fn wide() -> Self {
+        ModelConfig {
+            d_model: 192,
+            n_heads: 6,
+            d_ff: 768,
+            ..Self::tiny()
+        }
+    }
+
+    /// A minimal config for fast unit tests.
+    pub fn test_small() -> Self {
+        ModelConfig {
+            vocab_size: crate::data::vocab::VOCAB_SIZE,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 128,
+            rope_base: 10000.0,
+            eps: 1e-5,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model   // wq wk wv wo
+            + 2 * self.d_model * self.d_ff                 // w1 w2
+            + 2 * self.d_model; // ln gains
+        self.vocab_size * self.d_model                     // embed
+            + self.n_layers * per_layer
+            + self.d_model                                  // ln_f
+            + self.d_model * self.vocab_size // lm_head
+    }
+
+    /// Exact full-precision KV-cache bytes for `tokens` cached tokens
+    /// (2 tensors × d_model × f32 per layer) — the paper's intro-claim
+    /// accounting, reproduced at scale by `bench_memory`.
+    pub fn kv_bytes_full(&self, tokens: usize) -> usize {
+        2 * self.n_layers * tokens * self.d_model * 4
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d_model % self.n_heads == 0, "d_model % n_heads != 0");
+        anyhow::ensure!(self.d_head() % 2 == 0, "RoPE needs even d_head");
+        anyhow::ensure!(self.vocab_size > 0 && self.n_layers > 0, "degenerate config");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("vocab_size", self.vocab_size.into()),
+            ("d_model", self.d_model.into()),
+            ("n_layers", self.n_layers.into()),
+            ("n_heads", self.n_heads.into()),
+            ("d_ff", self.d_ff.into()),
+            ("max_seq", self.max_seq.into()),
+            ("rope_base", (self.rope_base as f64).into()),
+            ("eps", (self.eps as f64).into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let need = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("config missing field {k:?}"))
+        };
+        let cfg = ModelConfig {
+            vocab_size: need("vocab_size")? as usize,
+            d_model: need("d_model")? as usize,
+            n_layers: need("n_layers")? as usize,
+            n_heads: need("n_heads")? as usize,
+            d_ff: need("d_ff")? as usize,
+            max_seq: need("max_seq")? as usize,
+            rope_base: need("rope_base")? as f32,
+            eps: need("eps")? as f32,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check an AOT manifest's embedded config matches this one.
+    pub fn validate_against_json(&self, j: &Json) -> anyhow::Result<()> {
+        let other = Self::from_json(j)?;
+        anyhow::ensure!(
+            *self == other,
+            "model config mismatch: rust={self:?} manifest={other:?}"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ModelConfig::tiny().validate().unwrap();
+        ModelConfig::wide().validate().unwrap();
+        ModelConfig::test_small().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::tiny();
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        c.validate_against_json(&j).unwrap();
+    }
+
+    #[test]
+    fn mismatch_detected() {
+        let c = ModelConfig::tiny();
+        let mut j = c.to_json();
+        j.set("d_model", 999usize.into());
+        assert!(c.validate_against_json(&j).is_err());
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = ModelConfig::tiny();
+        let p = c.n_params();
+        // ~460k params for the tiny preset
+        assert!(p > 300_000 && p < 700_000, "params={p}");
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let c = ModelConfig::tiny();
+        // 2 layers × 2 tensors × 128 dims × 4 bytes = 2 KiB per token
+        assert_eq!(c.kv_bytes_full(1), 2 * 2 * 128 * 4);
+        assert_eq!(c.kv_bytes_full(512), 512 * 2 * 2 * 128 * 4);
+    }
+}

@@ -1,0 +1,411 @@
+//! Pure-Rust reference engine.
+//!
+//! Runs TinyLM with **exact prefill** and **policy-driven decode**: every
+//! KV-cache method (CSKV bi-branch, StreamingLLM, H2O, ASVD, full) plugs in
+//! through [`KvCachePolicy`]. The engine is used by the quality grid
+//! (Tables 1–5), calibration capture for ASVD/fine-tuning, and as the
+//! numerical oracle for the PJRT artifacts (cross-validated in
+//! `rust/tests/integration_runtime.rs`).
+//!
+//! Architecture (must mirror `python/compile/model.py` exactly):
+//! pre-norm transformer, RMSNorm, rotate-half RoPE applied to Q/K per head,
+//! causal MHA, SiLU MLP, untied LM head.
+
+use std::sync::Arc;
+
+use crate::kvcache::KvCachePolicy;
+use crate::tensor::matmul::{matvec_t, dot};
+use crate::tensor::ops;
+use crate::tensor::Mat;
+
+use super::weights::ModelWeights;
+
+/// Everything captured during a prefill pass.
+pub struct PrefillRecord {
+    /// Per layer: attention inputs (`rmsnorm(x)`), `[T, d_model]` — the
+    /// `X` of the paper's reconstruction loss.
+    pub xnorms: Vec<Mat>,
+    /// Per layer: pre-RoPE keys `[T, d_model]`.
+    pub ks: Vec<Mat>,
+    /// Per layer: values `[T, d_model]`.
+    pub vs: Vec<Mat>,
+    /// Per layer: aggregated attention mass per key position (H2O seed).
+    pub attn_mass: Vec<Vec<f32>>,
+    /// Full logits `[T, vocab]`.
+    pub logits: Mat,
+}
+
+/// Timing + memory statistics for one generation.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub decode_steps: usize,
+    pub kv_bytes_final: usize,
+}
+
+/// The reference engine. Cheap to clone (weights are shared).
+#[derive(Clone)]
+pub struct Engine {
+    pub w: Arc<ModelWeights>,
+}
+
+impl Engine {
+    pub fn new(w: Arc<ModelWeights>) -> Self {
+        Engine { w }
+    }
+
+    /// Exact prefill over `tokens`, feeding `policy` (if any) per layer.
+    /// Policies may substitute lossy K/V for the attention itself (ASVD).
+    pub fn prefill(&self, tokens: &[usize], mut policy: Option<&mut dyn KvCachePolicy>) -> PrefillRecord {
+        let cfg = &self.w.cfg;
+        let t = tokens.len();
+        assert!(t > 0, "empty prompt");
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // Embedding lookup.
+        let mut x = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.w.embed.row(tok));
+        }
+
+        let mut xnorms = Vec::with_capacity(cfg.n_layers);
+        let mut ks = Vec::with_capacity(cfg.n_layers);
+        let mut vs = Vec::with_capacity(cfg.n_layers);
+        let mut masses = Vec::with_capacity(cfg.n_layers);
+
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            let xnorm = ops::rmsnorm_rows(&x, lw.ln1.row(0), cfg.eps);
+            let q = xnorm.matmul(&lw.wq);
+            let k = xnorm.matmul(&lw.wk); // pre-RoPE
+            let v = xnorm.matmul(&lw.wv);
+
+            // Hand the exact streams to the policy; it may substitute.
+            let replacement = policy
+                .as_deref_mut()
+                .and_then(|p| p.ingest_prefill(li, &xnorm, &k, &v));
+            let (k_use, v_use) = match replacement {
+                Some((rk, rv)) => (rk, rv),
+                None => (k.clone(), v.clone()),
+            };
+
+            // RoPE at absolute positions 0..t.
+            let mut q_r = q;
+            let mut k_r = k_use;
+            ops::rope_rows(&mut q_r, nh, 0, cfg.rope_base);
+            ops::rope_rows(&mut k_r, nh, 0, cfg.rope_base);
+
+            // Causal MHA, accumulating attention mass for H2O.
+            let mut attn_out = Mat::zeros(t, d);
+            let mut mass = vec![0.0f32; t];
+            for h in 0..nh {
+                let (lo, hi) = (h * dh, (h + 1) * dh);
+                let qh = q_r.cols_slice(lo, hi);
+                let kh = k_r.cols_slice(lo, hi);
+                let vh = v_use.cols_slice(lo, hi);
+                let mut scores = qh.matmul_nt(&kh).scale(scale);
+                ops::softmax_causal(&mut scores, 0);
+                for i in 0..t {
+                    for (j, &p) in scores.row(i).iter().enumerate() {
+                        mass[j] += p;
+                    }
+                }
+                let oh = scores.matmul(&vh);
+                for i in 0..t {
+                    attn_out.row_mut(i)[lo..hi].copy_from_slice(oh.row(i));
+                }
+            }
+            if let Some(p) = policy.as_deref_mut() {
+                p.observe_prefill_attn(li, &mass);
+            }
+            masses.push(mass);
+            x.add_assign(&attn_out.matmul(&lw.wo));
+
+            // MLP block.
+            let xn2 = ops::rmsnorm_rows(&x, lw.ln2.row(0), cfg.eps);
+            let mut h1 = xn2.matmul(&lw.w1);
+            ops::silu_inplace(&mut h1);
+            x.add_assign(&h1.matmul(&lw.w2));
+
+            xnorms.push(xnorm);
+            ks.push(k);
+            vs.push(v);
+        }
+
+        let xf = ops::rmsnorm_rows(&x, self.w.ln_f.row(0), cfg.eps);
+        let logits = xf.matmul(&self.w.lm_head);
+        PrefillRecord {
+            xnorms,
+            ks,
+            vs,
+            attn_mass: masses,
+            logits,
+        }
+    }
+
+    /// One decode step for the token at absolute position `abs_pos`
+    /// (0-based; the prompt occupied `0..abs_pos`). Returns the logits row.
+    pub fn decode_step(
+        &self,
+        policy: &mut dyn KvCachePolicy,
+        token: usize,
+        abs_pos: usize,
+    ) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut x = self.w.embed.row(token).to_vec();
+        let mut xnorm = vec![0.0f32; d];
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            ops::rmsnorm(&x, lw.ln1.row(0), cfg.eps, &mut xnorm);
+            let mut q = matvec_t(&lw.wq, &xnorm);
+            let k = matvec_t(&lw.wk, &xnorm); // pre-RoPE
+            let v = matvec_t(&lw.wv, &xnorm);
+
+            policy.append(li, &xnorm, &k, &v);
+            let view = policy.materialize(li);
+            debug_assert_eq!(view.len(), policy.len(li).min(view.len()));
+
+            // RoPE the query at the policy's coordinate system.
+            let qpos = policy.query_rope_pos(li, abs_pos);
+            for h in 0..nh {
+                ops::rope_rotate(&mut q[h * dh..(h + 1) * dh], qpos, cfg.rope_base);
+            }
+            // RoPE keys at their per-row positions.
+            let n = view.len();
+            let mut k_r = view.k.clone();
+            for (i, &p) in view.rope_pos.iter().enumerate() {
+                let row = k_r.row_mut(i);
+                for h in 0..nh {
+                    ops::rope_rotate(&mut row[h * dh..(h + 1) * dh], p, cfg.rope_base);
+                }
+            }
+
+            // Per-head attention; aggregate probs across heads for H2O.
+            let mut attn = vec![0.0f32; d];
+            let mut agg_probs = vec![0.0f32; n];
+            for h in 0..nh {
+                let (lo, hi) = (h * dh, (h + 1) * dh);
+                let qh = &q[lo..hi];
+                let mut scores: Vec<f32> = (0..n)
+                    .map(|i| dot(qh, &k_r.row(i)[lo..hi]) * scale)
+                    .collect();
+                // softmax
+                let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut sum = 0.0;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                for (i, s) in scores.iter_mut().enumerate() {
+                    *s *= inv;
+                    agg_probs[i] += *s;
+                    let vrow = &view.v.row(i)[lo..hi];
+                    let a = &mut attn[lo..hi];
+                    for (av, &vv) in a.iter_mut().zip(vrow) {
+                        *av += *s * vv;
+                    }
+                }
+            }
+            policy.observe_decode_attn(li, &view.abs_pos, &agg_probs);
+
+            // Output projection + residual.
+            let o = matvec_t(&lw.wo, &attn);
+            for (xi, oi) in x.iter_mut().zip(&o) {
+                *xi += oi;
+            }
+            // MLP.
+            let mut xn2 = vec![0.0f32; d];
+            ops::rmsnorm(&x, lw.ln2.row(0), cfg.eps, &mut xn2);
+            let mut h1 = matvec_t(&lw.w1, &xn2);
+            for hv in h1.iter_mut() {
+                *hv = ops::silu(*hv);
+            }
+            let m = matvec_t(&lw.w2, &h1);
+            for (xi, mi) in x.iter_mut().zip(&m) {
+                *xi += mi;
+            }
+        }
+        let mut xf = vec![0.0f32; d];
+        ops::rmsnorm(&x, self.w.ln_f.row(0), cfg.eps, &mut xf);
+        matvec_t(&self.w.lm_head, &xf)
+    }
+
+    /// Greedy generation: exact prefill + policy decode. Returns generated
+    /// token ids (length `n_new`) and stats.
+    pub fn generate(
+        &self,
+        prompt: &[usize],
+        n_new: usize,
+        policy: &mut dyn KvCachePolicy,
+    ) -> (Vec<usize>, GenStats) {
+        let t0 = std::time::Instant::now();
+        let rec = self.prefill(prompt, Some(policy));
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut out = Vec::with_capacity(n_new);
+        let mut next = ops::argmax(rec.logits.row(prompt.len() - 1));
+        let t1 = std::time::Instant::now();
+        for i in 0..n_new {
+            out.push(next);
+            if i + 1 == n_new {
+                break;
+            }
+            let logits = self.decode_step(policy, next, prompt.len() + i);
+            next = ops::argmax(&logits);
+        }
+        let stats = GenStats {
+            prefill_s,
+            decode_s: t1.elapsed().as_secs_f64(),
+            decode_steps: n_new.saturating_sub(1),
+            kv_bytes_final: policy.kv_bytes(),
+        };
+        (out, stats)
+    }
+
+    /// Mean next-token cross-entropy over a token sequence (perplexity =
+    /// exp of this), using exact attention.
+    pub fn lm_loss(&self, tokens: &[usize]) -> f32 {
+        assert!(tokens.len() >= 2);
+        let rec = self.prefill(tokens, None);
+        let targets: Vec<usize> = tokens[1..].to_vec();
+        let logits = rec.logits.rows_slice(0, tokens.len() - 1);
+        ops::cross_entropy_rows(&logits, &targets)
+    }
+
+    /// Capture calibration activations: per-layer `xnorm` matrices pooled
+    /// over `docs`, row-subsampled to at most `max_rows` per layer.
+    pub fn collect_calibration(
+        &self,
+        docs: &[Vec<usize>],
+        max_rows: usize,
+        seed: u64,
+    ) -> Vec<Mat> {
+        let cfg = &self.w.cfg;
+        let mut pools: Vec<Mat> = (0..cfg.n_layers)
+            .map(|_| Mat::zeros(0, cfg.d_model))
+            .collect();
+        for doc in docs {
+            let rec = self.prefill(doc, None);
+            for (li, xn) in rec.xnorms.iter().enumerate() {
+                pools[li] = pools[li].vcat(xn);
+            }
+        }
+        let mut rng = crate::util::prng::Pcg64::new(seed);
+        pools
+            .into_iter()
+            .map(|p| {
+                if p.rows <= max_rows {
+                    p
+                } else {
+                    let idx = rng.sample_indices(p.rows, max_rows);
+                    let mut out = Mat::zeros(max_rows, p.cols);
+                    for (oi, &src) in idx.iter().enumerate() {
+                        out.row_mut(oi).copy_from_slice(p.row(src));
+                    }
+                    out
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::FullCache;
+    use crate::model::config::ModelConfig;
+
+    fn engine() -> Engine {
+        Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), 42)))
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let e = engine();
+        let rec = e.prefill(&[1, 5, 9, 3], None);
+        let cfg = &e.w.cfg;
+        assert_eq!(rec.logits.rows, 4);
+        assert_eq!(rec.logits.cols, cfg.vocab_size);
+        assert_eq!(rec.xnorms.len(), cfg.n_layers);
+        assert_eq!(rec.ks[0].rows, 4);
+        assert_eq!(rec.ks[0].cols, cfg.d_model);
+    }
+
+    /// THE core equivalence: decoding token-by-token with a full cache must
+    /// produce the same logits as one exact prefill over the whole
+    /// sequence. This validates the entire decode path (RoPE positions,
+    /// cache ordering, masking) against the prefill path.
+    #[test]
+    fn decode_with_full_cache_matches_prefill() {
+        let e = engine();
+        let cfg = &e.w.cfg;
+        let tokens = [1usize, 17, 30, 8, 99, 64, 2, 41];
+        let full = e.prefill(&tokens, None);
+
+        // Prefill only the first 3 tokens, then decode the rest.
+        let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let pre = e.prefill(&tokens[..3], Some(&mut cache));
+        for r in 0..3 {
+            for c in 0..cfg.vocab_size {
+                assert!(
+                    (pre.logits.at(r, c) - full.logits.at(r, c)).abs() < 1e-4,
+                    "prefill prefix logits must match"
+                );
+            }
+        }
+        for (i, &tok) in tokens[3..].iter().enumerate() {
+            let abs = 3 + i;
+            let logits = e.decode_step(&mut cache, tok, abs);
+            let want = full.logits.row(abs);
+            let max_diff = logits
+                .iter()
+                .zip(want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-3, "step {abs}: max diff {max_diff}");
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_reports_stats() {
+        let e = engine();
+        let prompt = [1usize, 5, 20, 31, 7];
+        let cfg = &e.w.cfg;
+        let mut c1 = FullCache::new(cfg.n_layers, cfg.d_model);
+        let mut c2 = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (g1, s1) = e.generate(&prompt, 6, &mut c1);
+        let (g2, _) = e.generate(&prompt, 6, &mut c2);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.len(), 6);
+        assert!(s1.kv_bytes_final > 0);
+        // 5 prompt + 5 decoded appends (last token is returned, not decoded)
+        assert_eq!(c1.len(0), prompt.len() + 5);
+    }
+
+    #[test]
+    fn lm_loss_in_sane_range() {
+        let e = engine();
+        let tokens: Vec<usize> = (0..40).map(|i| (i * 13 + 5) % 256).collect();
+        let loss = e.lm_loss(&tokens);
+        // Untrained model ⇒ near-uniform ⇒ ln(256) ≈ 5.55
+        assert!((4.5..6.5).contains(&loss), "loss={loss}");
+    }
+
+    #[test]
+    fn calibration_capture_shapes_and_cap() {
+        let e = engine();
+        let docs = vec![vec![1, 2, 3, 4, 5, 6], vec![7, 8, 9, 10]];
+        let pools = e.collect_calibration(&docs, 8, 1);
+        assert_eq!(pools.len(), e.w.cfg.n_layers);
+        for p in &pools {
+            assert_eq!(p.rows, 8); // 10 rows available, capped at 8
+            assert_eq!(p.cols, e.w.cfg.d_model);
+        }
+        let pools2 = e.collect_calibration(&docs, 100, 1);
+        assert_eq!(pools2[0].rows, 10); // no cap
+    }
+}

@@ -1,0 +1,19 @@
+//! TinyLM — the transformer whose KV cache CSKV compresses.
+//!
+//! * [`config`] — architecture hyperparameters (+ the two presets standing
+//!   in for the paper's LongChat-7B and Mistral-7B).
+//! * [`weights`] — weight container, initialization, binary save/load, and
+//!   the flat tensor ordering shared with the AOT (JAX) side.
+//! * [`engine`] — pure-Rust reference engine: exact prefill, policy-driven
+//!   decode, calibration activation capture. The engine is the workhorse
+//!   for the quality grid (Tables 1–5); the PJRT path (see
+//!   [`crate::runtime`]) executes the same computation from AOT artifacts
+//!   and is cross-validated against this engine.
+
+pub mod config;
+pub mod engine;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use engine::Engine;
+pub use weights::ModelWeights;

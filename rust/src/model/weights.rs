@@ -1,0 +1,223 @@
+//! Weight container, initialization, and binary serialization.
+//!
+//! The flat tensor ordering ([`ModelWeights::flat_order`]) is the contract
+//! between this crate and the AOT (JAX) side: `python/compile/model.py`
+//! flattens its parameter pytree in the same order, so PJRT executables can
+//! take/return weights as positional arguments.
+
+use crate::tensor::Mat;
+use crate::util::prng::Pcg64;
+
+use super::config::ModelConfig;
+
+/// Per-layer weights. Projections are stored as `[in, out]` so activations
+/// multiply on the left (`x · W`), matching the JAX model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWeights {
+    /// RMSNorm gain before attention, `[1, d_model]`.
+    pub ln1: Mat,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    /// RMSNorm gain before the MLP, `[1, d_model]`.
+    pub ln2: Mat,
+    pub w1: Mat,
+    pub w2: Mat,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    /// Token embedding `[vocab, d_model]`.
+    pub embed: Mat,
+    pub layers: Vec<LayerWeights>,
+    /// Final RMSNorm gain `[1, d_model]`.
+    pub ln_f: Mat,
+    /// Output head `[d_model, vocab]`.
+    pub lm_head: Mat,
+}
+
+const MAGIC: &[u8; 8] = b"CSKVWTS1";
+
+impl ModelWeights {
+    /// GPT-style initialization: N(0, 0.02) embeddings/projections, output
+    /// projections scaled down by depth, unit norm gains.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        cfg.validate().expect("invalid config");
+        let mut rng = Pcg64::new(seed);
+        let d = cfg.d_model;
+        let std = 0.02f32;
+        let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let ones = Mat::from_vec(1, d, vec![1.0; d]);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1: ones.clone(),
+                wq: Mat::randn(d, d, std, &mut rng),
+                wk: Mat::randn(d, d, std, &mut rng),
+                wv: Mat::randn(d, d, std, &mut rng),
+                wo: Mat::randn(d, d, out_std, &mut rng),
+                ln2: ones.clone(),
+                w1: Mat::randn(d, cfg.d_ff, std, &mut rng),
+                w2: Mat::randn(cfg.d_ff, d, out_std, &mut rng),
+            })
+            .collect();
+        ModelWeights {
+            cfg: cfg.clone(),
+            embed: Mat::randn(cfg.vocab_size, d, std, &mut rng),
+            layers,
+            ln_f: ones.clone(),
+            lm_head: Mat::randn(d, cfg.vocab_size, std, &mut rng),
+        }
+    }
+
+    /// Names + references in the flat order shared with the JAX side.
+    pub fn flat_order(&self) -> Vec<(String, &Mat)> {
+        let mut out: Vec<(String, &Mat)> = vec![("embed".into(), &self.embed)];
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layers.{i}.ln1"), &l.ln1));
+            out.push((format!("layers.{i}.wq"), &l.wq));
+            out.push((format!("layers.{i}.wk"), &l.wk));
+            out.push((format!("layers.{i}.wv"), &l.wv));
+            out.push((format!("layers.{i}.wo"), &l.wo));
+            out.push((format!("layers.{i}.ln2"), &l.ln2));
+            out.push((format!("layers.{i}.w1"), &l.w1));
+            out.push((format!("layers.{i}.w2"), &l.w2));
+        }
+        out.push(("ln_f".into(), &self.ln_f));
+        out.push(("lm_head".into(), &self.lm_head));
+        out
+    }
+
+    /// Mutable references in the same flat order (for the PJRT trainer to
+    /// write updated parameters back).
+    pub fn flat_order_mut(&mut self) -> Vec<&mut Mat> {
+        let mut out: Vec<&mut Mat> = vec![&mut self.embed];
+        for l in self.layers.iter_mut() {
+            out.push(&mut l.ln1);
+            out.push(&mut l.wq);
+            out.push(&mut l.wk);
+            out.push(&mut l.wv);
+            out.push(&mut l.wo);
+            out.push(&mut l.ln2);
+            out.push(&mut l.w1);
+            out.push(&mut l.w2);
+        }
+        out.push(&mut self.ln_f);
+        out.push(&mut self.lm_head);
+        out
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        3 + 8 * self.layers.len()
+    }
+
+    // ----- serialization ----------------------------------------------------
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        let cfg_json = self.cfg.to_json().to_string_compact();
+        buf.extend_from_slice(&(cfg_json.len() as u64).to_le_bytes());
+        buf.extend_from_slice(cfg_json.as_bytes());
+        for (_, m) in self.flat_order() {
+            m.write_to(&mut buf);
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading weights {}: {e}", path.display()))?;
+        anyhow::ensure!(buf.len() > 16 && &buf[..8] == MAGIC, "bad weights file magic");
+        let mut pos = 8;
+        let jlen = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        let cfg_json = std::str::from_utf8(&buf[pos..pos + jlen])?;
+        pos += jlen;
+        let cfg = ModelConfig::from_json(
+            &crate::util::json::Json::parse(cfg_json)
+                .map_err(|e| anyhow::anyhow!("weights config: {e:?}"))?,
+        )?;
+        let mut w = ModelWeights::init(&cfg, 0);
+        for m in w.flat_order_mut() {
+            *m = Mat::read_from(&buf, &mut pos)?;
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in weights file");
+        w.validate_shapes()?;
+        Ok(w)
+    }
+
+    pub fn validate_shapes(&self) -> anyhow::Result<()> {
+        let c = &self.cfg;
+        anyhow::ensure!(self.embed.rows == c.vocab_size && self.embed.cols == c.d_model);
+        anyhow::ensure!(self.layers.len() == c.n_layers);
+        for l in &self.layers {
+            anyhow::ensure!(l.wq.rows == c.d_model && l.wq.cols == c.d_model);
+            anyhow::ensure!(l.wk.rows == c.d_model && l.wk.cols == c.d_model);
+            anyhow::ensure!(l.wv.rows == c.d_model && l.wv.cols == c.d_model);
+            anyhow::ensure!(l.wo.rows == c.d_model && l.wo.cols == c.d_model);
+            anyhow::ensure!(l.w1.rows == c.d_model && l.w1.cols == c.d_ff);
+            anyhow::ensure!(l.w2.rows == c.d_ff && l.w2.cols == c.d_model);
+            anyhow::ensure!(l.ln1.cols == c.d_model && l.ln2.cols == c.d_model);
+        }
+        anyhow::ensure!(self.lm_head.rows == c.d_model && self.lm_head.cols == c.vocab_size);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_validate() {
+        let w = ModelWeights::init(&ModelConfig::test_small(), 1);
+        w.validate_shapes().unwrap();
+        assert_eq!(w.n_tensors(), w.flat_order().len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("cskv_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let w = ModelWeights::init(&ModelConfig::test_small(), 7);
+        w.save(&path).unwrap();
+        let w2 = ModelWeights::load(&path).unwrap();
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn load_rejects_corrupt() {
+        let dir = std::env::temp_dir().join("cskv_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a weights file").unwrap();
+        assert!(ModelWeights::load(&path).is_err());
+    }
+
+    #[test]
+    fn flat_order_is_stable_contract() {
+        // The AOT side relies on this exact ordering — changing it silently
+        // breaks artifact interchange, so pin it.
+        let w = ModelWeights::init(&ModelConfig::test_small(), 1);
+        let names: Vec<String> = w.flat_order().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "layers.0.ln1");
+        assert_eq!(names[8], "layers.0.w2");
+        assert_eq!(names[names.len() - 2], "ln_f");
+        assert_eq!(names[names.len() - 1], "lm_head");
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let a = ModelWeights::init(&ModelConfig::test_small(), 3);
+        let b = ModelWeights::init(&ModelConfig::test_small(), 3);
+        assert_eq!(a, b);
+        let c = ModelWeights::init(&ModelConfig::test_small(), 4);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,308 @@
+//! PJRT client wrapper: compile + execute AOT artifacts with host values.
+//!
+//! Executables are compiled lazily on first use and cached; host values are
+//! shape-checked against the manifest before every call so contract drift
+//! between `aot.py` and the Rust side fails loudly rather than numerically.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tensor::Mat;
+
+use super::manifest::{Dtype, Manifest, TensorSpec};
+
+/// A host-side tensor value (what crosses the PJRT boundary).
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn from_mat(m: &Mat) -> Value {
+        Value::F32 {
+            shape: vec![m.rows, m.cols],
+            data: m.data.clone(),
+        }
+    }
+
+    /// Stack matrices into `[n, rows, cols]`.
+    pub fn from_mats(ms: &[&Mat]) -> Value {
+        assert!(!ms.is_empty());
+        let (r, c) = (ms[0].rows, ms[0].cols);
+        let mut data = Vec::with_capacity(ms.len() * r * c);
+        for m in ms {
+            assert_eq!((m.rows, m.cols), (r, c), "ragged stack");
+            data.extend_from_slice(&m.data);
+        }
+        Value::F32 {
+            shape: vec![ms.len(), r, c],
+            data,
+        }
+    }
+
+    pub fn f32_vec(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::F32 { shape, data }
+    }
+
+    pub fn i32_vec(shape: Vec<usize>, data: Vec<i32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32 { .. } => Dtype::F32,
+            Value::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("expected i32 value"),
+        }
+    }
+
+    /// Interpret as a 2-D matrix (higher ranks must pass explicit dims).
+    pub fn to_mat(&self) -> anyhow::Result<Mat> {
+        let data = self.as_f32()?.to_vec();
+        let shape = self.shape();
+        match shape.len() {
+            2 => Ok(Mat::from_vec(shape[0], shape[1], data)),
+            1 => Ok(Mat::from_vec(1, shape[0], data)),
+            _ => anyhow::bail!("to_mat on rank-{} value", shape.len()),
+        }
+    }
+
+    /// Slice index `i` of the leading axis of a rank-3 value as a matrix.
+    pub fn mat_at(&self, i: usize) -> anyhow::Result<Mat> {
+        let shape = self.shape();
+        anyhow::ensure!(shape.len() == 3, "mat_at needs rank-3, got {shape:?}");
+        let (n, r, c) = (shape[0], shape[1], shape[2]);
+        anyhow::ensure!(i < n, "index {i} out of {n}");
+        let data = self.as_f32()?[i * r * c..(i + 1) * r * c].to_vec();
+        Ok(Mat::from_vec(r, c, data))
+    }
+
+    fn check(&self, spec: &TensorSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dtype() == spec.dtype,
+            "{}: dtype mismatch (got {:?}, want {:?})",
+            spec.name,
+            self.dtype(),
+            spec.dtype
+        );
+        anyhow::ensure!(
+            self.shape() == &spec.shape[..],
+            "{}: shape mismatch (got {:?}, want {:?})",
+            spec.name,
+            self.shape(),
+            spec.shape
+        );
+        Ok(())
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32 { data, .. } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            Value::I32 { data, .. } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Value> {
+        let v = match spec.dtype {
+            Dtype::F32 => Value::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            Dtype::I32 => Value::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+        };
+        let n = match &v {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        };
+        anyhow::ensure!(
+            n == spec.elements(),
+            "{}: runtime returned {n} elements, manifest says {}",
+            spec.name,
+            spec.elements()
+        );
+        Ok(v)
+    }
+}
+
+/// Lazily-compiling executor over the AOT manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "runtime up: platform={} artifacts={} executables={}",
+            client.platform_name(),
+            dir.display(),
+            manifest.executables.len()
+        );
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Convenience: load from the default artifacts dir.
+    pub fn load_default() -> anyhow::Result<Self> {
+        Self::load(&crate::artifacts_dir())
+    }
+
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::log_info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with ordered inputs, returning ordered outputs.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let spec = self.manifest.get(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: got {} inputs, want {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        for (v, s) in inputs.iter().zip(&spec.inputs) {
+            v.check(s)?;
+        }
+        self.ensure_compiled(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: got {} outputs, want {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| Value::from_literal(lit, s))
+            .collect()
+    }
+
+    /// Pre-compile a set of executables (the serving path does this at
+    /// startup so first-request latency is clean).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_roundtrip_shapes() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = Value::from_mat(&m);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.to_mat().unwrap(), m);
+        let stacked = Value::from_mats(&[&m, &m]);
+        assert_eq!(stacked.shape(), &[2, 2, 3]);
+        assert_eq!(stacked.mat_at(1).unwrap(), m);
+    }
+
+    #[test]
+    fn value_check_catches_mismatch() {
+        let spec = TensorSpec {
+            name: "t".into(),
+            shape: vec![2, 2],
+            dtype: Dtype::F32,
+        };
+        assert!(Value::f32_vec(vec![2, 2], vec![0.0; 4]).check(&spec).is_ok());
+        assert!(Value::f32_vec(vec![4], vec![0.0; 4]).check(&spec).is_err());
+        assert!(Value::i32_vec(vec![2, 2], vec![0; 4]).check(&spec).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        let s = Value::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+        assert!(s.as_f32().is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed view of the AOT manifest (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One input/output tensor declaration.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tensor {name}: missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = Dtype::parse(j.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT executable: HLO file + ordered I/O contract.
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub static_params: BTreeMap<String, f64>,
+}
+
+impl ExecutableSpec {
+    pub fn static_usize(&self, key: &str) -> Option<usize> {
+        self.static_params.get(key).map(|v| *v as usize)
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(Json::as_str) == Some("hlo-text-v1"),
+            "unknown manifest format"
+        );
+        let model = ModelConfig::from_json(
+            j.get("model").ok_or_else(|| anyhow::anyhow!("manifest missing model"))?,
+        )?;
+        let mut executables = BTreeMap::new();
+        let exes = j
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing executables"))?;
+        for (name, e) in exes {
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?,
+            );
+            anyhow::ensure!(file.exists(), "{name}: artifact {} missing", file.display());
+            let parse_list = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut static_params = BTreeMap::new();
+            if let Some(s) = e.get("static").and_then(Json::as_obj) {
+                for (k, v) in s {
+                    if let Some(n) = v.as_f64() {
+                        static_params.insert(k.clone(), n);
+                    }
+                }
+            }
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                    static_params,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            executables,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable {name:?} not in manifest"))
+    }
+
+    /// Names of exported CSKV decode variants with their ranks.
+    pub fn cskv_ranks(&self) -> Vec<(String, usize)> {
+        self.executables
+            .iter()
+            .filter(|(n, _)| n.starts_with("decode_cskv"))
+            .filter_map(|(n, e)| e.static_usize("rank").map(|r| (n.clone(), r)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule fake").unwrap();
+        let cfg = ModelConfig::tiny().to_json().to_string_compact();
+        let man = format!(
+            r#"{{"format":"hlo-text-v1","model":{cfg},"executables":{{
+                "x":{{"file":"x.hlo.txt",
+                      "inputs":[{{"name":"a","shape":[2,3],"dtype":"f32"}},
+                                 {{"name":"n","shape":[],"dtype":"i32"}}],
+                      "outputs":[{{"name":"o","shape":[2],"dtype":"f32"}}],
+                      "static":{{"rank":26}}}}}}}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), man).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("cskv_test_manifest");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, 128);
+        let e = m.get("x").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.inputs[1].elements(), 1);
+        assert_eq!(e.static_usize("rank"), Some(26));
+        assert_eq!(e.input_index("n"), Some(1));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = std::env::temp_dir().join("cskv_test_manifest2");
+        write_fake_manifest(&dir);
+        std::fs::remove_file(dir.join("x.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (the interchange
+//!   contract written by `python/compile/aot.py`).
+//! * [`client`] — PJRT CPU client wrapper: HLO text → compile → execute,
+//!   with host-value marshalling and shape checking against the manifest.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: HLO **text** is the
+//! interchange format (xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos), lowered with `return_tuple=True` and unpacked with
+//! `Literal::to_tuple`.
+
+pub mod client;
+pub mod manifest;
+pub mod trainer;
+
+pub use client::{Runtime, Value};
+pub use manifest::{Dtype, ExecutableSpec, Manifest, TensorSpec};

@@ -1,0 +1,225 @@
+//! Householder QR and least-squares solves.
+//!
+//! Used by the "oracle" closed-form initializer (an extension beyond the
+//! paper — see DESIGN.md §6): the rank-r minimizer of ‖X·W − X·A·B‖_F is
+//! obtained from QR of X followed by an SVD of R·W in the X-metric.
+
+use super::svd::svd;
+use super::Mat;
+
+/// Thin QR decomposition `A = Q·R` with `Q: m×n` (orthonormal columns),
+/// `R: n×n` upper triangular. Requires `m ≥ n`.
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr requires m >= n, got {m}x{n}");
+    // Householder vectors stored in-place in `r`, accumulated into q later.
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm += x * x;
+        }
+        let norm = norm.sqrt() as f32;
+        let mut v = vec![0.0f32; m - k];
+        if norm <= 1e-20 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r.at(k, k) >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r.at(i, k);
+        }
+        v[0] -= alpha;
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-30 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing submatrix.
+        for j in k..n {
+            let mut dotv = 0.0f32;
+            for i in k..m {
+                dotv += v[i - k] * r.at(i, j);
+            }
+            let f = 2.0 * dotv / vnorm2;
+            for i in k..m {
+                *r.at_mut(i, j) -= f * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Extract R (upper n×n block).
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *rr.at_mut(i, j) = r.at(i, j);
+        }
+    }
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        *q.at_mut(j, j) = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-30 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dotv = 0.0f32;
+            for i in k..m {
+                dotv += v[i - k] * q.at(i, j);
+            }
+            let f = 2.0 * dotv / vnorm2;
+            for i in k..m {
+                *q.at_mut(i, j) -= f * v[i - k];
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Solve the upper-triangular system `R·x = b` (single RHS in-place).
+pub fn solve_upper(r: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= r.at(i, j) * x[j];
+        }
+        let d = r.at(i, i);
+        x[i] = if d.abs() > 1e-20 { s / d } else { 0.0 };
+    }
+    x
+}
+
+/// Least squares `argmin_W ‖A·W − B‖_F` for matrix RHS via QR.
+pub fn lstsq(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (q, r) = qr(a);
+    let qtb = q.matmul_tn(b); // n×k
+    let mut w = Mat::zeros(a.cols, b.cols);
+    for j in 0..b.cols {
+        let col: Vec<f32> = (0..a.cols).map(|i| qtb.at(i, j)).collect();
+        let x = solve_upper(&r, &col);
+        for i in 0..a.cols {
+            *w.at_mut(i, j) = x[i];
+        }
+    }
+    w
+}
+
+/// Closed-form rank-r minimizer of ‖X·W − X·A·B‖_F (the "oracle" init).
+///
+/// With X = Q·R, the problem becomes the best rank-r approximation of
+/// R·W in Frobenius norm: SVD(R·W) = U Σ Vᵀ, then
+/// `A = R⁻¹·U_r·Σ_r`, `B = V_rᵀ`.
+pub fn oracle_lowrank(x: &Mat, w: &Mat, r: usize) -> (Mat, Mat) {
+    assert_eq!(x.cols, w.rows);
+    let (_, rr) = qr(x);
+    let rw = rr.matmul(w);
+    let d = svd(&rw);
+    let rank = r.min(d.s.len());
+    // U_r Σ_r
+    let mut us = d.u.cols_slice(0, rank);
+    for (j, &sv) in d.s[..rank].iter().enumerate() {
+        us.scale_col(j, sv);
+    }
+    // A = R⁻¹ (U_r Σ_r): solve R·A = U_r Σ_r column by column.
+    let mut a = Mat::zeros(w.rows, rank);
+    for j in 0..rank {
+        let col: Vec<f32> = (0..w.rows).map(|i| us.at(i, j)).collect();
+        let s = solve_upper(&rr, &col);
+        for i in 0..w.rows {
+            *a.at_mut(i, j) = s[i];
+        }
+    }
+    let b = d.v.cols_slice(0, rank).t();
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        for (m, n) in [(5, 5), (12, 4), (30, 17)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr(&a);
+            assert!(q.matmul(&r).allclose(&a, 1e-3), "({m},{n})");
+            // Q orthonormal
+            let g = q.matmul_tn(&q);
+            assert!(g.allclose(&Mat::eye(n), 1e-3));
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r.at(i, j).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_upper_exact() {
+        let r = Mat::from_vec(3, 3, vec![2.0, 1.0, 0.0, 0.0, 3.0, -1.0, 0.0, 0.0, 4.0]);
+        let x_true = [1.0f32, -2.0, 0.5];
+        let b: Vec<f32> = (0..3)
+            .map(|i| (0..3).map(|j| r.at(i, j) * x_true[j]).sum())
+            .collect();
+        let x = solve_upper(&r, &b);
+        for (a, b) in x.iter().zip(x_true.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(40, 6, 1.0, &mut rng);
+        let w_true = Mat::randn(6, 3, 1.0, &mut rng);
+        let b = a.matmul(&w_true);
+        let w = lstsq(&a, &b);
+        assert!(w.allclose(&w_true, 1e-3));
+    }
+
+    #[test]
+    fn oracle_beats_plain_svd_under_x_metric() {
+        // When X has strongly anisotropic columns, the oracle init must give
+        // lower ‖XW − XAB‖ than truncated SVD of W itself.
+        let mut rng = Pcg64::new(3);
+        let n = 12;
+        let mut x = Mat::randn(80, n, 1.0, &mut rng);
+        for j in 0..n {
+            let s = if j < 2 { 10.0 } else { 0.1 };
+            x.scale_col(j, s);
+        }
+        let w = Mat::randn(n, n, 1.0, &mut rng);
+        let r = 3;
+        let (a_o, b_o) = oracle_lowrank(&x, &w, r);
+        let d = svd(&w);
+        let (a_s, b_s) = d.factors(r);
+        let err = |a: &Mat, b: &Mat| x.matmul(&a.matmul(b)).sub(&x.matmul(&w)).frob_norm();
+        let (eo, es) = (err(&a_o, &b_o), err(&a_s, &b_s));
+        assert!(eo <= es * 1.001, "oracle {eo} vs svd {es}");
+    }
+
+    #[test]
+    fn oracle_full_rank_is_exact() {
+        let mut rng = Pcg64::new(4);
+        let x = Mat::randn(30, 8, 1.0, &mut rng);
+        let w = Mat::randn(8, 8, 1.0, &mut rng);
+        let (a, b) = oracle_lowrank(&x, &w, 8);
+        let approx = a.matmul(&b);
+        assert!(approx.allclose(&w, 2e-2), "diff={}", approx.max_abs_diff(&w));
+    }
+}

@@ -1,0 +1,274 @@
+//! Cache-blocked GEMM — the L3 hot path.
+//!
+//! Three entry points mirror the BLAS layouts the engine needs without ever
+//! materializing transposes:
+//!
+//! * [`matmul`]   — `C = A·B`
+//! * [`matmul_nt`] — `C = A·Bᵀ` (attention scores `Q·Kᵀ`)
+//! * [`matmul_tn`] — `C = Aᵀ·B` (gradients `Xᵀ·E` in the recon trainer)
+//!
+//! The kernel is an i-k-j loop order over `MC×KC×NC` blocks with an
+//! 8-wide unrolled inner loop; `matmul_nt` uses a 4-accumulator dot
+//! product. On the 1-core container this reaches a few GFLOP/s, enough
+//! for the quality grid (see EXPERIMENTS.md §Perf for measured numbers).
+
+use super::Mat;
+
+/// Row-block size (fits a block of A in L1 alongside the B panel).
+const MC: usize = 64;
+/// Depth-block size.
+const KC: usize = 256;
+
+/// `C = A·B`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A·B` into a preallocated output (zero-alloc decode loop).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    // Blocked i-k-j: for each (row-block, depth-block), stream B rows.
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in k0..k1 {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    axpy_row(crow, aip, brow);
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+}
+
+/// `crow += s * brow`, 8-way unrolled.
+#[inline]
+fn axpy_row(crow: &mut [f32], s: f32, brow: &[f32]) {
+    let n = crow.len();
+    let chunks = n / 8;
+    // Unrolled body — the compiler autovectorizes this reliably.
+    for c in 0..chunks {
+        let o = c * 8;
+        crow[o] += s * brow[o];
+        crow[o + 1] += s * brow[o + 1];
+        crow[o + 2] += s * brow[o + 2];
+        crow[o + 3] += s * brow[o + 3];
+        crow[o + 4] += s * brow[o + 4];
+        crow[o + 5] += s * brow[o + 5];
+        crow[o + 6] += s * brow[o + 6];
+        crow[o + 7] += s * brow[o + 7];
+    }
+    for o in chunks * 8..n {
+        crow[o] += s * brow[o];
+    }
+}
+
+/// `C = A·Bᵀ` — both operands are traversed row-wise, so attention scores
+/// against a row-major K cache need no transpose copy.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "matmul_nt shape mismatch: {}x{} @ ({}x{})ᵀ",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut c = Mat::zeros(a.rows, b.rows);
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A·Bᵀ` into a preallocated output.
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// 4-accumulator dot product (breaks the FP dependency chain).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += x[o] * y[o];
+        s1 += x[o + 1] * y[o + 1];
+        s2 += x[o + 2] * y[o + 2];
+        s3 += x[o + 3] * y[o + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for o in chunks * 4..n {
+        s += x[o] * y[o];
+    }
+    s
+}
+
+/// `C = Aᵀ·B` (A is m×k ⇒ C is k×n). Streamed as rank-1 updates so A is
+/// still read row-major.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.rows, b.rows,
+        "matmul_tn shape mismatch: ({}x{})ᵀ @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (k, n) = (a.cols, b.cols);
+    let mut c = Mat::zeros(k, n);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let brow = &b.data[i * n..(i + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            if ap == 0.0 {
+                continue;
+            }
+            axpy_row(&mut c.data[p * n..(p + 1) * n], ap, brow);
+        }
+    }
+    c
+}
+
+/// `y = A·x` for a vector `x` (decode-time projections).
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// `y = Aᵀ·x` (single-token projection against a row-major weight).
+pub fn matvec_t(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0f32; a.cols];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        axpy_row(&mut y, xi, a.row(i));
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Pcg64::new(10);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (70, 300, 65), (8, 8, 8)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let r = naive(&a, &b);
+            assert!(c.allclose(&r, 1e-3), "({m},{k},{n}) diff={}", c.max_abs_diff(&r));
+        }
+    }
+
+    #[test]
+    fn nt_matches_transpose() {
+        let mut rng = Pcg64::new(11);
+        let a = Mat::randn(9, 33, 1.0, &mut rng);
+        let b = Mat::randn(14, 33, 1.0, &mut rng);
+        let c = matmul_nt(&a, &b);
+        let r = matmul(&a, &b.t());
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn tn_matches_transpose() {
+        let mut rng = Pcg64::new(12);
+        let a = Mat::randn(21, 6, 1.0, &mut rng);
+        let b = Mat::randn(21, 10, 1.0, &mut rng);
+        let c = matmul_tn(&a, &b);
+        let r = matmul(&a.t(), &b);
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn matvec_consistent() {
+        let mut rng = Pcg64::new(13);
+        let a = Mat::randn(7, 12, 1.0, &mut rng);
+        let x: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let y = matvec(&a, &x);
+        let xm = Mat::from_vec(12, 1, x.clone());
+        let r = matmul(&a, &xm);
+        for i in 0..7 {
+            assert!((y[i] - r.at(i, 0)).abs() < 1e-4);
+        }
+        // transpose form
+        let z: Vec<f32> = (0..7).map(|_| rng.normal()).collect();
+        let yt = matvec_t(&a, &z);
+        let zm = Mat::from_vec(1, 7, z);
+        let rt = matmul(&zm, &a);
+        for j in 0..12 {
+            assert!((yt[j] - rt.at(0, j)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Pcg64::new(14);
+        let a = Mat::randn(6, 6, 1.0, &mut rng);
+        assert!(matmul(&a, &Mat::eye(6)).allclose(&a, 1e-6));
+        assert!(matmul(&Mat::eye(6), &a).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let mut rng = Pcg64::new(15);
+        let a = Mat::randn(5, 8, 1.0, &mut rng);
+        let b = Mat::randn(8, 3, 1.0, &mut rng);
+        let mut c = Mat::from_vec(5, 3, vec![9.0; 15]); // dirty buffer
+        matmul_into(&a, &b, &mut c);
+        assert!(c.allclose(&naive(&a, &b), 1e-4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

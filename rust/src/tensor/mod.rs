@@ -1,0 +1,390 @@
+//! Dense f32 matrix type + numerical kernels.
+//!
+//! Everything quality-critical in the Rust layer (reference engine,
+//! SVD/ASVD initialization, reconstruction fine-tuning) runs on [`Mat`],
+//! a row-major `f32` matrix. Submodules:
+//!
+//! * [`matmul`] — cache-blocked GEMM (the L3 hot path; see §Perf).
+//! * [`ops`] — NN primitives: softmax, RMSNorm, SiLU, RoPE, cross-entropy.
+//! * [`linalg`] — Householder QR, triangular solves, least squares.
+//! * [`svd`] — one-sided Jacobi SVD (used by SVD/ASVD init and Figure 3).
+
+pub mod linalg;
+pub mod matmul;
+pub mod ops;
+pub mod svd;
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    // ----- construction --------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Gaussian random matrix (used by weight init and tests).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut crate::util::prng::Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    // ----- element access -------------------------------------------------
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    // ----- shape ops -------------------------------------------------------
+
+    /// Transpose (materialized).
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Copy of rows `lo..hi`.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_vec(
+            hi - lo,
+            self.cols,
+            self.data[lo * self.cols..hi * self.cols].to_vec(),
+        )
+    }
+
+    /// Copy of columns `lo..hi`.
+    pub fn cols_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Horizontal concatenation.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    // ----- arithmetic -------------------------------------------------------
+
+    /// `self @ other` via the blocked GEMM in [`matmul`].
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        matmul::matmul(self, other)
+    }
+
+    /// `self @ other.T` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        matmul::matmul_nt(self, other)
+    }
+
+    /// `self.T @ other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        matmul::matmul_tn(self, other)
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// AXPY: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale column `j` by `s` (used by ASVD's activation scaling).
+    pub fn scale_col(&mut self, j: usize, s: f32) {
+        for i in 0..self.rows {
+            self.data[i * self.cols + j] *= s;
+        }
+    }
+
+    /// Scale row `i` by `s`.
+    pub fn scale_row(&mut self, i: usize, s: f32) {
+        for v in self.row_mut(i) {
+            *v *= s;
+        }
+    }
+
+    // ----- reductions -------------------------------------------------------
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean of squared entries — the paper's reconstruction MSE.
+    pub fn mse(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = a - b;
+                d * d
+            })
+            .sum::<f32>()
+            / n as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Column-wise mean of |x| (ASVD "Absolute Mean Value" scaling).
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (j, v) in self.row(i).iter().enumerate() {
+                out[j] += v.abs();
+            }
+        }
+        let n = self.rows.max(1) as f32;
+        for v in &mut out {
+            *v /= n;
+        }
+        out
+    }
+
+    /// Max |a-b| — used by allclose-style assertions in tests.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Mat, atol: f32) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.max_abs_diff(other) <= atol
+    }
+
+    // ----- serialization (little-endian f32 blob) ----------------------------
+
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn read_from(buf: &[u8], pos: &mut usize) -> anyhow::Result<Mat> {
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            if *pos + n > buf.len() {
+                anyhow::bail!("truncated Mat blob at offset {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let rows = u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()) as usize;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(f32::from_le_bytes(take(pos, 4)?.try_into().unwrap()));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.t().t(), m);
+    }
+
+    #[test]
+    fn slicing_and_concat_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::randn(6, 4, 1.0, &mut rng);
+        let top = m.rows_slice(0, 2);
+        let bot = m.rows_slice(2, 6);
+        assert_eq!(top.vcat(&bot), m);
+        let left = m.cols_slice(0, 1);
+        let right = m.cols_slice(1, 4);
+        assert_eq!(left.hcat(&right), m);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::eye(2);
+        assert_eq!(a.add(&b).at(0, 0), 2.0);
+        assert_eq!(a.sub(&b).at(1, 1), 3.0);
+        assert_eq!(a.scale(2.0).at(0, 1), 4.0);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.at(0, 0), 1.5);
+    }
+
+    #[test]
+    fn mse_and_norms() {
+        let a = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::zeros(1, 4);
+        assert!((a.mse(&b) - 7.5).abs() < 1e-6);
+        assert!((a.frob_norm() - 30.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(a.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn col_abs_mean() {
+        let a = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(a.col_abs_mean(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::randn(3, 5, 2.0, &mut rng);
+        let mut buf = Vec::new();
+        m.write_to(&mut buf);
+        let mut pos = 0;
+        let n = Mat::read_from(&buf, &mut pos).unwrap();
+        assert_eq!(m, n);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn serialization_rejects_truncated() {
+        let m = Mat::eye(4);
+        let mut buf = Vec::new();
+        m.write_to(&mut buf);
+        buf.truncate(buf.len() - 3);
+        let mut pos = 0;
+        assert!(Mat::read_from(&buf, &mut pos).is_err());
+    }
+}

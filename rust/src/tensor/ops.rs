@@ -1,0 +1,266 @@
+//! NN primitives shared by the Rust reference engine and the trainers.
+//!
+//! These mirror the jnp ops in `python/compile/kernels/ref.py` exactly —
+//! the cross-validation test (`rust/tests/integration_runtime.rs`) asserts
+//! the Rust engine and the AOT HLO agree, which only holds if both sides
+//! use the same formulations (RMSNorm without bias, rotate-half RoPE,
+//! softmax with max-subtraction).
+
+use super::Mat;
+
+/// In-place numerically-stable softmax over each row, restricted to the
+/// first `valid` columns (the rest are treated as masked and set to 0).
+pub fn softmax_rows_masked(m: &mut Mat, valid: usize) {
+    let valid = valid.min(m.cols);
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &row[..valid] {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in &mut row[..valid] {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in &mut row[..valid] {
+            *v *= inv;
+        }
+        for v in &mut row[valid..] {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Full-row softmax.
+pub fn softmax_rows(m: &mut Mat) {
+    let c = m.cols;
+    softmax_rows_masked(m, c);
+}
+
+/// Causal softmax: row `i` may attend to columns `0..=i + offset`.
+/// `offset` is the number of cached tokens preceding this block
+/// (prefill uses offset 0; decode of token n uses a 1-row score with
+/// offset n).
+pub fn softmax_causal(m: &mut Mat, offset: usize) {
+    for i in 0..m.rows {
+        let valid = (i + offset + 1).min(m.cols);
+        let row = m.row_mut(i);
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &row[..valid] {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in &mut row[..valid] {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in &mut row[..valid] {
+            *v *= inv;
+        }
+        for v in &mut row[valid..] {
+            *v = 0.0;
+        }
+    }
+}
+
+/// RMSNorm: `x * g / sqrt(mean(x^2) + eps)` per row.
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &xv), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = xv * inv * g;
+    }
+}
+
+/// Row-wise RMSNorm over a matrix.
+pub fn rmsnorm_rows(m: &Mat, gain: &[f32], eps: f32) -> Mat {
+    let mut out = Mat::zeros(m.rows, m.cols);
+    for i in 0..m.rows {
+        let (src, dst) = (m.row(i), &mut out.data[i * m.cols..(i + 1) * m.cols]);
+        rmsnorm(src, gain, eps, dst);
+    }
+    out
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn silu_inplace(m: &mut Mat) {
+    for v in m.data.iter_mut() {
+        *v = silu(*v);
+    }
+}
+
+/// Rotate-half RoPE applied in place to one token's d-dim head vector.
+///
+/// Matches the L2 model: for pair `(x[i], x[i + d/2])`,
+/// `theta_i = base^(-2i/d)`, angle `= pos * theta_i`.
+pub fn rope_rotate(x: &mut [f32], pos: usize, base: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let theta = base.powf(-2.0 * i as f32 / d as f32);
+        let angle = pos as f32 * theta;
+        let (sin, cos) = angle.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Apply RoPE per-head to a `[tokens, n_heads*d_head]` matrix where token
+/// `t` has absolute position `pos0 + t`.
+pub fn rope_rows(m: &mut Mat, n_heads: usize, pos0: usize, base: f32) {
+    let d_head = m.cols / n_heads;
+    for t in 0..m.rows {
+        let row = m.row_mut(t);
+        for h in 0..n_heads {
+            rope_rotate(&mut row[h * d_head..(h + 1) * d_head], pos0 + t, base);
+        }
+    }
+}
+
+/// Argmax over a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax cross-entropy of one row of logits against a target id.
+pub fn cross_entropy(logits: &[f32], target: usize) -> f32 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = logits.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+    lse - logits[target]
+}
+
+/// Mean cross-entropy over `[tokens, vocab]` logits vs target ids.
+pub fn cross_entropy_rows(logits: &Mat, targets: &[usize]) -> f32 {
+    assert_eq!(logits.rows, targets.len());
+    let mut s = 0.0;
+    for (i, &t) in targets.iter().enumerate() {
+        s += cross_entropy(logits.row(i), t);
+    }
+    s / targets.len().max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::new(1);
+        let mut m = Mat::randn(4, 9, 3.0, &mut rng);
+        softmax_rows(&mut m);
+        for i in 0..4 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_masked_zeroes_tail() {
+        let mut m = Mat::from_vec(1, 4, vec![1.0, 2.0, 100.0, 200.0]);
+        softmax_rows_masked(&mut m, 2);
+        assert_eq!(m.at(0, 2), 0.0);
+        assert_eq!(m.at(0, 3), 0.0);
+        let s: f32 = m.row(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let mut b = Mat::from_vec(1, 3, vec![1001.0, 1002.0, 1003.0]);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        assert!(a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    fn causal_mask_pattern() {
+        let mut m = Mat::from_vec(3, 3, vec![0.0; 9]);
+        softmax_causal(&mut m, 0);
+        // row 0 attends only to col 0
+        assert_eq!(m.row(0), &[1.0, 0.0, 0.0]);
+        // row 1 splits between 0 and 1
+        assert!((m.at(1, 0) - 0.5).abs() < 1e-6);
+        assert_eq!(m.at(1, 2), 0.0);
+        // row 2 uniform over all three
+        assert!((m.at(2, 2) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, -4.0];
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rmsnorm(&x, &g, 0.0, &mut out);
+        // mean square = 12.5, rms = 3.5355
+        assert!((out[0] - 3.0 / 12.5f32.sqrt()).abs() < 1e-5);
+        let ms = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_position_zero_identity() {
+        let mut rng = Pcg64::new(2);
+        let mut x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let orig = x.clone();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_rotate(&mut x, 0, 10000.0);
+        assert_eq!(x, orig, "pos 0 must be identity");
+        rope_rotate(&mut x, 17, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4, "rotation must preserve norm");
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <RoPE(q,m), RoPE(k,n)> depends only on m-n: shift both by +s.
+        let mut rng = Pcg64::new(3);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let dotp = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let rot = |v: &[f32], p: usize| {
+            let mut w = v.to_vec();
+            rope_rotate(&mut w, p, 10000.0);
+            w
+        };
+        let d1 = dotp(&rot(&q, 5), &rot(&k, 2));
+        let d2 = dotp(&rot(&q, 15), &rot(&k, 12));
+        assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn cross_entropy_basics() {
+        // uniform logits -> ln(V)
+        let l = vec![0.0f32; 8];
+        assert!((cross_entropy(&l, 3) - (8.0f32).ln()).abs() < 1e-5);
+        // confident correct answer -> ~0
+        let mut l2 = vec![-20.0f32; 8];
+        l2[2] = 20.0;
+        assert!(cross_entropy(&l2, 2) < 1e-3);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0, 5.0]), 1);
+    }
+}

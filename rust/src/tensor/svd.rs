@@ -1,0 +1,244 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! Used by:
+//! * SVD / ASVD initialization of the low-rank factors `A, B` (§2.2 of the
+//!   paper) — `rust/src/compress/svd_init.rs`;
+//! * the Figure 3 analysis (singular value distribution of the key cache).
+//!
+//! One-sided Jacobi orthogonalizes the columns of `A·V` by plane rotations;
+//! it is simple, numerically robust, and plenty fast at our sizes
+//! (n ≤ 256). Singular values come out as column norms.
+
+use super::Mat;
+
+/// Result of `A = U · diag(s) · Vᵀ` with `U: m×k`, `s: k`, `V: n×k`,
+/// `k = min(m, n)`. Singular values are sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `U[:, :r] · diag(s[:r]) · V[:, :r]ᵀ`.
+    pub fn reconstruct(&self, r: usize) -> Mat {
+        let r = r.min(self.s.len());
+        let mut us = self.u.cols_slice(0, r);
+        for (j, &sv) in self.s[..r].iter().enumerate() {
+            us.scale_col(j, sv);
+        }
+        us.matmul_nt(&self.v.cols_slice(0, r))
+    }
+
+    /// Rank-r factor split `A = U·diag(s), B = Vᵀ` (so `A·B ≈` input).
+    /// The √s split used by the paper's init lives in `compress::svd_init`.
+    pub fn factors(&self, r: usize) -> (Mat, Mat) {
+        let r = r.min(self.s.len());
+        let mut a = self.u.cols_slice(0, r);
+        for (j, &sv) in self.s[..r].iter().enumerate() {
+            a.scale_col(j, sv);
+        }
+        let b = self.v.cols_slice(0, r).t();
+        (a, b)
+    }
+}
+
+/// Compute the thin SVD of `a` by one-sided Jacobi.
+///
+/// Handles `m < n` by transposing internally.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        // A = U S Vt  <=>  At = V S Ut
+        let t = svd(&a.t());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns of G (copy of A); accumulate V.
+    let mut g = a.clone();
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-10f64;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p and q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let gp = g.data[i * n + p] as f64;
+                    let gq = g.data[i * n + q] as f64;
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-30 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let gp = g.data[i * n + p];
+                    let gq = g.data[i * n + q];
+                    g.data[i * n + p] = cf * gp - sf * gq;
+                    g.data[i * n + q] = sf * gp + cf * gq;
+                }
+                for i in 0..n {
+                    let vp = v.data[i * n + p];
+                    let vq = v.data[i * n + q];
+                    v.data[i * n + p] = cf * vp - sf * vq;
+                    v.data[i * n + q] = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Column norms = singular values; normalize to get U.
+    let mut svals: Vec<(f32, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m)
+                .map(|i| {
+                    let x = g.data[i * n + j] as f64;
+                    x * x
+                })
+                .sum::<f64>()
+                .sqrt() as f32;
+            (norm, j)
+        })
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(norm, j)) in svals.iter().enumerate() {
+        s.push(norm);
+        let inv = if norm > 1e-20 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            u.data[i * n + out_j] = g.data[i * n + j] * inv;
+        }
+        for i in 0..n {
+            vv.data[i * n + out_j] = v.data[i * n + j];
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Singular values only (cheaper to call for Figure 3 dumps).
+pub fn singular_values(a: &Mat) -> Vec<f32> {
+    svd(a).s
+}
+
+/// Best rank-r approximation error `‖A - A_r‖_F` (Eckart–Young; equals the
+/// l2 norm of the dropped singular-value tail).
+pub fn lowrank_error(s: &[f32], r: usize) -> f32 {
+    s[r.min(s.len())..].iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn assert_orthonormal_cols(m: &Mat, tol: f32) {
+        let g = m.matmul_tn(m);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.at(i, j) - want).abs() < tol,
+                    "gram[{i},{j}]={}",
+                    g.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_random_matrix() {
+        let mut rng = Pcg64::new(1);
+        for (m, n) in [(8, 8), (20, 7), (7, 20), (33, 15)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let d = svd(&a);
+            let full = d.reconstruct(n.min(m));
+            assert!(
+                full.allclose(&a, 1e-3),
+                "({m},{n}) diff={}",
+                full.max_abs_diff(&a)
+            );
+            assert_orthonormal_cols(&d.u, 1e-3);
+            assert_orthonormal_cols(&d.v, 1e-3);
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(16, 10, 1.0, &mut rng);
+        let s = singular_values(&a);
+        assert_eq!(s.len(), 10);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn exact_on_known_diagonal() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 1.0]);
+        let s = singular_values(&a);
+        assert!((s[0] - 5.0).abs() < 1e-4);
+        assert!((s[1] - 3.0).abs() < 1e-4);
+        assert!((s[2] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lowrank_truncation_is_optimal() {
+        // Build a matrix with known rank-2 structure + small noise;
+        // rank-2 reconstruction must capture almost everything.
+        let mut rng = Pcg64::new(3);
+        let u = Mat::randn(24, 2, 1.0, &mut rng);
+        let v = Mat::randn(2, 18, 1.0, &mut rng);
+        let noise = Mat::randn(24, 18, 0.01, &mut rng);
+        let a = u.matmul(&v).add(&noise);
+        let d = svd(&a);
+        let a2 = d.reconstruct(2);
+        let rel = a2.sub(&a).frob_norm() / a.frob_norm();
+        assert!(rel < 0.02, "rel={rel}");
+        // Eckart–Young consistency
+        let tail = lowrank_error(&d.s, 2);
+        assert!((a2.sub(&a).frob_norm() - tail).abs() / tail.max(1e-6) < 0.05);
+    }
+
+    #[test]
+    fn factors_multiply_back() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::randn(12, 9, 1.0, &mut rng);
+        let d = svd(&a);
+        let (fa, fb) = d.factors(9);
+        assert!(fa.matmul(&fb).allclose(&a, 1e-3));
+    }
+
+    #[test]
+    fn frobenius_preserved_by_svals() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::randn(15, 11, 1.0, &mut rng);
+        let s = singular_values(&a);
+        let sn = s.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((sn - a.frob_norm()).abs() < 1e-2);
+    }
+}

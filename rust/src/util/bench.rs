@@ -1,0 +1,181 @@
+//! Benchmark harness (criterion stand-in).
+//!
+//! Two modes:
+//! * [`Bencher::time`] — classic micro-benchmark: warmup, then timed
+//!   iterations with mean/std/percentile reporting.
+//! * experiment benches (Tables 1–5, Figures 3–4) use the harness only for
+//!   wall-clock bookkeeping and emit their tables via [`crate::util::table`].
+//!
+//! Every bench binary is `harness = false` and accepts `--fast` (shrinks
+//! sample counts for smoke runs) via [`crate::util::cli::Args`].
+
+use std::time::{Duration, Instant};
+
+use super::stats::Samples;
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub samples: Samples,
+    /// Optional throughput denominator: items processed per iteration.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.samples.mean()
+    }
+
+    pub fn report(&self) -> String {
+        let base = format!(
+            "{:<44} {:>10.3} ms/iter ± {:>8.3}  p50 {:>8.3}  p95 {:>8.3}  (n={})",
+            self.name,
+            self.samples.mean() * 1e3,
+            self.samples.std() * 1e3,
+            self.samples.percentile(50.0) * 1e3,
+            self.samples.percentile(95.0) * 1e3,
+            self.iters,
+        );
+        match self.items_per_iter {
+            Some(k) if self.samples.mean() > 0.0 => {
+                format!("{base}  {:>10.1} items/s", k / self.samples.mean())
+            }
+            _ => base,
+        }
+    }
+}
+
+/// Configurable micro-benchmark runner.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick mode for `--fast` smoke runs.
+    pub fn fast() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 5,
+            target_time: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    pub fn time<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.time_items(name, None, &mut f)
+    }
+
+    /// Time with a throughput denominator (`items` per iteration).
+    pub fn time_throughput<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        self.time_items(name, Some(items), &mut f)
+    }
+
+    fn time_items(&mut self, name: &str, items: Option<f64>, f: &mut dyn FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        let t_start = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (t_start.elapsed() < self.target_time && iters < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            samples,
+            items_per_iter: items,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box wrapper so call sites read like criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Shared preamble printed by every bench binary (environment provenance
+/// for EXPERIMENTS.md).
+pub fn print_bench_header(name: &str, paper_ref: &str) {
+    println!("==============================================================");
+    println!("bench: {name}");
+    println!("reproduces: {paper_ref}");
+    println!(
+        "host: {} core(s), rust {}, seed-controlled",
+        super::threadpool::ThreadPool::available_parallelism(),
+        option_env!("CARGO_PKG_RUST_VERSION").unwrap_or("stable"),
+    );
+    println!("==============================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 3,
+            target_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.time("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].iters, 3);
+        assert!(b.results()[0].mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::fast();
+        let r = b.time_throughput("noop", 100.0, || {
+            black_box(0u64);
+        });
+        assert!(r.report().contains("items/s"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! ```text
+//! let args = Args::from_vec(vec!["--steps".into(), "100".into(), "--fast".into()]);
+//! args.get_usize("steps", 10) == 100 && args.get_flag("fast")
+//! ```
+//!
+//! Conventions: `--key value`, `--key=value`, bare `--flag`, and free
+//! positional arguments. Unknown keys are kept and can be audited with
+//! [`Args::unused`] so binaries can warn about typos.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    used: RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        // `cargo bench` passes "--bench" to harness=false bench binaries;
+        // drop it so benches can share this parser.
+        let v: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench")
+            .collect();
+        Args::from_vec(v)
+    }
+
+    pub fn from_vec(argv: Vec<String>) -> Args {
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    kv.insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    kv.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args {
+            kv,
+            flags,
+            positional,
+            used: RefCell::new(Vec::new()),
+        }
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.kv.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.kv
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.kv
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        self.kv
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key) || self.kv.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list, e.g. `--ratios 0.5,0.8`.
+    pub fn get_list_f64(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad number {s:?}")))
+                .collect(),
+        }
+    }
+
+    pub fn get_list_usize(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument — used as subcommand by the main binary.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Keys that were provided but never consumed (possible typos).
+    pub fn unused(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !used.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        // NOTE: a bare `--flag` followed by a non-dashed token is parsed as
+        // a key/value pair — positional args go before flags by convention.
+        let a = args("serve extra --steps 50 --ratio=0.8 --fast");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get_usize("steps", 1), 50);
+        assert_eq!(a.get_f64("ratio", 0.0), 0.8);
+        assert!(a.get_flag("fast"));
+        assert!(!a.get_flag("slow"));
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("name", "x"), "x");
+        assert_eq!(a.get_list_f64("r", &[0.5]), vec![0.5]);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args("--ratios 0.5,0.8 --sizes=2,4,8");
+        assert_eq!(a.get_list_f64("ratios", &[]), vec![0.5, 0.8]);
+        assert_eq!(a.get_list_usize("sizes", &[]), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn unused_reports_typos() {
+        let a = args("--steps 5 --typo 3");
+        let _ = a.get_usize("steps", 1);
+        assert_eq!(a.unused(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--fast --steps 3");
+        assert!(a.get_flag("fast"));
+        assert_eq!(a.get_usize("steps", 0), 3);
+    }
+}

@@ -1,0 +1,26 @@
+//! Offline substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (tokio, clap, serde, criterion, proptest,
+//! rayon, rand) are unavailable. Everything the system needs from them is
+//! implemented here from scratch:
+//!
+//! * [`prng`] — SplitMix64 / Xoshiro256** deterministic RNG.
+//! * [`json`] — minimal JSON parser + writer (artifact manifests, results).
+//! * [`cli`] — declarative command-line argument parser.
+//! * [`log`] — leveled logger controlled by `CSKV_LOG`.
+//! * [`threadpool`] — scoped worker pool + `parallel_for`.
+//! * [`stats`] — streaming mean/variance, percentiles, histograms.
+//! * [`bench`] — micro/macro benchmark harness (criterion stand-in).
+//! * [`prop`] — property-based testing microframework (proptest stand-in).
+//! * [`table`] — aligned ASCII table printer for paper-style outputs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

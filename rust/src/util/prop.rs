@@ -1,0 +1,258 @@
+//! Property-based testing microframework (proptest stand-in).
+//!
+//! A property is a closure over values drawn from a [`Gen`]; the runner
+//! executes `cases` random cases and, on failure, performs greedy
+//! shrinking so counterexamples stay readable. Used by
+//! `rust/tests/property_invariants.rs` on coordinator and cache invariants.
+//!
+//! ```text
+//! forall("reverse twice is identity", 200, Gen::vec_usize(0..64, 0..32), |xs| {
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     ys == *xs
+//! });
+//! ```
+
+use super::prng::Pcg64;
+use std::ops::Range;
+
+/// A generator of random values paired with a shrinker.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Pcg64) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen {
+            gen: Box::new(gen),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (no shrinking through the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| f(self.sample(rng)), |_| Vec::new())
+    }
+}
+
+impl Gen<usize> {
+    pub fn usize_in(r: Range<usize>) -> Gen<usize> {
+        let lo = r.start;
+        let hi = r.end;
+        Gen::new(
+            move |rng| rng.range(lo, hi),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2);
+                    out.push(v - 1);
+                }
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+        Gen::new(
+            move |rng| lo + (hi - lo) * rng.uniform(),
+            move |&v| {
+                let mut out = Vec::new();
+                if v != lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2.0);
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<Vec<usize>> {
+    /// Vector of usize drawn from `elem`, with random length in `len`.
+    pub fn vec_usize(elem: Range<usize>, len: Range<usize>) -> Gen<Vec<usize>> {
+        let (elo, ehi) = (elem.start, elem.end);
+        let (llo, lhi) = (len.start, len.end);
+        Gen::new(
+            move |rng| {
+                let n = rng.range(llo, lhi.max(llo + 1));
+                (0..n).map(|_| rng.range(elo, ehi)).collect()
+            },
+            move |v: &Vec<usize>| {
+                let mut out = Vec::new();
+                if v.len() > llo {
+                    out.push(v[..v.len() / 2].to_vec()); // front half
+                    out.push(v[1..].to_vec()); // drop head
+                    let mut t = v.clone();
+                    t.pop(); // drop tail
+                    out.push(t);
+                }
+                // shrink elements toward elo
+                if let Some((i, _)) = v.iter().enumerate().find(|(_, &x)| x > elo) {
+                    let mut t = v.clone();
+                    t[i] = elo;
+                    out.push(t);
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Tuple combinator.
+pub fn zip<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let ga = std::rc::Rc::new(a);
+    let gb = std::rc::Rc::new(b);
+    let (sa, sb) = (ga.clone(), gb.clone());
+    Gen::new(
+        move |rng| (ga.sample(rng), gb.sample(rng)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for xs in sa.shrinks(x) {
+                out.push((xs, y.clone()));
+            }
+            for ys in sb.shrinks(y) {
+                out.push((x.clone(), ys));
+            }
+            out
+        },
+    )
+}
+
+/// Outcome of a property run (exposed for the framework's own tests).
+#[derive(Debug, Clone)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { original: T, shrunk: T, shrink_steps: usize },
+}
+
+/// Run the property, returning the outcome instead of panicking.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    cases: usize,
+    seed: u64,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) -> PropResult<T> {
+    let mut rng = Pcg64::new(seed);
+    for _case in 0..cases {
+        let v = gen.sample(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Greedy shrink: repeatedly take the first failing shrink candidate.
+        let original = v.clone();
+        let mut cur = v;
+        let mut steps = 0;
+        'outer: loop {
+            for cand in gen.shrinks(&cur) {
+                if !prop(&cand) {
+                    cur = cand;
+                    steps += 1;
+                    if steps > 1000 {
+                        break 'outer;
+                    }
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        return PropResult::Fail {
+            original,
+            shrunk: cur,
+            shrink_steps: steps,
+        };
+    }
+    PropResult::Pass { cases }
+}
+
+/// Assert-style entry point: panics with the shrunk counterexample.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    // Seed from the property name so failures are reproducible but
+    // different properties explore different streams.
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    match check(cases, seed, &gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail {
+            original,
+            shrunk,
+            shrink_steps,
+        } => {
+            panic!(
+                "property {name:?} falsified\n  original: {original:?}\n  shrunk ({shrink_steps} steps): {shrunk:?}\n  (re-run deterministically with seed {seed})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 100, Gen::vec_usize(0..100, 0..20), |xs| {
+            let fwd: usize = xs.iter().sum();
+            let rev: usize = xs.iter().rev().sum();
+            fwd == rev
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // "all vectors are shorter than 5" — counterexample must shrink to
+        // something length 5.
+        let g = Gen::vec_usize(0..10, 0..40);
+        match check(500, 42, &g, |xs| xs.len() < 5) {
+            PropResult::Fail { shrunk, .. } => {
+                assert_eq!(shrunk.len(), 5, "greedy shrink should reach minimum");
+            }
+            PropResult::Pass { .. } => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn usize_gen_respects_range() {
+        let g = Gen::usize_in(3..17);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng);
+            assert!((3..17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zip_shrinks_both_sides() {
+        let g = zip(Gen::usize_in(0..100), Gen::usize_in(0..100));
+        match check(500, 7, &g, |&(a, b)| a + b < 60) {
+            PropResult::Fail { shrunk: (a, b), .. } => {
+                assert!(a + b >= 60);
+                // shrunk point should be near the boundary
+                assert!(a + b <= 130, "({a},{b}) not shrunk");
+            }
+            _ => panic!("should fail"),
+        }
+    }
+}

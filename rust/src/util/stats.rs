@@ -1,0 +1,244 @@
+//! Streaming statistics and percentile summaries for benchmarks and the
+//! coordinator's latency metrics.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A recorded sample set with exact percentiles (sorts on query).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile, `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Short human summary: `mean ± std [p50 p95 p99]`.
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "{:.3}{u} ± {:.3} [p50 {:.3}{u} p95 {:.3}{u} p99 {:.3}{u}] n={}",
+            self.mean(),
+            self.std(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.len(),
+            u = unit,
+        )
+    }
+}
+
+/// Fixed-bin histogram over `[lo, hi)` used for figure-style dumps.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[b.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// ASCII bar rendering (used by the figure benches).
+    pub fn render(&self, width: usize) -> String {
+        let maxc = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, c) in self.bins.iter().enumerate() {
+            let bl = self.lo + (self.hi - self.lo) * i as f64 / self.bins.len() as f64;
+            let bh = self.lo + (self.hi - self.lo) * (i + 1) as f64 / self.bins.len() as f64;
+            let bar = "#".repeat(((*c as f64 / maxc as f64) * width as f64).round() as usize);
+            out.push_str(&format!("[{bl:10.3},{bh:10.3}) {c:8} {bar}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for x in xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Samples::new();
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 40.0);
+        assert!((s.percentile(50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        assert_eq!(s.percentile(99.0), 5.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(11.0);
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+}

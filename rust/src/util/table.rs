@@ -1,0 +1,172 @@
+//! Aligned ASCII table printer used by benches to emit paper-style tables.
+
+/// Builder for an aligned table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncol {
+                line.push_str(&format!("{:width$} | ", cells[i], width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: String = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('|');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// CSV form for EXPERIMENTS.md appendices.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to other run outputs.
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Format helper: 2-decimal accuracy cell matching the paper's tables.
+pub fn acc(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format helper: ratio as percent.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Format helper: bytes with binary units.
+pub fn bytes(n: usize) -> String {
+    let units = ["B", "KiB", "MiB", "GiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u + 1 < units.len() {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n}B")
+    } else {
+        format!("{x:.2}{}", units[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "acc"]);
+        t.row_strs(&["CSKV", "0.92"]);
+        t.row_strs(&["StreamingLLM", "0.06"]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| CSKV         | 0.92 |"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["x,y", "q\"z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(acc(0.923), "0.92");
+        assert_eq!(pct(0.8), "80.0%");
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.00KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+}

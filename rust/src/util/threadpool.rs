@@ -1,0 +1,207 @@
+//! Minimal scoped thread pool + `parallel_for` (rayon stand-in).
+//!
+//! The container exposes a single core, so defaults degrade gracefully to
+//! sequential execution, but the pool is fully functional and is exercised
+//! by tests with multiple workers — the coordinator uses it for background
+//! work and the tensor layer uses [`parallel_for`] for row-blocked matmul.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool executing boxed jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    /// `n == 0` is clamped to 1.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cv) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        cv.notify_all();
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Number of logical CPUs (reads `/proc/cpuinfo`, falls back to 1).
+    pub fn available_parallelism() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n`, split across up to `threads` scoped workers.
+///
+/// Uses `std::thread::scope`, so `f` may borrow from the caller. With
+/// `threads <= 1` (the default on this 1-core container) it runs inline
+/// with zero overhead.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Chunked variant: calls `f(lo, hi)` on disjoint ranges covering `0..n`.
+pub fn parallel_chunks<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(97, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_partition() {
+        let hits: Vec<AtomicU64> = (0..50).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(50, 3, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_sequential_fallback() {
+        let mut seen = vec![false; 10];
+        // threads=1 runs inline; borrowing mutably is fine via RefCell-free trick
+        let cells: Vec<AtomicU64> = (0..10).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(10, 1, |i| {
+            cells[i].store(1, Ordering::SeqCst);
+        });
+        for (i, c) in cells.iter().enumerate() {
+            seen[i] = c.load(Ordering::SeqCst) == 1;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

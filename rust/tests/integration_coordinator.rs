@@ -1,0 +1,175 @@
+//! Integration: the serving coordinator under load, mixed policies,
+//! KV-budget admission, and failure handling.
+
+use std::sync::Arc;
+
+use cskv::compress::svd_init::{init_factors, InitMethod};
+use cskv::compress::{LayerFactors, ModelFactors};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::data::tasks;
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, QuantMode};
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::util::prng::Pcg64;
+
+fn make_engine(seed: u64) -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), seed)))
+}
+
+fn full_setup(seed: u64) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+fn cskv_setup(seed: u64, rank: usize) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let layers = engine
+            .w
+            .layers
+            .iter()
+            .map(|lw| LayerFactors {
+                k: init_factors(&lw.wk, rank, InitMethod::Svd, None, 0),
+                v: init_factors(&lw.wv, rank, InitMethod::Svd, None, 0),
+            })
+            .collect();
+        let f = Arc::new(ModelFactors {
+            layers,
+            provenance: format!("coord-r{rank}"),
+        });
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(CskvCache::new(
+                    Arc::clone(&f),
+                    c.d_model,
+                    CskvConfig {
+                        window: 8,
+                        quant: QuantMode::None,
+                    },
+                )),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+#[test]
+fn many_requests_complete_in_order_of_ids() {
+    let coord = Coordinator::start(full_setup(1), CoordinatorConfig::default());
+    let mut rng = Pcg64::new(1);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..12 {
+        let s = tasks::line_retrieval(4, &mut rng);
+        expected.push(s.prompt.clone());
+        rxs.push(coord.submit(s.prompt, 3));
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.tokens.len(), 3);
+        ids.push(r.id);
+    }
+    // IDs are assigned monotonically at submission.
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(ids, sorted);
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 12);
+    assert!(snap.queue_wait_s.len() == 12);
+}
+
+/// The operational payoff of CSKV: under the same KV budget, the
+/// compressed backend sustains strictly higher concurrency than the full
+/// cache.
+#[test]
+fn cskv_admits_more_concurrency_under_same_budget() {
+    let cfg = ModelConfig::test_small();
+    // Budget: about 2.5 full-cache sequences of ~44 tokens.
+    let budget = cfg.kv_bytes_full(44) * 5 / 2;
+    let run = |setup: Setup| {
+        let coord = Coordinator::start(
+            setup,
+            CoordinatorConfig {
+                max_batch: 16,
+                kv_budget_bytes: Some(budget),
+            },
+        );
+        let mut rng = Pcg64::new(2);
+        let rxs: Vec<_> = (0..10)
+            .map(|_| {
+                let s = tasks::line_retrieval(5, &mut rng); // ctx ≈ 44
+                coord.submit(s.prompt, 6)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        coord.shutdown()
+    };
+    let full = run(full_setup(3));
+    let cskv = run(cskv_setup(3, 4)); // rank 4 of 32 ⇒ ~8× smaller history
+    assert_eq!(full.requests_completed, 10);
+    assert_eq!(cskv.requests_completed, 10);
+    assert!(
+        cskv.active_peak > full.active_peak,
+        "cskv concurrency {} should beat full {} under budget {budget}",
+        cskv.active_peak,
+        full.active_peak
+    );
+}
+
+#[test]
+fn coordinator_survives_empty_prompt() {
+    // Empty prompts fail prefill; the coordinator must log and continue
+    // serving subsequent requests (the reply channel is dropped).
+    let coord = Coordinator::start(full_setup(4), CoordinatorConfig::default());
+    let bad_rx = coord.submit(vec![], 3);
+    let good = coord.submit_wait(vec![1, 2, 3], 3);
+    assert_eq!(good.tokens.len(), 3);
+    assert!(bad_rx.recv().is_err(), "failed request must drop its reply");
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 1);
+}
+
+#[test]
+fn metrics_track_latency_components() {
+    let coord = Coordinator::start(full_setup(5), CoordinatorConfig { max_batch: 2, kv_budget_bytes: None });
+    let mut rng = Pcg64::new(6);
+    let rxs: Vec<_> = (0..6)
+        .map(|_| coord.submit(tasks::line_retrieval(4, &mut rng).prompt, 4))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.ttft_s >= r.queue_wait_s);
+        assert!(r.total_s >= r.ttft_s * 0.5);
+        assert!(r.backend.contains("rust-engine"));
+    }
+    let snap = coord.shutdown();
+    assert!(snap.tok_latency_s.len() >= 6 * 3);
+    assert!(snap.throughput_tok_s() > 0.0);
+    assert!(snap.report().contains("tok/s"));
+}
+
+#[test]
+fn shutdown_drains_pending_work() {
+    let coord = Coordinator::start(full_setup(7), CoordinatorConfig { max_batch: 1, kv_budget_bytes: None });
+    let rxs: Vec<_> = (0..4).map(|i| coord.submit(vec![1, 2 + i], 5)).collect();
+    // Immediately shut down — all four must still be answered.
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 4);
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().tokens.len(), 5);
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration: the reference engine against every cache policy — the
+//! mechanisms behind Table 1's qualitative ordering, checked on random
+//! weights (trained-model accuracy lives in the benches).
+
+use std::sync::Arc;
+
+use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::compress::svd_init::{init_factors, InitMethod};
+use cskv::compress::{LayerFactors, ModelFactors};
+use cskv::data::tasks;
+use cskv::eval::harness::replay_generate;
+use cskv::eval::{EvalSet, Suite};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::util::prng::Pcg64;
+
+fn engine() -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), 11)))
+}
+
+fn full_rank_factors(w: &ModelWeights) -> Arc<ModelFactors> {
+    // Full-rank SVD factors: mathematically exact compression.
+    let layers = w
+        .layers
+        .iter()
+        .map(|lw| LayerFactors {
+            k: init_factors(&lw.wk, lw.wk.cols, InitMethod::Svd, None, 0),
+            v: init_factors(&lw.wv, lw.wv.cols, InitMethod::Svd, None, 0),
+        })
+        .collect();
+    Arc::new(ModelFactors {
+        layers,
+        provenance: "fullrank".into(),
+    })
+}
+
+/// With full-rank factors the bi-branch cache is exact ⇒ generation must
+/// match the full cache token-for-token, for any window size.
+#[test]
+fn cskv_fullrank_equals_full_cache() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let f = full_rank_factors(&e.w);
+    let mut rng = Pcg64::new(1);
+    for window in [0usize, 2, 8, 64] {
+        let s = tasks::line_retrieval(6, &mut rng);
+        let mut full = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want, _) = e.generate(&s.prompt, 5, &mut full);
+        let mut cskv = CskvCache::new(
+            Arc::clone(&f),
+            cfg.d_model,
+            CskvConfig {
+                window,
+                quant: QuantMode::None,
+            },
+        );
+        let (got, _) = e.generate(&s.prompt, 5, &mut cskv);
+        assert_eq!(got, want, "window={window}");
+    }
+}
+
+/// StreamingLLM with a budget >= sequence length is exact too (nothing is
+/// ever evicted, cache-relative == absolute positions).
+#[test]
+fn streamingllm_unevicted_equals_full_cache() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let mut rng = Pcg64::new(2);
+    let s = tasks::line_retrieval(5, &mut rng);
+    let mut full = FullCache::new(cfg.n_layers, cfg.d_model);
+    let (want, _) = e.generate(&s.prompt, 4, &mut full);
+    let mut sl = StreamingLlmCache::new(cfg.n_layers, cfg.d_model, 4, s.prompt.len() + 10);
+    let (got, _) = e.generate(&s.prompt, 4, &mut sl);
+    assert_eq!(got, want);
+}
+
+/// H2O with budget >= sequence length is exact as well.
+#[test]
+fn h2o_unevicted_equals_full_cache() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let mut rng = Pcg64::new(3);
+    let s = tasks::line_retrieval(5, &mut rng);
+    let mut full = FullCache::new(cfg.n_layers, cfg.d_model);
+    let (want, _) = e.generate(&s.prompt, 4, &mut full);
+    let mut h2o = H2oCache::new(cfg.n_layers, cfg.d_model, s.prompt.len() + 10);
+    let (got, _) = e.generate(&s.prompt, 4, &mut h2o);
+    assert_eq!(got, want);
+}
+
+/// Memory ordering at the same nominal ratio: cskv-int4 < pruned(20%) ≈
+/// cskv(20%) < full. (The exact Table-style bytes are in bench_memory.)
+#[test]
+fn memory_footprints_are_ordered() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let mut rng = Pcg64::new(4);
+    let prompt: Vec<usize> = (0..100).map(|_| rng.range(10, 250)).collect();
+    let f = {
+        let layers = e
+            .w
+            .layers
+            .iter()
+            .map(|lw| LayerFactors {
+                k: init_factors(&lw.wk, 6, InitMethod::Svd, None, 0), // ~80%
+                v: init_factors(&lw.wv, 6, InitMethod::Svd, None, 0),
+            })
+            .collect();
+        Arc::new(ModelFactors {
+            layers,
+            provenance: "r6".into(),
+        })
+    };
+    let run = |mut p: Box<dyn KvCachePolicy>| {
+        let _ = e.generate(&prompt, 3, p.as_mut());
+        p.kv_bytes()
+    };
+    let full = run(Box::new(FullCache::new(cfg.n_layers, cfg.d_model)));
+    let budget = (prompt.len() + 3) / 5; // ~80% pruned
+    let pruned = run(Box::new(StreamingLlmCache::new(
+        cfg.n_layers,
+        cfg.d_model,
+        2,
+        budget.max(3),
+    )));
+    let cskv = run(Box::new(CskvCache::new(
+        Arc::clone(&f),
+        cfg.d_model,
+        CskvConfig {
+            window: 4,
+            quant: QuantMode::None,
+        },
+    )));
+    let cskv_q = run(Box::new(CskvCache::new(
+        f,
+        cfg.d_model,
+        CskvConfig {
+            window: 4,
+            quant: QuantMode::Int4,
+        },
+    )));
+    assert!(cskv < full / 3, "cskv {cskv} vs full {full}");
+    assert!(pruned < full / 3, "pruned {pruned} vs full {full}");
+    assert!(cskv_q < cskv, "int4 {cskv_q} vs fp32 {cskv}");
+}
+
+/// The eviction baselines *lose* the queried line when it falls outside
+/// their kept set, while CSKV (which keeps every token, compressed)
+/// retains at least the positional coverage — structural check on the
+/// materialized views.
+#[test]
+fn eviction_drops_query_line_coverage() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let mut rng = Pcg64::new(5);
+    let s = tasks::line_retrieval(8, &mut rng); // 8 lines × 8 tokens ≈ 68 ctx
+    let budget = s.prompt.len() / 5;
+
+    let mut sl = StreamingLlmCache::new(cfg.n_layers, cfg.d_model, 2, budget);
+    let _ = e.generate(&s.prompt, 2, &mut sl);
+    let view = sl.materialize(0);
+    // Early-middle positions are gone.
+    assert!(!view.abs_pos.contains(&(s.prompt.len() / 2)));
+
+    let f = full_rank_factors(&e.w);
+    let mut ck = CskvCache::new(f, cfg.d_model, CskvConfig::default());
+    let _ = e.generate(&s.prompt, 2, &mut ck);
+    let view = ck.materialize(0);
+    // CSKV covers every absolute position.
+    assert_eq!(view.abs_pos.len(), s.prompt.len() + 1);
+}
+
+/// Replay-based evaluation must agree with direct generation for every
+/// replay-safe policy (the harness optimization is not allowed to change
+/// results).
+#[test]
+fn harness_replay_consistency_across_policies() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    let suite = Suite::LongBench { ctx: 80, n_facts: 4 };
+    let samples = suite.sample_set(3, 9);
+    let set = EvalSet::build(&e, samples.clone());
+    let f = full_rank_factors(&e.w);
+
+    type Factory = Box<dyn Fn() -> Box<dyn KvCachePolicy>>;
+    let factories: Vec<Factory> = vec![
+        Box::new({
+            let c = cfg.clone();
+            move || Box::new(FullCache::new(c.n_layers, c.d_model))
+        }),
+        Box::new({
+            let c = cfg.clone();
+            move || Box::new(StreamingLlmCache::new(c.n_layers, c.d_model, 4, 30))
+        }),
+        Box::new({
+            let c = cfg.clone();
+            move || Box::new(H2oCache::new(c.n_layers, c.d_model, 30))
+        }),
+        Box::new({
+            let c = cfg.clone();
+            let f = Arc::clone(&f);
+            move || Box::new(CskvCache::new(Arc::clone(&f), c.d_model, CskvConfig::default()))
+        }),
+    ];
+    for factory in factories {
+        for s in &samples {
+            let mut p_direct = factory();
+            let (direct, _) = e.generate(&s.prompt, 3, p_direct.as_mut());
+            let rec = e.prefill(&s.prompt, None);
+            let mut p_replay = factory();
+            let replay = replay_generate(&e, &rec, s.prompt.len(), 3, p_replay.as_mut());
+            assert_eq!(direct, replay, "policy {}", p_direct.name());
+        }
+    }
+    // And the EvalSet wrapper runs end-to-end.
+    let mut factory = {
+        let c = cfg.clone();
+        move || -> Box<dyn KvCachePolicy> { Box::new(FullCache::new(c.n_layers, c.d_model)) }
+    };
+    let r = set.eval(&e, &mut factory);
+    assert_eq!(r.n_samples, 3);
+}
+
+/// ASVD goes through the lossy-prefill path and still produces sane output.
+#[test]
+fn asvd_lossy_prefill_path() {
+    let e = engine();
+    let mut rng = Pcg64::new(10);
+    let s = tasks::line_retrieval(5, &mut rng);
+    let f = full_rank_factors(&e.w);
+    let mut asvd = AsvdCache::new(Arc::clone(&f));
+    assert!(asvd.lossy_prefill());
+    let (toks, _) = e.generate(&s.prompt, 4, &mut asvd);
+    assert_eq!(toks.len(), 4);
+    // Full-rank ASVD == exact, so it must match the full cache.
+    let cfg = e.w.cfg.clone();
+    let mut full = FullCache::new(cfg.n_layers, cfg.d_model);
+    let (want, _) = e.generate(&s.prompt, 4, &mut full);
+    assert_eq!(toks, want);
+}

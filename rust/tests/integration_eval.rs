@@ -1,0 +1,100 @@
+//! Integration: evaluation suites + harness + Figure 3 analysis end-to-end
+//! on a randomly-initialized model (trained-model numbers live in benches).
+
+use std::sync::Arc;
+
+use cskv::data::corpus::{calibration_docs, CorpusConfig};
+use cskv::data::vocab;
+use cskv::eval::svd_analysis;
+use cskv::eval::{EvalSet, Suite};
+use cskv::kvcache::{FullCache, KvCachePolicy};
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+
+fn engine() -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), 21)))
+}
+
+#[test]
+fn all_table1_suites_generate_and_evaluate() {
+    let e = engine();
+    let cfg = e.w.cfg.clone();
+    // Scale the suites down to the test model's 128 max_seq.
+    let suites = [
+        Suite::LongEval { ctx: 64 },
+        Suite::LongBench { ctx: 64, n_facts: 3 },
+        Suite::LvEval { ctx: 100 },
+    ];
+    for suite in suites {
+        let set = EvalSet::build(&e, suite.sample_set(4, 3));
+        let c = cfg.clone();
+        let mut factory = move || -> Box<dyn KvCachePolicy> {
+            Box::new(FullCache::new(c.n_layers, c.d_model))
+        };
+        let r = set.eval(&e, &mut factory);
+        assert_eq!(r.n_samples, 4);
+        assert!(r.mean_kv_bytes > 0.0);
+        assert!(!r.decode_tok_s.is_empty());
+        // Untrained model: accuracy is whatever it is, but the scorer must
+        // produce a valid fraction.
+        assert!((0.0..=1.0).contains(&r.accuracy()));
+    }
+}
+
+#[test]
+fn answers_are_present_in_prompts() {
+    // Every generated sample must be solvable: the queried digits appear
+    // verbatim right after the queried key.
+    for suite in [
+        Suite::LongEval { ctx: 96 },
+        Suite::LongBench { ctx: 96, n_facts: 4 },
+        Suite::LvEval { ctx: 110 },
+    ] {
+        for s in suite.sample_set(10, 5) {
+            let qkey = s.prompt[s.prompt.len() - 2];
+            assert!(vocab::is_key(qkey));
+            let kpos = s
+                .prompt
+                .iter()
+                .position(|&t| t == qkey)
+                .expect("query key in context");
+            let window = &s.prompt[kpos..kpos + 3 + vocab::VALUE_LEN];
+            let has_answer = window
+                .windows(vocab::VALUE_LEN)
+                .any(|w| w == &s.answer[..]);
+            assert!(has_answer, "answer near key: {:?}", vocab::detokenize(window));
+        }
+    }
+}
+
+#[test]
+fn figure3_analysis_on_model_key_cache() {
+    let e = engine();
+    let corpus = CorpusConfig {
+        seq_len: 96,
+        ..Default::default()
+    };
+    let docs = calibration_docs(&corpus, 4, 17);
+    let rep = svd_analysis::analyze_key_cache(&e, &docs, e.w.cfg.n_layers / 2);
+    assert_eq!(rep.singular_values.len(), e.w.cfg.d_model);
+    // Spectrum sorted descending, cumulative energy valid.
+    assert!(rep
+        .singular_values
+        .windows(2)
+        .all(|w| w[0] >= w[1] - 1e-5));
+    assert!((rep.cum_energy.last().unwrap() - 1.0).abs() < 1e-3);
+    assert!(rep.half_rank_rel_error >= 0.0 && rep.half_rank_rel_error <= 1.0);
+}
+
+#[test]
+fn suite_ctx_budgets_respected_at_scale() {
+    for (name, suite) in Suite::table1_columns() {
+        let s = suite.sample_set(2, 8);
+        for t in s {
+            assert!(
+                t.ctx_len <= 512,
+                "{name}: sample too long for max_seq ({})",
+                t.ctx_len
+            );
+        }
+    }
+}

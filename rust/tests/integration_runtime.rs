@@ -1,0 +1,180 @@
+//! Cross-validation of the PJRT serving path against the Rust reference
+//! engine — THE architecture-level correctness signal: the quality numbers
+//! (measured on the Rust engine) are only meaningful for the served system
+//! if both execute the same function.
+//!
+//! Requires `make artifacts`. Tests are skipped gracefully if artifacts
+//! are missing so `cargo test` stays runnable pre-AOT.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use cskv::compress::svd_init::{init_factors, InitMethod};
+use cskv::compress::{LayerFactors, ModelFactors};
+use cskv::coordinator::pjrt_backend::{PjrtContext, PjrtCskvSession, PjrtFullSession};
+use cskv::coordinator::SequenceBackend;
+use cskv::data::tasks;
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, QuantMode};
+use cskv::model::{engine::Engine, ModelWeights};
+use cskv::runtime::trainer::Trainer;
+use cskv::runtime::{Runtime, Value};
+use cskv::util::prng::Pcg64;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = cskv::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+fn test_weights(rt: &Runtime) -> Arc<ModelWeights> {
+    Arc::new(ModelWeights::init(&rt.manifest.model, 2024))
+}
+
+#[test]
+fn manifest_matches_rust_config() {
+    let Some(rt) = runtime_or_skip() else { return };
+    rt.manifest.model.validate().unwrap();
+    assert_eq!(rt.manifest.model.d_model, 128);
+    let ranks: Vec<usize> = rt.manifest.cskv_ranks().into_iter().map(|(_, r)| r).collect();
+    assert!(ranks.contains(&26) && ranks.contains(&64));
+}
+
+#[test]
+fn pjrt_full_session_matches_rust_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let w = test_weights(&rt);
+    let engine = Engine::new(Arc::clone(&w));
+    let cfg = w.cfg.clone();
+
+    let mut rng = Pcg64::new(5);
+    let sample = tasks::line_retrieval(8, &mut rng);
+    let n_new = 6;
+
+    // Rust engine reference.
+    let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+    let (want, _) = engine.generate(&sample.prompt, n_new, &mut cache);
+
+    // PJRT path.
+    let ctx = Rc::new(PjrtContext::new(rt, w).unwrap());
+    let mut sess = PjrtFullSession::new(ctx);
+    let mut got = vec![sess.prefill(&sample.prompt).unwrap()];
+    for _ in 1..n_new {
+        got.push(sess.decode_next().unwrap());
+    }
+    assert_eq!(got, want, "PJRT decode_full must reproduce the rust engine");
+    assert_eq!(sess.kv_bytes(), cfg.kv_bytes_full(sample.prompt.len() + n_new - 1));
+}
+
+#[test]
+fn pjrt_cskv_session_matches_rust_policy() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let w = test_weights(&rt);
+    let engine = Engine::new(Arc::clone(&w));
+    let cfg = w.cfg.clone();
+
+    // SVD-initialized rank-26 factors (matches the exported artifact).
+    let layers: Vec<LayerFactors> = w
+        .layers
+        .iter()
+        .map(|lw| LayerFactors {
+            k: init_factors(&lw.wk, 26, InitMethod::Svd, None, 0),
+            v: init_factors(&lw.wv, 26, InitMethod::Svd, None, 0),
+        })
+        .collect();
+    let factors = Arc::new(ModelFactors {
+        layers,
+        provenance: "it-svd-r26".into(),
+    });
+
+    let mut rng = Pcg64::new(6);
+    let sample = tasks::line_retrieval(10, &mut rng);
+    let n_new = 5;
+
+    // Rust bi-branch policy (window must equal the artifact's: 32).
+    let mut policy = CskvCache::new(
+        Arc::clone(&factors),
+        cfg.d_model,
+        CskvConfig {
+            window: 32,
+            quant: QuantMode::None,
+        },
+    );
+    let (want, _) = engine.generate(&sample.prompt, n_new, &mut policy);
+
+    let ctx = Rc::new(PjrtContext::new(rt, w).unwrap());
+    let mut sess = PjrtCskvSession::new(ctx, factors).unwrap();
+    let mut got = vec![sess.prefill(&sample.prompt).unwrap()];
+    for _ in 1..n_new {
+        got.push(sess.decode_next().unwrap());
+    }
+    assert_eq!(
+        got, want,
+        "PJRT decode_cskv (fused Pallas kernel) must reproduce the rust bi-branch cache"
+    );
+    // Compressed session must be much smaller than a full cache would be.
+    let full = cfg.kv_bytes_full(sample.prompt.len() + n_new - 1);
+    assert!(sess.kv_bytes() < full, "{} !< {full}", sess.kv_bytes());
+}
+
+#[test]
+fn pjrt_prefill_logits_match_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let w = test_weights(&rt);
+    let engine = Engine::new(Arc::clone(&w));
+    let prompt: Vec<usize> = vec![1, 30, 77, 120, 9, 64, 200, 3];
+    let rec = engine.prefill(&prompt, None);
+
+    let mut tokens: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+    tokens.resize(w.cfg.max_seq, 0);
+    let mut inputs: Vec<Value> = w.flat_order().iter().map(|(_, m)| Value::from_mat(m)).collect();
+    inputs.push(Value::i32_vec(vec![w.cfg.max_seq], tokens));
+    let out = rt.execute("prefill", &inputs).unwrap();
+    let logits = out[0].to_mat().unwrap();
+    let mut max_diff = 0.0f32;
+    for t in 0..prompt.len() {
+        for v in 0..w.cfg.vocab_size {
+            max_diff = max_diff.max((logits.at(t, v) - rec.logits.at(t, v)).abs());
+        }
+    }
+    assert!(
+        max_diff < 5e-3,
+        "XLA vs rust-engine logits diverge: max {max_diff}"
+    );
+}
+
+#[test]
+fn trainer_reduces_loss_through_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    if rt.manifest.get("train_step").is_err() {
+        eprintln!("SKIP: train_step not exported");
+        return;
+    }
+    let mut trainer = Trainer::new(&rt, 7).unwrap();
+    let losses = trainer
+        .train(&cskv::runtime::trainer::TrainConfig {
+            steps: 6,
+            lr: 3e-3,
+            seed: 7,
+            log_every: 100,
+        })
+        .unwrap();
+    assert_eq!(losses.len(), 6);
+    assert!(
+        losses[5] < losses[0],
+        "loss should drop within 6 steps: {losses:?}"
+    );
+    // ~uniform initial loss: ln(256) ≈ 5.55.
+    assert!((5.0..6.0).contains(&losses[0]), "init loss {}", losses[0]);
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // Wrong arity.
+    assert!(rt.execute("prefill", &[]).is_err());
+    // Unknown executable.
+    assert!(rt.execute("nope", &[]).is_err());
+}
