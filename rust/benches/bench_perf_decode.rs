@@ -2,12 +2,20 @@
 //!
 //! Three measurements:
 //! 1. micro: per-token decode latency vs context length, full vs CSKV
-//!    cache (rust engine) — shows the materialize/attention cost model.
+//!    (fp32 and int4) with the engine's persistent incremental
+//!    [`DecodeState`], plus "rematerialize" rows that rebuild the views
+//!    from scratch every step — exactly what the pre-incremental decode
+//!    path did, so one run shows the O(context) → O(window + rank)
+//!    speedup directly.
 //! 2. serving: coordinator throughput under a fixed KV budget, full vs
 //!    CSKV backends — the operational payoff (more concurrency at equal
 //!    memory).
 //! 3. PJRT: per-step latency of the AOT `decode_full` vs `decode_cskv_r26`
 //!    executables (the served artifacts; skipped if artifacts missing).
+//!
+//! Results are also written to `runs/BENCH_perf_decode.json`
+//! (name → median ns + git rev) so the perf trajectory is tracked
+//! across PRs.
 //!
 //! Run: `cargo bench --bench bench_perf_decode [-- --fast]`
 
@@ -22,6 +30,7 @@ use cskv::data::tasks;
 use cskv::eval::experiments::{factors_for, Env};
 use cskv::finetune::recon::QatMode;
 use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::DecodeState;
 use cskv::runtime::Runtime;
 use cskv::util::bench::{print_bench_header, Bencher};
 use cskv::util::cli::Args;
@@ -43,25 +52,73 @@ fn main() -> anyhow::Result<()> {
     // ---- 1. micro: decode step latency vs context ----------------------
     let mut b = if fast { Bencher::fast() } else { Bencher::new() };
     let mut rng = Pcg64::new(3);
-    for ctx in [128usize, 256, 509] {
-        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
-        {
-            let mut p = FullCache::new(cfg.n_layers, cfg.d_model);
-            let _ = env.engine.prefill(&prompt, Some(&mut p as &mut dyn KvCachePolicy));
-            b.time(&format!("rust decode/token full ctx={ctx}"), || {
-                let _ = env.engine.decode_step(&mut p, 42, ctx);
-            });
-        }
-        {
-            let mut p = CskvCache::new(
+    let variants: [(&str, Option<QuantMode>); 3] = [
+        ("full", None),
+        ("cskv80", Some(QuantMode::None)),
+        ("cskv80-int4", Some(QuantMode::Int4)),
+    ];
+    let mk_policy = |quant: Option<QuantMode>| -> Box<dyn KvCachePolicy> {
+        match quant {
+            None => Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+            Some(q) => Box::new(CskvCache::new(
                 Arc::clone(&factors),
                 cfg.d_model,
-                CskvConfig { window: 32, quant: QuantMode::None },
-            );
-            let _ = env.engine.prefill(&prompt, Some(&mut p as &mut dyn KvCachePolicy));
-            b.time(&format!("rust decode/token cskv80 ctx={ctx}"), || {
-                let _ = env.engine.decode_step(&mut p, 42, ctx);
+                CskvConfig { window: 32, quant: q },
+            )),
+        }
+    };
+    for ctx in [128usize, 256, 509] {
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        for (label, quant) in variants {
+            // Incremental path: one persistent DecodeState, synced in
+            // place each step (the production decode loop).
+            let mut p = mk_policy(quant);
+            let _ = env.engine.prefill(&prompt, Some(p.as_mut()));
+            let mut state = DecodeState::new(&cfg);
+            state.reserve(ctx + 512);
+            p.reserve(512);
+            let mut pos = ctx;
+            b.time(&format!("rust decode/token {label} ctx={ctx}"), || {
+                let _ = env.engine.decode_step_with(p.as_mut(), 42, pos, &mut state);
+                pos += 1;
             });
+        }
+    }
+    // Rematerialize rows: a fresh DecodeState every step forces the full
+    // reconstruct + RoPE rebuild the pre-incremental engine paid per
+    // token — the denominator of the headline speedup.
+    {
+        let ctx = 509usize;
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        for (label, quant) in variants {
+            let mut p = mk_policy(quant);
+            let _ = env.engine.prefill(&prompt, Some(p.as_mut()));
+            let mut pos = ctx;
+            b.time(&format!("rust decode/token {label} ctx={ctx} rematerialize"), || {
+                let mut state = DecodeState::new(&cfg);
+                let _ = env.engine.decode_step_with(p.as_mut(), 42, pos, &mut state);
+                pos += 1;
+            });
+        }
+        // Print the headline ratios (median-based).
+        for (label, _) in variants {
+            let med = |name: &str| -> Option<f64> {
+                b.results()
+                    .iter()
+                    .find(|r| r.name == name)
+                    .map(|r| r.samples.percentile(50.0))
+            };
+            if let (Some(inc), Some(remat)) = (
+                med(&format!("rust decode/token {label} ctx={ctx}")),
+                med(&format!("rust decode/token {label} ctx={ctx} rematerialize")),
+            ) {
+                if inc > 0.0 {
+                    println!(
+                        "speedup {label} ctx={ctx}: incremental views {:.2}x vs rematerialize",
+                        remat / inc
+                    );
+                }
+            }
         }
     }
 
@@ -141,6 +198,11 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("(artifacts missing — PJRT section skipped; run `make artifacts`)");
     }
+
+    // Machine-readable trajectory: name → median ns (+ git rev).
+    let json_path = cskv::runs_dir().join("BENCH_perf_decode.json");
+    b.write_json("bench_perf_decode", &json_path)?;
+    println!("wrote {}", json_path.display());
     println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
     Ok(())
 }

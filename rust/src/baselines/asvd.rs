@@ -11,7 +11,7 @@ use std::sync::Arc;
 use crate::compress::ModelFactors;
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, GrowMat, KvCachePolicy};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 pub struct AsvdCache {
     factors: Arc<ModelFactors>,
@@ -70,6 +70,25 @@ impl KvCachePolicy for AsvdCache {
         l.n += 1;
     }
 
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let lf = &self.factors.layers[layer];
+        let l = &self.layers[layer];
+        let n = l.n;
+        view.truncate(n);
+        // Compressed features are append-only and immutable: each row is
+        // reconstructed (C·B) and RoPE'd exactly once.
+        let start = view.len();
+        if n > start {
+            let kh = lf.k.reconstruct(&l.ck.slice(start, n));
+            let vh = lf.v.reconstruct(&l.cv.slice(start, n));
+            for (j, i) in (start..n).enumerate() {
+                view.write_row(i, kh.row(j), vh.row(j), i, i);
+            }
+        }
+        view.stable_rows = n;
+        view.hist_rows = n;
+    }
+
     fn materialize(&self, layer: usize) -> CacheView {
         let lf = &self.factors.layers[layer];
         let l = &self.layers[layer];
@@ -81,6 +100,13 @@ impl KvCachePolicy for AsvdCache {
             v,
             rope_pos: pos.clone(),
             abs_pos: pos,
+        }
+    }
+
+    fn reserve(&mut self, additional_tokens: usize) {
+        for l in &mut self.layers {
+            l.ck.reserve_rows(additional_tokens);
+            l.cv.reserve_rows(additional_tokens);
         }
     }
 

@@ -11,7 +11,7 @@
 
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, GrowMat, KvCachePolicy};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 pub struct H2oCache {
     budget: usize,
@@ -26,7 +26,18 @@ struct LayerState {
     abs_pos: Vec<usize>,
     score: Vec<f32>,
     n: usize,
+    /// Cumulative eviction count — synced views record it as their epoch.
+    evictions: usize,
+    /// Recent evictions as (ordinal, kept-list index) pairs, capped at
+    /// [`EVICT_LOG_CAP`]. Lets any view compute the lowest row disturbed
+    /// since its own last sync; views that fell further behind than the
+    /// log reaches rebuild fully.
+    evict_log: std::collections::VecDeque<(usize, usize)>,
 }
+
+/// Eviction-log depth: one eviction happens per appended token once at
+/// budget, so this covers views up to 128 tokens stale.
+const EVICT_LOG_CAP: usize = 128;
 
 impl H2oCache {
     pub fn new(n_layers: usize, d_model: usize, budget: usize) -> Self {
@@ -41,6 +52,8 @@ impl H2oCache {
                     abs_pos: Vec::new(),
                     score: Vec::new(),
                     n: 0,
+                    evictions: 0,
+                    evict_log: std::collections::VecDeque::new(),
                 })
                 .collect(),
         }
@@ -65,6 +78,11 @@ impl H2oCache {
             l.v.remove_row(worst);
             l.abs_pos.remove(worst);
             l.score.remove(worst);
+            l.evictions += 1;
+            l.evict_log.push_back((l.evictions, worst));
+            if l.evict_log.len() > EVICT_LOG_CAP {
+                l.evict_log.pop_front();
+            }
         }
     }
 }
@@ -109,6 +127,40 @@ impl KvCachePolicy for H2oCache {
         self.evict(layer);
     }
 
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let l = &self.layers[layer];
+        let kept = l.abs_pos.len();
+        // Rows below the first index disturbed since this view's last
+        // sync kept their position and contents; everything after is
+        // rewritten. A view with no missed evictions only appends.
+        let start = if view.epoch == l.evictions {
+            view.len().min(kept)
+        } else {
+            let covered = view.epoch < l.evictions
+                && l.evict_log
+                    .front()
+                    .is_some_and(|&(ordinal, _)| ordinal <= view.epoch + 1);
+            if covered {
+                let mut lo = usize::MAX;
+                for &(ordinal, idx) in &l.evict_log {
+                    if ordinal > view.epoch {
+                        lo = lo.min(idx);
+                    }
+                }
+                lo.min(view.len()).min(kept)
+            } else {
+                // Stale beyond the log (or foreign view): full rebuild.
+                0
+            }
+        };
+        view.truncate(start);
+        for i in start..kept {
+            // H2O keeps original (absolute) positions.
+            view.write_row(i, l.k.row(i), l.v.row(i), l.abs_pos[i], l.abs_pos[i]);
+        }
+        view.epoch = l.evictions;
+    }
+
     fn materialize(&self, layer: usize) -> CacheView {
         let l = &self.layers[layer];
         CacheView {
@@ -117,6 +169,14 @@ impl KvCachePolicy for H2oCache {
             // H2O keeps original (absolute) positions.
             rope_pos: l.abs_pos.clone(),
             abs_pos: l.abs_pos.clone(),
+        }
+    }
+
+    fn reserve(&mut self, additional_tokens: usize) {
+        for l in &mut self.layers {
+            let extra = additional_tokens.min(self.budget + 1);
+            l.k.reserve_rows(extra);
+            l.v.reserve_rows(extra);
         }
     }
 
@@ -219,6 +279,29 @@ mod tests {
         }
         // Newest token always kept (it's in the recent window).
         assert_eq!(*c.materialize(0).abs_pos.last().unwrap(), 31);
+    }
+
+    #[test]
+    fn sync_view_incremental_matches_fresh_under_eviction() {
+        let mut c = setup(8, 32, &[3, 7]);
+        let mut live = DecodeView::new(4, 2, 10000.0);
+        c.sync_view(0, &mut live);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..12 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            c.append(0, &row, &row, &row);
+            c.sync_view(0, &mut live);
+            live.validate();
+            // Random decode-attention feedback moves the eviction target
+            // around, exercising mid-list dirty ranges.
+            let probs: Vec<f32> = (0..live.len()).map(|_| rng.normal().abs()).collect();
+            let abs: Vec<usize> = live.abs_positions().to_vec();
+            c.observe_decode_attn(0, &abs, &probs);
+        }
+        let mut fresh = DecodeView::new(4, 2, 10000.0);
+        c.sync_view(0, &mut fresh);
+        assert!(live.same_contents(&fresh));
+        assert_eq!(live.len(), c.len(0));
     }
 
     #[test]

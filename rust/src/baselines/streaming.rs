@@ -11,7 +11,7 @@
 
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, GrowMat, KvCachePolicy};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 pub struct StreamingLlmCache {
     n_sink: usize,
@@ -25,6 +25,11 @@ struct LayerState {
     abs_pos: Vec<usize>,
     /// Total tokens seen (kept + evicted).
     n: usize,
+    /// Cumulative eviction count — synced views record it as their epoch.
+    /// Every eviction shifts all non-sink rows *and* their cache-relative
+    /// RoPE positions, so any missed eviction dirties rows from
+    /// `n_sink` on.
+    evictions: usize,
 }
 
 impl StreamingLlmCache {
@@ -41,6 +46,7 @@ impl StreamingLlmCache {
                     v: GrowMat::new(d_model),
                     abs_pos: Vec::new(),
                     n: 0,
+                    evictions: 0,
                 })
                 .collect(),
         }
@@ -55,6 +61,7 @@ impl StreamingLlmCache {
             l.k.remove_row(n_sink);
             l.v.remove_row(n_sink);
             l.abs_pos.remove(n_sink);
+            l.evictions += 1;
         }
     }
 }
@@ -88,6 +95,27 @@ impl KvCachePolicy for StreamingLlmCache {
         self.evict(layer);
     }
 
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let n_sink = self.n_sink;
+        let l = &self.layers[layer];
+        let kept = l.abs_pos.len();
+        // Sink rows never move: index, cache-relative RoPE position and
+        // contents are all stable. Any eviction shifts every non-sink row
+        // *and changes its RoPE position*, so a view that missed one
+        // rebuilds everything from the first non-sink row.
+        let start = if view.epoch == l.evictions {
+            view.len().min(kept)
+        } else {
+            n_sink.min(view.len()).min(kept)
+        };
+        view.truncate(start);
+        for i in start..kept {
+            // Cache-relative RoPE positions: row i rotates at angle i.
+            view.write_row(i, l.k.row(i), l.v.row(i), i, l.abs_pos[i]);
+        }
+        view.epoch = l.evictions;
+    }
+
     fn materialize(&self, layer: usize) -> CacheView {
         let l = &self.layers[layer];
         let n = l.abs_pos.len();
@@ -97,6 +125,15 @@ impl KvCachePolicy for StreamingLlmCache {
             // Cache-relative positions: 0..n in cache order.
             rope_pos: (0..n).collect(),
             abs_pos: l.abs_pos.clone(),
+        }
+    }
+
+    fn reserve(&mut self, additional_tokens: usize) {
+        let cap = self.budget + 1;
+        for l in &mut self.layers {
+            let extra = additional_tokens.min(cap);
+            l.k.reserve_rows(extra);
+            l.v.reserve_rows(extra);
         }
     }
 
@@ -159,6 +196,27 @@ mod tests {
             // sink always present
             assert_eq!(view.abs_pos[0], 0);
         }
+    }
+
+    #[test]
+    fn sync_view_incremental_matches_fresh_while_rolling() {
+        let mut c = StreamingLlmCache::new(1, 4, 2, 6);
+        ingest(&mut c, 4, 4, 8); // below budget: append-only phase first
+        let mut live = DecodeView::new(4, 2, 10000.0);
+        c.sync_view(0, &mut live);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            c.append(0, &row, &row, &row);
+            c.sync_view(0, &mut live);
+            live.validate();
+        }
+        let mut fresh = DecodeView::new(4, 2, 10000.0);
+        c.sync_view(0, &mut fresh);
+        assert!(live.same_contents(&fresh));
+        assert_eq!(live.len(), c.len(0));
+        // Cache-relative positions are contiguous in the view.
+        assert_eq!(live.rope_positions().to_vec(), (0..live.len()).collect::<Vec<_>>());
     }
 
     #[test]

@@ -94,26 +94,23 @@ pub fn quantize_block(m: &Mat, axis: QuantAxis) -> QuantizedBlock {
 impl QuantizedBlock {
     /// Dequantize back to f32.
     pub fn dequantize(&self) -> Mat {
-        let mut out = Mat::zeros(self.rows, self.cols);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                let idx = i * self.cols + j;
-                let byte = self.packed[idx / 2];
-                let q = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                let p = match self.axis {
-                    QuantAxis::PerChannel => j,
-                    QuantAxis::PerToken => i,
-                };
-                *out.at_mut(i, j) = q as f32 * self.scale[p] + self.zero[p];
-            }
-        }
-        out
+        self.dequantize_rows(0, self.rows)
     }
 
     /// Dequantize a row range `[lo, hi)` only (tile-wise reconstruction).
     pub fn dequantize_rows(&self, lo: usize, hi: usize) -> Mat {
-        assert!(lo <= hi && hi <= self.rows);
         let mut out = Mat::zeros(hi - lo, self.cols);
+        self.dequantize_rows_into(lo, hi, &mut out.data);
+        out
+    }
+
+    /// Dequantize rows `[lo, hi)` directly into a caller-provided slice of
+    /// `(hi - lo) * cols` floats — the allocation-free path used when
+    /// assembling multi-group reconstructions into one preallocated
+    /// buffer.
+    pub fn dequantize_rows_into(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        assert!(lo <= hi && hi <= self.rows);
+        assert_eq!(out.len(), (hi - lo) * self.cols);
         for i in lo..hi {
             for j in 0..self.cols {
                 let idx = i * self.cols + j;
@@ -123,10 +120,9 @@ impl QuantizedBlock {
                     QuantAxis::PerChannel => j,
                     QuantAxis::PerToken => i,
                 };
-                *out.at_mut(i - lo, j) = q as f32 * self.scale[p] + self.zero[p];
+                out[(i - lo) * self.cols + j] = q as f32 * self.scale[p] + self.zero[p];
             }
         }
-        out
     }
 
     /// True storage footprint: packed codes + affine params.

@@ -7,7 +7,7 @@
 //! [`super::pjrt_backend`] that execute the AOT artifacts.
 
 use crate::kvcache::KvCachePolicy;
-use crate::model::engine::Engine;
+use crate::model::engine::{DecodeState, Engine};
 use crate::tensor::ops;
 
 /// One in-flight sequence's execution state.
@@ -24,21 +24,44 @@ pub trait SequenceBackend {
     fn kv_bytes(&self) -> usize;
 }
 
-/// Rust reference engine + pluggable cache policy.
+/// Rust reference engine + pluggable cache policy. Holds a persistent
+/// [`DecodeState`] across decode steps, so the policy updates its cache
+/// views incrementally instead of rematerializing per token.
 pub struct RustSequenceBackend {
     engine: Engine,
     policy: Box<dyn KvCachePolicy>,
+    state: DecodeState,
     pos: usize,
     last_token: usize,
+    /// Tokens of view/cache capacity reserved so far. The backend does
+    /// not know the generation length up front, so capacity is grown in
+    /// [`RESERVE_CHUNK`] batches ahead of `pos` — decode steps between
+    /// top-ups stay allocation-free.
+    reserved_tokens: usize,
 }
+
+/// Capacity top-up granularity for open-ended generations.
+const RESERVE_CHUNK: usize = 256;
 
 impl RustSequenceBackend {
     pub fn new(engine: Engine, policy: Box<dyn KvCachePolicy>) -> Self {
+        let state = DecodeState::new(&engine.w.cfg);
         RustSequenceBackend {
             engine,
             policy,
+            state,
             pos: 0,
             last_token: 0,
+            reserved_tokens: 0,
+        }
+    }
+
+    /// Ensure at least one more token of headroom, topping up in chunks.
+    fn reserve_ahead(&mut self) {
+        if self.pos + 1 > self.reserved_tokens {
+            self.reserved_tokens = self.pos + RESERVE_CHUNK;
+            self.state.reserve(self.reserved_tokens);
+            self.policy.reserve(RESERVE_CHUNK);
         }
     }
 }
@@ -52,16 +75,21 @@ impl SequenceBackend for RustSequenceBackend {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let rec = self.engine.prefill(prompt, Some(self.policy.as_mut()));
         self.pos = prompt.len();
+        self.reserve_ahead();
         self.last_token = ops::argmax(rec.logits.row(prompt.len() - 1));
         Ok(self.last_token)
     }
 
     fn decode_next(&mut self) -> anyhow::Result<usize> {
-        let logits = self
-            .engine
-            .decode_step(self.policy.as_mut(), self.last_token, self.pos);
+        self.reserve_ahead();
+        let logits = self.engine.decode_step_with(
+            self.policy.as_mut(),
+            self.last_token,
+            self.pos,
+            &mut self.state,
+        );
         self.pos += 1;
-        self.last_token = ops::argmax(&logits);
+        self.last_token = ops::argmax(logits);
         Ok(self.last_token)
     }
 

@@ -9,7 +9,7 @@
 use crate::data::tasks::{score_exact, TaskSample};
 use crate::data::vocab;
 use crate::kvcache::KvCachePolicy;
-use crate::model::engine::{Engine, PrefillRecord};
+use crate::model::engine::{DecodeState, Engine, PrefillRecord};
 use crate::tensor::ops;
 use crate::util::stats::Samples;
 
@@ -149,13 +149,16 @@ pub fn replay_generate(
     }
     let mut out = Vec::with_capacity(n_new);
     let mut next = ops::argmax(rec.logits.row(prompt_len - 1));
+    let mut state = DecodeState::new(&engine.w.cfg);
+    state.reserve(prompt_len + n_new);
+    policy.reserve(n_new);
     for i in 0..n_new {
         out.push(next);
         if i + 1 == n_new {
             break;
         }
-        let logits = engine.decode_step(policy, next, prompt_len + i);
-        next = ops::argmax(&logits);
+        let logits = engine.decode_step_with(policy, next, prompt_len + i, &mut state);
+        next = ops::argmax(logits);
     }
     out
 }

@@ -20,7 +20,7 @@ use crate::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};
 use crate::compress::ModelFactors;
 use crate::tensor::Mat;
 
-use super::{CacheView, GrowMat, KvCachePolicy};
+use super::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 /// Quantization applied to the compressed branch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,29 +91,59 @@ impl CompressedStore {
         while self.resid.rows() >= GROUP {
             let block = self.resid.slice(0, GROUP);
             self.groups.push(quantize_block(&block, self.axis));
-            for _ in 0..GROUP {
-                self.resid.remove_row(0);
-            }
+            // One drain of the whole group — the per-row `remove_row(0)`
+            // loop this replaces drained the entire buffer GROUP times
+            // (O(GROUP²·rank) per seal).
+            self.resid.remove_rows(0, GROUP);
         }
+    }
+
+    /// Tokens stored in sealed (immutable) quantized groups.
+    fn sealed_rows(&self) -> usize {
+        self.groups.len() * GROUP
     }
 
     /// Materialize rows `[0, n)` as fp32 (dequantizing groups as needed).
     fn rows(&self, n: usize) -> Mat {
-        assert!(n <= self.len());
-        let mut out = Mat::zeros(0, self.rank);
-        let mut remaining = n;
-        for g in &self.groups {
-            if remaining == 0 {
+        self.rows_range(0, n)
+    }
+
+    /// Rows `[lo, hi)` as fp32, dequantized/copied directly into one
+    /// preallocated matrix (no repeated `vcat` reallocation).
+    fn rows_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.len());
+        let mut out = Mat::zeros(hi - lo, self.rank);
+        let c = self.rank;
+        for (gi, g) in self.groups.iter().enumerate() {
+            let g0 = gi * GROUP;
+            if g0 >= hi {
                 break;
             }
-            let take = remaining.min(GROUP);
-            out = out.vcat(&g.dequantize_rows(0, take));
-            remaining -= take;
+            let g1 = g0 + GROUP;
+            let s = lo.max(g0);
+            let e = hi.min(g1);
+            if s < e {
+                g.dequantize_rows_into(s - g0, e - g0, &mut out.data[(s - lo) * c..(e - lo) * c]);
+            }
         }
-        if remaining > 0 {
-            out = out.vcat(&self.resid.slice(0, remaining));
+        let sealed = self.sealed_rows();
+        if hi > sealed {
+            let s = lo.max(sealed);
+            out.data[(s - lo) * c..(hi - lo) * c]
+                .copy_from_slice(&self.resid.data[(s - sealed) * c..(hi - sealed) * c]);
         }
         out
+    }
+
+    /// Reserve storage for `additional` more tokens.
+    fn reserve(&mut self, additional: usize) {
+        match self.quant {
+            QuantMode::None => self.resid.reserve_rows(additional),
+            QuantMode::Int4 => {
+                self.groups.reserve(additional / GROUP + 1);
+                self.resid.reserve_rows(additional.min(2 * GROUP));
+            }
+        }
     }
 
     fn bytes(&self) -> usize {
@@ -129,11 +159,6 @@ struct LayerState {
     win_k: GrowMat,
     win_v: GrowMat,
     win_pos: Vec<usize>,
-    /// §Perf: incrementally-maintained reconstructions of the compressed
-    /// history (fp32 mode only — quantized rows change when groups seal).
-    /// Rows `[0, recon_rows)` of `khat/vhat` are valid.
-    khat: std::cell::RefCell<GrowMat>,
-    vhat: std::cell::RefCell<GrowMat>,
 }
 
 /// The CSKV bi-branch cache policy.
@@ -156,8 +181,6 @@ impl CskvCache {
                 win_k: GrowMat::new(d_model),
                 win_v: GrowMat::new(d_model),
                 win_pos: Vec::new(),
-                khat: std::cell::RefCell::new(GrowMat::new(d_model)),
-                vhat: std::cell::RefCell::new(GrowMat::new(d_model)),
             })
             .collect();
         let label = format!(
@@ -230,6 +253,57 @@ impl KvCachePolicy for CskvCache {
         self.push_window(layer, k, v, pos);
     }
 
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let l = &self.layers[layer];
+        let lf = &self.factors.layers[layer];
+        let n = l.n;
+        let win_len = l.win_pos.len();
+        let hist = n - win_len;
+        let sealed = l.ck.sealed_rows();
+
+        // Safety for views that are ahead of this policy (fresh views are
+        // behind and need no truncation; CSKV itself never shrinks).
+        view.truncate(n);
+
+        // Rows [0, valid_hist) already hold the final reconstruction.
+        let mut valid_hist = view.hist_rows.min(hist).min(view.len());
+        if view.epoch != sealed {
+            // Groups sealed since this view last synced: residual-derived
+            // rows now dequantize differently — drop back to the
+            // sealed-stable prefix recorded at the previous sync.
+            valid_hist = valid_hist.min(view.stable_rows);
+        }
+
+        // 1. (Re)write history rows [valid_hist, hist): K̂ = C·B, RoPE'd
+        //    at their absolute positions. Batched so the first sync after
+        //    prefill is a single GEMM; in steady state this is the one
+        //    token migrating out of the window (fp32) or the residual
+        //    tail (int4).
+        if hist > valid_hist {
+            let kh = lf.k.reconstruct(&l.ck.rows_range(valid_hist, hist));
+            let vh = lf.v.reconstruct(&l.cv.rows_range(valid_hist, hist));
+            for (j, r) in (valid_hist..hist).enumerate() {
+                view.write_row(r, kh.row(j), vh.row(j), r, r);
+            }
+        }
+
+        // 2. Window rows [hist, n): row t ↔ token t, exact pre-RoPE K/V
+        //    from the window branch. A row already present was written
+        //    from the same token's immutable window entry — skip it; only
+        //    genuinely new tokens are appended.
+        for t in view.len().max(hist)..n {
+            let wi = t - hist;
+            view.write_row(t, l.win_k.row(wi), l.win_v.row(wi), t, t);
+        }
+
+        view.hist_rows = hist;
+        view.stable_rows = match self.cfg.quant {
+            QuantMode::None => hist,
+            QuantMode::Int4 => hist.min(sealed),
+        };
+        view.epoch = sealed;
+    }
+
     fn materialize(&self, layer: usize) -> CacheView {
         let l = &self.layers[layer];
         let lf = &self.factors.layers[layer];
@@ -237,23 +311,8 @@ impl KvCachePolicy for CskvCache {
         let hist = l.n - win_len;
         let (mut kk, mut vv) = (Mat::zeros(0, l.win_k.cols), Mat::zeros(0, l.win_v.cols));
         if hist > 0 {
-            if self.cfg.quant == QuantMode::None {
-                // Incremental path: fp32 compressed rows are immutable, so
-                // only rows added since the last materialize need the
-                // C·B reconstruction (O(Δ·r·d) instead of O(n·r·d)).
-                let mut khat = l.khat.borrow_mut();
-                let mut vhat = l.vhat.borrow_mut();
-                let done = khat.rows();
-                if hist > done {
-                    khat.push_mat(&lf.k.reconstruct(&l.ck.resid.slice(done, hist)));
-                    vhat.push_mat(&lf.v.reconstruct(&l.cv.resid.slice(done, hist)));
-                }
-                kk = khat.slice(0, hist);
-                vv = vhat.slice(0, hist);
-            } else {
-                kk = lf.k.reconstruct(&l.ck.rows(hist));
-                vv = lf.v.reconstruct(&l.cv.rows(hist));
-            }
+            kk = lf.k.reconstruct(&l.ck.rows(hist));
+            vv = lf.v.reconstruct(&l.cv.rows(hist));
         }
         let k = kk.vcat(&l.win_k.to_mat());
         let v = vv.vcat(&l.win_v.to_mat());
@@ -264,6 +323,13 @@ impl KvCachePolicy for CskvCache {
             v,
             rope_pos: pos.clone(),
             abs_pos: pos,
+        }
+    }
+
+    fn reserve(&mut self, additional_tokens: usize) {
+        for l in &mut self.layers {
+            l.ck.reserve(additional_tokens);
+            l.cv.reserve(additional_tokens);
         }
     }
 
@@ -436,6 +502,36 @@ mod tests {
                 .iter()
                 .zip(expect.row(i))
                 .all(|(a, b)| (a - b).abs() < 1e-4));
+        }
+    }
+
+    #[test]
+    fn sync_view_incremental_matches_fresh_across_seals() {
+        let d = 16;
+        for quant in [QuantMode::None, QuantMode::Int4] {
+            let f = lowrank_factors(d, 4, 1, 9);
+            let mut c = CskvCache::new(f, d, CskvConfig { window: 3, quant });
+            let mut rng = Pcg64::new(10);
+            let t = GROUP + 5;
+            let x = Mat::randn(t, d, 1.0, &mut rng);
+            let k = Mat::randn(t, d, 1.0, &mut rng);
+            let v = Mat::randn(t, d, 1.0, &mut rng);
+            c.ingest_prefill(0, &x, &k, &v);
+            let mut live = DecodeView::new(d, 2, 10000.0);
+            c.sync_view(0, &mut live);
+            // Drive across a seal boundary, syncing the live view every
+            // step like the engine does.
+            for _ in 0..(GROUP + 9) {
+                let row: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                c.append(0, &row, &row, &row);
+                c.sync_view(0, &mut live);
+                live.validate();
+            }
+            // A fresh view rebuilt from scratch must match bit-for-bit.
+            let mut fresh = DecodeView::new(d, 2, 10000.0);
+            c.sync_view(0, &mut fresh);
+            assert!(live.same_contents(&fresh), "quant={quant:?}");
+            assert_eq!(live.len(), c.len(0));
         }
     }
 

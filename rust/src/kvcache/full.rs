@@ -2,7 +2,7 @@
 
 use crate::tensor::Mat;
 
-use super::{CacheView, GrowMat, KvCachePolicy};
+use super::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 /// Stores every token's exact K/V for every layer.
 pub struct FullCache {
@@ -43,6 +43,19 @@ impl KvCachePolicy for FullCache {
         self.layers[layer].v.push_row(v);
     }
 
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let l = &self.layers[layer];
+        let n = l.k.rows();
+        view.truncate(n);
+        // Append-only: rows already in the view are final (exact K/V,
+        // absolute RoPE positions never change).
+        for i in view.len()..n {
+            view.write_row(i, l.k.row(i), l.v.row(i), i, i);
+        }
+        view.stable_rows = n;
+        view.hist_rows = n;
+    }
+
     fn materialize(&self, layer: usize) -> CacheView {
         let l = &self.layers[layer];
         let n = l.k.rows();
@@ -51,6 +64,13 @@ impl KvCachePolicy for FullCache {
             v: l.v.to_mat(),
             rope_pos: (0..n).collect(),
             abs_pos: (0..n).collect(),
+        }
+    }
+
+    fn reserve(&mut self, additional_tokens: usize) {
+        for l in &mut self.layers {
+            l.k.reserve_rows(additional_tokens);
+            l.v.reserve_rows(additional_tokens);
         }
     }
 

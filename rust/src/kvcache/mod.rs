@@ -11,13 +11,55 @@
 //!    K/V to make *prefill attention itself* lossy (ASVD does; CSKV does
 //!    not — its prefill is exact by design, §2.1).
 //! 2. Each decode step appends one token via [`KvCachePolicy::append`]
-//!    and materializes the effective cache via
-//!    [`KvCachePolicy::materialize`]. Keys come back **pre-RoPE** along
-//!    with the RoPE position to use per row, so policies can use absolute
-//!    positions (CSKV, H2O, full) or cache-relative positions
-//!    (StreamingLLM) under one interface.
-//! 3. [`KvCachePolicy::kv_bytes`] reports the true storage footprint, so
+//!    and then brings the engine-owned per-layer [`DecodeView`] up to
+//!    date via [`KvCachePolicy::sync_view`]. The view holds the
+//!    *reconstructed and RoPE'd* keys plus values and position vectors;
+//!    policies update it **in place**, rewriting only rows that actually
+//!    changed since the last sync (see the cost model below).
+//! 3. [`KvCachePolicy::materialize`] remains as the cold-path oracle: a
+//!    from-scratch [`CacheView`] with **pre-RoPE** keys, used by tests,
+//!    diagnostics and structural checks — never by the decode hot loop.
+//! 4. [`KvCachePolicy::kv_bytes`] reports the true storage footprint, so
 //!    every experiment compares methods at equal memory budgets.
+//!
+//! ## Decode cost model
+//!
+//! Before the incremental views, `Engine::decode_step` re-materialized the
+//! whole cache every token: reconstruct `K̂ = C·B` for all `n` historical
+//! tokens (dequantizing every sealed int4 group), clone the full `[n, d]`
+//! key matrix, and re-apply RoPE to every row — `O(n·r·d)` work and
+//! `O(n·d)` fresh allocations *per token*, i.e. `O(n²·r·d)` per generated
+//! sequence. The incremental [`DecodeView`] exploits the immutability
+//! that KIVI-style group quantization and H2O-style eviction already
+//! assume: sealed history never changes, so it is reconstructed,
+//! dequantized and RoPE'd **exactly once**. Per-token sync cost by
+//! policy:
+//!
+//! | policy        | rows rewritten per token | cost/token (sync)        |
+//! |---------------|--------------------------|--------------------------|
+//! | full          | 0 (append 1)             | `O(d)`                   |
+//! | CSKV fp32     | 1 migrated + 1 appended  | `O(r·d)`                 |
+//! | CSKV int4     | ≤ residual (< GROUP)     | `O(GROUP·r·d)` amortized `O(r·d)` |
+//! | H2O           | suffix from evict point  | `O(budget·d)` worst case |
+//! | StreamingLLM  | non-sink rows on evict   | `O(budget·d)` worst case |
+//! | ASVD          | 0 (append 1)             | `O(r·d)`                 |
+//!
+//! Attention itself still reads all live rows (`O(n_eff·d)` dot products)
+//! — the point is that *rematerialization* no longer dominates, and the
+//! steady-state decode step performs no heap allocation at all for
+//! append-only policies (`rust/tests/decode_alloc.rs` enforces this for
+//! the full cache).
+//!
+//! ### View-consistency contract
+//!
+//! A policy may maintain **one** persistently-updated [`DecodeView`] set
+//! (the engine's [`crate::model::engine::DecodeState`]) plus any number
+//! of *fresh* (empty) views, which always trigger a full rebuild.
+//! Syncing a second, stale non-empty view set is unsupported: eviction
+//! policies track their dirty ranges relative to the single live view.
+//! `rust/tests/property_invariants.rs` holds the correctness oracle:
+//! after any schedule of appends/evictions/seals, the incrementally
+//! synced view is bit-identical to a from-scratch rebuild.
 
 pub mod bibranch;
 pub mod full;
@@ -26,9 +68,10 @@ pub mod memory;
 pub use bibranch::{CskvCache, CskvConfig, QuantMode};
 pub use full::FullCache;
 
-use crate::tensor::Mat;
+use crate::tensor::{ops, Mat};
 
-/// Effective cache contents for one layer's decode attention.
+/// Effective cache contents for one layer's decode attention, materialized
+/// from scratch (cold path / oracle). Keys are **pre-RoPE**.
 #[derive(Clone, Debug)]
 pub struct CacheView {
     /// Pre-RoPE keys `[n_eff, d_model]`.
@@ -57,6 +100,172 @@ impl CacheView {
     }
 }
 
+/// Engine-owned, incrementally-maintained cache view for one layer.
+///
+/// Holds the *post-RoPE* keys, the values, and per-row position vectors.
+/// Policies update it in place through [`DecodeView::write_row`] /
+/// [`DecodeView::truncate`]; the engine only reads. Rows are written at
+/// most once per change — append-only rows (full cache, sealed CSKV
+/// groups, ASVD features) are reconstructed/dequantized/RoPE'd exactly
+/// once over a whole generation.
+///
+/// The three cursor fields (`stable_rows`, `hist_rows`, `epoch`) are
+/// **policy-interpreted** sync bookkeeping carried by the view so that a
+/// policy stays correct when handed a fresh view (full rebuild) as well
+/// as its live one (incremental update). The engine never touches them.
+#[derive(Clone, Debug)]
+pub struct DecodeView {
+    n_heads: usize,
+    rope_base: f32,
+    /// RoPE'd keys, row-major `[len, d_model]`.
+    k: GrowMat,
+    /// Values `[len, d_model]`.
+    v: GrowMat,
+    rope_pos: Vec<usize>,
+    abs_pos: Vec<usize>,
+    /// Rows `[0, stable_rows)` are final: derived from immutable storage
+    /// and never rewritten (e.g. sealed-group history for CSKV int4).
+    pub stable_rows: usize,
+    /// Number of leading rows holding the policy's "history"
+    /// representation (CSKV: reconstructed `C·B` rows; 0 for policies
+    /// without a history/window split).
+    pub hist_rows: usize,
+    /// Policy-defined generation counter: sealed-group count for CSKV
+    /// int4, cumulative eviction count for H2O / StreamingLLM. A mismatch
+    /// with the policy's live counter signals that rows beyond the
+    /// policy's stable region must be rebuilt.
+    pub epoch: usize,
+}
+
+impl DecodeView {
+    pub fn new(d_model: usize, n_heads: usize, rope_base: f32) -> Self {
+        assert!(n_heads > 0 && d_model % n_heads == 0, "bad head split");
+        DecodeView {
+            n_heads,
+            rope_base,
+            k: GrowMat::new(d_model),
+            v: GrowMat::new(d_model),
+            rope_pos: Vec::new(),
+            abs_pos: Vec::new(),
+            stable_rows: 0,
+            hist_rows: 0,
+            epoch: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rope_pos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rope_pos.is_empty()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.k.cols
+    }
+
+    /// RoPE'd key row `i`.
+    #[inline]
+    pub fn key_row(&self, i: usize) -> &[f32] {
+        self.k.row(i)
+    }
+
+    /// Value row `i`.
+    #[inline]
+    pub fn value_row(&self, i: usize) -> &[f32] {
+        self.v.row(i)
+    }
+
+    pub fn keys(&self) -> &GrowMat {
+        &self.k
+    }
+
+    pub fn values(&self) -> &GrowMat {
+        &self.v
+    }
+
+    pub fn rope_positions(&self) -> &[usize] {
+        &self.rope_pos
+    }
+
+    pub fn abs_positions(&self) -> &[usize] {
+        &self.abs_pos
+    }
+
+    /// Reserve capacity for `total_tokens` rows so steady-state appends
+    /// perform no allocation.
+    pub fn reserve(&mut self, total_tokens: usize) {
+        let extra = total_tokens.saturating_sub(self.len());
+        self.k.reserve_rows(extra);
+        self.v.reserve_rows(extra);
+        self.rope_pos.reserve(extra);
+        self.abs_pos.reserve(extra);
+    }
+
+    /// Write row `i` (`i ≤ len`; `i == len` appends). The key is handed
+    /// in **pre-RoPE** and rotated in place at `rope_pos`, per head —
+    /// this is the single point where RoPE is applied to cached keys, so
+    /// incremental and from-scratch syncs are bit-identical.
+    pub fn write_row(&mut self, i: usize, k_pre_rope: &[f32], v: &[f32], rope_pos: usize, abs_pos: usize) {
+        let d = self.k.cols;
+        debug_assert_eq!(k_pre_rope.len(), d);
+        debug_assert_eq!(v.len(), d);
+        assert!(i <= self.len(), "non-contiguous view write: {i} > {}", self.len());
+        if i == self.len() {
+            self.k.push_row(k_pre_rope);
+            self.v.push_row(v);
+            self.rope_pos.push(rope_pos);
+            self.abs_pos.push(abs_pos);
+        } else {
+            self.k.row_mut(i).copy_from_slice(k_pre_rope);
+            self.v.row_mut(i).copy_from_slice(v);
+            self.rope_pos[i] = rope_pos;
+            self.abs_pos[i] = abs_pos;
+        }
+        let dh = d / self.n_heads;
+        let row = self.k.row_mut(i);
+        for h in 0..self.n_heads {
+            ops::rope_rotate(&mut row[h * dh..(h + 1) * dh], rope_pos, self.rope_base);
+        }
+    }
+
+    /// Drop rows `[n, len)` and clamp the cursors.
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.len() {
+            return;
+        }
+        self.k.truncate_rows(n);
+        self.v.truncate_rows(n);
+        self.rope_pos.truncate(n);
+        self.abs_pos.truncate(n);
+        self.stable_rows = self.stable_rows.min(n);
+        self.hist_rows = self.hist_rows.min(n);
+    }
+
+    pub fn clear(&mut self) {
+        self.truncate(0);
+        self.epoch = 0;
+    }
+
+    pub fn validate(&self) {
+        assert_eq!(self.k.rows(), self.v.rows());
+        assert_eq!(self.k.rows(), self.rope_pos.len());
+        assert_eq!(self.k.rows(), self.abs_pos.len());
+        assert!(self.stable_rows <= self.len());
+        assert!(self.hist_rows <= self.len());
+    }
+
+    /// Content equality (rows + positions), ignoring the sync cursors —
+    /// the property-test oracle for incremental ≡ from-scratch.
+    pub fn same_contents(&self, other: &DecodeView) -> bool {
+        self.k == other.k
+            && self.v == other.v
+            && self.rope_pos == other.rope_pos
+            && self.abs_pos == other.abs_pos
+    }
+}
+
 /// A pluggable KV-cache management policy (one instance per generation).
 pub trait KvCachePolicy: Send {
     /// Display name used in experiment tables.
@@ -75,11 +284,24 @@ pub trait KvCachePolicy: Send {
     /// Append one decoded token's activations for one layer.
     fn append(&mut self, layer: usize, xnorm: &[f32], k: &[f32], v: &[f32]);
 
-    /// Materialize the effective cache for attention at this step.
+    /// Bring `view` up to date with this layer's cache contents,
+    /// rewriting only rows that changed since the view's last sync (an
+    /// empty view triggers a full rebuild). After returning, `view` holds
+    /// exactly [`KvCachePolicy::len`] rows of RoPE'd keys + values with
+    /// correct `rope`/`abs` positions. See the module docs for the
+    /// single-live-view contract.
+    fn sync_view(&mut self, layer: usize, view: &mut DecodeView);
+
+    /// Cold-path oracle: materialize the effective cache from scratch
+    /// with **pre-RoPE** keys. Tests and diagnostics only.
     fn materialize(&self, layer: usize) -> CacheView;
 
-    /// Decode-time attention feedback aligned with `materialize`'s
-    /// `abs_pos` (H2O score accumulation).
+    /// Hint: `additional` more tokens are coming — reserve storage so
+    /// appends don't reallocate. Best-effort; default no-op.
+    fn reserve(&mut self, _additional_tokens: usize) {}
+
+    /// Decode-time attention feedback aligned with the synced view's
+    /// `abs_positions` (H2O score accumulation).
     fn observe_decode_attn(&mut self, _layer: usize, _abs_pos: &[usize], _probs: &[f32]) {}
 
     /// RoPE position for the query at absolute position `abs_pos`
@@ -104,7 +326,7 @@ pub trait KvCachePolicy: Send {
 }
 
 /// Growable row-major matrix used by cache implementations.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct GrowMat {
     pub cols: usize,
     pub data: Vec<f32>,
@@ -140,10 +362,34 @@ impl GrowMat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
     /// Remove row `i`, shifting the tail (eviction policies).
     pub fn remove_row(&mut self, i: usize) {
         let c = self.cols;
         self.data.drain(i * c..(i + 1) * c);
+    }
+
+    /// Remove rows `[lo, hi)` in one drain — O(tail) instead of the
+    /// O((hi−lo)·tail) of repeated `remove_row` calls.
+    pub fn remove_rows(&mut self, lo: usize, hi: usize) {
+        assert!(lo <= hi && hi <= self.rows());
+        let c = self.cols;
+        self.data.drain(lo * c..hi * c);
+    }
+
+    /// Drop rows `[n, rows)`.
+    pub fn truncate_rows(&mut self, n: usize) {
+        let c = self.cols;
+        self.data.truncate(n * c);
+    }
+
+    /// Reserve capacity for `additional` more rows.
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.data.reserve(additional * self.cols);
     }
 
     /// Rows `[lo, hi)` as a `Mat` copy.
@@ -192,6 +438,39 @@ mod tests {
     }
 
     #[test]
+    fn growmat_remove_rows_range() {
+        let mut g = GrowMat::new(2);
+        for i in 0..6 {
+            g.push_row(&[i as f32, 10.0 + i as f32]);
+        }
+        g.remove_rows(1, 4);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.row(0), &[0.0, 10.0]);
+        assert_eq!(g.row(1), &[4.0, 14.0]);
+        assert_eq!(g.row(2), &[5.0, 15.0]);
+        // Degenerate range is a no-op.
+        g.remove_rows(2, 2);
+        assert_eq!(g.rows(), 3);
+    }
+
+    #[test]
+    fn growmat_truncate_and_reserve() {
+        let mut g = GrowMat::new(2);
+        for i in 0..5 {
+            g.push_row(&[i as f32, 0.0]);
+        }
+        g.truncate_rows(2);
+        assert_eq!(g.rows(), 2);
+        g.reserve_rows(100);
+        assert!(g.data.capacity() >= 2 * 2 + 100 * 2);
+        let before = g.data.capacity();
+        for i in 0..100 {
+            g.push_row(&[i as f32, 1.0]);
+        }
+        assert_eq!(g.data.capacity(), before, "reserved pushes must not realloc");
+    }
+
+    #[test]
     fn cacheview_validation() {
         let v = CacheView {
             k: Mat::zeros(2, 4),
@@ -201,5 +480,51 @@ mod tests {
         };
         v.validate();
         assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn decode_view_write_applies_rope_once() {
+        let d = 8;
+        let mut view = DecodeView::new(d, 2, 10000.0);
+        let k: Vec<f32> = (0..d).map(|i| i as f32 * 0.1).collect();
+        let v: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        view.write_row(0, &k, &v, 5, 5);
+        view.validate();
+        assert_eq!(view.len(), 1);
+        // Keys are stored RoPE'd at the given position.
+        let mut expect = k.clone();
+        for h in 0..2 {
+            ops::rope_rotate(&mut expect[h * 4..(h + 1) * 4], 5, 10000.0);
+        }
+        assert_eq!(view.key_row(0), &expect[..]);
+        assert_eq!(view.value_row(0), &v[..]);
+        // Rewrite in place at a new position.
+        view.write_row(0, &k, &v, 0, 7);
+        assert_eq!(view.key_row(0), &k[..], "pos 0 RoPE is identity");
+        assert_eq!(view.rope_positions(), &[0]);
+        assert_eq!(view.abs_positions(), &[7]);
+    }
+
+    #[test]
+    fn decode_view_truncate_clamps_cursors() {
+        let d = 4;
+        let mut view = DecodeView::new(d, 2, 10000.0);
+        for i in 0..5 {
+            view.write_row(i, &[0.0; 4], &[0.0; 4], i, i);
+        }
+        view.stable_rows = 4;
+        view.hist_rows = 5;
+        view.truncate(3);
+        view.validate();
+        assert_eq!(view.len(), 3);
+        assert_eq!(view.stable_rows, 3);
+        assert_eq!(view.hist_rows, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_view_rejects_gap_writes() {
+        let mut view = DecodeView::new(4, 2, 10000.0);
+        view.write_row(2, &[0.0; 4], &[0.0; 4], 0, 0);
     }
 }

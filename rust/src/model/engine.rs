@@ -13,11 +13,12 @@
 
 use std::sync::Arc;
 
-use crate::kvcache::KvCachePolicy;
-use crate::tensor::matmul::{matvec_t, dot};
+use crate::kvcache::{DecodeView, KvCachePolicy};
+use crate::tensor::matmul::{axpy_row, dot, matvec_t_into};
 use crate::tensor::ops;
 use crate::tensor::Mat;
 
+use super::config::ModelConfig;
 use super::weights::ModelWeights;
 
 /// Everything captured during a prefill pass.
@@ -42,6 +43,89 @@ pub struct GenStats {
     pub decode_s: f64,
     pub decode_steps: usize,
     pub kv_bytes_final: usize,
+}
+
+/// Preallocated per-generation work buffers for the decode hot loop.
+///
+/// Every intermediate `decode_step_with` needs lives here, so a steady-
+/// state decode step performs no heap allocation (`rust/tests/
+/// decode_alloc.rs` enforces this with a counting allocator). `scores`
+/// and `agg_probs` grow with the cache; [`DecodeState::reserve`] sizes
+/// them up front.
+pub struct DecodeScratch {
+    x: Vec<f32>,
+    xnorm: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    o: Vec<f32>,
+    xn2: Vec<f32>,
+    h1: Vec<f32>,
+    mlp: Vec<f32>,
+    xf: Vec<f32>,
+    logits: Vec<f32>,
+    scores: Vec<f32>,
+    agg_probs: Vec<f32>,
+}
+
+impl DecodeScratch {
+    fn new(cfg: &ModelConfig) -> Self {
+        let d = cfg.d_model;
+        DecodeScratch {
+            x: vec![0.0; d],
+            xnorm: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn: vec![0.0; d],
+            o: vec![0.0; d],
+            xn2: vec![0.0; d],
+            h1: vec![0.0; cfg.d_ff],
+            mlp: vec![0.0; d],
+            xf: vec![0.0; d],
+            logits: vec![0.0; cfg.vocab_size],
+            scores: Vec::new(),
+            agg_probs: Vec::new(),
+        }
+    }
+}
+
+/// Engine-owned decode state for one in-flight generation: the persistent
+/// per-layer [`DecodeView`]s (incrementally synced by the cache policy)
+/// plus the [`DecodeScratch`] buffers. Create one per generation and pass
+/// it to every [`Engine::decode_step_with`] call; see the kvcache module
+/// docs for the single-live-view contract.
+pub struct DecodeState {
+    views: Vec<DecodeView>,
+    scratch: DecodeScratch,
+}
+
+impl DecodeState {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        DecodeState {
+            views: (0..cfg.n_layers)
+                .map(|_| DecodeView::new(cfg.d_model, cfg.n_heads, cfg.rope_base))
+                .collect(),
+            scratch: DecodeScratch::new(cfg),
+        }
+    }
+
+    /// Reserve capacity for `total_tokens` cached rows per layer so that
+    /// steady-state decode steps allocate nothing.
+    pub fn reserve(&mut self, total_tokens: usize) {
+        for v in &mut self.views {
+            v.reserve(total_tokens);
+        }
+        let s = &mut self.scratch;
+        s.scores.reserve(total_tokens.saturating_sub(s.scores.len()));
+        s.agg_probs.reserve(total_tokens.saturating_sub(s.agg_probs.len()));
+    }
+
+    /// The synced view for `layer` (tests/diagnostics).
+    pub fn view(&self, layer: usize) -> &DecodeView {
+        &self.views[layer]
+    }
 }
 
 /// The reference engine. Cheap to clone (weights are shared).
@@ -145,93 +229,111 @@ impl Engine {
     }
 
     /// One decode step for the token at absolute position `abs_pos`
-    /// (0-based; the prompt occupied `0..abs_pos`). Returns the logits row.
+    /// (0-based; the prompt occupied `0..abs_pos`), using the persistent
+    /// per-generation `state`. Returns the logits row, borrowed from the
+    /// state's scratch buffer.
+    ///
+    /// This is the zero-alloc hot path: all intermediates live in
+    /// [`DecodeScratch`], cache keys are read from the incrementally
+    /// synced [`DecodeView`]s (already reconstructed *and RoPE'd*), and
+    /// the per-head score / weighted-sum loops run through the blocked
+    /// [`dot`] / [`axpy_row`] kernels.
+    pub fn decode_step_with<'s>(
+        &self,
+        policy: &mut dyn KvCachePolicy,
+        token: usize,
+        abs_pos: usize,
+        state: &'s mut DecodeState,
+    ) -> &'s [f32] {
+        let cfg = &self.w.cfg;
+        let (nh, dh) = (cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let DecodeState { views, scratch } = state;
+
+        scratch.x.copy_from_slice(self.w.embed.row(token));
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            ops::rmsnorm(&scratch.x, lw.ln1.row(0), cfg.eps, &mut scratch.xnorm);
+            matvec_t_into(&lw.wq, &scratch.xnorm, &mut scratch.q);
+            matvec_t_into(&lw.wk, &scratch.xnorm, &mut scratch.k); // pre-RoPE
+            matvec_t_into(&lw.wv, &scratch.xnorm, &mut scratch.v);
+
+            policy.append(li, &scratch.xnorm, &scratch.k, &scratch.v);
+            let view = &mut views[li];
+            policy.sync_view(li, view);
+            let view = &views[li];
+            debug_assert_eq!(view.len(), policy.len(li));
+
+            // RoPE the query at the policy's coordinate system (cached
+            // keys were RoPE'd once, when written into the view).
+            let qpos = policy.query_rope_pos(li, abs_pos);
+            for h in 0..nh {
+                ops::rope_rotate(&mut scratch.q[h * dh..(h + 1) * dh], qpos, cfg.rope_base);
+            }
+
+            // Per-head attention; aggregate probs across heads for H2O.
+            let n = view.len();
+            scratch.attn.fill(0.0);
+            scratch.agg_probs.clear();
+            scratch.agg_probs.resize(n, 0.0);
+            for h in 0..nh {
+                let (lo, hi) = (h * dh, (h + 1) * dh);
+                let qh = &scratch.q[lo..hi];
+                scratch.scores.clear();
+                scratch.scores.resize(n, 0.0);
+                let mut mx = f32::NEG_INFINITY;
+                for (i, s) in scratch.scores.iter_mut().enumerate() {
+                    *s = dot(qh, &view.key_row(i)[lo..hi]) * scale;
+                    mx = mx.max(*s);
+                }
+                // softmax
+                let mut sum = 0.0;
+                for s in scratch.scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                for (i, s) in scratch.scores.iter_mut().enumerate() {
+                    *s *= inv;
+                    scratch.agg_probs[i] += *s;
+                    axpy_row(&mut scratch.attn[lo..hi], *s, &view.value_row(i)[lo..hi]);
+                }
+            }
+            policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
+
+            // Output projection + residual.
+            matvec_t_into(&lw.wo, &scratch.attn, &mut scratch.o);
+            for (xi, oi) in scratch.x.iter_mut().zip(&scratch.o) {
+                *xi += oi;
+            }
+            // MLP.
+            ops::rmsnorm(&scratch.x, lw.ln2.row(0), cfg.eps, &mut scratch.xn2);
+            matvec_t_into(&lw.w1, &scratch.xn2, &mut scratch.h1);
+            for hv in scratch.h1.iter_mut() {
+                *hv = ops::silu(*hv);
+            }
+            matvec_t_into(&lw.w2, &scratch.h1, &mut scratch.mlp);
+            for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp) {
+                *xi += mi;
+            }
+        }
+        ops::rmsnorm(&scratch.x, self.w.ln_f.row(0), cfg.eps, &mut scratch.xf);
+        matvec_t_into(&self.w.lm_head, &scratch.xf, &mut scratch.logits);
+        &scratch.logits
+    }
+
+    /// One decode step with a throwaway [`DecodeState`] (compatibility /
+    /// cold path — the views are rebuilt from scratch every call). Prefer
+    /// [`Engine::decode_step_with`] with a persistent state for decoding
+    /// more than one token.
     pub fn decode_step(
         &self,
         policy: &mut dyn KvCachePolicy,
         token: usize,
         abs_pos: usize,
     ) -> Vec<f32> {
-        let cfg = &self.w.cfg;
-        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
-        let scale = 1.0 / (dh as f32).sqrt();
-
-        let mut x = self.w.embed.row(token).to_vec();
-        let mut xnorm = vec![0.0f32; d];
-        for (li, lw) in self.w.layers.iter().enumerate() {
-            ops::rmsnorm(&x, lw.ln1.row(0), cfg.eps, &mut xnorm);
-            let mut q = matvec_t(&lw.wq, &xnorm);
-            let k = matvec_t(&lw.wk, &xnorm); // pre-RoPE
-            let v = matvec_t(&lw.wv, &xnorm);
-
-            policy.append(li, &xnorm, &k, &v);
-            let view = policy.materialize(li);
-            debug_assert_eq!(view.len(), policy.len(li).min(view.len()));
-
-            // RoPE the query at the policy's coordinate system.
-            let qpos = policy.query_rope_pos(li, abs_pos);
-            for h in 0..nh {
-                ops::rope_rotate(&mut q[h * dh..(h + 1) * dh], qpos, cfg.rope_base);
-            }
-            // RoPE keys at their per-row positions.
-            let n = view.len();
-            let mut k_r = view.k.clone();
-            for (i, &p) in view.rope_pos.iter().enumerate() {
-                let row = k_r.row_mut(i);
-                for h in 0..nh {
-                    ops::rope_rotate(&mut row[h * dh..(h + 1) * dh], p, cfg.rope_base);
-                }
-            }
-
-            // Per-head attention; aggregate probs across heads for H2O.
-            let mut attn = vec![0.0f32; d];
-            let mut agg_probs = vec![0.0f32; n];
-            for h in 0..nh {
-                let (lo, hi) = (h * dh, (h + 1) * dh);
-                let qh = &q[lo..hi];
-                let mut scores: Vec<f32> = (0..n)
-                    .map(|i| dot(qh, &k_r.row(i)[lo..hi]) * scale)
-                    .collect();
-                // softmax
-                let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-                let mut sum = 0.0;
-                for s in scores.iter_mut() {
-                    *s = (*s - mx).exp();
-                    sum += *s;
-                }
-                let inv = 1.0 / sum;
-                for (i, s) in scores.iter_mut().enumerate() {
-                    *s *= inv;
-                    agg_probs[i] += *s;
-                    let vrow = &view.v.row(i)[lo..hi];
-                    let a = &mut attn[lo..hi];
-                    for (av, &vv) in a.iter_mut().zip(vrow) {
-                        *av += *s * vv;
-                    }
-                }
-            }
-            policy.observe_decode_attn(li, &view.abs_pos, &agg_probs);
-
-            // Output projection + residual.
-            let o = matvec_t(&lw.wo, &attn);
-            for (xi, oi) in x.iter_mut().zip(&o) {
-                *xi += oi;
-            }
-            // MLP.
-            let mut xn2 = vec![0.0f32; d];
-            ops::rmsnorm(&x, lw.ln2.row(0), cfg.eps, &mut xn2);
-            let mut h1 = matvec_t(&lw.w1, &xn2);
-            for hv in h1.iter_mut() {
-                *hv = ops::silu(*hv);
-            }
-            let m = matvec_t(&lw.w2, &h1);
-            for (xi, mi) in x.iter_mut().zip(&m) {
-                *xi += mi;
-            }
-        }
-        let mut xf = vec![0.0f32; d];
-        ops::rmsnorm(&x, self.w.ln_f.row(0), cfg.eps, &mut xf);
-        matvec_t(&self.w.lm_head, &xf)
+        let mut state = DecodeState::new(&self.w.cfg);
+        self.decode_step_with(policy, token, abs_pos, &mut state)
+            .to_vec()
     }
 
     /// Greedy generation: exact prefill + policy decode. Returns generated
@@ -248,14 +350,17 @@ impl Engine {
 
         let mut out = Vec::with_capacity(n_new);
         let mut next = ops::argmax(rec.logits.row(prompt.len() - 1));
+        let mut state = DecodeState::new(&self.w.cfg);
+        state.reserve(prompt.len() + n_new);
+        policy.reserve(n_new);
         let t1 = std::time::Instant::now();
         for i in 0..n_new {
             out.push(next);
             if i + 1 == n_new {
                 break;
             }
-            let logits = self.decode_step(policy, next, prompt.len() + i);
-            next = ops::argmax(&logits);
+            let logits = self.decode_step_with(policy, next, prompt.len() + i, &mut state);
+            next = ops::argmax(logits);
         }
         let stats = GenStats {
             prefill_s,
@@ -367,6 +472,42 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             assert!(max_diff < 1e-3, "step {abs}: max diff {max_diff}");
+        }
+    }
+
+    /// The persistent incremental DecodeState must produce the same
+    /// logits as both the throwaway-state wrapper and the exact prefill —
+    /// the engine-level guarantee that view memoization changes nothing.
+    #[test]
+    fn incremental_state_matches_throwaway_and_prefill() {
+        let e = engine();
+        let cfg = &e.w.cfg;
+        let tokens = [2usize, 11, 45, 7, 120, 9, 33, 60, 5, 71];
+        let full = e.prefill(&tokens, None);
+
+        let mut inc_cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let _ = e.prefill(&tokens[..4], Some(&mut inc_cache));
+        let mut state = DecodeState::new(cfg);
+        state.reserve(tokens.len());
+
+        let mut fresh_cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let _ = e.prefill(&tokens[..4], Some(&mut fresh_cache));
+
+        for (i, &tok) in tokens[4..].iter().enumerate() {
+            let abs = 4 + i;
+            let via_wrapper = e.decode_step(&mut fresh_cache, tok, abs);
+            let via_state = e.decode_step_with(&mut inc_cache, tok, abs, &mut state);
+            assert_eq!(via_state, &via_wrapper[..], "step {abs}: paths must be bit-identical");
+            let want = full.logits.row(abs);
+            let max_diff = via_state
+                .iter()
+                .zip(want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-3, "step {abs}: max diff {max_diff}");
+            // The synced view is always exactly the cache contents.
+            state.view(0).validate();
+            assert_eq!(state.view(0).len(), abs + 1);
         }
     }
 

@@ -62,9 +62,11 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     }
 }
 
-/// `crow += s * brow`, 8-way unrolled.
+/// `crow += s * brow`, 8-way unrolled — the shared AXPY kernel behind the
+/// GEMM inner loop, `matvec_t_into`, and the decode attention's per-head
+/// weighted value sum.
 #[inline]
-fn axpy_row(crow: &mut [f32], s: f32, brow: &[f32]) {
+pub fn axpy_row(crow: &mut [f32], s: f32, brow: &[f32]) {
     let n = crow.len();
     let chunks = n / 8;
     // Unrolled body — the compiler autovectorizes this reliably.
@@ -157,21 +159,38 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
 
 /// `y = A·x` for a vector `x` (decode-time projections).
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; a.rows];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// `y = A·x` into a preallocated output (zero-alloc decode loop).
+pub fn matvec_into(a: &Mat, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols, x.len());
-    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+    assert_eq!(a.rows, y.len());
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
 }
 
 /// `y = Aᵀ·x` (single-token projection against a row-major weight).
 pub fn matvec_t(a: &Mat, x: &[f32]) -> Vec<f32> {
-    assert_eq!(a.rows, x.len());
     let mut y = vec![0.0f32; a.cols];
+    matvec_t_into(a, x, &mut y);
+    y
+}
+
+/// `y = Aᵀ·x` into a preallocated output (zero-alloc decode loop).
+pub fn matvec_t_into(a: &Mat, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.rows, x.len());
+    assert_eq!(a.cols, y.len());
+    y.fill(0.0);
     for (i, &xi) in x.iter().enumerate() {
         if xi == 0.0 {
             continue;
         }
-        axpy_row(&mut y, xi, a.row(i));
+        axpy_row(y, xi, a.row(i));
     }
-    y
 }
 
 #[cfg(test)]
@@ -252,6 +271,20 @@ mod tests {
         let a = Mat::randn(6, 6, 1.0, &mut rng);
         assert!(matmul(&a, &Mat::eye(6)).allclose(&a, 1e-6));
         assert!(matmul(&Mat::eye(6), &a).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn matvec_into_variants_match_allocating() {
+        let mut rng = Pcg64::new(16);
+        let a = Mat::randn(9, 13, 1.0, &mut rng);
+        let x: Vec<f32> = (0..13).map(|_| rng.normal()).collect();
+        let mut y = vec![7.0f32; 9]; // dirty buffer
+        matvec_into(&a, &x, &mut y);
+        assert_eq!(y, matvec(&a, &x));
+        let z: Vec<f32> = (0..9).map(|_| rng.normal()).collect();
+        let mut yt = vec![-3.0f32; 13]; // dirty buffer
+        matvec_t_into(&a, &z, &mut yt);
+        assert_eq!(yt, matvec_t(&a, &z));
     }
 
     #[test]

@@ -8,9 +8,15 @@
 //!
 //! Every bench binary is `harness = false` and accepts `--fast` (shrinks
 //! sample counts for smoke runs) via [`crate::util::cli::Args`].
+//!
+//! [`Bencher::write_json`] additionally emits machine-readable results
+//! (`name → median ns`, plus the git revision) so the perf trajectory is
+//! tracked across PRs — `bench_perf_decode` writes
+//! `runs/BENCH_perf_decode.json`.
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Samples;
 
 /// Result of a timed benchmark.
@@ -123,6 +129,52 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write all recorded results as JSON: `{bench, git_rev, unit,
+    /// results: {name: {median_ns, mean_ns, p95_ns, iters}}}`. Used to
+    /// track the perf trajectory across PRs.
+    pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut results = Json::obj();
+        for r in &self.results {
+            results.set(
+                &r.name,
+                Json::from_pairs(vec![
+                    ("median_ns", Json::Num(r.samples.percentile(50.0) * 1e9)),
+                    ("mean_ns", Json::Num(r.samples.mean() * 1e9)),
+                    ("p95_ns", Json::Num(r.samples.percentile(95.0) * 1e9)),
+                    ("iters", Json::Num(r.iters as f64)),
+                ]),
+            );
+        }
+        let root = Json::from_pairs(vec![
+            ("bench", Json::Str(bench_name.to_string())),
+            (
+                "git_rev",
+                Json::Str(git_rev().unwrap_or_else(|| "unknown".to_string())),
+            ),
+            ("unit", Json::Str("ns".to_string())),
+            ("results", results),
+        ]);
+        std::fs::write(path, root.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Short git revision of the working tree, if available.
+pub fn git_rev() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let rev = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if rev.is_empty() {
+        None
+    } else {
+        Some(rev)
+    }
 }
 
 /// Prevent the optimizer from discarding a computed value
@@ -177,5 +229,27 @@ mod tests {
             black_box(0u64);
         });
         assert!(r.report().contains("items/s"));
+    }
+
+    #[test]
+    fn json_results_roundtrip() {
+        let mut b = Bencher::fast();
+        b.time("spin/json", || {
+            black_box(1u64);
+        });
+        let dir = std::env::temp_dir().join("cskv_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        b.write_json("bench_test", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.at("bench").and_then(Json::as_str), Some("bench_test"));
+        assert!(j.at("git_rev").and_then(Json::as_str).is_some());
+        let median = j
+            .at("results.spin/json")
+            .and_then(|r| r.get("median_ns"))
+            .and_then(Json::as_f64)
+            .expect("median_ns recorded");
+        assert!(median >= 0.0);
     }
 }

@@ -1,0 +1,107 @@
+//! Steady-state decode must not touch the heap (full-cache policy).
+//!
+//! A counting global allocator (thread-local, so the libtest runner's own
+//! threads can't pollute the count) wraps `System`. After reserving view,
+//! scratch and cache capacity, `Engine::decode_step_with` is driven for a
+//! run of steps and must perform **zero** allocations — the acceptance
+//! criterion for the incremental-view refactor's alloc-free hot path.
+//!
+//! This file must stay a single-test binary: the allocator hooks are
+//! process-global even though counting is per-thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use std::sync::Arc;
+
+use cskv::kvcache::{FullCache, KvCachePolicy};
+use cskv::model::engine::DecodeState;
+use cskv::model::{Engine, ModelConfig, ModelWeights};
+use cskv::tensor::ops;
+use cskv::util::prng::Pcg64;
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOC_COUNT: Cell<usize> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn record() {
+        // try_with: never panic inside the allocator (TLS teardown).
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::record();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::record();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::record();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn full_cache_decode_steady_state_allocates_nothing() {
+    let cfg = ModelConfig::test_small();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+    let mut rng = Pcg64::new(11);
+    let prompt: Vec<usize> = (0..48).map(|_| rng.range(5, 200)).collect();
+    let n_steps = 24usize;
+
+    let mut policy = FullCache::new(cfg.n_layers, cfg.d_model);
+    let _ = engine.prefill(&prompt, Some(&mut policy));
+
+    let mut state = DecodeState::new(&cfg);
+    let total = prompt.len() + n_steps + 4;
+    state.reserve(total);
+    policy.reserve(n_steps + 4);
+
+    // Warm-up steps: build the view (within reserved capacity) and settle
+    // any lazy one-time work.
+    let mut tok = 42usize;
+    for i in 0..4 {
+        let logits = engine.decode_step_with(&mut policy, tok, prompt.len() + i, &mut state);
+        tok = ops::argmax(logits);
+    }
+
+    // Measured steady state: every decode step must be alloc-free.
+    ALLOC_COUNT.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for i in 4..n_steps {
+        let logits = engine.decode_step_with(&mut policy, tok, prompt.len() + i, &mut state);
+        tok = ops::argmax(logits);
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOC_COUNT.with(|c| c.get());
+
+    assert_eq!(
+        allocs, 0,
+        "decode_step_with allocated {allocs} times over {} steady-state steps",
+        n_steps - 4
+    );
+    // Sanity: the run actually decoded into the persistent view.
+    assert_eq!(state.view(0).len(), prompt.len() + n_steps);
+    assert_eq!(policy.len(0), prompt.len() + n_steps);
+}

@@ -6,8 +6,8 @@ use std::sync::Arc;
 
 use cskv::compress::ratio::{rank_for_keep, KvCompressionPlan};
 use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
-use cskv::baselines::{H2oCache, StreamingLlmCache};
-use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::kvcache::{CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, QuantMode};
 use cskv::tensor::Mat;
 use cskv::util::prng::Pcg64;
 use cskv::util::prop::{forall, zip, Gen};
@@ -201,6 +201,84 @@ fn prop_rank_for_keep_monotone() {
         |&(a, b)| {
             let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
             rank_for_keep(128, lo) <= rank_for_keep(128, hi)
+        },
+    );
+}
+
+/// THE correctness oracle for the incremental decode views: for every
+/// policy, a persistently-synced [`DecodeView`] after an arbitrary random
+/// schedule of prefill + decode appends (with evictions, window rolls and
+/// int4 group seals happening along the way) must be **bit-identical** to
+/// a from-scratch materialization into a fresh view.
+#[test]
+fn prop_incremental_decode_views_match_full_rebuild() {
+    const NH: usize = 2; // D = 16 ⇒ d_head = 8, even as RoPE requires
+    forall(
+        "all policies: incremental DecodeView ≡ from-scratch rebuild",
+        25,
+        zip(
+            zip(Gen::usize_in(1..70), Gen::usize_in(0..45)),
+            zip(Gen::usize_in(0..8), Gen::usize_in(4..12)),
+        ),
+        |&((prefill, appends), (window, budget))| {
+            let mk_policies = || -> Vec<Box<dyn KvCachePolicy>> {
+                vec![
+                    Box::new(FullCache::new(1, D)),
+                    Box::new(CskvCache::new(
+                        factors(4, 1),
+                        D,
+                        CskvConfig { window, quant: QuantMode::None },
+                    )),
+                    Box::new(CskvCache::new(
+                        factors(4, 1),
+                        D,
+                        CskvConfig { window, quant: QuantMode::Int4 },
+                    )),
+                    Box::new(StreamingLlmCache::new(1, D, 2, budget.max(3))),
+                    Box::new(H2oCache::new(1, D, budget)),
+                    Box::new(AsvdCache::new(factors(4, 1))),
+                ]
+            };
+            for mut policy in mk_policies() {
+                let mut rng = Pcg64::new(prefill as u64 * 1000 + appends as u64);
+                let t = prefill.max(1);
+                let x = Mat::randn(t, D, 1.0, &mut rng);
+                let k = Mat::randn(t, D, 1.0, &mut rng);
+                let v = Mat::randn(t, D, 1.0, &mut rng);
+                policy.ingest_prefill(0, &x, &k, &v);
+                policy.observe_prefill_attn(0, &vec![0.1; t]);
+
+                // The live view is synced every step, like the engine's
+                // persistent DecodeState.
+                let mut live = DecodeView::new(D, NH, 10000.0);
+                policy.sync_view(0, &mut live);
+                for _ in 0..appends {
+                    let row: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+                    policy.append(0, &row, &row, &row);
+                    policy.sync_view(0, &mut live);
+                    live.validate();
+                    // Random attention feedback so H2O evicts mid-list.
+                    let probs: Vec<f32> =
+                        (0..live.len()).map(|_| rng.normal().abs()).collect();
+                    let abs: Vec<usize> = live.abs_positions().to_vec();
+                    policy.observe_decode_attn(0, &abs, &probs);
+                }
+
+                // From-scratch oracle into a fresh view.
+                let mut fresh = DecodeView::new(D, NH, 10000.0);
+                policy.sync_view(0, &mut fresh);
+                fresh.validate();
+                if !live.same_contents(&fresh) || live.len() != policy.len(0) {
+                    eprintln!(
+                        "view mismatch: policy={} live_len={} fresh_len={}",
+                        policy.name(),
+                        live.len(),
+                        fresh.len()
+                    );
+                    return false;
+                }
+            }
+            true
         },
     );
 }

@@ -1,0 +1,176 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container builds without network access, so the subset of anyhow
+//! this repository actually uses is vendored here: [`Error`], [`Result`],
+//! and the [`anyhow!`], [`bail!`], [`ensure!`] macros. Like the real
+//! crate, `Error` deliberately does **not** implement `std::error::Error`
+//! so the blanket `From<E: std::error::Error>` impl (which powers `?`)
+//! does not conflict with the reflexive `From<T> for T`.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error, preserving it as the source.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Prepend context to the message (mirrors `anyhow::Context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The root cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next = self
+            .source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for (i, cause) in self.chain().enumerate() {
+            if i == 0 {
+                write!(f, "\n\nCaused by:")?;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond))
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/cskv")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.chain().count() >= 1);
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let n = 3;
+        let e = anyhow!("bad count {n} for {}", "layer");
+        assert_eq!(e.to_string(), "bad count 3 for layer");
+
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("seven is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(7).unwrap_err().to_string().contains("seven"));
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn g(x: usize) -> Result<()> {
+            ensure!(x % 2 == 0);
+            Ok(())
+        }
+        assert!(g(3).unwrap_err().to_string().contains("x % 2 == 0"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -1,0 +1,151 @@
+//! API-compatible **stub** of the `xla_extension` PJRT bindings.
+//!
+//! The container has no native XLA/PJRT toolchain, so this vendored crate
+//! provides just enough surface for `cskv::runtime::client` to compile.
+//! Every entry point that would need the real runtime fails cleanly at
+//! *runtime* ([`PjRtClient::cpu`] returns an error), which the callers
+//! already handle: the PJRT tests and bench sections skip when artifacts
+//! are missing, and `Runtime::load` propagates the error otherwise.
+//!
+//! Swap this path dependency for the real `xla` bindings in
+//! `Cargo.toml` to run the AOT artifacts.
+
+use std::fmt;
+
+/// Error type matching the real bindings' role (convertible to
+/// `anyhow::Error` through `std::error::Error`).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: XLA/PJRT is not available in this build (stub crate; link the real xla_extension bindings)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait ElementType: Copy + 'static {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u8 {}
+
+/// Host-side tensor literal (stub: carries no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: ElementType>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn vec1<T: ElementType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// HLO module handle (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle (stub — construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        assert!(Literal::scalar(1.0f32).to_vec::<f32>().is_err());
+        let _ = Literal::vec1(&[1i32, 2]).reshape(&[2]).unwrap();
+    }
+}

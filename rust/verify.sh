@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf smoke for the Rust crate.
+#
+#   ./rust/verify.sh          # build, test, lint, bench smoke
+#   ./rust/verify.sh --quick  # build + test only
+#
+# Run from anywhere; resolves the workspace root (where Cargo.toml lives).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "==> quick mode: skipping clippy + bench smoke"
+    exit 0
+fi
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo bench --bench bench_perf_decode -- --fast   (smoke)"
+cargo bench --bench bench_perf_decode -- --fast
+
+echo "verify: OK"
