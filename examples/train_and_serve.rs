@@ -120,7 +120,7 @@ fn main() -> anyhow::Result<()> {
     for (label, use_cskv) in [("full", false), ("CSKV 80%", true)] {
         let coord = Coordinator::start(
             mk_setup(use_cskv),
-            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(kv_budget) },
+            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(kv_budget), ..Default::default() },
         );
         let mut rng = Pcg64::new(31);
         let mut answers = Vec::new();

@@ -154,7 +154,7 @@ fn main() -> anyhow::Result<()> {
     for (label, use_cskv) in [("full", false), ("cskv80", true)] {
         let coord = Coordinator::start(
             mk_setup(use_cskv),
-            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(budget) },
+            CoordinatorConfig { max_batch: 16, kv_budget_bytes: Some(budget), ..Default::default() },
         );
         let mut rng = Pcg64::new(17);
         let rxs: Vec<_> = (0..n_req)

@@ -1,0 +1,241 @@
+//! §Perf — long-context prefill latency: the second hot path, after
+//! `bench_perf_decode` covered decode.
+//!
+//! Three measurements:
+//! 1. GEMM inner loop A/B: the dense blocked kernel with vs without the
+//!    removed `aip == 0.0` per-element branch (the satellite's measured
+//!    before/after record).
+//! 2. prefill: streaming tiled parallel prefill ([`Engine::prefill`]) at
+//!    1/2/4/8 worker threads vs the pre-PR serial path (kept verbatim as
+//!    [`Engine::prefill_reference`]), across context lengths — the
+//!    headline rows print the speedup ratios directly:
+//!    * gate A: ≥ 3× at ctx = 509 with 8 threads vs the serial reference
+//!      (needs the cores to exist — the ratio is measured, not assumed),
+//!    * gate B: ≥ 1.3× at 1 thread from tiling / triangle-skipping /
+//!      RoPE-caching / allocation-thrift alone.
+//! 3. policy-attached prefill at ctx = 509 (full cache and CSKV 80%),
+//!    confirming the policy seam doesn't erase the win.
+//!
+//! No trained weights required — prefill cost is value-independent, so
+//! the bench runs from `ModelWeights::init` anywhere (CI included).
+//!
+//! Results are also written to `runs/BENCH_perf_prefill.json`
+//! (name → median ns + git rev) so the perf trajectory tooling picks
+//! this bench up alongside `runs/BENCH_perf_decode.json`.
+//!
+//! Run: `cargo bench --bench bench_perf_prefill [-- --fast --threads N]`
+
+use std::sync::Arc;
+
+use cskv::compress::{KvCompressionPlan, LayerFactors, LowRankFactors, ModelFactors};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::{Engine, PrefillScratch};
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::matmul::{axpy_row, matmul_into};
+use cskv::tensor::Mat;
+use cskv::util::bench::{black_box, print_bench_header, Bencher};
+use cskv::util::cli::Args;
+use cskv::util::prng::Pcg64;
+use cskv::util::threadpool::ThreadPool;
+
+/// The pre-PR `matmul_into` inner loop, branch included — kept here (and
+/// only here) as the A/B baseline for the removed `aip == 0.0` skip.
+fn matmul_into_branchy(a: &Mat, b: &Mat, c: &mut Mat) {
+    const MC: usize = 64;
+    const KC: usize = 256;
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in k0..k1 {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    axpy_row(crow, aip, brow);
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+}
+
+/// Random low-rank factors for the CSKV policy row (prefill cost is
+/// value-independent, so random factors measure the same work as trained
+/// ones).
+fn random_factors(cfg: &ModelConfig, rank: usize) -> Arc<ModelFactors> {
+    let d = cfg.d_model;
+    let mut rng = Pcg64::new(11);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..cfg.n_layers)
+            .map(|_| LayerFactors { k: mk(), v: mk() })
+            .collect(),
+        provenance: "bench-random".into(),
+    })
+}
+
+fn engine_with_threads(cfg: &ModelConfig, threads: usize) -> Engine {
+    // Same init seed ⇒ identical weights at every width; only the knob
+    // differs.
+    let c = cfg.clone().with_threads(threads);
+    Engine::new(Arc::new(ModelWeights::init(&c, 42)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_perf_prefill",
+        "§Perf: streaming tiled parallel prefill vs the pre-PR serial path",
+    );
+    let fast = args.get_flag("fast");
+    let max_threads = args.get_usize("threads", 8);
+    let cores = ThreadPool::available_parallelism();
+    println!("(8-thread rows are meaningful only with ≥8 cores; this host has {cores})");
+    let mut b = if fast { Bencher::fast() } else { Bencher::new() };
+    let cfg = ModelConfig::tiny();
+
+    // ---- 1. GEMM inner-loop branch A/B (dense operands) -----------------
+    {
+        let mut rng = Pcg64::new(3);
+        // The two dense shapes prefill actually runs: QKV projection and
+        // the MLP up-projection at ctx 509.
+        for (m, k, n, label) in [(509usize, 128usize, 128usize, "qkv-proj"), (509, 128, 512, "mlp-up")] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let bm = Mat::randn(k, n, 1.0, &mut rng);
+            let mut c = Mat::zeros(m, n);
+            b.time(&format!("gemm {label} {m}x{k}x{n} branchless"), || {
+                matmul_into(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
+            b.time(&format!("gemm {label} {m}x{k}x{n} branchy(pre-PR)"), || {
+                matmul_into_branchy(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
+        }
+        let med = |b: &Bencher, name: &str| -> Option<f64> {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.samples.percentile(50.0))
+        };
+        for (m, k, n, label) in [(509usize, 128usize, 128usize, "qkv-proj"), (509, 128, 512, "mlp-up")] {
+            if let (Some(new), Some(old)) = (
+                med(&b, &format!("gemm {label} {m}x{k}x{n} branchless")),
+                med(&b, &format!("gemm {label} {m}x{k}x{n} branchy(pre-PR)")),
+            ) {
+                if new > 0.0 {
+                    println!("gemm branch removal {label}: {:.3}x vs pre-PR branchy", old / new);
+                }
+            }
+        }
+    }
+
+    // ---- 2. prefill: serial reference vs streaming at 1..8 threads ------
+    let thread_grid: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    let mut rng = Pcg64::new(5);
+    for ctx in [128usize, 256, 509] {
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        let reference = engine_with_threads(&cfg, 1);
+        b.time(&format!("prefill serial-reference ctx={ctx}"), || {
+            black_box(reference.prefill_reference(&prompt, None).logits.rows);
+        });
+        for &threads in &thread_grid {
+            let engine = engine_with_threads(&cfg, threads);
+            let mut scratch = PrefillScratch::new();
+            b.time(&format!("prefill streaming t={threads} ctx={ctx}"), || {
+                black_box(engine.prefill_with(&prompt, None, &mut scratch).logits.rows);
+            });
+        }
+    }
+
+    // Headline ratios (median-based) — the two acceptance gates.
+    {
+        let med = |name: &str| -> Option<f64> {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.samples.percentile(50.0))
+        };
+        for ctx in [128usize, 256, 509] {
+            if let Some(reference) = med(&format!("prefill serial-reference ctx={ctx}")) {
+                for &threads in &thread_grid {
+                    if let Some(new) = med(&format!("prefill streaming t={threads} ctx={ctx}")) {
+                        if new > 0.0 {
+                            println!(
+                                "speedup ctx={ctx} t={threads}: streaming {:.2}x vs serial reference{}",
+                                reference / new,
+                                match (ctx, threads) {
+                                    (509, 8) => "   <-- gate A (>=3x with 8 cores)",
+                                    (509, 1) => "   <-- gate B (>=1.3x serial-only)",
+                                    _ => "",
+                                }
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- 3. policy-attached prefill at ctx = 509 ------------------------
+    {
+        let ctx = 509usize;
+        let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+        let rank = KvCompressionPlan::uniform(0.8).rank_k(cfg.d_model);
+        let factors = random_factors(&cfg, rank);
+        let top = *thread_grid.last().unwrap_or(&1);
+        let engine = engine_with_threads(&cfg, top);
+        let reference = engine_with_threads(&cfg, 1);
+        let variants: [(&str, Option<QuantMode>); 2] = [("full", None), ("cskv80", Some(QuantMode::None))];
+        let mk_policy = |quant: Option<QuantMode>| -> Box<dyn KvCachePolicy> {
+            match quant {
+                None => Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+                Some(q) => Box::new(CskvCache::new(
+                    Arc::clone(&factors),
+                    cfg.d_model,
+                    CskvConfig { window: 32, quant: q },
+                )),
+            }
+        };
+        for (label, quant) in variants {
+            let mut scratch = PrefillScratch::new();
+            // Fresh policy per iteration: ingest state must not accumulate
+            // across timed runs.
+            b.time(&format!("prefill+policy {label} streaming t={top} ctx={ctx}"), || {
+                let mut p = mk_policy(quant);
+                black_box(engine.prefill_with(&prompt, Some(p.as_mut()), &mut scratch).logits.rows);
+            });
+            b.time(&format!("prefill+policy {label} serial-reference ctx={ctx}"), || {
+                let mut p = mk_policy(quant);
+                black_box(reference.prefill_reference(&prompt, Some(p.as_mut())).logits.rows);
+            });
+        }
+    }
+
+    // Machine-readable trajectory: name → median ns (+ git rev).
+    let json_path = cskv::runs_dir().join("BENCH_perf_prefill.json");
+    b.write_json("bench_perf_prefill", &json_path)?;
+    println!("wrote {}", json_path.display());
+    println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
+    Ok(())
+}

@@ -36,6 +36,14 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     /// Aggregate KV budget across active sequences (None = unlimited).
     pub kv_budget_bytes: Option<usize>,
+    /// Worker threads for the engines' parallel prefill kernels. Applied
+    /// as the **process default**
+    /// ([`crate::util::threadpool::set_global_threads`]) when the
+    /// coordinator starts, so every sequence backend (and the eval
+    /// harness, if colocated) shares one pool width instead of each
+    /// engine implicitly serializing. `0` = leave the process default
+    /// untouched. Results are bit-identical at any width.
+    pub threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -43,6 +51,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             max_batch: 8,
             kv_budget_bytes: None,
+            threads: 0,
         }
     }
 }
@@ -69,6 +78,9 @@ impl Coordinator {
     /// Start the worker. `setup` runs once inside the worker thread and
     /// returns the per-sequence backend factory.
     pub fn start(setup: Setup, cfg: CoordinatorConfig) -> Self {
+        if cfg.threads > 0 {
+            crate::util::threadpool::set_global_threads(cfg.threads);
+        }
         let metrics = Arc::new(Metrics::new());
         let m = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -307,6 +319,7 @@ mod tests {
             CoordinatorConfig {
                 max_batch: 8,
                 kv_budget_bytes: Some(one_seq_bytes),
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = (0..4).map(|_| coord.submit(vec![1, 2, 3, 4, 5, 6], 6)).collect();

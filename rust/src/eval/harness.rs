@@ -9,7 +9,7 @@
 use crate::data::tasks::{score_exact, TaskSample};
 use crate::data::vocab;
 use crate::kvcache::KvCachePolicy;
-use crate::model::engine::{DecodeState, Engine, PrefillRecord};
+use crate::model::engine::{DecodeState, Engine, PrefillRecord, PrefillScratch};
 use crate::tensor::ops;
 use crate::util::stats::Samples;
 
@@ -61,10 +61,16 @@ pub struct EvalSet {
 
 impl EvalSet {
     /// Generate `samples` and run the exact prefill once per sample.
+    ///
+    /// One [`PrefillScratch`] is shared across the whole set (a suite's
+    /// prompts share a context length, so after the first sample every
+    /// prefill runs against warm buffers), and each prefill itself
+    /// parallelizes per the engine's thread knob.
     pub fn build(engine: &Engine, samples: Vec<TaskSample>) -> Self {
+        let mut scratch = PrefillScratch::new();
         let records: Vec<PrefillRecord> = samples
             .iter()
-            .map(|s| engine.prefill(&s.prompt, None))
+            .map(|s| engine.prefill_with(&s.prompt, None, &mut scratch))
             .collect();
         let cfg = &engine.w.cfg;
         let reference = samples

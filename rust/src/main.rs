@@ -121,6 +121,10 @@ fn pretrain(args: &Args) -> anyhow::Result<()> {
 }
 
 fn load_engine(args: &Args) -> anyhow::Result<Engine> {
+    // `--threads N` sizes the process-wide pool every parallel prefill
+    // (eval harness, calibration, serving backends) draws from. Results
+    // are bit-identical at any width — this is purely a speed knob.
+    cskv::util::threadpool::set_global_threads(args.get_usize("threads", 1));
     let wpath = args.get_str(
         "weights",
         cskv::runs_dir().join("tinylm.bin").to_str().unwrap(),
@@ -235,6 +239,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let coord_cfg = CoordinatorConfig {
         max_batch: args.get_usize("max-batch", 4),
         kv_budget_bytes: if budget_kb == 0 { None } else { Some(budget_kb * 1024) },
+        // One pool width for every sequence backend in the process.
+        threads: args.get_usize("threads", 0),
     };
     let eng = engine.clone();
     let coord = Coordinator::start(

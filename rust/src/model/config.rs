@@ -6,7 +6,7 @@ use crate::util::json::Json;
 /// `python/compile/model.py::ModelConfig` — the AOT manifest embeds the
 /// config used at lowering time and [`ModelConfig::validate_against_json`]
 /// checks it at artifact load.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct ModelConfig {
     pub vocab_size: usize,
     pub d_model: usize,
@@ -16,6 +16,29 @@ pub struct ModelConfig {
     pub max_seq: usize,
     pub rope_base: f32,
     pub eps: f32,
+    /// Worker threads for the engine's parallel prefill kernels.
+    /// `0` = use the process default
+    /// ([`crate::util::threadpool::global_threads`]); results are
+    /// bit-identical at every width. A runtime knob, **not** part of the
+    /// architecture: excluded from equality, JSON output and the AOT
+    /// manifest contract.
+    pub threads: usize,
+}
+
+/// Architecture equality only — `threads` is a runtime performance knob
+/// and deliberately ignored, so a serving config with 8 workers still
+/// validates against an AOT manifest lowered with the same architecture.
+impl PartialEq for ModelConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.vocab_size == other.vocab_size
+            && self.d_model == other.d_model
+            && self.n_layers == other.n_layers
+            && self.n_heads == other.n_heads
+            && self.d_ff == other.d_ff
+            && self.max_seq == other.max_seq
+            && self.rope_base == other.rope_base
+            && self.eps == other.eps
+    }
 }
 
 impl ModelConfig {
@@ -30,6 +53,7 @@ impl ModelConfig {
             max_seq: 512,
             rope_base: 10000.0,
             eps: 1e-5,
+            threads: 0,
         }
     }
 
@@ -54,7 +78,14 @@ impl ModelConfig {
             max_seq: 128,
             rope_base: 10000.0,
             eps: 1e-5,
+            threads: 0,
         }
+    }
+
+    /// Builder-style override of the worker-thread knob.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     pub fn d_head(&self) -> usize {
@@ -114,6 +145,9 @@ impl ModelConfig {
             max_seq: need("max_seq")? as usize,
             rope_base: need("rope_base")? as f32,
             eps: need("eps")? as f32,
+            // Runtime knob, not serialized: manifests and saved weights
+            // describe architecture only. 0 = inherit the process default.
+            threads: 0,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -156,6 +190,19 @@ mod tests {
         let mut j = c.to_json();
         j.set("d_model", 999usize.into());
         assert!(c.validate_against_json(&j).is_err());
+    }
+
+    #[test]
+    fn threads_knob_is_runtime_only() {
+        let c = ModelConfig::tiny();
+        let c8 = c.clone().with_threads(8);
+        assert_eq!(c8.threads, 8);
+        // Equality and manifest validation ignore the knob...
+        assert_eq!(c, c8);
+        c8.validate_against_json(&c.to_json()).unwrap();
+        // ...and it never round-trips through JSON (architecture only).
+        let parsed = ModelConfig::from_json(&c8.to_json()).unwrap();
+        assert_eq!(parsed.threads, 0);
     }
 
     #[test]

@@ -10,13 +10,49 @@
 //! Architecture (must mirror `python/compile/model.py` exactly):
 //! pre-norm transformer, RMSNorm, rotate-half RoPE applied to Q/K per head,
 //! causal MHA, SiLU MLP, untied LM head.
+//!
+//! ## Prefill cost model
+//!
+//! The pre-streaming prefill (kept verbatim as the test/bench oracle
+//! [`Engine::prefill_reference`]) paid, per layer and per head at context
+//! `T`:
+//!
+//! | stage            | work / allocation                                   |
+//! |------------------|-----------------------------------------------------|
+//! | scores `Q·Kᵀ`    | full `T×T·d_h` FLOPs + a fresh `T×T` matrix         |
+//! | causal softmax   | exp over the lower triangle, zeroing the upper      |
+//! | H2O mass         | sweep of **all** `T×T` entries (half exact zeros)   |
+//! | output `P·V`     | `T×T·d_h` MACs behind a per-element `!= 0` branch   |
+//! | per-head slices  | 3 × `T×d_h` `cols_slice` copies                     |
+//! | K/V routing      | unconditional `k.clone()` + `v.clone()` per layer   |
+//! | RoPE             | `powf` + `sin_cos` recomputed per (pair, pos, head) |
+//!
+//! The streaming path ([`Engine::prefill`] / [`Engine::prefill_with`])
+//! removes every row of that table: query rows are processed in fixed
+//! [`PREFILL_ROW_BLOCK`]-row tiles (one per parallel task), each row
+//! computes only its causal prefix `j ≤ i` of scores into an `O(T)`
+//! scratch row — the `T×T` matrix is never materialized and the masked
+//! upper triangle is never touched — softmax + H2O mass + the weighted
+//! `V` sum run in the same pass, per-head slices are read in place,
+//! K/V are cloned only when the policy actually substitutes them, RoPE
+//! angles come from a per-generation [`ops::RopeTable`], and all
+//! projection / MLP / logit GEMMs go through the row-block-parallel
+//! [`par_matmul_into`]. Every per-row reduction keeps the serial kernel's
+//! operation order and the H2O mass is reduced per row-tile in ascending
+//! tile order, so the result is **bit-identical at every thread count**
+//! (`rust/tests/property_invariants.rs` holds the oracle; the only
+//! difference vs the pre-streaming code is that mass folds per row-tile
+//! instead of one global running sum — same values up to fp association,
+//! and it only seeds the H2O eviction heuristic). Decode-side costs are
+//! unchanged — see the decode cost model in [`crate::kvcache`].
 
 use std::sync::Arc;
 
 use crate::kvcache::{DecodeView, KvCachePolicy};
-use crate::tensor::matmul::{axpy_row, dot, matvec_t_into};
+use crate::tensor::matmul::{axpy_row, dot, matvec_t_into, par_matmul_into};
 use crate::tensor::ops;
 use crate::tensor::Mat;
+use crate::util::threadpool::{parallel_for, resolve_threads, SendPtr};
 
 use super::config::ModelConfig;
 use super::weights::ModelWeights;
@@ -128,6 +164,239 @@ impl DecodeState {
     }
 }
 
+/// Fixed query-row tile width for the streaming causal prefill attention:
+/// the unit of parallel work, the granularity of the deterministic H2O
+/// mass reduction, and the sizing denominator of the prefill scratch.
+pub const PREFILL_ROW_BLOCK: usize = 32;
+
+/// Preallocated per-generation work buffers for the prefill pass
+/// (mirroring [`DecodeScratch`] for the decode loop).
+///
+/// Everything transient a prefill needs lives here — Q / RoPE'd-K /
+/// attention / MLP matrices plus the per-tile score and mass scratch — so
+/// a generation allocates these once instead of once per layer, and
+/// harness-style callers ([`crate::eval::harness::EvalSet`], calibration
+/// capture) reuse one scratch across every same-length prompt. Buffers
+/// that the [`PrefillRecord`] *returns* (`xnorm`, pre-RoPE K, V, mass,
+/// logits) are still allocated per layer by necessity.
+pub struct PrefillScratch {
+    t: usize,
+    d: usize,
+    d_ff: usize,
+    /// Residual stream `[T, d]`.
+    x: Mat,
+    /// RoPE'd queries `[T, d]`.
+    q: Mat,
+    /// RoPE'd attention keys `[T, d]` (copy of the policy-routed K).
+    k_rope: Mat,
+    /// Attention output `[T, d]`.
+    attn_out: Mat,
+    /// Post-attention RMSNorm `[T, d]`.
+    xn2: Mat,
+    /// MLP hidden `[T, d_ff]`.
+    h1: Mat,
+    /// Shared projection output `[T, d]` (attn·Wo, then MLP down-proj).
+    proj: Mat,
+    /// Final RMSNorm `[T, d]`.
+    xf: Mat,
+    /// Per-tile score rows, `n_tiles × T` (each tile holds one `O(T)`
+    /// row — the `T×T` score matrix is never materialized).
+    score_rows: Vec<f32>,
+    /// Per-tile H2O mass partials, `n_tiles × T`.
+    mass_part: Vec<f32>,
+    /// Cached RoPE angles for positions `0..T`.
+    rope: ops::RopeTable,
+}
+
+impl Default for PrefillScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefillScratch {
+    /// An empty scratch; buffers are sized lazily by the first prefill.
+    pub fn new() -> Self {
+        PrefillScratch {
+            t: 0,
+            d: 0,
+            d_ff: 0,
+            x: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k_rope: Mat::zeros(0, 0),
+            attn_out: Mat::zeros(0, 0),
+            xn2: Mat::zeros(0, 0),
+            h1: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            xf: Mat::zeros(0, 0),
+            score_rows: Vec::new(),
+            mass_part: Vec::new(),
+            rope: ops::RopeTable::default(),
+        }
+    }
+
+    /// Size every buffer for a `t`-token prompt under `cfg` (no-op when
+    /// already sized — the reuse fast path for harness loops).
+    fn ensure(&mut self, t: usize, cfg: &ModelConfig) {
+        let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        if self.t != t || self.d != d || self.d_ff != d_ff {
+            self.x = Mat::zeros(t, d);
+            self.q = Mat::zeros(t, d);
+            self.k_rope = Mat::zeros(t, d);
+            self.attn_out = Mat::zeros(t, d);
+            self.xn2 = Mat::zeros(t, d);
+            self.h1 = Mat::zeros(t, d_ff);
+            self.proj = Mat::zeros(t, d);
+            self.xf = Mat::zeros(t, d);
+            let n_tiles = t.div_ceil(PREFILL_ROW_BLOCK);
+            self.score_rows = vec![0.0; n_tiles * t];
+            self.mass_part = vec![0.0; n_tiles * t];
+            self.t = t;
+            self.d = d;
+            self.d_ff = d_ff;
+        }
+        if !self.rope.covers(cfg.d_head(), cfg.rope_base, t) {
+            self.rope = ops::RopeTable::new(cfg.d_head(), cfg.rope_base, t);
+        }
+    }
+}
+
+/// Output + scratch bundle for [`streaming_causal_attention`].
+struct AttnBuffers<'a> {
+    /// Attention output `[T, d]`, overwritten.
+    out: &'a mut Mat,
+    /// Per-tile score rows (`n_tiles × T`).
+    score_rows: &'a mut [f32],
+    /// Per-tile mass partials (`n_tiles × T`).
+    mass_part: &'a mut [f32],
+    /// Aggregated H2O mass per key position `[T]`, overwritten.
+    mass: &'a mut [f32],
+}
+
+/// Streaming (flash-style) causal attention over RoPE'd `q`/`k` and `v`:
+/// query rows are processed in [`PREFILL_ROW_BLOCK`]-row tiles, one
+/// parallel task per tile. Each row computes only its causal prefix
+/// `j ≤ i` of scores into the tile's `O(T)` scratch row (the masked upper
+/// triangle is skipped entirely and no `T×T` matrix exists), then runs
+/// softmax, the H2O mass accumulation and the weighted `V` sum in the
+/// same pass.
+///
+/// Determinism: every output row is produced by exactly one task using
+/// the serial kernels' per-row operation order, and the mass partials are
+/// reduced in ascending tile order after the parallel region — so the
+/// result is bit-identical at every thread count.
+fn streaming_causal_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    n_heads: usize,
+    scale: f32,
+    threads: usize,
+    bufs: AttnBuffers<'_>,
+) {
+    let t = q.rows;
+    let d = q.cols;
+    let dh = d / n_heads;
+    debug_assert_eq!(k.rows, t);
+    debug_assert_eq!(v.rows, t);
+    debug_assert_eq!((bufs.out.rows, bufs.out.cols), (t, d));
+    debug_assert_eq!(bufs.mass.len(), t);
+    let n_tiles = t.div_ceil(PREFILL_ROW_BLOCK);
+    assert!(bufs.score_rows.len() >= n_tiles * t);
+    assert!(bufs.mass_part.len() >= n_tiles * t);
+
+    let out_ptr = SendPtr(bufs.out.data.as_mut_ptr());
+    let score_ptr = SendPtr(bufs.score_rows.as_mut_ptr());
+    let mpart_ptr = SendPtr(bufs.mass_part.as_mut_ptr());
+    parallel_for(n_tiles, threads, |tile| {
+        let r0 = tile * PREFILL_ROW_BLOCK;
+        let r1 = (r0 + PREFILL_ROW_BLOCK).min(t);
+        // Safety: this tile exclusively owns output rows [r0, r1) and
+        // scratch slot `tile`; `parallel_for` hands out each tile exactly
+        // once and the buffers outlive the scoped workers.
+        let out_rows = unsafe { out_ptr.slice_mut(r0 * d, (r1 - r0) * d) };
+        let srow = unsafe { score_ptr.slice_mut(tile * t, t) };
+        let mpart = unsafe { mpart_ptr.slice_mut(tile * t, t) };
+        out_rows.fill(0.0);
+        mpart.fill(0.0);
+        for i in r0..r1 {
+            let valid = i + 1; // causal prefix — the tile never looks past it
+            let qrow = q.row(i);
+            let orow = &mut out_rows[(i - r0) * d..(i - r0 + 1) * d];
+            for h in 0..n_heads {
+                let (lo, hi) = (h * dh, (h + 1) * dh);
+                let qh = &qrow[lo..hi];
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..valid {
+                    let s = dot(qh, &k.row(j)[lo..hi]) * scale;
+                    srow[j] = s;
+                    mx = mx.max(s);
+                }
+                let mut sum = 0.0f32;
+                for e in srow[..valid].iter_mut() {
+                    *e = (*e - mx).exp();
+                    sum += *e;
+                }
+                let inv = 1.0 / sum;
+                for j in 0..valid {
+                    let p = srow[j] * inv;
+                    mpart[j] += p;
+                    axpy_row(&mut orow[lo..hi], p, &v.row(j)[lo..hi]);
+                }
+            }
+        }
+    });
+
+    // Deterministic H2O mass reduction: ascending tile order, independent
+    // of the thread count that produced the partials.
+    bufs.mass.fill(0.0);
+    for tile in 0..n_tiles {
+        let mpart = &bufs.mass_part[tile * t..(tile + 1) * t];
+        for (mj, &pj) in bufs.mass.iter_mut().zip(mpart) {
+            *mj += pj;
+        }
+    }
+}
+
+/// The pre-PR blocked GEMM **with** the `aip == 0.0` skip, kept solely
+/// for [`Engine::prefill_reference`]'s `P·V` product: the causal softmax
+/// zeroes the upper triangle of `P`, and the pre-streaming prefill's
+/// cost profile depended on the branch skipping those ~`T²/2` AXPYs —
+/// using today's branchless [`crate::tensor::matmul::matmul_into`] here
+/// would make the bench baseline slower than the code this PR actually
+/// replaced and inflate the reported speedups. Skipping exact zeros is
+/// bit-preserving on these operands, so oracle bit-identity is
+/// unaffected.
+fn matmul_skip_zeros(a: &Mat, b: &Mat) -> Mat {
+    const MC: usize = 64;
+    const KC: usize = 256;
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in k0..k1 {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    axpy_row(crow, aip, &b.data[p * n..(p + 1) * n]);
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+    c
+}
+
 /// The reference engine. Cheap to clone (weights are shared).
 #[derive(Clone)]
 pub struct Engine {
@@ -141,7 +410,150 @@ impl Engine {
 
     /// Exact prefill over `tokens`, feeding `policy` (if any) per layer.
     /// Policies may substitute lossy K/V for the attention itself (ASVD).
-    pub fn prefill(&self, tokens: &[usize], mut policy: Option<&mut dyn KvCachePolicy>) -> PrefillRecord {
+    ///
+    /// Convenience wrapper around [`Engine::prefill_with`] with a
+    /// throwaway [`PrefillScratch`] (one allocation set per generation).
+    /// Callers that prefill in a loop (eval harness, calibration capture)
+    /// should hold a scratch and call `prefill_with` directly.
+    pub fn prefill(&self, tokens: &[usize], policy: Option<&mut dyn KvCachePolicy>) -> PrefillRecord {
+        let mut scratch = PrefillScratch::new();
+        self.prefill_with(tokens, policy, &mut scratch)
+    }
+
+    /// Exact prefill through the streaming tiled attention path, using
+    /// (and lazily sizing) the caller's [`PrefillScratch`].
+    ///
+    /// Worker count comes from `ModelConfig::threads` (0 = the process
+    /// default, see [`crate::util::threadpool::set_global_threads`]); the
+    /// result is bit-identical at every width, and to the serial
+    /// [`Engine::prefill_reference`] oracle.
+    pub fn prefill_with(
+        &self,
+        tokens: &[usize],
+        mut policy: Option<&mut dyn KvCachePolicy>,
+        scratch: &mut PrefillScratch,
+    ) -> PrefillRecord {
+        let cfg = &self.w.cfg;
+        let t = tokens.len();
+        assert!(t > 0, "empty prompt");
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let threads = resolve_threads(cfg.threads);
+        scratch.ensure(t, cfg);
+        let PrefillScratch {
+            x,
+            q,
+            k_rope,
+            attn_out,
+            xn2,
+            h1,
+            proj,
+            xf,
+            score_rows,
+            mass_part,
+            rope,
+            ..
+        } = scratch;
+
+        // Embedding lookup.
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.w.embed.row(tok));
+        }
+
+        let mut xnorms = Vec::with_capacity(cfg.n_layers);
+        let mut ks = Vec::with_capacity(cfg.n_layers);
+        let mut vs = Vec::with_capacity(cfg.n_layers);
+        let mut masses = Vec::with_capacity(cfg.n_layers);
+
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            let xnorm = ops::rmsnorm_rows_par(&*x, lw.ln1.row(0), cfg.eps, threads);
+            par_matmul_into(&xnorm, &lw.wq, q, threads);
+            let mut k = Mat::zeros(t, d); // pre-RoPE, returned in the record
+            par_matmul_into(&xnorm, &lw.wk, &mut k, threads);
+            let mut v = Mat::zeros(t, d); // returned in the record
+            par_matmul_into(&xnorm, &lw.wv, &mut v, threads);
+
+            // Hand the exact streams to the policy; it may substitute.
+            let replacement = policy
+                .as_deref_mut()
+                .and_then(|p| p.ingest_prefill(li, &xnorm, &k, &v));
+            // Allocation-lean routing: when the policy substitutes
+            // nothing, attention reads `v` in place and `k` through the
+            // reusable RoPE buffer — no per-layer clones.
+            let (k_att, v_att): (&Mat, &Mat) = match &replacement {
+                Some((rk, rv)) => (rk, rv),
+                None => (&k, &v),
+            };
+
+            // RoPE at absolute positions 0..t via the cached angle table.
+            k_rope.data.copy_from_slice(&k_att.data);
+            ops::rope_rows_cached(q, nh, 0, rope, threads);
+            ops::rope_rows_cached(k_rope, nh, 0, rope, threads);
+
+            // Streaming tiled causal MHA + H2O mass, one pass.
+            let mut mass = vec![0.0f32; t];
+            streaming_causal_attention(
+                &*q,
+                &*k_rope,
+                v_att,
+                nh,
+                scale,
+                threads,
+                AttnBuffers {
+                    out: &mut *attn_out,
+                    score_rows: &mut score_rows[..],
+                    mass_part: &mut mass_part[..],
+                    mass: &mut mass,
+                },
+            );
+            if let Some(p) = policy.as_deref_mut() {
+                p.observe_prefill_attn(li, &mass);
+            }
+            masses.push(mass);
+            par_matmul_into(&*attn_out, &lw.wo, proj, threads);
+            x.add_assign(&*proj);
+
+            // MLP block.
+            ops::rmsnorm_rows_into(&*x, lw.ln2.row(0), cfg.eps, xn2, threads);
+            par_matmul_into(&*xn2, &lw.w1, h1, threads);
+            ops::silu_rows(h1, threads);
+            par_matmul_into(&*h1, &lw.w2, proj, threads);
+            x.add_assign(&*proj);
+
+            xnorms.push(xnorm);
+            ks.push(k);
+            vs.push(v);
+        }
+
+        ops::rmsnorm_rows_into(&*x, self.w.ln_f.row(0), cfg.eps, xf, threads);
+        let mut logits = Mat::zeros(t, cfg.vocab_size);
+        par_matmul_into(&*xf, &self.w.lm_head, &mut logits, threads);
+        PrefillRecord {
+            xnorms,
+            ks,
+            vs,
+            attn_mass: masses,
+            logits,
+        }
+    }
+
+    /// The pre-streaming serial prefill, kept verbatim as the correctness
+    /// oracle and the bench baseline: per head it materializes the full
+    /// `T×T` score matrix, runs [`ops::softmax_causal`] and the blocked
+    /// output GEMM, and clones K/V unconditionally — exactly what
+    /// [`Engine::prefill`] paid before the streaming rewrite (see the
+    /// prefill cost model in the module docs).
+    ///
+    /// The one deliberate deviation: H2O mass folds per
+    /// [`PREFILL_ROW_BLOCK`]-row tile (the parallel path's deterministic
+    /// reduction order) instead of the old single running sum, so
+    /// `rust/tests/property_invariants.rs` can assert **bit-identity**
+    /// between this oracle and the streaming path at every thread count.
+    pub fn prefill_reference(
+        &self,
+        tokens: &[usize],
+        mut policy: Option<&mut dyn KvCachePolicy>,
+    ) -> PrefillRecord {
         let cfg = &self.w.cfg;
         let t = tokens.len();
         assert!(t > 0, "empty prompt");
@@ -165,7 +577,6 @@ impl Engine {
             let k = xnorm.matmul(&lw.wk); // pre-RoPE
             let v = xnorm.matmul(&lw.wv);
 
-            // Hand the exact streams to the policy; it may substitute.
             let replacement = policy
                 .as_deref_mut()
                 .and_then(|p| p.ingest_prefill(li, &xnorm, &k, &v));
@@ -174,15 +585,14 @@ impl Engine {
                 None => (k.clone(), v.clone()),
             };
 
-            // RoPE at absolute positions 0..t.
             let mut q_r = q;
             let mut k_r = k_use;
             ops::rope_rows(&mut q_r, nh, 0, cfg.rope_base);
             ops::rope_rows(&mut k_r, nh, 0, cfg.rope_base);
 
-            // Causal MHA, accumulating attention mass for H2O.
+            // Causal MHA with materialized per-head probability matrices.
             let mut attn_out = Mat::zeros(t, d);
-            let mut mass = vec![0.0f32; t];
+            let mut probs = Vec::with_capacity(nh);
             for h in 0..nh {
                 let (lo, hi) = (h * dh, (h + 1) * dh);
                 let qh = q_r.cols_slice(lo, hi);
@@ -190,15 +600,32 @@ impl Engine {
                 let vh = v_use.cols_slice(lo, hi);
                 let mut scores = qh.matmul_nt(&kh).scale(scale);
                 ops::softmax_causal(&mut scores, 0);
-                for i in 0..t {
-                    for (j, &p) in scores.row(i).iter().enumerate() {
-                        mass[j] += p;
-                    }
-                }
-                let oh = scores.matmul(&vh);
+                // Pre-PR kernel: the zero-skip branch is what made the
+                // old path's P·V effectively triangle-only.
+                let oh = matmul_skip_zeros(&scores, &vh);
                 for i in 0..t {
                     attn_out.row_mut(i)[lo..hi].copy_from_slice(oh.row(i));
                 }
+                probs.push(scores);
+            }
+            // H2O mass over the causal lower triangle only, folded per
+            // row tile in the canonical (tile, i, h, j) order.
+            let mut mass = vec![0.0f32; t];
+            let mut r0 = 0;
+            while r0 < t {
+                let r1 = (r0 + PREFILL_ROW_BLOCK).min(t);
+                let mut part = vec![0.0f32; t];
+                for i in r0..r1 {
+                    for p in &probs {
+                        for (j, pj) in part.iter_mut().enumerate().take(i + 1) {
+                            *pj += p.at(i, j);
+                        }
+                    }
+                }
+                for (mj, &pj) in mass.iter_mut().zip(&part) {
+                    *mj += pj;
+                }
+                r0 = r1;
             }
             if let Some(p) = policy.as_deref_mut() {
                 p.observe_prefill_attn(li, &mass);
@@ -393,8 +820,11 @@ impl Engine {
         let mut pools: Vec<Mat> = (0..cfg.n_layers)
             .map(|_| Mat::zeros(0, cfg.d_model))
             .collect();
+        // One scratch across the whole corpus: same-length docs reuse
+        // every prefill buffer allocation-free.
+        let mut scratch = PrefillScratch::new();
         for doc in docs {
-            let rec = self.prefill(doc, None);
+            let rec = self.prefill_with(doc, None, &mut scratch);
             for (li, xn) in rec.xnorms.iter().enumerate() {
                 pools[li] = pools[li].vcat(xn);
             }
@@ -525,6 +955,47 @@ mod tests {
         assert!(s1.kv_bytes_final > 0);
         // 5 prompt + 5 decoded appends (last token is returned, not decoded)
         assert_eq!(c1.len(0), prompt.len() + 5);
+    }
+
+    /// The tentpole guarantee at engine granularity: the streaming tiled
+    /// prefill is bit-identical to the materializing serial oracle, at
+    /// several thread counts, with and without a policy attached. (The
+    /// cross-policy sweep lives in `rust/tests/property_invariants.rs`.)
+    #[test]
+    fn streaming_prefill_matches_reference_oracle() {
+        let cfg = ModelConfig::test_small();
+        // 70 rows > MC = 64, so the row-chunked parallel GEMMs run their
+        // parallel path inside prefill (not the m <= MC serial fallback).
+        let tokens: Vec<usize> = (0..70).map(|i| (i * 29 + 3) % 256).collect();
+        for threads in [1usize, 2, 8] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            let e = Engine::new(Arc::new(ModelWeights::init(&c, 42)));
+            let want = e.prefill_reference(&tokens, None);
+            let got = e.prefill(&tokens, None);
+            assert_eq!(got.logits.data, want.logits.data, "logits, threads={threads}");
+            for li in 0..c.n_layers {
+                assert_eq!(got.xnorms[li].data, want.xnorms[li].data, "xnorm L{li}");
+                assert_eq!(got.ks[li].data, want.ks[li].data, "k L{li}");
+                assert_eq!(got.vs[li].data, want.vs[li].data, "v L{li}");
+                assert_eq!(got.attn_mass[li], want.attn_mass[li], "mass L{li}");
+            }
+        }
+    }
+
+    /// Scratch reuse across different prompt lengths must resize cleanly
+    /// and stay equal to fresh-scratch results.
+    #[test]
+    fn prefill_scratch_reuse_across_lengths() {
+        let e = engine();
+        let mut scratch = PrefillScratch::new();
+        for t in [1usize, 5, 33, 64, 7] {
+            let tokens: Vec<usize> = (0..t).map(|i| (i * 7 + 1) % 256).collect();
+            let reused = e.prefill_with(&tokens, None, &mut scratch);
+            let fresh = e.prefill(&tokens, None);
+            assert_eq!(reused.logits.data, fresh.logits.data, "t={t}");
+            assert_eq!(reused.attn_mass, fresh.attn_mass, "t={t}");
+        }
     }
 
     #[test]

@@ -9,12 +9,37 @@
 //!
 //! The kernel is an i-k-j loop order over `MC×KC×NC` blocks with an
 //! 8-wide unrolled inner loop; `matmul_nt` uses a 4-accumulator dot
-//! product. On the 1-core container this reaches a few GFLOP/s, enough
-//! for the quality grid (see EXPERIMENTS.md §Perf for measured numbers).
+//! product.
+//!
+//! ## Parallel row-block variants
+//!
+//! [`par_matmul_into`] / [`par_matmul_nt_into`] split the *output rows*
+//! across scoped workers via [`parallel_chunks`] (GEMM rows cost the
+//! same, so a static partition balances). Each output row is produced by
+//! exactly one worker running the identical per-row reduction (ascending
+//! `KC` depth blocks, ascending `p` within a block), so the result is
+//! **bit-identical to the serial kernels at every thread count** — the
+//! prefill bit-identity property test in `rust/tests/
+//! property_invariants.rs` rests on this.
+//!
+//! The historical `aip == 0.0` skip in the `matmul_into` inner loop was
+//! removed: on the dense activations the engine feeds it, the branch
+//! cost a compare per element and never fired. The one operand where it
+//! paid — the causal-softmax'd `P·V` with an exactly-zero upper triangle
+//! — no longer passes through this kernel at all (the streaming prefill
+//! skips the triangle outright, and the serial oracle
+//! `Engine::prefill_reference` keeps a private copy of the branchy
+//! kernel so the bench baseline stays faithful to the pre-PR cost).
+//! `bench_perf_prefill` records the dense before/after numbers.
+//! `matmul_tn` keeps its skip — recon-trainer gradients are the one
+//! genuinely sparse-ish operand left.
+
+use crate::util::threadpool::{parallel_chunks, SendPtr};
 
 use super::Mat;
 
-/// Row-block size (fits a block of A in L1 alongside the B panel).
+/// Row-block size (fits a block of A in L1 alongside the B panel); also
+/// the unit of work handed to one parallel task.
 const MC: usize = 64;
 /// Depth-block size.
 const KC: usize = 256;
@@ -35,31 +60,72 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    c.data.fill(0.0);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let m = a.rows;
+    let n = b.cols;
     // Blocked i-k-j: for each (row-block, depth-block), stream B rows.
     let mut i0 = 0;
     while i0 < m {
         let i1 = (i0 + MC).min(m);
-        let mut k0 = 0;
-        while k0 < k {
-            let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for p in k0..k1 {
-                    let aip = arow[p];
-                    if aip == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[p * n..(p + 1) * n];
-                    axpy_row(crow, aip, brow);
-                }
-            }
-            k0 = k1;
-        }
+        matmul_row_block(a, b, &mut c.data[i0 * n..i1 * n], i0, i1);
         i0 = i1;
     }
+}
+
+/// Compute output rows `[i0, i1)` of `C = A·B` into `c_rows` (a buffer
+/// whose first element is `C[i0][0]`). The per-row reduction order —
+/// ascending `KC` depth blocks, ascending `p` within a block — is the
+/// single definition shared by the serial and parallel entry points, so
+/// both produce identical bits for every row.
+fn matmul_row_block(a: &Mat, b: &Mat, c_rows: &mut [f32], i0: usize, i1: usize) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
+    c_rows.fill(0.0);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        for i in i0..i1 {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c_rows[(i - i0) * n..(i - i0 + 1) * n];
+            for p in k0..k1 {
+                // Dense inner loop — no `aip == 0.0` skip: on dense
+                // activations the branch never fires and costs a compare
+                // per element (A/B'd in bench_perf_prefill).
+                let brow = &b.data[p * n..(p + 1) * n];
+                axpy_row(crow, arow[p], brow);
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// `C = A·B` with output rows split across up to `threads` scoped workers
+/// via [`parallel_chunks`], each worker running the serial `MC`-blocked
+/// kernel over its contiguous row range. Bit-identical to [`matmul_into`]
+/// at every thread count (each row's reduction runs the same
+/// [`matmul_row_block`] code on exactly one worker).
+pub fn par_matmul_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let threads = threads.max(1);
+    let m = a.rows;
+    if threads == 1 || m <= MC {
+        matmul_into(a, b, c);
+        return;
+    }
+    let n = b.cols;
+    let ptr = SendPtr(c.data.as_mut_ptr());
+    parallel_chunks(m, threads, |lo, hi| {
+        let mut i0 = lo;
+        while i0 < hi {
+            let i1 = (i0 + MC).min(hi);
+            // Safety: chunks are disjoint row ranges of `c.data`, each
+            // handed to exactly one worker, and `c` outlives the scoped
+            // workers.
+            let c_rows = unsafe { ptr.slice_mut(i0 * n, (i1 - i0) * n) };
+            matmul_row_block(a, b, c_rows, i0, i1);
+            i0 = i1;
+        }
+    });
 }
 
 /// `crow += s * brow`, 8-way unrolled — the shared AXPY kernel behind the
@@ -103,14 +169,45 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let n = b.rows;
+    matmul_nt_row_block(a, b, &mut c.data[..a.rows * n], 0, a.rows);
+}
+
+/// Output rows `[i0, i1)` of `C = A·Bᵀ` into `c_rows` (first element is
+/// `C[i0][0]`). Shared by the serial and parallel entry points.
+fn matmul_nt_row_block(a: &Mat, b: &Mat, c_rows: &mut [f32], i0: usize, i1: usize) {
     let k = a.cols;
-    for i in 0..a.rows {
+    let n = b.rows;
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
+    for i in i0..i1 {
         let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..b.rows {
+        let crow = &mut c_rows[(i - i0) * n..(i - i0 + 1) * n];
+        for j in 0..n {
             crow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
         }
     }
+}
+
+/// `C = A·Bᵀ` with output rows split across up to `threads` scoped
+/// workers via [`parallel_chunks`]. Bit-identical to [`matmul_nt_into`]
+/// at every thread count.
+pub fn par_matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let threads = threads.max(1);
+    let m = a.rows;
+    if threads == 1 || m <= MC {
+        matmul_nt_into(a, b, c);
+        return;
+    }
+    let n = b.rows;
+    let ptr = SendPtr(c.data.as_mut_ptr());
+    parallel_chunks(m, threads, |lo, hi| {
+        // Safety: disjoint row ranges, one worker each; `c` outlives the
+        // scoped workers.
+        let c_rows = unsafe { ptr.slice_mut(lo * n, (hi - lo) * n) };
+        matmul_nt_row_block(a, b, c_rows, lo, hi);
+    });
 }
 
 /// 4-accumulator dot product (breaks the FP dependency chain).
@@ -303,5 +400,45 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         let _ = matmul(&a, &b);
+    }
+
+    /// The contract the parallel prefill rests on: the row-block parallel
+    /// GEMMs are bit-identical to the serial kernels at every thread
+    /// count, including shapes that don't tile evenly and zero-heavy
+    /// operands (exercising the removed `aip == 0` fast path).
+    #[test]
+    fn par_variants_bit_identical_to_serial() {
+        let mut rng = Pcg64::new(20);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (65, 33, 9), (130, 300, 17), (200, 8, 3)] {
+            let mut a = Mat::randn(m, k, 1.0, &mut rng);
+            // Sprinkle exact zeros so the dense inner loop covers them.
+            for v in a.data.iter_mut().step_by(7) {
+                *v = 0.0;
+            }
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut want = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut want);
+            let bt = Mat::randn(n, k, 1.0, &mut rng);
+            let mut want_nt = Mat::zeros(m, n);
+            matmul_nt_into(&a, &bt, &mut want_nt);
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = Mat::from_vec(m, n, vec![5.0; m * n]); // dirty
+                par_matmul_into(&a, &b, &mut got, threads);
+                assert_eq!(got.data, want.data, "matmul ({m},{k},{n}) threads={threads}");
+                let mut got_nt = Mat::from_vec(m, n, vec![-2.0; m * n]);
+                par_matmul_nt_into(&a, &bt, &mut got_nt, threads);
+                assert_eq!(got_nt.data, want_nt.data, "matmul_nt ({m},{k},{n}) threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_inner_loop_handles_all_zero_rows() {
+        // A row of exact zeros must still produce a (numerically) zero
+        // output row without the old skip branch.
+        let a = Mat::zeros(3, 4);
+        let b = Mat::from_fn(4, 2, |i, j| -((i + j) as f32) - 1.0);
+        let c = matmul(&a, &b);
+        assert!(c.data.iter().all(|&v| v == 0.0));
     }
 }

@@ -6,6 +6,8 @@
 //! use the same formulations (RMSNorm without bias, rotate-half RoPE,
 //! softmax with max-subtraction).
 
+use crate::util::threadpool::parallel_rows;
+
 use super::Mat;
 
 /// In-place numerically-stable softmax over each row, restricted to the
@@ -79,10 +81,27 @@ pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
 /// Row-wise RMSNorm over a matrix.
 pub fn rmsnorm_rows(m: &Mat, gain: &[f32], eps: f32) -> Mat {
     let mut out = Mat::zeros(m.rows, m.cols);
-    for i in 0..m.rows {
-        let (src, dst) = (m.row(i), &mut out.data[i * m.cols..(i + 1) * m.cols]);
-        rmsnorm(src, gain, eps, dst);
-    }
+    rmsnorm_rows_into(m, gain, eps, &mut out, 1);
+    out
+}
+
+/// Row-wise RMSNorm into a preallocated output, rows split across up to
+/// `threads` workers. Rows are independent, so the result is bit-identical
+/// to the serial loop at every thread count.
+pub fn rmsnorm_rows_into(m: &Mat, gain: &[f32], eps: f32, out: &mut Mat, threads: usize) {
+    assert_eq!((m.rows, m.cols), (out.rows, out.cols));
+    let rows = m.rows;
+    let cols = m.cols;
+    parallel_rows(&mut out.data, rows, cols, threads, |i, dst| {
+        rmsnorm(&m.data[i * cols..(i + 1) * cols], gain, eps, dst);
+    });
+}
+
+/// Row-wise RMSNorm with a thread knob (allocating variant of
+/// [`rmsnorm_rows_into`]).
+pub fn rmsnorm_rows_par(m: &Mat, gain: &[f32], eps: f32, threads: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, m.cols);
+    rmsnorm_rows_into(m, gain, eps, &mut out, threads);
     out
 }
 
@@ -96,6 +115,18 @@ pub fn silu_inplace(m: &mut Mat) {
     for v in m.data.iter_mut() {
         *v = silu(*v);
     }
+}
+
+/// SiLU applied row-parallel (the prefill MLP's `[T, d_ff]` activation is
+/// ~260k `exp` calls at ctx 509 — worth spreading). Element-wise, so
+/// bit-identical to [`silu_inplace`] at every thread count.
+pub fn silu_rows(m: &mut Mat, threads: usize) {
+    let (rows, cols) = (m.rows, m.cols);
+    parallel_rows(&mut m.data, rows, cols, threads, |_, row| {
+        for v in row.iter_mut() {
+            *v = silu(*v);
+        }
+    });
 }
 
 /// Rotate-half RoPE applied in place to one token's d-dim head vector.
@@ -125,6 +156,87 @@ pub fn rope_rows(m: &mut Mat, n_heads: usize, pos0: usize, base: f32) {
             rope_rotate(&mut row[h * d_head..(h + 1) * d_head], pos0 + t, base);
         }
     }
+}
+
+/// Precomputed rotate-half RoPE sin/cos table for positions
+/// `0..positions` and one head width.
+///
+/// [`rope_rotate`] recomputes `powf` + `sin_cos` per (pair, position,
+/// head, layer); during prefill the same `(pair, position)` angle is
+/// needed `n_heads × n_layers × 2` times (Q and K), so the table turns
+/// ~0.5M libm calls per layer at ctx 509 into one build of
+/// `positions × d_head/2` entries per generation. Entries are computed
+/// with expressions identical to [`rope_rotate`], so applying the table
+/// is **bit-identical** to the direct path.
+#[derive(Clone, Debug, Default)]
+pub struct RopeTable {
+    d_head: usize,
+    base: f32,
+    positions: usize,
+    /// `[positions, d_head/2]`, row-major.
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+}
+
+impl RopeTable {
+    pub fn new(d_head: usize, base: f32, positions: usize) -> Self {
+        let half = d_head / 2;
+        let mut sin = vec![0.0f32; positions * half];
+        let mut cos = vec![0.0f32; positions * half];
+        for pos in 0..positions {
+            for i in 0..half {
+                // Must match `rope_rotate` exactly (bit-identity).
+                let theta = base.powf(-2.0 * i as f32 / d_head as f32);
+                let angle = pos as f32 * theta;
+                let (s, c) = angle.sin_cos();
+                sin[pos * half + i] = s;
+                cos[pos * half + i] = c;
+            }
+        }
+        RopeTable {
+            d_head,
+            base,
+            positions,
+            sin,
+            cos,
+        }
+    }
+
+    /// True if this table covers `(d_head, base)` for positions `0..t`.
+    pub fn covers(&self, d_head: usize, base: f32, t: usize) -> bool {
+        self.d_head == d_head && self.base == base && self.positions >= t
+    }
+
+    /// Rotate one head vector at `pos` — bit-identical to
+    /// [`rope_rotate`]`(x, pos, base)`.
+    #[inline]
+    pub fn rotate(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.d_head);
+        debug_assert!(pos < self.positions);
+        let half = self.d_head / 2;
+        let srow = &self.sin[pos * half..(pos + 1) * half];
+        let crow = &self.cos[pos * half..(pos + 1) * half];
+        for i in 0..half {
+            let (a, b) = (x[i], x[i + half]);
+            x[i] = a * crow[i] - b * srow[i];
+            x[i + half] = a * srow[i] + b * crow[i];
+        }
+    }
+}
+
+/// [`rope_rows`] through a [`RopeTable`], rows split across up to
+/// `threads` workers. Rows are independent and the table is read-only, so
+/// this is bit-identical to the serial direct path at every thread count.
+pub fn rope_rows_cached(m: &mut Mat, n_heads: usize, pos0: usize, table: &RopeTable, threads: usize) {
+    let d_head = m.cols / n_heads;
+    assert_eq!(table.d_head, d_head, "RoPE table head width mismatch");
+    assert!(table.positions >= pos0 + m.rows, "RoPE table too short");
+    let (rows, cols) = (m.rows, m.cols);
+    parallel_rows(&mut m.data, rows, cols, threads, |t, row| {
+        for h in 0..n_heads {
+            table.rotate(&mut row[h * d_head..(h + 1) * d_head], pos0 + t);
+        }
+    });
 }
 
 /// Argmax over a slice.
@@ -246,6 +358,49 @@ mod tests {
         let d1 = dotp(&rot(&q, 5), &rot(&k, 2));
         let d2 = dotp(&rot(&q, 15), &rot(&k, 12));
         assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn rope_table_bit_identical_to_direct() {
+        let mut rng = Pcg64::new(7);
+        let (nh, dh, t) = (3usize, 8usize, 19usize);
+        let base = 10000.0f32;
+        let table = RopeTable::new(dh, base, t + 2);
+        assert!(table.covers(dh, base, t));
+        assert!(!table.covers(dh + 2, base, t));
+        let direct = Mat::randn(t, nh * dh, 1.0, &mut rng);
+        for threads in [1usize, 2, 8] {
+            let mut cached = direct.clone();
+            let mut want = direct.clone();
+            rope_rows(&mut want, nh, 2, base);
+            rope_rows_cached(&mut cached, nh, 2, &table, threads);
+            assert_eq!(cached.data, want.data, "threads={threads}");
+        }
+        // Single-vector path: table.rotate ≡ rope_rotate at the same pos.
+        let mut x: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+        let mut y = x.clone();
+        rope_rotate(&mut x, 5, base);
+        table.rotate(&mut y, 5);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn rmsnorm_and_silu_parallel_match_serial() {
+        let mut rng = Pcg64::new(8);
+        let m = Mat::randn(9, 12, 2.0, &mut rng);
+        let gain: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let want = rmsnorm_rows(&m, &gain, 1e-5);
+        for threads in [2usize, 8] {
+            assert_eq!(rmsnorm_rows_par(&m, &gain, 1e-5, threads).data, want.data);
+            let mut out = Mat::from_vec(9, 12, vec![3.0; 9 * 12]); // dirty
+            rmsnorm_rows_into(&m, &gain, 1e-5, &mut out, threads);
+            assert_eq!(out.data, want.data);
+        }
+        let mut a = Mat::randn(7, 33, 1.5, &mut rng);
+        let mut b = a.clone();
+        silu_inplace(&mut a);
+        silu_rows(&mut b, 8);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

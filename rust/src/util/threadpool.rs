@@ -89,6 +89,93 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Process-wide default worker count consulted by call sites whose
+/// `threads` knob is 0 ("auto"): the serving coordinator and the eval
+/// harness both size engine parallelism from this single value, so every
+/// prefill/GEMM in the process shares one pool width instead of each
+/// subsystem implicitly serializing. Defaults to 1 (serial) — results are
+/// bit-identical at any width, so this is purely a performance knob.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide default worker count (`0` and `1` both mean
+/// serial). Called once at startup by whoever owns the `--threads` flag
+/// (`cskv serve`, the benches, the eval harness).
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The current process-wide default worker count.
+pub fn global_threads() -> usize {
+    GLOBAL_THREADS.load(Ordering::Relaxed)
+}
+
+/// Resolve a config-level `threads` knob: `0` means "use the process
+/// default" ([`global_threads`]), any other value is taken literally.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        global_threads()
+    } else {
+        threads
+    }
+}
+
+/// Raw-pointer wrapper that lets scoped workers write *disjoint* regions
+/// of one shared buffer (output rows of a GEMM, per-task scratch slots).
+///
+/// Safety discipline (callers must uphold, the wrapper cannot check):
+/// every concurrent task derives slices only from ranges it exclusively
+/// owns, and the underlying buffer outlives the parallel region. All
+/// uses in this crate partition by row index, so ranges are disjoint by
+/// construction.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Mutable slice `[off, off + len)` of the wrapped buffer.
+    ///
+    /// # Safety
+    /// The range must be disjoint from every range any concurrent task
+    /// touches, and in bounds of the original allocation.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // aliasing is governed by the contract above
+    pub unsafe fn slice_mut<'a>(&self, off: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+/// Run `f(i, row_i)` over every row of a row-major `rows × cols` buffer,
+/// rows split dynamically across up to `threads` scoped workers.
+///
+/// This is the safe entry point for embarrassingly row-parallel kernels
+/// (RMSNorm, RoPE, SiLU): each row is handed out exactly once, so the
+/// mutable accesses are disjoint and the result is bit-identical to the
+/// serial loop regardless of thread count.
+pub fn parallel_rows<F: Fn(usize, &mut [f32]) + Sync>(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    f: F,
+) {
+    assert!(data.len() >= rows * cols, "row buffer too small");
+    let threads = threads.max(1);
+    if threads == 1 || rows <= 1 {
+        for (i, row) in data.chunks_exact_mut(cols.max(1)).take(rows).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let ptr = SendPtr(data.as_mut_ptr());
+    parallel_for(rows, threads, |i| {
+        // Safety: `parallel_for` hands out each `i` exactly once, so the
+        // row ranges are disjoint and in bounds.
+        let row = unsafe { ptr.slice_mut(i * cols, cols) };
+        f(i, row);
+    });
+}
+
 /// Run `f(i)` for `i in 0..n`, split across up to `threads` scoped workers.
 ///
 /// Uses `std::thread::scope`, so `f` may borrow from the caller. With
@@ -189,6 +276,80 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_and_chunks_empty_range() {
+        // n = 0: no worker may ever observe an index; `parallel_chunks`
+        // degrades to a single `f(0, 0)` call on the empty range.
+        let calls = AtomicU64::new(0);
+        parallel_for(0, 4, |_| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+
+        let chunk_calls = AtomicU64::new(0);
+        let covered = AtomicU64::new(0);
+        parallel_chunks(0, 4, |lo, hi| {
+            chunk_calls.fetch_add(1, Ordering::SeqCst);
+            covered.fetch_add((hi - lo) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(chunk_calls.load(Ordering::SeqCst), 1);
+        assert_eq!(covered.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn parallel_for_and_chunks_fewer_items_than_threads() {
+        // n < threads: the worker count clamps to n; every index is still
+        // visited exactly once and ranges still partition 0..n.
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(3, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(3, 8, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_rows_visits_each_row_once_any_width() {
+        for threads in [1usize, 2, 8] {
+            let (rows, cols) = (7usize, 5usize);
+            let mut data = vec![0.0f32; rows * cols];
+            parallel_rows(&mut data, rows, cols, threads, |i, row| {
+                for v in row.iter_mut() {
+                    *v += (i + 1) as f32;
+                }
+            });
+            for i in 0..rows {
+                assert!(
+                    data[i * cols..(i + 1) * cols].iter().all(|&v| v == (i + 1) as f32),
+                    "threads={threads} row {i}"
+                );
+            }
+        }
+        // Degenerate: zero rows must not touch the buffer or call f.
+        let mut empty: Vec<f32> = Vec::new();
+        parallel_rows(&mut empty, 0, 4, 3, |_, _| panic!("no rows to visit"));
+    }
+
+    #[test]
+    fn global_threads_knob_roundtrip() {
+        // Note: process-global — keep the default restored for other tests.
+        let before = global_threads();
+        set_global_threads(6);
+        assert_eq!(global_threads(), 6);
+        assert_eq!(resolve_threads(0), 6);
+        assert_eq!(resolve_threads(3), 3);
+        set_global_threads(0); // clamps to 1
+        assert_eq!(global_threads(), 1);
+        set_global_threads(before);
     }
 
     #[test]

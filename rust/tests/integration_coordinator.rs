@@ -104,6 +104,7 @@ fn cskv_admits_more_concurrency_under_same_budget() {
             CoordinatorConfig {
                 max_batch: 16,
                 kv_budget_bytes: Some(budget),
+                ..Default::default()
             },
         );
         let mut rng = Pcg64::new(2);
@@ -145,7 +146,7 @@ fn coordinator_survives_empty_prompt() {
 
 #[test]
 fn metrics_track_latency_components() {
-    let coord = Coordinator::start(full_setup(5), CoordinatorConfig { max_batch: 2, kv_budget_bytes: None });
+    let coord = Coordinator::start(full_setup(5), CoordinatorConfig { max_batch: 2, ..Default::default() });
     let mut rng = Pcg64::new(6);
     let rxs: Vec<_> = (0..6)
         .map(|_| coord.submit(tasks::line_retrieval(4, &mut rng).prompt, 4))
@@ -164,7 +165,7 @@ fn metrics_track_latency_components() {
 
 #[test]
 fn shutdown_drains_pending_work() {
-    let coord = Coordinator::start(full_setup(7), CoordinatorConfig { max_batch: 1, kv_budget_bytes: None });
+    let coord = Coordinator::start(full_setup(7), CoordinatorConfig { max_batch: 1, ..Default::default() });
     let rxs: Vec<_> = (0..4).map(|i| coord.submit(vec![1, 2 + i], 5)).collect();
     // Immediately shut down — all four must still be answered.
     let snap = coord.shutdown();

@@ -8,6 +8,7 @@ use cskv::compress::ratio::{rank_for_keep, KvCompressionPlan};
 use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
 use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
 use cskv::kvcache::{CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
 use cskv::tensor::Mat;
 use cskv::util::prng::Pcg64;
 use cskv::util::prop::{forall, zip, Gen};
@@ -276,6 +277,102 @@ fn prop_incremental_decode_views_match_full_rebuild() {
                         fresh.len()
                     );
                     return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Low-rank factors matching the `test_small` engine geometry
+/// (d_model = 32, 2 layers) for the prefill bit-identity sweep.
+fn engine_factors(rank: usize) -> Arc<ModelFactors> {
+    let d = ModelConfig::test_small().d_model;
+    let mut rng = Pcg64::new(rank as u64 * 77 + 5);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..2).map(|_| LayerFactors { k: mk(), v: mk() }).collect(),
+        provenance: "prop-prefill".into(),
+    })
+}
+
+/// THE correctness oracle for the streaming tiled prefill: for every
+/// cache policy — including ASVD's lossy K/V substitution — and every
+/// thread count, [`Engine::prefill`] must be **bit-identical** to the
+/// pre-refactor serial reference ([`Engine::prefill_reference`]) in all
+/// five record fields (logits, xnorms, pre-RoPE K, V, H2O mass), and
+/// must leave the policy in an identical state.
+#[test]
+fn prop_streaming_prefill_bit_identical_to_serial_reference() {
+    let base = ModelConfig::test_small();
+    let d = base.d_model;
+    let n_layers = base.n_layers;
+    forall(
+        // t up to 80 so the row-chunked parallel GEMM path (m > MC = 64)
+        // is exercised *inside* prefill, not only at the kernel level.
+        "prefill: streaming/tiled ≡ serial reference, all policies × widths",
+        10,
+        zip(Gen::usize_in(1..80), Gen::usize_in(0..10_000)),
+        |&(t, seed)| {
+            let mk_policies = || -> Vec<Box<dyn KvCachePolicy>> {
+                vec![
+                    Box::new(FullCache::new(n_layers, d)),
+                    Box::new(CskvCache::new(
+                        engine_factors(8),
+                        d,
+                        CskvConfig { window: 6, quant: QuantMode::None },
+                    )),
+                    Box::new(CskvCache::new(
+                        engine_factors(8),
+                        d,
+                        CskvConfig { window: 6, quant: QuantMode::Int4 },
+                    )),
+                    Box::new(StreamingLlmCache::new(n_layers, d, 2, 12)),
+                    Box::new(H2oCache::new(n_layers, d, 10)),
+                    Box::new(AsvdCache::new(engine_factors(8))),
+                ]
+            };
+            let mut rng = Pcg64::new(seed as u64 + 1);
+            let vocab = base.vocab_size;
+            let tokens: Vec<usize> = (0..t).map(|_| rng.range(0, vocab)).collect();
+            for threads in [1usize, 2, 8] {
+                let cfg = base.clone().with_threads(threads);
+                // Same init seed ⇒ identical weights at every width.
+                let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+                for (mut pa, mut pb) in mk_policies().into_iter().zip(mk_policies()) {
+                    let want = engine.prefill_reference(&tokens, Some(pa.as_mut()));
+                    let got = engine.prefill(&tokens, Some(pb.as_mut()));
+                    if got.logits.data != want.logits.data {
+                        eprintln!("logits mismatch: {} t={t} threads={threads}", pa.name());
+                        return false;
+                    }
+                    for li in 0..n_layers {
+                        if got.xnorms[li].data != want.xnorms[li].data
+                            || got.ks[li].data != want.ks[li].data
+                            || got.vs[li].data != want.vs[li].data
+                            || got.attn_mass[li] != want.attn_mass[li]
+                        {
+                            eprintln!("record mismatch: {} L{li} t={t} threads={threads}", pa.name());
+                            return false;
+                        }
+                        // Both policies must have ingested identical
+                        // streams and observed identical mass.
+                        let (va, vb) = (pa.materialize(li), pb.materialize(li));
+                        if pa.len(li) != pb.len(li)
+                            || va.k.data != vb.k.data
+                            || va.v.data != vb.v.data
+                            || va.rope_pos != vb.rope_pos
+                            || va.abs_pos != vb.abs_pos
+                        {
+                            eprintln!("policy state mismatch: {} L{li} t={t} threads={threads}", pa.name());
+                            return false;
+                        }
+                    }
                 }
             }
             true
