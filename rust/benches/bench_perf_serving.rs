@@ -1,0 +1,312 @@
+//! §Perf — the batched serving data plane: fused vs sequential rounds.
+//!
+//! Four measurements:
+//! 1. micro: one GEMM-batched decode round (`decode_batch`) vs B
+//!    per-sequence `decode_next` calls at batch 8, ctx 256 — the
+//!    headline: the fused round streams each weight once instead of once
+//!    per sequence (target ≥ 1.5× aggregate decode tokens/s, full cache).
+//! 2. micro: one fused admission prefill (`prefill_batch`) vs B
+//!    sequential prefills at batch 8.
+//! 3. serving: end-to-end coordinator runs at queue depths {1, 4, 8} ×
+//!    {full, cskv80} × {fused, sequential} — aggregate tokens/s and p50
+//!    TTFT (fused admission prefill makes TTFT grow sublinearly with
+//!    depth).
+//! 4. pool reuse A/B: `parallel_chunks` on the persistent pool vs the
+//!    scoped-spawn baseline (`parallel_chunks_scoped`), many small
+//!    regions per iteration — the ROADMAP "NUMA / pool reuse" item.
+//!
+//! Like `bench_perf_prefill`, the model comes from `ModelWeights::init`
+//! so the bench runs anywhere (CI included; no pretrained weights
+//! needed). Results land in `runs/BENCH_perf_serving.json`.
+//!
+//! Run: `cargo bench --bench bench_perf_serving [-- --fast]`
+
+use std::sync::Arc;
+
+use cskv::compress::{KvCompressionPlan, LayerFactors, LowRankFactors, ModelFactors};
+use cskv::coordinator::backend::{decode_batch, prefill_batch, BatchScratch};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend, SequenceBackend};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::Engine;
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::Mat;
+use cskv::util::bench::{git_rev, print_bench_header, Bencher};
+use cskv::util::cli::Args;
+use cskv::util::json::Json;
+use cskv::util::prng::Pcg64;
+use cskv::util::table::Table;
+use cskv::util::threadpool::{parallel_chunks, parallel_chunks_scoped};
+
+fn factors_for(cfg: &ModelConfig) -> Arc<ModelFactors> {
+    let plan = KvCompressionPlan::uniform(0.8);
+    let (rk, rv) = (plan.rank_k(cfg.d_model), plan.rank_v(cfg.d_model));
+    let mut rng = Pcg64::new(11);
+    let layers = (0..cfg.n_layers)
+        .map(|_| LayerFactors {
+            k: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rk, 0.2, &mut rng),
+                Mat::randn(rk, cfg.d_model, 0.2, &mut rng),
+            ),
+            v: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rv, 0.2, &mut rng),
+                Mat::randn(rv, cfg.d_model, 0.2, &mut rng),
+            ),
+        })
+        .collect();
+    Arc::new(ModelFactors {
+        layers,
+        provenance: "bench-serving".into(),
+    })
+}
+
+fn mk_policy(
+    use_cskv: bool,
+    cfg: &ModelConfig,
+    factors: &Arc<ModelFactors>,
+) -> Box<dyn KvCachePolicy> {
+    if use_cskv {
+        Box::new(CskvCache::new(
+            Arc::clone(factors),
+            cfg.d_model,
+            CskvConfig { window: 32, quant: QuantMode::None },
+        ))
+    } else {
+        Box::new(FullCache::new(cfg.n_layers, cfg.d_model))
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_perf_serving",
+        "§Perf: fused multi-sequence prefill + GEMM-batched decode rounds vs sequential",
+    );
+    let fast = args.get_flag("fast");
+    let cfg = ModelConfig::tiny();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 42)));
+    let factors = factors_for(&cfg);
+    let mut results = Json::obj();
+
+    // ---- 1. decode rounds: fused vs sequential, batch 8, ctx 256 -------
+    // Both arms run the identical fixed number of rounds from the same
+    // starting context so position-dependent attention cost cancels.
+    let (batch_n, ctx) = (8usize, 256usize);
+    let rounds = if fast { 6 } else { 48 };
+    let mut b = if fast { Bencher::fast() } else { Bencher::new() };
+    let mut br = Bencher::new();
+    br.warmup_iters = 2;
+    br.min_iters = rounds;
+    br.max_iters = rounds;
+    for (label, use_cskv) in [("full", false), ("cskv80", true)] {
+        let mk_backends = |seed: u64| -> anyhow::Result<Vec<Box<dyn SequenceBackend>>> {
+            let mut rng = Pcg64::new(seed);
+            let mut v: Vec<Box<dyn SequenceBackend>> = Vec::with_capacity(batch_n);
+            for _ in 0..batch_n {
+                let mut be = Box::new(RustSequenceBackend::new(
+                    engine.clone(),
+                    mk_policy(use_cskv, &cfg, &factors),
+                ));
+                let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+                be.prefill(&prompt)?;
+                v.push(be);
+            }
+            Ok(v)
+        };
+        let mut fused_set = mk_backends(5)?;
+        let mut scratch = BatchScratch::default();
+        let rf = br.time(&format!("decode round fused {label} B={batch_n} ctx={ctx}"), || {
+            let mut bs: Vec<&mut dyn SequenceBackend> =
+                fused_set.iter_mut().map(|x| x.as_mut()).collect();
+            for r in decode_batch(&mut bs, &mut scratch) {
+                r.unwrap();
+            }
+        });
+        let fused_ns = rf.samples.percentile(50.0) * 1e9;
+        let mut seq_set = mk_backends(5)?;
+        let rs = br.time(
+            &format!("decode round sequential {label} B={batch_n} ctx={ctx}"),
+            || {
+                for be in seq_set.iter_mut() {
+                    be.decode_next().unwrap();
+                }
+            },
+        );
+        let seq_ns = rs.samples.percentile(50.0) * 1e9;
+        let speedup = seq_ns / fused_ns;
+        println!(
+            "speedup {label} B={batch_n} ctx={ctx}: fused decode round {speedup:.2}x vs \
+             sequential (acceptance target ≥1.50x for full)",
+        );
+        results.set(&format!("decode_round_fused_{label}_ns"), Json::Num(fused_ns));
+        results.set(&format!("decode_round_sequential_{label}_ns"), Json::Num(seq_ns));
+        results.set(&format!("decode_round_speedup_{label}"), Json::Num(speedup));
+    }
+
+    // ---- 2. admission prefill: fused vs sequential, batch 8 ------------
+    {
+        let pctx = if fast { 64 } else { 128 };
+        let prompts: Vec<Vec<usize>> = {
+            let mut rng = Pcg64::new(7);
+            (0..batch_n)
+                .map(|_| (0..pctx).map(|_| rng.range(16, 250)).collect())
+                .collect()
+        };
+        let prompt_refs: Vec<&[usize]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut scratch = BatchScratch::default();
+        let rf = b.time(&format!("prefill round fused B={batch_n} ctx={pctx}"), || {
+            let mut backends: Vec<Box<dyn SequenceBackend>> = (0..batch_n)
+                .map(|_| {
+                    Box::new(RustSequenceBackend::new(
+                        engine.clone(),
+                        mk_policy(false, &cfg, &factors),
+                    )) as Box<dyn SequenceBackend>
+                })
+                .collect();
+            let mut bs: Vec<&mut dyn SequenceBackend> =
+                backends.iter_mut().map(|x| x.as_mut()).collect();
+            for r in prefill_batch(&mut bs, &prompt_refs, &mut scratch) {
+                r.unwrap();
+            }
+        });
+        let fused_ns = rf.samples.percentile(50.0) * 1e9;
+        let rs = b.time(&format!("prefill round sequential B={batch_n} ctx={pctx}"), || {
+            for p in &prompt_refs {
+                let mut be = RustSequenceBackend::new(
+                    engine.clone(),
+                    mk_policy(false, &cfg, &factors),
+                );
+                be.prefill(p).unwrap();
+            }
+        });
+        let seq_ns = rs.samples.percentile(50.0) * 1e9;
+        println!(
+            "speedup prefill B={batch_n} ctx={pctx}: fused {:.2}x vs sequential",
+            seq_ns / fused_ns
+        );
+        results.set("prefill_round_fused_ns", Json::Num(fused_ns));
+        results.set("prefill_round_sequential_ns", Json::Num(seq_ns));
+    }
+
+    // ---- 3. end-to-end serving: depth × policy × data plane ------------
+    let mut t = Table::new(
+        "serving (aggregate over full generation; TTFT p50 in seconds)",
+        &["depth", "policy", "plane", "tok/s", "ttft p50 (s)", "max conc"],
+    );
+    let sctx = if fast { 96 } else { 192 };
+    let n_new = if fast { 8 } else { 16 };
+    for depth in [1usize, 4, 8] {
+        for (label, use_cskv) in [("full", false), ("cskv80", true)] {
+            for (plane, fused) in [("fused", true), ("sequential", false)] {
+                let engine2 = engine.clone();
+                let f2 = Arc::clone(&factors);
+                let cfg2 = cfg.clone();
+                let setup: Setup = Box::new(move || {
+                    let factory: BackendFactory = Box::new(move || {
+                        Ok(Box::new(RustSequenceBackend::new(
+                            engine2.clone(),
+                            mk_policy(use_cskv, &cfg2, &f2),
+                        )))
+                    });
+                    Ok(factory)
+                });
+                let coord = Coordinator::start(
+                    setup,
+                    CoordinatorConfig {
+                        max_batch: depth,
+                        kv_budget_bytes: None,
+                        threads: 0,
+                        fused,
+                    },
+                );
+                let n_req = depth * 2;
+                let mut rng = Pcg64::new(17);
+                let rxs: Vec<_> = (0..n_req)
+                    .map(|_| {
+                        let prompt: Vec<usize> =
+                            (0..sctx).map(|_| rng.range(16, 250)).collect();
+                        coord.submit(prompt, n_new)
+                    })
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+                let snap = coord.shutdown();
+                let tok_s = snap.throughput_tok_s();
+                let ttft_p50 = snap.ttft_s.percentile(50.0);
+                t.row(&[
+                    depth.to_string(),
+                    label.to_string(),
+                    plane.to_string(),
+                    format!("{tok_s:.1}"),
+                    format!("{ttft_p50:.4}"),
+                    snap.active_peak.to_string(),
+                ]);
+                results.set(
+                    &format!("serving_q{depth}_{label}_{plane}_tok_s"),
+                    Json::Num(tok_s),
+                );
+                results.set(
+                    &format!("serving_q{depth}_{label}_{plane}_ttft_p50_s"),
+                    Json::Num(ttft_p50),
+                );
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("perf_serving.csv"))?;
+
+    // ---- 4. pool reuse A/B ---------------------------------------------
+    {
+        let n_rows = 64usize;
+        let width = 4usize;
+        let regions = if fast { 50 } else { 400 };
+        let buf = vec![0.0f32; n_rows * 256];
+        let rp = b.time(&format!("{regions} small regions, pooled pool w={width}"), || {
+            for _ in 0..regions {
+                parallel_chunks(n_rows, width, |lo, hi| {
+                    for r in lo..hi {
+                        let row = &buf[r * 256..(r + 1) * 256];
+                        let s: f32 = row.iter().sum();
+                        std::hint::black_box(s);
+                    }
+                });
+            }
+        });
+        let pooled_ns = rp.samples.percentile(50.0) * 1e9;
+        let rs = b.time(&format!("{regions} small regions, scoped spawn w={width}"), || {
+            for _ in 0..regions {
+                parallel_chunks_scoped(n_rows, width, |lo, hi| {
+                    for r in lo..hi {
+                        let row = &buf[r * 256..(r + 1) * 256];
+                        let s: f32 = row.iter().sum();
+                        std::hint::black_box(s);
+                    }
+                });
+            }
+        });
+        let scoped_ns = rs.samples.percentile(50.0) * 1e9;
+        println!(
+            "pool reuse A/B: persistent pool {:.2}x vs per-call scoped spawn",
+            scoped_ns / pooled_ns
+        );
+        results.set("pool_small_regions_pooled_ns", Json::Num(pooled_ns));
+        results.set("pool_small_regions_scoped_ns", Json::Num(scoped_ns));
+        results.set("pool_reuse_speedup", Json::Num(scoped_ns / pooled_ns));
+    }
+
+    // Machine-readable trajectory.
+    let root = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_perf_serving".to_string())),
+        (
+            "git_rev",
+            Json::Str(git_rev().unwrap_or_else(|| "unknown".to_string())),
+        ),
+        ("results", results),
+    ]);
+    let json_path = cskv::runs_dir().join("BENCH_perf_serving.json");
+    std::fs::write(&json_path, root.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
+    Ok(())
+}

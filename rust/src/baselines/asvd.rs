@@ -121,6 +121,14 @@ impl KvCachePolicy for AsvdCache {
     fn kv_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.ck.bytes() + l.cv.bytes()).sum()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        // Every token stores rank-r K and V features only.
+        self.layers
+            .iter()
+            .map(|l| 4 * tokens * (l.ck.cols + l.cv.cols))
+            .sum()
+    }
 }
 
 #[cfg(test)]

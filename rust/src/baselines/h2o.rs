@@ -203,6 +203,15 @@ impl KvCachePolicy for H2oCache {
             .map(|l| l.k.bytes() + l.v.bytes() + l.score.len() * 4)
             .sum()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        // Eviction caps storage (and the score vector) at the budget.
+        let kept = tokens.min(self.budget);
+        self.layers
+            .iter()
+            .map(|l| 4 * kept * (l.k.cols + l.v.cols) + 4 * kept)
+            .sum()
+    }
 }
 
 #[cfg(test)]

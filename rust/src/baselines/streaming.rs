@@ -149,6 +149,15 @@ impl KvCachePolicy for StreamingLlmCache {
     fn kv_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        // Sinks + recent window: storage never exceeds the budget.
+        let kept = tokens.min(self.budget);
+        self.layers
+            .iter()
+            .map(|l| 4 * kept * (l.k.cols + l.v.cols))
+            .sum()
+    }
 }
 
 #[cfg(test)]

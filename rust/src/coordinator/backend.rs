@@ -1,13 +1,28 @@
-//! Per-sequence execution backends.
+//! Per-sequence execution backends + fused multi-sequence entry points.
 //!
 //! A [`SequenceBackend`] owns everything one in-flight generation needs
 //! (cache state, position, last token) and exposes prefill/decode steps to
 //! the scheduler. Two families exist: [`RustSequenceBackend`] (the
 //! reference engine + any cache policy) and the PJRT sessions in
 //! [`super::pjrt_backend`] that execute the AOT artifacts.
+//!
+//! The scheduler drives whole *rounds* through [`prefill_batch`] /
+//! [`decode_batch`]: when every backend in the round is a
+//! [`RustSequenceBackend`] over the same engine weights, the round runs
+//! through the engine's fused paths ([`Engine::prefill_batch`] /
+//! [`Engine::decode_step_batch`]) so each layer's weights are streamed
+//! once across all sequences; any other mix (PJRT sessions, heterogeneous
+//! engines, single-sequence rounds) falls back to per-sequence calls.
+//! Either way the per-sequence token streams are bit-identical — the
+//! fused engine paths reuse the single-sequence kernels' reduction
+//! orders (`rust/tests/batched_serving.rs`).
+
+use std::sync::Arc;
 
 use crate::kvcache::KvCachePolicy;
-use crate::model::engine::{DecodeState, Engine};
+use crate::model::engine::{
+    BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine,
+};
 use crate::tensor::ops;
 
 /// One in-flight sequence's execution state.
@@ -22,6 +37,18 @@ pub trait SequenceBackend {
 
     /// Current KV footprint in bytes.
     fn kv_bytes(&self) -> usize;
+
+    /// Estimated KV footprint in bytes once this backend holds `tokens`
+    /// total tokens — the scheduler's admission pre-charge, evaluated
+    /// *before* prefill commits the memory.
+    fn kv_bytes_projected(&self, tokens: usize) -> usize;
+
+    /// Downcast hook for fused rounds: backends able to share the Rust
+    /// engine's batched data plane return themselves. Default: `None`
+    /// (the scheduler falls back to per-sequence calls).
+    fn as_rust_backend(&mut self) -> Option<&mut RustSequenceBackend> {
+        None
+    }
 }
 
 /// Rust reference engine + pluggable cache policy. Holds a persistent
@@ -96,6 +123,138 @@ impl SequenceBackend for RustSequenceBackend {
     fn kv_bytes(&self) -> usize {
         self.policy.kv_bytes()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        self.policy.kv_bytes_projected(tokens)
+    }
+
+    fn as_rust_backend(&mut self) -> Option<&mut RustSequenceBackend> {
+        Some(self)
+    }
+}
+
+/// Reusable stacked work buffers for fused rounds, owned by the
+/// scheduler and threaded through [`prefill_batch`] / [`decode_batch`].
+#[derive(Default)]
+pub struct BatchScratch {
+    prefill: BatchPrefillScratch,
+    decode: BatchDecodeScratch,
+}
+
+/// True when every backend is a [`RustSequenceBackend`] over the same
+/// engine weights — the precondition for the fused data plane.
+fn same_rust_engine(backends: &mut [&mut dyn SequenceBackend]) -> bool {
+    let mut w0: Option<Arc<crate::model::ModelWeights>> = None;
+    for b in backends.iter_mut() {
+        match b.as_rust_backend() {
+            Some(rb) => match &w0 {
+                Some(prev) => {
+                    if !Arc::ptr_eq(prev, &rb.engine.w) {
+                        return false;
+                    }
+                }
+                None => w0 = Some(Arc::clone(&rb.engine.w)),
+            },
+            None => return false,
+        }
+    }
+    !backends.is_empty()
+}
+
+/// Prefill one admission round. With ≥ 2 fusable backends and all-valid
+/// prompts, runs the fused [`Engine::prefill_batch`] (each layer's
+/// weights streamed once across the round); otherwise falls back to
+/// per-sequence [`SequenceBackend::prefill`]. Returns each sequence's
+/// first generated token, positionally.
+pub fn prefill_batch(
+    backends: &mut [&mut dyn SequenceBackend],
+    prompts: &[&[usize]],
+    scratch: &mut BatchScratch,
+) -> Vec<anyhow::Result<usize>> {
+    assert_eq!(backends.len(), prompts.len());
+    let fusable = backends.len() > 1
+        && prompts.iter().all(|p| !p.is_empty())
+        && same_rust_engine(backends);
+    if !fusable {
+        return backends
+            .iter_mut()
+            .zip(prompts)
+            .map(|(b, p)| b.prefill(p))
+            .collect();
+    }
+    let mut rbs: Vec<&mut RustSequenceBackend> = backends
+        .iter_mut()
+        .map(|b| b.as_rust_backend().expect("checked by same_rust_engine"))
+        .collect();
+    let engine = rbs[0].engine.clone();
+    let records = {
+        let mut policies: Vec<Option<&mut dyn KvCachePolicy>> = rbs
+            .iter_mut()
+            .map(|rb| Some(rb.policy.as_mut()))
+            .collect();
+        engine.prefill_batch(prompts, &mut policies, &mut scratch.prefill)
+    };
+    rbs.iter_mut()
+        .zip(prompts)
+        .zip(&records)
+        .map(|((rb, prompt), rec)| {
+            rb.pos = prompt.len();
+            rb.reserve_ahead();
+            rb.last_token = ops::argmax(rec.logits.row(prompt.len() - 1));
+            Ok(rb.last_token)
+        })
+        .collect()
+}
+
+/// Decode one token for every backend in the round. With ≥ 2 fusable
+/// backends, runs the GEMM-batched [`Engine::decode_step_batch`] (QKV /
+/// output / MLP / LM-head weights streamed once per round); otherwise
+/// falls back to per-sequence [`SequenceBackend::decode_next`]. Returns
+/// each sequence's next token, positionally.
+pub fn decode_batch(
+    backends: &mut [&mut dyn SequenceBackend],
+    scratch: &mut BatchScratch,
+) -> Vec<anyhow::Result<usize>> {
+    if backends.len() <= 1 || !same_rust_engine(backends) {
+        return backends.iter_mut().map(|b| b.decode_next()).collect();
+    }
+    let mut rbs: Vec<&mut RustSequenceBackend> = backends
+        .iter_mut()
+        .map(|b| b.as_rust_backend().expect("checked by same_rust_engine"))
+        .collect();
+    for rb in rbs.iter_mut() {
+        rb.reserve_ahead();
+    }
+    let engine = rbs[0].engine.clone();
+    {
+        let mut entries: Vec<BatchDecodeEntry> = rbs
+            .iter_mut()
+            .map(|rb| {
+                let RustSequenceBackend {
+                    policy,
+                    state,
+                    pos,
+                    last_token,
+                    ..
+                } = &mut **rb;
+                BatchDecodeEntry {
+                    policy: policy.as_mut(),
+                    token: *last_token,
+                    abs_pos: *pos,
+                    state,
+                }
+            })
+            .collect();
+        engine.decode_step_batch(&mut entries, &mut scratch.decode);
+    }
+    rbs.iter_mut()
+        .enumerate()
+        .map(|(bi, rb)| {
+            rb.pos += 1;
+            rb.last_token = ops::argmax(scratch.decode.logits_row(bi));
+            Ok(rb.last_token)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -124,5 +283,80 @@ mod tests {
         assert_eq!(got, want);
         assert!(be.kv_bytes() > 0);
         assert!(be.name().contains("full"));
+        // Projection is exact for the full cache: 4 prompt + 4 decoded.
+        assert_eq!(be.kv_bytes_projected(8), be.kv_bytes());
+    }
+
+    /// Fused rounds through the backend layer must reproduce the
+    /// per-sequence token streams exactly, and fall back cleanly for
+    /// single-sequence rounds.
+    #[test]
+    fn batch_entry_points_match_sequential_backends() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 11)));
+        let prompts: Vec<Vec<usize>> = vec![
+            vec![1, 9, 17, 33],
+            (0..20).map(|i| (i * 7 + 2) % 256).collect(),
+            vec![5, 6],
+        ];
+        let mk = |engine: &Engine| -> Vec<Box<dyn SequenceBackend>> {
+            prompts
+                .iter()
+                .map(|_| {
+                    Box::new(RustSequenceBackend::new(
+                        engine.clone(),
+                        Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+                    )) as Box<dyn SequenceBackend>
+                })
+                .collect()
+        };
+
+        // Sequential oracle.
+        let mut seq = mk(&engine);
+        let mut want: Vec<Vec<usize>> = Vec::new();
+        for (b, p) in seq.iter_mut().zip(&prompts) {
+            let mut toks = vec![b.prefill(p).unwrap()];
+            for _ in 1..6 {
+                toks.push(b.decode_next().unwrap());
+            }
+            want.push(toks);
+        }
+
+        // Fused rounds.
+        let mut fused = mk(&engine);
+        let mut scratch = BatchScratch::default();
+        let prompt_refs: Vec<&[usize]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut got: Vec<Vec<usize>> = {
+            let mut bs: Vec<&mut dyn SequenceBackend> =
+                fused.iter_mut().map(|b| b.as_mut()).collect();
+            let firsts = prefill_batch(&mut bs, &prompt_refs, &mut scratch);
+            firsts.into_iter().map(|r| vec![r.unwrap()]).collect()
+        };
+        for _ in 1..6 {
+            let mut bs: Vec<&mut dyn SequenceBackend> =
+                fused.iter_mut().map(|b| b.as_mut()).collect();
+            let toks = decode_batch(&mut bs, &mut scratch);
+            drop(bs);
+            for (g, t) in got.iter_mut().zip(toks) {
+                g.push(t.unwrap());
+            }
+        }
+        assert_eq!(got, want, "fused rounds must match sequential streams");
+
+        // Single-sequence round: the fallback path still answers.
+        let mut one = mk(&engine);
+        let mut bs: Vec<&mut dyn SequenceBackend> = vec![one[0].as_mut()];
+        let first = prefill_batch(&mut bs, &prompt_refs[..1], &mut scratch);
+        assert_eq!(first[0].as_ref().unwrap(), &want[0][0]);
+
+        // An empty prompt in the round errors without poisoning others.
+        let mut mixed = mk(&engine);
+        let empty: &[usize] = &[];
+        let ps = vec![prompt_refs[0], empty];
+        let mut bs: Vec<&mut dyn SequenceBackend> =
+            mixed.iter_mut().take(2).map(|b| b.as_mut()).collect();
+        let res = prefill_batch(&mut bs, &ps, &mut scratch);
+        assert!(res[0].is_ok());
+        assert!(res[1].is_err());
     }
 }

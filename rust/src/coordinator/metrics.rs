@@ -8,6 +8,7 @@ use crate::util::stats::Samples;
 #[derive(Default)]
 struct Inner {
     requests_completed: u64,
+    requests_failed: u64,
     tokens_generated: u64,
     queue_wait_s: Samples,
     ttft_s: Samples,
@@ -29,6 +30,9 @@ pub struct Metrics {
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub requests_completed: u64,
+    /// Requests answered with an error `Response` (backend construction
+    /// or prefill failure) instead of tokens.
+    pub requests_failed: u64,
     pub tokens_generated: u64,
     pub queue_wait_s: Samples,
     pub ttft_s: Samples,
@@ -49,8 +53,9 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} throughput={:.1} tok/s | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {}",
+            "requests={} failed={} tokens={} throughput={:.1} tok/s | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {}",
             self.requests_completed,
+            self.requests_failed,
             self.tokens_generated,
             self.throughput_tok_s(),
             self.ttft_s.summary("s"),
@@ -85,6 +90,13 @@ impl Metrics {
         g.finished = Some(Instant::now());
     }
 
+    /// A request was answered with an error `Response`.
+    pub fn record_failure(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_failed += 1;
+        g.finished = Some(Instant::now());
+    }
+
     pub fn record_kv(&self, current_bytes: usize, active: usize) {
         let mut g = self.inner.lock().unwrap();
         g.kv_bytes_current = current_bytes;
@@ -105,6 +117,7 @@ impl Metrics {
         };
         MetricsSnapshot {
             requests_completed: g.requests_completed,
+            requests_failed: g.requests_failed,
             tokens_generated: g.tokens_generated,
             queue_wait_s: g.queue_wait_s.clone(),
             ttft_s: g.ttft_s.clone(),
@@ -128,8 +141,11 @@ mod tests {
         m.record_kv(500, 1);
         m.record_completion(0.01, 0.05, 3, &[0.01, 0.02]);
         m.record_completion(0.02, 0.06, 2, &[0.015]);
+        m.record_failure();
         let s = m.snapshot();
         assert_eq!(s.requests_completed, 2);
+        assert_eq!(s.requests_failed, 1);
+        assert!(s.report().contains("failed=1"));
         assert_eq!(s.tokens_generated, 5);
         assert_eq!(s.kv_bytes_peak, 1000);
         assert_eq!(s.active_peak, 2);

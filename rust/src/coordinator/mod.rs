@@ -3,13 +3,20 @@
 //! The coordinator owns the event loop: requests enter a queue, a
 //! continuous batcher admits them into the active set under a **KV-memory
 //! budget** (this is where CSKV pays off operationally: the compressed
-//! cache admits ~5× more concurrent sequences at 80% compression), decode
-//! proceeds round-robin across active sequences with new admissions
-//! between rounds, and metrics record queue wait, TTFT, per-token latency
-//! and KV footprint.
+//! cache admits ~5× more concurrent sequences at 80% compression — and
+//! admission pre-charges each prompt's projected footprint so the budget
+//! holds *before* prefill commits it), whole admission rounds prefill in
+//! one fused multi-sequence pass, decode proceeds as one GEMM-batched
+//! round across active sequences with new admissions between rounds, and
+//! metrics record queue wait, TTFT, per-token latency, failures and KV
+//! footprint. Fused rounds stream each weight set once per round instead
+//! of once per sequence; token streams are bit-identical to the
+//! per-sequence scheduler (`rust/tests/batched_serving.rs`).
 //!
 //! * [`backend`] — per-sequence execution backends: the Rust reference
-//!   engine (any [`crate::kvcache::KvCachePolicy`]) and helpers.
+//!   engine (any [`crate::kvcache::KvCachePolicy`]) and helpers, plus
+//!   the fused round entry points ([`backend::prefill_batch`] /
+//!   [`backend::decode_batch`]).
 //! * [`pjrt_backend`] — the AOT serving path: sessions that execute
 //!   `decode_full` / `decode_cskv_r*` artifacts via PJRT.
 //! * [`server`] — the coordinator thread, admission control, scheduling.

@@ -167,6 +167,10 @@ impl SequenceBackend for PjrtFullSession {
         // Semantic footprint: valid rows only (buffers are preallocated).
         self.ctx.cfg().kv_bytes_full(self.pos)
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        self.ctx.cfg().kv_bytes_full(tokens)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -338,6 +342,13 @@ impl SequenceBackend for PjrtCskvSession {
         let l = cfg.n_layers;
         // compressed history (all n tokens) + full-precision window
         l * self.n * 2 * self.rank * 4 + l * self.win_len * 2 * cfg.d_model * 4
+    }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        let cfg = self.ctx.cfg();
+        let l = cfg.n_layers;
+        let win = tokens.min(self.window);
+        l * tokens * 2 * self.rank * 4 + l * win * 2 * cfg.d_model * 4
     }
 }
 

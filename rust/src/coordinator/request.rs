@@ -13,7 +13,9 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
 }
 
-/// A completed generation.
+/// A completed (or failed) generation. Every submitted request receives
+/// exactly one `Response` — failures carry [`Response::error`] instead of
+/// silently dropping the reply channel, so `submit_wait` can never hang.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
@@ -27,6 +29,26 @@ pub struct Response {
     /// KV bytes held by this sequence at completion.
     pub kv_bytes: usize,
     pub backend: String,
+    /// `Some(reason)` when the request failed (backend construction or
+    /// prefill error: `tokens` is empty; decode error: `tokens` holds the
+    /// prefix generated before the failure).
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// A failure response for a request that produced no tokens.
+    pub fn failure(req: &Request, error: impl Into<String>) -> Response {
+        Response {
+            id: req.id,
+            tokens: Vec::new(),
+            queue_wait_s: req.submitted_at.elapsed().as_secs_f64(),
+            ttft_s: 0.0,
+            total_s: req.submitted_at.elapsed().as_secs_f64(),
+            kv_bytes: 0,
+            backend: String::new(),
+            error: Some(error.into()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -52,10 +74,28 @@ mod tests {
                 total_s: 0.2,
                 kv_bytes: 64,
                 backend: "test".into(),
+                error: None,
             })
             .unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.tokens, vec![9]);
+        assert!(resp.error.is_none());
+    }
+
+    #[test]
+    fn failure_response_carries_reason() {
+        let (tx, _rx) = mpsc::channel();
+        let req = Request {
+            id: 3,
+            prompt: vec![],
+            n_new: 1,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        let resp = Response::failure(&req, "boom");
+        assert_eq!(resp.id, 3);
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.error.as_deref(), Some("boom"));
     }
 }

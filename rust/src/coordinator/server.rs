@@ -1,18 +1,36 @@
 //! The coordinator thread: queueing, KV-budget admission, continuous
 //! batching, completion.
 //!
-//! Scheduling model (single-worker continuous batching):
+//! Scheduling model (single-worker continuous batching, **fused rounds**):
 //!
 //! 1. Requests land in an mpsc queue.
-//! 2. The worker admits queued requests into the active set while
-//!    `active < max_batch` **and** the aggregate KV footprint stays under
-//!    `kv_budget_bytes` — the admission test uses each backend's real
-//!    [`SequenceBackend::kv_bytes`], so compressed-cache policies admit
-//!    proportionally more concurrent sequences (the serving-side win of
-//!    the paper, measured by `bench_perf_decode`).
-//! 3. Each scheduling round decodes one token for every active sequence
-//!    (round-robin), then re-admits — i.e. new requests don't wait for the
-//!    whole batch to drain (continuous batching à la Orca/vLLM).
+//! 2. The worker collects an *admission round*: queued requests are
+//!    admitted while `active + admitted < max_batch` **and** the
+//!    aggregate KV footprint stays under `kv_budget_bytes`. The admission
+//!    test charges every sequence at its *projected completion*
+//!    footprint — prompt plus `n_new` tokens through
+//!    [`SequenceBackend::kv_bytes_projected`] — so neither a long prompt
+//!    at prefill nor decode growth afterwards can blow past the budget,
+//!    and compressed-cache policies still admit proportionally more
+//!    concurrent sequences (the serving-side win of the paper, measured
+//!    by `bench_perf_serving`).
+//! 3. The whole admission round is prefilled in **one fused pass**
+//!    ([`super::backend::prefill_batch`]): each layer's weights stream
+//!    once across the stacked prompts, so TTFT under load stops scaling
+//!    with queue depth. With `fused: false` (A/B baseline) prefills run
+//!    per sequence, as the pre-batching scheduler did.
+//! 4. Each scheduling round decodes one token for every active sequence
+//!    in **one fused GEMM-batched call** ([`super::backend::decode_batch`]:
+//!    QKV / output / MLP / LM-head weights stream once per round instead
+//!    of once per sequence), then re-admits — i.e. new requests don't
+//!    wait for the whole batch to drain (continuous batching à la
+//!    Orca/vLLM). Fused and sequential rounds produce **bit-identical**
+//!    token streams at every batch size and thread count
+//!    (`rust/tests/batched_serving.rs`).
+//! 5. Every submitted request receives exactly one [`Response`]:
+//!    backend-construction and prefill failures answer with
+//!    [`Response::failure`] (counted in [`Metrics`]) instead of silently
+//!    dropping the reply channel, so `submit_wait` can never hang.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -20,7 +38,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use super::backend::SequenceBackend;
+use super::backend::{decode_batch, prefill_batch, BatchScratch, SequenceBackend};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 
@@ -44,6 +62,12 @@ pub struct CoordinatorConfig {
     /// engine implicitly serializing. `0` = leave the process default
     /// untouched. Results are bit-identical at any width.
     pub threads: usize,
+    /// Run admission prefills and decode rounds through the fused
+    /// multi-sequence data plane (default). `false` restores the
+    /// per-sequence rounds of the pre-batching scheduler — the A/B
+    /// baseline for `bench_perf_serving`; token streams are identical
+    /// either way.
+    pub fused: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -52,6 +76,7 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             kv_budget_bytes: None,
             threads: 0,
+            fused: true,
         }
     }
 }
@@ -64,6 +89,9 @@ struct Active {
     ttft_s: f64,
     started: Instant,
     tok_latencies: Vec<f64>,
+    /// Set when a decode step errored; the sequence retires with the
+    /// tokens generated so far and the error attached.
+    failed: Option<String>,
 }
 
 /// Handle to a running coordinator.
@@ -152,6 +180,36 @@ impl Drop for Coordinator {
     }
 }
 
+/// Answer `req` with an error `Response` and count the failure — the
+/// no-hang guarantee: a dropped reply channel would strand `submit_wait`.
+fn fail_request(req: Request, err: &str, metrics: &Metrics) {
+    crate::log_error!("request {} failed: {err}", req.id);
+    metrics.record_failure();
+    let _ = req.reply.send(Response::failure(&req, err));
+}
+
+/// Retire one sequence: record metrics and answer its request. A
+/// decode-failed sequence counts as a failure (its partial tokens are
+/// returned but stay out of the success distributions).
+fn retire(a: Active, metrics: &Metrics) {
+    if a.failed.is_some() {
+        metrics.record_failure();
+    } else {
+        metrics.record_completion(a.queue_wait_s, a.ttft_s, a.generated.len(), &a.tok_latencies);
+    }
+    let resp = Response {
+        id: a.req.id,
+        tokens: a.generated,
+        queue_wait_s: a.queue_wait_s,
+        ttft_s: a.ttft_s,
+        total_s: a.started.elapsed().as_secs_f64() + a.queue_wait_s,
+        kv_bytes: a.backend.kv_bytes(),
+        backend: a.backend.name(),
+        error: a.failed,
+    };
+    let _ = a.req.reply.send(resp);
+}
+
 fn worker_loop(
     rx: mpsc::Receiver<Request>,
     factory: &mut BackendFactory,
@@ -160,6 +218,12 @@ fn worker_loop(
 ) {
     let mut pending: VecDeque<Request> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
+    let mut batch = BatchScratch::default();
+    // Backend built for the queue head on a round where the budget
+    // blocked admission — kept so `factory()` stays 1:1 with requests
+    // instead of re-constructing (and dropping) a backend every round
+    // the head stays blocked.
+    let mut staged: Option<Box<dyn SequenceBackend>> = None;
     loop {
         // Pull everything currently queued (non-blocking), or block if idle.
         if active.is_empty() && pending.is_empty() {
@@ -172,85 +236,165 @@ fn worker_loop(
             pending.push_back(r);
         }
 
-        // Admission under batch-size and KV-budget constraints.
-        while active.len() < cfg.max_batch && !pending.is_empty() {
-            let kv_now: usize = active.iter().map(|a| a.backend.kv_bytes()).sum();
+        // Collect this round's admission set under the batch-size and
+        // KV-budget constraints. The budget test charges every sequence
+        // — active, admitted this round, and the incoming candidate — at
+        // its *projected completion* footprint (prompt + n_new tokens,
+        // via kv_bytes_projected), so neither a long prompt at prefill
+        // nor decode growth afterwards can push the aggregate past the
+        // budget. The first sequence is admitted unconditionally so an
+        // over-budget request can't deadlock the queue.
+        let mut admitted: Vec<(Request, Box<dyn SequenceBackend>, f64, Instant)> = Vec::new();
+        while active.len() + admitted.len() < cfg.max_batch && !pending.is_empty() {
+            let backend = match staged.take() {
+                Some(b) => b, // built for this same queue head on a blocked round
+                None => match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let req = pending.pop_front().unwrap();
+                        fail_request(req, &format!("backend construction failed: {e:#}"), metrics);
+                        continue;
+                    }
+                },
+            };
             if let Some(budget) = cfg.kv_budget_bytes {
-                // Require headroom ≥ the smallest active sequence (or admit
-                // the first unconditionally so we can't deadlock).
-                if !active.is_empty() && kv_now >= budget {
+                let committed: usize = active
+                    .iter()
+                    .map(|a| {
+                        a.backend
+                            .kv_bytes_projected(a.req.prompt.len() + a.req.n_new)
+                            .max(a.backend.kv_bytes())
+                    })
+                    .sum::<usize>()
+                    + admitted
+                        .iter()
+                        .map(|(r, b, ..)| b.kv_bytes_projected(r.prompt.len() + r.n_new))
+                        .sum::<usize>();
+                let head = pending.front().unwrap();
+                let incoming = backend.kv_bytes_projected(head.prompt.len() + head.n_new);
+                if (!active.is_empty() || !admitted.is_empty()) && committed + incoming > budget {
+                    staged = Some(backend);
                     break;
                 }
             }
             let req = pending.pop_front().unwrap();
             let queue_wait_s = req.submitted_at.elapsed().as_secs_f64();
-            let started = Instant::now();
-            let mut backend = match factory() {
-                Ok(b) => b,
-                Err(e) => {
-                    crate::log_error!("backend construction failed: {e:#}");
-                    continue;
+            admitted.push((req, backend, queue_wait_s, Instant::now()));
+        }
+
+        // Prefill the admission round — fused (weights streamed once
+        // across the round) or per-sequence (A/B baseline). TTFT is
+        // taken when a sequence's first token actually exists: after the
+        // whole pass for the fused round, after each sequence's own
+        // prefill for the sequential baseline.
+        if !admitted.is_empty() {
+            let results: Vec<(anyhow::Result<usize>, Option<f64>)> = if cfg.fused {
+                let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(admitted.len());
+                let mut prompts: Vec<&[usize]> = Vec::with_capacity(admitted.len());
+                for (req, backend, ..) in admitted.iter_mut() {
+                    prompts.push(&req.prompt);
+                    bs.push(backend.as_mut());
                 }
+                prefill_batch(&mut bs, &prompts, &mut batch)
+                    .into_iter()
+                    .map(|r| (r, None))
+                    .collect()
+            } else {
+                admitted
+                    .iter_mut()
+                    .map(|(req, backend, ..)| {
+                        let r = backend.prefill(&req.prompt);
+                        let ttft = req.submitted_at.elapsed().as_secs_f64();
+                        (r, Some(ttft))
+                    })
+                    .collect()
             };
-            match backend.prefill(&req.prompt) {
-                Ok(first) => {
-                    let ttft_s = req.submitted_at.elapsed().as_secs_f64();
-                    active.push(Active {
-                        req,
-                        backend,
-                        generated: vec![first],
-                        queue_wait_s,
-                        ttft_s,
-                        started,
-                        tok_latencies: Vec::new(),
-                    });
-                }
-                Err(e) => {
-                    crate::log_error!("prefill failed for request {}: {e:#}", req.id);
+            for ((req, backend, queue_wait_s, started), (res, ttft)) in
+                admitted.into_iter().zip(results)
+            {
+                match res {
+                    Ok(first) => {
+                        let ttft_s =
+                            ttft.unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f64());
+                        active.push(Active {
+                            req,
+                            backend,
+                            generated: vec![first],
+                            queue_wait_s,
+                            ttft_s,
+                            started,
+                            tok_latencies: Vec::new(),
+                            failed: None,
+                        });
+                    }
+                    Err(e) => {
+                        fail_request(req, &format!("prefill failed: {e:#}"), metrics);
+                    }
                 }
             }
         }
         let kv_now: usize = active.iter().map(|a| a.backend.kv_bytes()).sum();
         metrics.record_kv(kv_now, active.len());
 
-        // One decode round, retiring finished sequences.
-        let mut i = 0;
-        while i < active.len() {
-            let a = &mut active[i];
-            let done = if a.generated.len() >= a.req.n_new {
-                true
-            } else {
-                let t0 = Instant::now();
-                match a.backend.decode_next() {
-                    Ok(tok) => {
-                        a.tok_latencies.push(t0.elapsed().as_secs_f64());
-                        a.generated.push(tok);
-                        a.generated.len() >= a.req.n_new
-                    }
-                    Err(e) => {
-                        crate::log_error!("decode failed for request {}: {e:#}", a.req.id);
-                        true
+        // One decode round across every unfinished sequence — a single
+        // fused call (or per-sequence steps in the A/B baseline).
+        let mut round: Vec<usize> = Vec::with_capacity(active.len());
+        {
+            let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(active.len());
+            for (i, a) in active.iter_mut().enumerate() {
+                if a.generated.len() < a.req.n_new {
+                    round.push(i);
+                    bs.push(a.backend.as_mut());
+                }
+            }
+            if !bs.is_empty() {
+                let (results, lats): (Vec<anyhow::Result<usize>>, Vec<f64>) = if cfg.fused {
+                    let t0 = Instant::now();
+                    let r = decode_batch(&mut bs, &mut batch);
+                    // Fused rounds are timed as a whole; each sequence is
+                    // attributed its per-token share.
+                    let share = t0.elapsed().as_secs_f64() / r.len() as f64;
+                    let n = r.len();
+                    (r, vec![share; n])
+                } else {
+                    let mut lats = Vec::with_capacity(bs.len());
+                    let r = bs
+                        .iter_mut()
+                        .map(|b| {
+                            let t0 = Instant::now();
+                            let res = b.decode_next();
+                            lats.push(t0.elapsed().as_secs_f64());
+                            res
+                        })
+                        .collect();
+                    (r, lats)
+                };
+                drop(bs);
+                for ((&i, res), lat) in round.iter().zip(results).zip(lats) {
+                    match res {
+                        Ok(tok) => {
+                            active[i].tok_latencies.push(lat);
+                            active[i].generated.push(tok);
+                        }
+                        Err(e) => {
+                            crate::log_error!(
+                                "decode failed for request {}: {e:#}",
+                                active[i].req.id
+                            );
+                            active[i].failed = Some(format!("decode failed: {e:#}"));
+                        }
                     }
                 }
-            };
+            }
+        }
+
+        // Retire finished (or failed) sequences.
+        let mut i = 0;
+        while i < active.len() {
+            let done =
+                active[i].failed.is_some() || active[i].generated.len() >= active[i].req.n_new;
             if done {
-                let a = active.swap_remove(i);
-                metrics.record_completion(
-                    a.queue_wait_s,
-                    a.ttft_s,
-                    a.generated.len(),
-                    &a.tok_latencies,
-                );
-                let resp = Response {
-                    id: a.req.id,
-                    tokens: a.generated,
-                    queue_wait_s: a.queue_wait_s,
-                    ttft_s: a.ttft_s,
-                    total_s: a.started.elapsed().as_secs_f64() + a.queue_wait_s,
-                    kv_bytes: a.backend.kv_bytes(),
-                    backend: a.backend.name(),
-                };
-                let _ = a.req.reply.send(resp);
+                retire(active.swap_remove(i), metrics);
             } else {
                 i += 1;
             }
@@ -299,6 +443,7 @@ mod tests {
         for rx in rxs {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.tokens.len(), 4);
+            assert!(resp.error.is_none());
             assert!(resp.ttft_s >= resp.queue_wait_s);
             assert!(resp.kv_bytes > 0);
         }
@@ -332,6 +477,42 @@ mod tests {
             snap.active_peak <= 2,
             "budget should throttle concurrency, got {}",
             snap.active_peak
+        );
+    }
+
+    /// Admission pre-charges each request's projected completion
+    /// footprint (prompt + n_new): with a budget that fits one request
+    /// but not two, a second must *not* be co-admitted just because the
+    /// current footprint still looks small. The old current-footprint-
+    /// only check admitted it (kv_now = one prompt < budget) and blew
+    /// past the budget at the second prefill.
+    #[test]
+    fn admission_precharge_prevents_budget_overshoot() {
+        let cfg = ModelConfig::test_small();
+        // Budget: 10 tokens. Each request projects to 12 tokens at
+        // completion (8 prompt + 4 generated), so requests must run
+        // strictly one at a time (the first admits via the
+        // can't-deadlock escape hatch).
+        let budget = cfg.kv_bytes_full(10);
+        let coord = Coordinator::start(
+            test_setup(),
+            CoordinatorConfig {
+                max_batch: 8,
+                kv_budget_bytes: Some(budget),
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = (0..3)
+            .map(|i| coord.submit(vec![1, 2, 3, 4, 5, 6, 7, 8 + i], 4))
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_completed, 3);
+        assert_eq!(
+            snap.active_peak, 1,
+            "pre-charge must serialize prompts that can't share the budget"
         );
     }
 

@@ -343,6 +343,19 @@ impl KvCachePolicy for CskvCache {
             .map(|l| l.ck.bytes() + l.cv.bytes() + l.win_k.bytes() + l.win_v.bytes())
             .sum()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        // Every token stores compressed features; the last ≤ window also
+        // keep exact K/V. fp32 feature accounting — an upper bound for
+        // int4 mode, keeping admission conservative.
+        let win = tokens.min(self.cfg.window);
+        self.layers
+            .iter()
+            .map(|l| {
+                4 * (tokens * (l.ck.rank + l.cv.rank) + win * (l.win_k.cols + l.win_v.cols))
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]

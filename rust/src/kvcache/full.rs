@@ -81,6 +81,14 @@ impl KvCachePolicy for FullCache {
     fn kv_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
     }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        // Exact: every token stores full-precision K + V per layer.
+        self.layers
+            .iter()
+            .map(|l| 4 * tokens * (l.k.cols + l.v.cols))
+            .sum()
+    }
 }
 
 #[cfg(test)]

@@ -323,6 +323,13 @@ pub trait KvCachePolicy: Send {
 
     /// True storage footprint across all layers, in bytes.
     fn kv_bytes(&self) -> usize;
+
+    /// Estimated [`KvCachePolicy::kv_bytes`] if this (empty) cache held
+    /// `tokens` tokens — the serving coordinator's admission pre-charge,
+    /// so a long prompt is budgeted *before* its prefill commits the
+    /// memory. Estimates use full-precision accounting (an upper bound
+    /// for quantized stores), which keeps admission conservative.
+    fn kv_bytes_projected(&self, tokens: usize) -> usize;
 }
 
 /// Growable row-major matrix used by cache implementations.

@@ -241,6 +241,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         kv_budget_bytes: if budget_kb == 0 { None } else { Some(budget_kb * 1024) },
         // One pool width for every sequence backend in the process.
         threads: args.get_usize("threads", 0),
+        // --sequential restores per-sequence prefill/decode rounds
+        // (identical token streams; fused is the fast path).
+        fused: !args.get_flag("sequential"),
     };
     let eng = engine.clone();
     let coord = Coordinator::start(

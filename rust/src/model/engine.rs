@@ -45,11 +45,44 @@
 //! instead of one global running sum — same values up to fp association,
 //! and it only seeds the H2O eviction heuristic). Decode-side costs are
 //! unchanged — see the decode cost model in [`crate::kvcache`].
+//!
+//! ## Batched serving cost model
+//!
+//! The serving coordinator runs **B** concurrent sequences. Driven one at
+//! a time (the pre-batching scheduler), every projection weight is
+//! re-streamed from memory once per sequence per stage:
+//!
+//! | stage           | weight traffic / round (sequential)             |
+//! |-----------------|-------------------------------------------------|
+//! | admission prefill | full weight set × B (one prefill per request) |
+//! | decode round    | `≈ 12·d² + vocab·d` floats × B (GEMV per seq)   |
+//!
+//! The batched entry points amortize that traffic to ×1 per round while
+//! leaving all per-sequence math untouched:
+//!
+//! * [`Engine::prefill_batch`] stacks the B prompts' rows into one
+//!   residual stream and runs every projection / MLP / logit GEMM as a
+//!   single [`par_matmul_into`] over `Σ Tᵢ` rows (each weight panel
+//!   streamed once, and with better row-parallel utilization than any
+//!   single prompt); causal attention and policy ingestion stay strictly
+//!   per-sequence.
+//! * [`Engine::decode_step_batch`] stacks the B current hidden states
+//!   into a `[B, d]` matrix and fuses the QKV / output / MLP / LM-head
+//!   projections into one weight-streamed pass each via
+//!   [`crate::tensor::matmul::matvec_t_batch_into`]; attention still runs
+//!   per-sequence against each policy's [`DecodeView`].
+//!
+//! Both paths keep every per-row reduction order identical to the
+//! single-sequence kernels (the GEMM row reduction is independent of
+//! which rows surround it, and the batched GEMV kernel replays
+//! `matvec_t_into`'s exact semantics), so token streams are
+//! **bit-identical to the per-sequence scheduler at any batch size and
+//! thread count** — `rust/tests/batched_serving.rs` holds the oracle.
 
 use std::sync::Arc;
 
 use crate::kvcache::{DecodeView, KvCachePolicy};
-use crate::tensor::matmul::{axpy_row, dot, matvec_t_into, par_matmul_into};
+use crate::tensor::matmul::{axpy_row, dot, matvec_t_batch_into, matvec_t_into, par_matmul_into};
 use crate::tensor::ops;
 use crate::tensor::Mat;
 use crate::util::threadpool::{parallel_for, resolve_threads, SendPtr};
@@ -397,6 +430,209 @@ fn matmul_skip_zeros(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// One decode step's per-sequence attention against a synced
+/// [`DecodeView`]: per-head scores + softmax + weighted-V into `attn`,
+/// aggregating per-position probabilities into `agg_probs` for the H2O
+/// feedback. Extracted so [`Engine::decode_step_with`] and
+/// [`Engine::decode_step_batch`] run the *same* code — the batched
+/// scheduler's bit-identity holds for attention by construction.
+#[allow(clippy::too_many_arguments)]
+fn decode_attention(
+    view: &DecodeView,
+    q: &[f32],
+    attn: &mut [f32],
+    scores: &mut Vec<f32>,
+    agg_probs: &mut Vec<f32>,
+    n_heads: usize,
+    dh: usize,
+    scale: f32,
+) {
+    let n = view.len();
+    attn.fill(0.0);
+    agg_probs.clear();
+    agg_probs.resize(n, 0.0);
+    for h in 0..n_heads {
+        let (lo, hi) = (h * dh, (h + 1) * dh);
+        let qh = &q[lo..hi];
+        scores.clear();
+        scores.resize(n, 0.0);
+        let mut mx = f32::NEG_INFINITY;
+        for (i, s) in scores.iter_mut().enumerate() {
+            *s = dot(qh, &view.key_row(i)[lo..hi]) * scale;
+            mx = mx.max(*s);
+        }
+        // softmax
+        let mut sum = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        for (i, s) in scores.iter_mut().enumerate() {
+            *s *= inv;
+            agg_probs[i] += *s;
+            axpy_row(&mut attn[lo..hi], *s, &view.value_row(i)[lo..hi]);
+        }
+    }
+}
+
+/// Resize a stacked work buffer to `rows × cols` in place. Logical
+/// dimensions are updated but the backing `Vec` only reallocates when it
+/// has never been this large (grow-only capacity) — so the width
+/// fluctuations of continuous batching (a retirement or admission nearly
+/// every round) reallocate nothing in steady state. Newly exposed
+/// elements are zeroed; callers fully overwrite every live row anyway.
+fn resize_stacked(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.resize(rows * cols, 0.0);
+}
+
+/// Stacked `[B, ·]` work buffers for one fused decode round
+/// ([`Engine::decode_step_batch`]) — the batch-level mirror of
+/// [`DecodeScratch`]. Owned by the scheduler and reused across rounds;
+/// backing storage is grow-only ([`resize_stacked`]), so batch-width
+/// changes between rounds don't reallocate.
+pub struct BatchDecodeScratch {
+    x: Mat,
+    xnorm: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    attn: Mat,
+    o: Mat,
+    xn2: Mat,
+    h1: Mat,
+    mlp: Mat,
+    xf: Mat,
+    logits: Mat,
+}
+
+impl Default for BatchDecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchDecodeScratch {
+    /// An empty scratch; buffers are sized lazily by the first round.
+    pub fn new() -> Self {
+        BatchDecodeScratch {
+            x: Mat::zeros(0, 0),
+            xnorm: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            attn: Mat::zeros(0, 0),
+            o: Mat::zeros(0, 0),
+            xn2: Mat::zeros(0, 0),
+            h1: Mat::zeros(0, 0),
+            mlp: Mat::zeros(0, 0),
+            xf: Mat::zeros(0, 0),
+            logits: Mat::zeros(0, 0),
+        }
+    }
+
+    fn ensure(&mut self, b: usize, cfg: &ModelConfig) {
+        let d = cfg.d_model;
+        resize_stacked(&mut self.x, b, d);
+        resize_stacked(&mut self.xnorm, b, d);
+        resize_stacked(&mut self.q, b, d);
+        resize_stacked(&mut self.k, b, d);
+        resize_stacked(&mut self.v, b, d);
+        resize_stacked(&mut self.attn, b, d);
+        resize_stacked(&mut self.o, b, d);
+        resize_stacked(&mut self.xn2, b, d);
+        resize_stacked(&mut self.h1, b, cfg.d_ff);
+        resize_stacked(&mut self.mlp, b, d);
+        resize_stacked(&mut self.xf, b, d);
+        resize_stacked(&mut self.logits, b, cfg.vocab_size);
+    }
+
+    /// Logits row for batch slot `b` after a [`Engine::decode_step_batch`]
+    /// round.
+    pub fn logits_row(&self, b: usize) -> &[f32] {
+        self.logits.row(b)
+    }
+}
+
+/// One sequence's slot in a fused decode round: its cache policy, the
+/// token decoded last round, the token's absolute position, and the
+/// persistent per-sequence [`DecodeState`] (views + attention scratch).
+pub struct BatchDecodeEntry<'a> {
+    pub policy: &'a mut dyn KvCachePolicy,
+    pub token: usize,
+    pub abs_pos: usize,
+    pub state: &'a mut DecodeState,
+}
+
+/// Stacked buffers + per-sequence attention scratch for
+/// [`Engine::prefill_batch`]. The stacked matrices hold all sequences'
+/// rows (`Σ Tᵢ × ·`) so every GEMM streams its weight panel once across
+/// the whole admission round; the per-sequence [`PrefillScratch`]es feed
+/// the unchanged per-sequence attention/RoPE path. Stacked storage is
+/// grow-only ([`resize_stacked`]): admission rounds of varying size
+/// reuse the high-water allocation.
+pub struct BatchPrefillScratch {
+    x: Mat,
+    xnorm: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    attn: Mat,
+    xn2: Mat,
+    h1: Mat,
+    proj: Mat,
+    xf: Mat,
+    seqs: Vec<PrefillScratch>,
+}
+
+impl Default for BatchPrefillScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchPrefillScratch {
+    /// An empty scratch; buffers are sized lazily per admission round.
+    pub fn new() -> Self {
+        BatchPrefillScratch {
+            x: Mat::zeros(0, 0),
+            xnorm: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            attn: Mat::zeros(0, 0),
+            xn2: Mat::zeros(0, 0),
+            h1: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            xf: Mat::zeros(0, 0),
+            seqs: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, lens: &[usize], cfg: &ModelConfig) {
+        let total: usize = lens.iter().sum();
+        let d = cfg.d_model;
+        resize_stacked(&mut self.x, total, d);
+        resize_stacked(&mut self.xnorm, total, d);
+        resize_stacked(&mut self.q, total, d);
+        resize_stacked(&mut self.k, total, d);
+        resize_stacked(&mut self.v, total, d);
+        resize_stacked(&mut self.attn, total, d);
+        resize_stacked(&mut self.xn2, total, d);
+        resize_stacked(&mut self.h1, total, cfg.d_ff);
+        resize_stacked(&mut self.proj, total, d);
+        resize_stacked(&mut self.xf, total, d);
+        while self.seqs.len() < lens.len() {
+            self.seqs.push(PrefillScratch::new());
+        }
+        for (ss, &t) in self.seqs.iter_mut().zip(lens) {
+            ss.ensure(t, cfg);
+        }
+    }
+}
+
 /// The reference engine. Cheap to clone (weights are shared).
 #[derive(Clone)]
 pub struct Engine {
@@ -535,6 +771,141 @@ impl Engine {
             attn_mass: masses,
             logits,
         }
+    }
+
+    /// Fused multi-sequence prefill: one exact prefill pass over several
+    /// prompts at once, streaming each layer's weights **once** across
+    /// the stacked sequences instead of once per prompt.
+    ///
+    /// All rows of the B prompts are stacked into one `Σ Tᵢ × d` residual
+    /// stream; RMSNorm, the QKV / output / MLP / logit GEMMs run as
+    /// single [`par_matmul_into`] passes over the stack, while causal
+    /// attention, RoPE and policy ingestion run strictly per sequence
+    /// (each with its own [`PrefillScratch`] inside `scratch`). Every
+    /// per-row reduction keeps the single-sequence kernels' operation
+    /// order, so each returned [`PrefillRecord`] — and each policy's
+    /// post-prefill state — is **bit-identical** to a standalone
+    /// [`Engine::prefill_with`] call for that prompt, at any batch size
+    /// and thread count (`rust/tests/batched_serving.rs`).
+    pub fn prefill_batch(
+        &self,
+        prompts: &[&[usize]],
+        policies: &mut [Option<&mut dyn KvCachePolicy>],
+        scratch: &mut BatchPrefillScratch,
+    ) -> Vec<PrefillRecord> {
+        assert_eq!(prompts.len(), policies.len());
+        let nb = prompts.len();
+        if nb == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.w.cfg;
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let threads = resolve_threads(cfg.threads);
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        assert!(lens.iter().all(|&t| t > 0), "empty prompt");
+        let mut offs = Vec::with_capacity(nb);
+        let mut total = 0usize;
+        for &t in &lens {
+            offs.push(total);
+            total += t;
+        }
+        scratch.ensure(&lens, cfg);
+
+        // Embedding lookup, all sequences stacked.
+        for (si, prompt) in prompts.iter().enumerate() {
+            for (i, &tok) in prompt.iter().enumerate() {
+                scratch.x.row_mut(offs[si] + i).copy_from_slice(self.w.embed.row(tok));
+            }
+        }
+
+        let mut xnorms_all: Vec<Vec<Mat>> =
+            (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+        let mut ks_all: Vec<Vec<Mat>> =
+            (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+        let mut vs_all: Vec<Vec<Mat>> =
+            (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+        let mut masses_all: Vec<Vec<Vec<f32>>> =
+            (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            // Stacked RMSNorm + one weight-streamed GEMM per projection
+            // for the whole round. The GEMM row reduction is independent
+            // of which rows share the stack, so every row matches the
+            // single-sequence path bitwise.
+            ops::rmsnorm_rows_into(&scratch.x, lw.ln1.row(0), cfg.eps, &mut scratch.xnorm, threads);
+            par_matmul_into(&scratch.xnorm, &lw.wq, &mut scratch.q, threads);
+            par_matmul_into(&scratch.xnorm, &lw.wk, &mut scratch.k, threads);
+            par_matmul_into(&scratch.xnorm, &lw.wv, &mut scratch.v, threads);
+
+            // Per-sequence attention + policy ingestion, unchanged from
+            // the single-sequence path.
+            for si in 0..nb {
+                let (t, off) = (lens[si], offs[si]);
+                let xnorm =
+                    Mat::from_vec(t, d, scratch.xnorm.data[off * d..(off + t) * d].to_vec());
+                let k = Mat::from_vec(t, d, scratch.k.data[off * d..(off + t) * d].to_vec());
+                let v = Mat::from_vec(t, d, scratch.v.data[off * d..(off + t) * d].to_vec());
+                let replacement = policies[si]
+                    .as_deref_mut()
+                    .and_then(|p| p.ingest_prefill(li, &xnorm, &k, &v));
+                let (k_att, v_att): (&Mat, &Mat) = match &replacement {
+                    Some((rk, rv)) => (rk, rv),
+                    None => (&k, &v),
+                };
+                let ss = &mut scratch.seqs[si];
+                ss.q.data.copy_from_slice(&scratch.q.data[off * d..(off + t) * d]);
+                ss.k_rope.data.copy_from_slice(&k_att.data);
+                ops::rope_rows_cached(&mut ss.q, nh, 0, &ss.rope, threads);
+                ops::rope_rows_cached(&mut ss.k_rope, nh, 0, &ss.rope, threads);
+                let mut mass = vec![0.0f32; t];
+                streaming_causal_attention(
+                    &ss.q,
+                    &ss.k_rope,
+                    v_att,
+                    nh,
+                    scale,
+                    threads,
+                    AttnBuffers {
+                        out: &mut ss.attn_out,
+                        score_rows: &mut ss.score_rows[..],
+                        mass_part: &mut ss.mass_part[..],
+                        mass: &mut mass,
+                    },
+                );
+                if let Some(p) = policies[si].as_deref_mut() {
+                    p.observe_prefill_attn(li, &mass);
+                }
+                scratch.attn.data[off * d..(off + t) * d].copy_from_slice(&ss.attn_out.data);
+                masses_all[si].push(mass);
+                xnorms_all[si].push(xnorm);
+                ks_all[si].push(k);
+                vs_all[si].push(v);
+            }
+
+            // Output projection + MLP, fused across the stack.
+            par_matmul_into(&scratch.attn, &lw.wo, &mut scratch.proj, threads);
+            scratch.x.add_assign(&scratch.proj);
+            ops::rmsnorm_rows_into(&scratch.x, lw.ln2.row(0), cfg.eps, &mut scratch.xn2, threads);
+            par_matmul_into(&scratch.xn2, &lw.w1, &mut scratch.h1, threads);
+            ops::silu_rows(&mut scratch.h1, threads);
+            par_matmul_into(&scratch.h1, &lw.w2, &mut scratch.proj, threads);
+            scratch.x.add_assign(&scratch.proj);
+        }
+
+        ops::rmsnorm_rows_into(&scratch.x, self.w.ln_f.row(0), cfg.eps, &mut scratch.xf, threads);
+        let mut logits = Mat::zeros(total, cfg.vocab_size);
+        par_matmul_into(&scratch.xf, &self.w.lm_head, &mut logits, threads);
+
+        (0..nb)
+            .map(|si| PrefillRecord {
+                xnorms: std::mem::take(&mut xnorms_all[si]),
+                ks: std::mem::take(&mut ks_all[si]),
+                vs: std::mem::take(&mut vs_all[si]),
+                attn_mass: std::mem::take(&mut masses_all[si]),
+                logits: logits.rows_slice(offs[si], offs[si] + lens[si]),
+            })
+            .collect()
     }
 
     /// The pre-streaming serial prefill, kept verbatim as the correctness
@@ -698,33 +1069,16 @@ impl Engine {
             }
 
             // Per-head attention; aggregate probs across heads for H2O.
-            let n = view.len();
-            scratch.attn.fill(0.0);
-            scratch.agg_probs.clear();
-            scratch.agg_probs.resize(n, 0.0);
-            for h in 0..nh {
-                let (lo, hi) = (h * dh, (h + 1) * dh);
-                let qh = &scratch.q[lo..hi];
-                scratch.scores.clear();
-                scratch.scores.resize(n, 0.0);
-                let mut mx = f32::NEG_INFINITY;
-                for (i, s) in scratch.scores.iter_mut().enumerate() {
-                    *s = dot(qh, &view.key_row(i)[lo..hi]) * scale;
-                    mx = mx.max(*s);
-                }
-                // softmax
-                let mut sum = 0.0;
-                for s in scratch.scores.iter_mut() {
-                    *s = (*s - mx).exp();
-                    sum += *s;
-                }
-                let inv = 1.0 / sum;
-                for (i, s) in scratch.scores.iter_mut().enumerate() {
-                    *s *= inv;
-                    scratch.agg_probs[i] += *s;
-                    axpy_row(&mut scratch.attn[lo..hi], *s, &view.value_row(i)[lo..hi]);
-                }
-            }
+            decode_attention(
+                view,
+                &scratch.q,
+                &mut scratch.attn,
+                &mut scratch.scores,
+                &mut scratch.agg_probs,
+                nh,
+                dh,
+                scale,
+            );
             policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
 
             // Output projection + residual.
@@ -746,6 +1100,96 @@ impl Engine {
         ops::rmsnorm(&scratch.x, self.w.ln_f.row(0), cfg.eps, &mut scratch.xf);
         matvec_t_into(&self.w.lm_head, &scratch.xf, &mut scratch.logits);
         &scratch.logits
+    }
+
+    /// One GEMM-batched decode round: advance every entry's sequence by
+    /// one token, fusing the QKV / output / MLP / LM-head projections
+    /// into a single weight-streamed pass each over the stacked `[B, d]`
+    /// hidden states ([`matvec_t_batch_into`]), while cache appends, view
+    /// sync, RoPE and attention run per sequence exactly as
+    /// [`Engine::decode_step_with`] does.
+    ///
+    /// After the call, `batch.logits_row(i)` holds entry `i`'s logits.
+    /// The batched projection kernel replays `matvec_t_into`'s per-row
+    /// reduction semantics, so every sequence's logits — and its policy /
+    /// view state — are **bit-identical** to B independent
+    /// `decode_step_with` calls, at any batch width
+    /// (`rust/tests/batched_serving.rs`).
+    pub fn decode_step_batch(
+        &self,
+        entries: &mut [BatchDecodeEntry<'_>],
+        batch: &mut BatchDecodeScratch,
+    ) {
+        let nb = entries.len();
+        if nb == 0 {
+            return;
+        }
+        let cfg = &self.w.cfg;
+        let (nh, dh) = (cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        batch.ensure(nb, cfg);
+
+        for (bi, e) in entries.iter().enumerate() {
+            batch.x.row_mut(bi).copy_from_slice(self.w.embed.row(e.token));
+        }
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            for bi in 0..nb {
+                ops::rmsnorm(batch.x.row(bi), lw.ln1.row(0), cfg.eps, batch.xnorm.row_mut(bi));
+            }
+            // Fused projections: each weight streamed once for the round.
+            matvec_t_batch_into(&lw.wq, &batch.xnorm, &mut batch.q);
+            matvec_t_batch_into(&lw.wk, &batch.xnorm, &mut batch.k);
+            matvec_t_batch_into(&lw.wv, &batch.xnorm, &mut batch.v);
+
+            // Per-sequence cache update, RoPE and attention — identical
+            // to the single-sequence step.
+            for (bi, e) in entries.iter_mut().enumerate() {
+                let policy = &mut *e.policy;
+                let DecodeState { views, scratch } = &mut *e.state;
+                policy.append(li, batch.xnorm.row(bi), batch.k.row(bi), batch.v.row(bi));
+                let view = &mut views[li];
+                policy.sync_view(li, view);
+                let view = &views[li];
+                debug_assert_eq!(view.len(), policy.len(li));
+
+                let qpos = policy.query_rope_pos(li, e.abs_pos);
+                {
+                    let qrow = batch.q.row_mut(bi);
+                    for h in 0..nh {
+                        ops::rope_rotate(&mut qrow[h * dh..(h + 1) * dh], qpos, cfg.rope_base);
+                    }
+                }
+                decode_attention(
+                    view,
+                    batch.q.row(bi),
+                    batch.attn.row_mut(bi),
+                    &mut scratch.scores,
+                    &mut scratch.agg_probs,
+                    nh,
+                    dh,
+                    scale,
+                );
+                policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
+            }
+
+            // Output projection + residual, fused.
+            matvec_t_batch_into(&lw.wo, &batch.attn, &mut batch.o);
+            batch.x.add_assign(&batch.o);
+            // MLP, fused.
+            for bi in 0..nb {
+                ops::rmsnorm(batch.x.row(bi), lw.ln2.row(0), cfg.eps, batch.xn2.row_mut(bi));
+            }
+            matvec_t_batch_into(&lw.w1, &batch.xn2, &mut batch.h1);
+            for hv in batch.h1.data.iter_mut() {
+                *hv = ops::silu(*hv);
+            }
+            matvec_t_batch_into(&lw.w2, &batch.h1, &mut batch.mlp);
+            batch.x.add_assign(&batch.mlp);
+        }
+        for bi in 0..nb {
+            ops::rmsnorm(batch.x.row(bi), self.w.ln_f.row(0), cfg.eps, batch.xf.row_mut(bi));
+        }
+        matvec_t_batch_into(&self.w.lm_head, &batch.xf, &mut batch.logits);
     }
 
     /// One decode step with a throwaway [`DecodeState`] (compatibility /
@@ -995,6 +1439,105 @@ mod tests {
             let fresh = e.prefill(&tokens, None);
             assert_eq!(reused.logits.data, fresh.logits.data, "t={t}");
             assert_eq!(reused.attn_mass, fresh.attn_mass, "t={t}");
+        }
+    }
+
+    /// The batched serving guarantee at engine granularity: fused
+    /// multi-sequence prefill and GEMM-batched decode rounds are
+    /// bit-identical to independent per-sequence calls — logits, records
+    /// and policy state. (The cross-policy × batch-width × thread sweep
+    /// lives in `rust/tests/batched_serving.rs`.)
+    #[test]
+    fn batched_prefill_and_decode_match_single_sequence() {
+        let e = engine();
+        let cfg = e.w.cfg.clone();
+        let prompts: Vec<Vec<usize>> = vec![
+            vec![1, 7, 9, 2],
+            (0..37).map(|i| (i * 13 + 5) % 256).collect(),
+            vec![4],
+        ];
+        let nb = prompts.len();
+
+        // Sequential oracle: per-sequence prefill + decode.
+        let mut seq_caches: Vec<FullCache> = (0..nb)
+            .map(|_| FullCache::new(cfg.n_layers, cfg.d_model))
+            .collect();
+        let mut want_recs = Vec::new();
+        for (p, c) in prompts.iter().zip(seq_caches.iter_mut()) {
+            want_recs.push(e.prefill(p, Some(c)));
+        }
+
+        // Batched prefill.
+        let mut batch_caches: Vec<FullCache> = (0..nb)
+            .map(|_| FullCache::new(cfg.n_layers, cfg.d_model))
+            .collect();
+        let prompt_refs: Vec<&[usize]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut scratch = BatchPrefillScratch::new();
+        let recs = {
+            let mut policies: Vec<Option<&mut dyn KvCachePolicy>> = batch_caches
+                .iter_mut()
+                .map(|c| Some(c as &mut dyn KvCachePolicy))
+                .collect();
+            e.prefill_batch(&prompt_refs, &mut policies, &mut scratch)
+        };
+        assert_eq!(recs.len(), nb);
+        for si in 0..nb {
+            assert_eq!(recs[si].logits.data, want_recs[si].logits.data, "logits seq {si}");
+            for li in 0..cfg.n_layers {
+                assert_eq!(recs[si].xnorms[li].data, want_recs[si].xnorms[li].data);
+                assert_eq!(recs[si].ks[li].data, want_recs[si].ks[li].data);
+                assert_eq!(recs[si].vs[li].data, want_recs[si].vs[li].data);
+                assert_eq!(recs[si].attn_mass[li], want_recs[si].attn_mass[li]);
+                assert_eq!(
+                    seq_caches[si].materialize(li).k.data,
+                    batch_caches[si].materialize(li).k.data,
+                    "cache state seq {si} L{li}"
+                );
+            }
+        }
+
+        // Decode rounds: batched vs per-sequence, 5 steps.
+        let mut seq_states: Vec<DecodeState> = (0..nb).map(|_| DecodeState::new(&cfg)).collect();
+        let mut batch_states: Vec<DecodeState> = (0..nb).map(|_| DecodeState::new(&cfg)).collect();
+        let mut toks: Vec<usize> = (0..nb)
+            .map(|si| crate::tensor::ops::argmax(recs[si].logits.row(prompts[si].len() - 1)))
+            .collect();
+        let mut pos: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let mut batch_scratch = BatchDecodeScratch::new();
+        for step in 0..5 {
+            let mut want_logits = Vec::with_capacity(nb);
+            for si in 0..nb {
+                let l = e.decode_step_with(
+                    &mut seq_caches[si],
+                    toks[si],
+                    pos[si],
+                    &mut seq_states[si],
+                );
+                want_logits.push(l.to_vec());
+            }
+            {
+                let mut entries: Vec<BatchDecodeEntry> = batch_caches
+                    .iter_mut()
+                    .zip(batch_states.iter_mut())
+                    .enumerate()
+                    .map(|(si, (c, s))| BatchDecodeEntry {
+                        policy: c as &mut dyn KvCachePolicy,
+                        token: toks[si],
+                        abs_pos: pos[si],
+                        state: s,
+                    })
+                    .collect();
+                e.decode_step_batch(&mut entries, &mut batch_scratch);
+            }
+            for si in 0..nb {
+                assert_eq!(
+                    batch_scratch.logits_row(si),
+                    &want_logits[si][..],
+                    "step {step} seq {si}: batched logits must be bit-identical"
+                );
+                toks[si] = crate::tensor::ops::argmax(&want_logits[si]);
+                pos[si] += 1;
+            }
         }
     }
 

@@ -33,6 +33,14 @@
 //! `bench_perf_prefill` records the dense before/after numbers.
 //! `matmul_tn` keeps its skip — recon-trainer gradients are the one
 //! genuinely sparse-ish operand left.
+//!
+//! ## Batched decode projections
+//!
+//! [`matvec_t_batch_into`] is the serving coordinator's GEMM-batched
+//! decode kernel: one (input-dim, batch) pass that streams each weight
+//! row once across all in-flight sequences while keeping every output
+//! row's reduction semantics identical to [`matvec_t_into`] — so fused
+//! decode rounds are bit-identical to per-sequence GEMVs.
 
 use crate::util::threadpool::{parallel_chunks, SendPtr};
 
@@ -290,6 +298,36 @@ pub fn matvec_t_into(a: &Mat, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// `Y[b] = Aᵀ·X[b]` for a stack of input rows — the GEMM-batched decode
+/// projection. `A` is the `[d_in, d_out]` row-major weight, `xs` holds
+/// one input row per in-flight sequence (`[B, d_in]`) and `ys` the
+/// outputs (`[B, d_out]`).
+///
+/// The loop order is (input dim, batch): each weight row is loaded
+/// **once** and applied to every sequence while it is hot, so a decode
+/// round streams the weight set once instead of once per sequence — the
+/// whole point of batching GEMV-bound decode. Per output row the
+/// reduction is ascending input dim with `xi == 0.0` contributions
+/// skipped, i.e. *exactly* [`matvec_t_into`]'s semantics, so a batched
+/// round is bit-identical to `B` independent GEMV calls at any batch
+/// size (`rust/tests/batched_serving.rs` holds the oracle).
+pub fn matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat) {
+    assert_eq!(a.rows, xs.cols);
+    assert_eq!(a.cols, ys.cols);
+    assert_eq!(xs.rows, ys.rows);
+    ys.data.fill(0.0);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for b in 0..xs.rows {
+            let xi = xs.at(b, i);
+            if xi == 0.0 {
+                continue;
+            }
+            axpy_row(ys.row_mut(b), xi, arow);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,6 +466,28 @@ mod tests {
                 let mut got_nt = Mat::from_vec(m, n, vec![-2.0; m * n]);
                 par_matmul_nt_into(&a, &bt, &mut got_nt, threads);
                 assert_eq!(got_nt.data, want_nt.data, "matmul_nt ({m},{k},{n}) threads={threads}");
+            }
+        }
+    }
+
+    /// The contract the GEMM-batched decode rests on: the batched
+    /// projection kernel is bit-identical to independent `matvec_t_into`
+    /// calls for every row, including exact-zero inputs (whose skip is
+    /// part of the shared reduction semantics).
+    #[test]
+    fn batch_matvec_t_bit_identical_to_gemv() {
+        let mut rng = Pcg64::new(21);
+        for (d_in, d_out, batch) in [(1, 1, 1), (5, 3, 2), (33, 17, 8), (64, 96, 3)] {
+            let a = Mat::randn(d_in, d_out, 1.0, &mut rng);
+            let mut xs = Mat::randn(batch, d_in, 1.0, &mut rng);
+            for v in xs.data.iter_mut().step_by(5) {
+                *v = 0.0; // exercise the shared zero-skip
+            }
+            let mut ys = Mat::from_vec(batch, d_out, vec![3.0; batch * d_out]); // dirty
+            matvec_t_batch_into(&a, &xs, &mut ys);
+            for b in 0..batch {
+                let want = matvec_t(&a, xs.row(b));
+                assert_eq!(ys.row(b), &want[..], "({d_in},{d_out}) row {b}");
             }
         }
     }

@@ -1,13 +1,31 @@
-//! Minimal scoped thread pool + `parallel_for` (rayon stand-in).
+//! Minimal persistent thread pool + `parallel_for` (rayon stand-in).
 //!
 //! The container exposes a single core, so defaults degrade gracefully to
 //! sequential execution, but the pool is fully functional and is exercised
 //! by tests with multiple workers — the coordinator uses it for background
 //! work and the tensor layer uses [`parallel_for`] for row-blocked matmul.
+//!
+//! ## Pool reuse
+//!
+//! [`parallel_for`] / [`parallel_chunks`] dispatch to one process-wide
+//! persistent [`ThreadPool`] (grown on demand to the widest width any call
+//! requests) instead of spawning scoped OS threads per call: a serving
+//! decode round issues hundreds of small parallel regions per second, and
+//! per-call `thread::spawn` overhead dominated at small context lengths
+//! (the ROADMAP "NUMA / pool reuse" item; `bench_perf_serving` records the
+//! pooled-vs-scoped A/B). The calling thread always participates in the
+//! work loop, so a call makes progress even when every pool worker is
+//! busy, and a parallel region entered *from* a pool worker runs inline —
+//! nested calls can never deadlock on pool capacity. The pre-pool
+//! implementations are kept as [`parallel_for_scoped`] /
+//! [`parallel_chunks_scoped`] (bench baseline). Work distribution is
+//! unchanged, so results stay bit-identical to the scoped path at every
+//! width.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -176,12 +194,155 @@ pub fn parallel_rows<F: Fn(usize, &mut [f32]) + Sync>(
     });
 }
 
-/// Run `f(i)` for `i in 0..n`, split across up to `threads` scoped workers.
+/// Process-wide pool backing [`parallel_for`] / [`parallel_chunks`].
+/// Created lazily at the first multi-worker call and grown (never shrunk)
+/// whenever a call requests more helpers than the pool holds.
+static SHARED_POOL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+
+fn shared_pool(min_workers: usize) -> Arc<ThreadPool> {
+    let mut g = SHARED_POOL.lock().unwrap();
+    if let Some(p) = g.as_ref() {
+        if p.size() >= min_workers {
+            return Arc::clone(p);
+        }
+    }
+    let n = min_workers.max(g.as_ref().map_or(0, |p| p.size()));
+    let p = Arc::new(ThreadPool::new(n));
+    *g = Some(Arc::clone(&p));
+    p
+}
+
+thread_local! {
+    /// True while this thread is executing a pooled parallel region's job.
+    /// A nested `parallel_for` on such a thread runs inline instead of
+    /// re-entering the pool: with every worker potentially blocked on its
+    /// own nested region, queued helper jobs could otherwise never run.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Shared state of one pooled parallel region. Lives on the callers' Arc
+/// until the last helper job drops it; `f` is a lifetime-erased borrow of
+/// the caller's closure, valid because the caller blocks on `remaining`
+/// before returning.
+struct PooledRun {
+    counter: AtomicUsize,
+    n: usize,
+    f: &'static (dyn Fn(usize) + Sync),
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from any participant, re-raised on the caller
+    /// with [`std::panic::resume_unwind`] so the original message and
+    /// location survive (matching the scoped and inline paths).
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl PooledRun {
+    /// Drain indices from the shared counter until exhausted. Catches
+    /// panics so a helper can always report completion (the payload is
+    /// re-raised on the calling thread).
+    fn drive(&self) {
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = self.counter.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            (self.f)(i);
+        })) {
+            let mut slot = self.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n`, the indices drained by the calling thread
+/// plus up to `threads - 1` helpers from the shared persistent pool.
 ///
-/// Uses `std::thread::scope`, so `f` may borrow from the caller. With
-/// `threads <= 1` (the default on this 1-core container) it runs inline
-/// with zero overhead.
+/// `f` may borrow from the caller: the call blocks until every helper has
+/// finished. With `threads <= 1` (the default on this 1-core container),
+/// or when called from inside a pool job (nested parallelism), it runs
+/// inline with zero overhead. Each index is executed exactly once, so the
+/// result is bit-identical at every width. A panic inside `f` is
+/// re-raised on the calling thread after the region drains.
+///
+/// Caveat: the pool's job queue is FIFO and shared, so a caller's return
+/// can wait behind *other* callers' queued jobs even when its own
+/// indices are already drained (the helper jobs must at least start to
+/// report completion). With one serving worker plus batch-level
+/// parallelism this doesn't bite; if many threads issue tiny regions
+/// concurrently, prefer [`parallel_for_scoped`] for the latency-critical
+/// ones.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || IN_POOL_JOB.with(|c| c.get()) {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let helpers = threads - 1;
+    let f_ref: &(dyn Fn(usize) + Sync) = &f;
+    // Safety: the lifetime is erased only for the pool jobs below, and
+    // this function does not return until `remaining == 0`, i.e. until no
+    // job can touch `f` again (dropping the Arc afterwards never reads
+    // the borrow).
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_ref) };
+    let run = Arc::new(PooledRun {
+        counter: AtomicUsize::new(0),
+        n,
+        f: f_static,
+        remaining: Mutex::new(helpers),
+        done: Condvar::new(),
+        panic_payload: Mutex::new(None),
+    });
+    let pool = shared_pool(helpers);
+    for _ in 0..helpers {
+        let r = Arc::clone(&run);
+        pool.execute(move || {
+            IN_POOL_JOB.with(|c| c.set(true));
+            r.drive();
+            IN_POOL_JOB.with(|c| c.set(false));
+            let mut g = r.remaining.lock().unwrap();
+            *g -= 1;
+            r.done.notify_all();
+        });
+    }
+    // The caller always participates: the region completes even if every
+    // pool worker is busy with other callers' work.
+    run.drive();
+    let mut g = run.remaining.lock().unwrap();
+    while *g > 0 {
+        g = run.done.wait(g).unwrap();
+    }
+    drop(g);
+    if let Some(payload) = run.panic_payload.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Chunked variant: calls `f(lo, hi)` on disjoint ranges covering `0..n`,
+/// partitioned exactly as [`parallel_chunks_scoped`] and executed on the
+/// shared pool via [`parallel_for`].
+pub fn parallel_chunks<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let n_chunks = n.div_ceil(chunk);
+    parallel_for(n_chunks, threads, |t| {
+        let lo = t * chunk;
+        let hi = (lo + chunk).min(n);
+        f(lo, hi);
+    });
+}
+
+/// The pre-pool `parallel_for`: spawns scoped OS threads per call. Kept
+/// verbatim as the baseline for the pool-reuse A/B in
+/// `bench_perf_serving` — production call sites use [`parallel_for`].
+pub fn parallel_for_scoped<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 {
         for i in 0..n {
@@ -203,8 +364,9 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     });
 }
 
-/// Chunked variant: calls `f(lo, hi)` on disjoint ranges covering `0..n`.
-pub fn parallel_chunks<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
+/// The pre-pool `parallel_chunks` (scoped-spawn baseline, see
+/// [`parallel_for_scoped`]).
+pub fn parallel_chunks_scoped<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 {
         f(0, n);
@@ -350,6 +512,77 @@ mod tests {
         set_global_threads(0); // clamps to 1
         assert_eq!(global_threads(), 1);
         set_global_threads(before);
+    }
+
+    #[test]
+    fn pooled_and_scoped_visit_identical_ranges() {
+        for threads in [2usize, 3, 8] {
+            for n in [1usize, 5, 50, 97] {
+                let pooled: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                parallel_for(n, threads, |i| {
+                    pooled[i].fetch_add(1, Ordering::SeqCst);
+                });
+                let scoped: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                parallel_for_scoped(n, threads, |i| {
+                    scoped[i].fetch_add(1, Ordering::SeqCst);
+                });
+                for i in 0..n {
+                    assert_eq!(pooled[i].load(Ordering::SeqCst), 1, "pooled n={n} t={threads}");
+                    assert_eq!(scoped[i].load(Ordering::SeqCst), 1, "scoped n={n} t={threads}");
+                }
+                // Chunk partitions must match the scoped baseline exactly.
+                let mut want: Vec<(usize, usize)> = Vec::new();
+                let chunk = n.div_ceil(threads.min(n));
+                let mut lo = 0;
+                while lo < n {
+                    want.push((lo, (lo + chunk).min(n)));
+                    lo += chunk;
+                }
+                let got = Mutex::new(Vec::new());
+                parallel_chunks(n, threads, |lo, hi| {
+                    got.lock().unwrap().push((lo, hi));
+                });
+                let mut got = got.into_inner().unwrap();
+                got.sort_unstable();
+                assert_eq!(got, want, "chunks n={n} t={threads}");
+            }
+        }
+    }
+
+    /// Nested parallel regions must complete (inner regions run inline on
+    /// pool workers) — the classic fixed-pool deadlock shape.
+    #[test]
+    fn nested_parallel_for_completes() {
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(8, 4, |outer| {
+            parallel_for(8, 4, |inner| {
+                hits[outer * 8 + inner].fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    /// A panic inside `f` must surface on the calling thread — with its
+    /// original payload — without wedging the shared pool for later
+    /// callers.
+    #[test]
+    fn pooled_parallel_for_propagates_panics() {
+        let res = std::panic::catch_unwind(|| {
+            parallel_for(16, 4, |i| {
+                if i == 7 {
+                    panic!("injected");
+                }
+            });
+        });
+        let payload = res.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "injected", "original panic payload must survive");
+        // Pool still serves subsequent regions.
+        let c = AtomicU64::new(0);
+        parallel_for(16, 4, |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 16);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! The batched serving data plane's correctness oracles.
+//!
+//! 1. Engine level: fused multi-sequence prefill ([`Engine::prefill_batch`])
+//!    and GEMM-batched decode rounds ([`Engine::decode_step_batch`]) must
+//!    be **bit-identical** to independent per-sequence calls — logits,
+//!    prefill records and policy state — across every cache policy, batch
+//!    widths {1, 2, 8} and thread counts {1, 8}.
+//! 2. Scheduler level: the fused coordinator, the sequential (A/B
+//!    baseline) coordinator, and a direct `Engine::generate` must produce
+//!    identical token streams for every request, at mixed prompt lengths
+//!    and batch widths.
+//! 3. Liveness: a short request admitted mid-flight finishes before a
+//!    long earlier one drains (continuous batching), and no request can
+//!    ever hang its caller — every submission is answered, success or
+//!    error (failure injection).
+
+use std::sync::Arc;
+
+use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::{
+    BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine,
+};
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::ops;
+use cskv::tensor::Mat;
+use cskv::util::prng::Pcg64;
+
+/// Low-rank factors matching the `test_small` engine geometry.
+fn engine_factors(rank: usize) -> Arc<ModelFactors> {
+    let cfg = ModelConfig::test_small();
+    let d = cfg.d_model;
+    let mut rng = Pcg64::new(rank as u64 * 77 + 5);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..cfg.n_layers).map(|_| LayerFactors { k: mk(), v: mk() }).collect(),
+        provenance: "batched-serving".into(),
+    })
+}
+
+/// One instance of every cache policy, freshly constructed.
+fn mk_policies() -> Vec<Box<dyn KvCachePolicy>> {
+    let cfg = ModelConfig::test_small();
+    let (l, d) = (cfg.n_layers, cfg.d_model);
+    vec![
+        Box::new(FullCache::new(l, d)),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 6, quant: QuantMode::None },
+        )),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 6, quant: QuantMode::Int4 },
+        )),
+        Box::new(StreamingLlmCache::new(l, d, 2, 12)),
+        Box::new(H2oCache::new(l, d, 10)),
+        Box::new(AsvdCache::new(engine_factors(8))),
+    ]
+}
+
+/// Mixed prompt lengths exercising the attention row tiles (> 32) and the
+/// parallel GEMM row blocks (> 64).
+fn mk_prompts(width: usize, seed: u64) -> Vec<Vec<usize>> {
+    let lens = [70usize, 1, 33, 12, 57, 5, 21, 44];
+    let mut rng = Pcg64::new(seed);
+    (0..width)
+        .map(|i| (0..lens[i % lens.len()]).map(|_| rng.range(16, 250)).collect())
+        .collect()
+}
+
+/// THE bit-identity oracle for the tentpole: batched prefill + batched
+/// decode ≡ per-sequence prefill + decode, for batch widths {1, 2, 8} ×
+/// threads {1, 8} × every cache policy.
+#[test]
+fn batched_rounds_bit_identical_to_per_sequence() {
+    let base = ModelConfig::test_small();
+    let n_policies = mk_policies().len();
+    for threads in [1usize, 8] {
+        let cfg = base.clone().with_threads(threads);
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+        for width in [1usize, 2, 8] {
+            let prompts = mk_prompts(width, width as u64 * 31 + threads as u64);
+            let prompt_refs: Vec<&[usize]> = prompts.iter().map(|p| p.as_slice()).collect();
+            for pi in 0..n_policies {
+                // Per-sequence oracle: one policy instance per sequence.
+                let mut seq_pols: Vec<Box<dyn KvCachePolicy>> =
+                    (0..width).map(|_| mk_policies().swap_remove(pi)).collect();
+                let mut want_recs = Vec::with_capacity(width);
+                for (p, pol) in prompt_refs.iter().zip(seq_pols.iter_mut()) {
+                    want_recs.push(engine.prefill(p, Some(pol.as_mut())));
+                }
+
+                // Batched prefill.
+                let mut bat_pols: Vec<Box<dyn KvCachePolicy>> =
+                    (0..width).map(|_| mk_policies().swap_remove(pi)).collect();
+                let mut scratch = BatchPrefillScratch::new();
+                let recs = {
+                    let mut policies: Vec<Option<&mut dyn KvCachePolicy>> =
+                        bat_pols.iter_mut().map(|p| Some(p.as_mut())).collect();
+                    engine.prefill_batch(&prompt_refs, &mut policies, &mut scratch)
+                };
+                let name = seq_pols[0].name();
+                for si in 0..width {
+                    assert_eq!(
+                        recs[si].logits.data, want_recs[si].logits.data,
+                        "{name}: prefill logits seq {si} width {width} threads {threads}"
+                    );
+                    for li in 0..cfg.n_layers {
+                        assert_eq!(recs[si].attn_mass[li], want_recs[si].attn_mass[li]);
+                        let (va, vb) =
+                            (seq_pols[si].materialize(li), bat_pols[si].materialize(li));
+                        assert_eq!(va.k.data, vb.k.data, "{name}: K state L{li} seq {si}");
+                        assert_eq!(va.v.data, vb.v.data, "{name}: V state L{li} seq {si}");
+                        assert_eq!(va.abs_pos, vb.abs_pos);
+                    }
+                }
+
+                // Decode rounds: batched vs per-sequence, 6 steps.
+                let mut seq_states: Vec<DecodeState> =
+                    (0..width).map(|_| DecodeState::new(&cfg)).collect();
+                let mut bat_states: Vec<DecodeState> =
+                    (0..width).map(|_| DecodeState::new(&cfg)).collect();
+                let mut toks: Vec<usize> = (0..width)
+                    .map(|si| ops::argmax(recs[si].logits.row(prompts[si].len() - 1)))
+                    .collect();
+                let mut pos: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+                let mut dec_scratch = BatchDecodeScratch::new();
+                for step in 0..6 {
+                    let mut want_logits = Vec::with_capacity(width);
+                    for si in 0..width {
+                        let l = engine.decode_step_with(
+                            seq_pols[si].as_mut(),
+                            toks[si],
+                            pos[si],
+                            &mut seq_states[si],
+                        );
+                        want_logits.push(l.to_vec());
+                    }
+                    {
+                        let mut entries: Vec<BatchDecodeEntry> = bat_pols
+                            .iter_mut()
+                            .zip(bat_states.iter_mut())
+                            .enumerate()
+                            .map(|(si, (pol, st))| BatchDecodeEntry {
+                                policy: pol.as_mut(),
+                                token: toks[si],
+                                abs_pos: pos[si],
+                                state: st,
+                            })
+                            .collect();
+                        engine.decode_step_batch(&mut entries, &mut dec_scratch);
+                    }
+                    for si in 0..width {
+                        assert_eq!(
+                            dec_scratch.logits_row(si),
+                            &want_logits[si][..],
+                            "{name}: decode step {step} seq {si} width {width} threads {threads}"
+                        );
+                        toks[si] = ops::argmax(&want_logits[si]);
+                        pos[si] += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn make_engine(seed: u64) -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), seed)))
+}
+
+/// A coordinator Setup serving the `pi`-th cache policy.
+fn policy_setup(seed: u64, pi: usize) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let policy = mk_policies().swap_remove(pi);
+            Ok(Box::new(RustSequenceBackend::new(engine.clone(), policy)))
+        });
+        Ok(factory)
+    })
+}
+
+/// Scheduler-level equivalence: fused rounds, sequential rounds and the
+/// direct engine agree on every request's token stream, for every policy
+/// at mixed prompt lengths and batch widths.
+#[test]
+fn fused_scheduler_matches_sequential_and_direct_engine() {
+    let n_policies = mk_policies().len();
+    let engine = make_engine(23);
+    for pi in 0..n_policies {
+        let prompts = mk_prompts(6, 97 + pi as u64);
+        // Direct per-sequence oracle.
+        let mut want: Vec<Vec<usize>> = Vec::new();
+        for p in &prompts {
+            let mut pol = mk_policies().swap_remove(pi);
+            let (toks, _) = engine.generate(p, 5, pol.as_mut());
+            want.push(toks);
+        }
+        for (max_batch, fused) in [(1usize, true), (2, true), (8, true), (8, false)] {
+            let coord = Coordinator::start(
+                policy_setup(23, pi),
+                CoordinatorConfig { max_batch, fused, ..Default::default() },
+            );
+            let rxs: Vec<_> = prompts.iter().map(|p| coord.submit(p.clone(), 5)).collect();
+            for (ri, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap();
+                assert!(resp.error.is_none(), "request {ri} errored: {:?}", resp.error);
+                assert_eq!(
+                    resp.tokens, want[ri],
+                    "policy {pi} req {ri}: scheduler (max_batch={max_batch}, fused={fused}) \
+                     must match the direct engine"
+                );
+            }
+            coord.shutdown();
+        }
+    }
+}
+
+fn full_setup(seed: u64) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+/// Continuous batching: a short request submitted while a long one is
+/// mid-flight must be admitted into the running batch and finish first.
+#[test]
+fn short_request_admitted_mid_flight_overtakes_long_one() {
+    let coord = Coordinator::start(
+        full_setup(9),
+        CoordinatorConfig { max_batch: 4, ..Default::default() },
+    );
+    let long_rx = coord.submit(vec![1, 2, 3, 4], 1200);
+    // Wait until the long request is actually in flight (its KV footprint
+    // is visible), then submit the short one mid-generation.
+    let t0 = std::time::Instant::now();
+    while coord.metrics().kv_bytes_current() == 0 {
+        assert!(t0.elapsed().as_secs() < 30, "long request never started");
+        std::thread::yield_now();
+    }
+    let short = coord.submit_wait(vec![5, 6, 7], 2);
+    assert!(short.error.is_none());
+    assert_eq!(short.tokens.len(), 2);
+    // ~1198 decode rounds remain for the long request: it must still be
+    // in flight when the short one is answered.
+    assert!(
+        matches!(long_rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)),
+        "short request must overtake the long one"
+    );
+    let long = long_rx.recv().unwrap();
+    assert!(long.error.is_none());
+    assert_eq!(long.tokens.len(), 1200);
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 2);
+    assert!(snap.active_peak >= 2, "short request must join the running batch");
+}
+
+/// A backend factory that fails every second construction.
+fn flaky_setup(seed: u64) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let mut n = 0usize;
+        let factory: BackendFactory = Box::new(move || {
+            n += 1;
+            anyhow::ensure!(n % 2 != 0, "injected backend failure #{n}");
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )) as Box<dyn cskv::coordinator::SequenceBackend>)
+        });
+        Ok(factory)
+    })
+}
+
+/// Failure injection: no request can hang its caller. Every submission —
+/// including ones whose backend construction or prefill fails — receives
+/// exactly one Response.
+#[test]
+fn every_request_is_answered_under_failures() {
+    let coord = Coordinator::start(flaky_setup(13), CoordinatorConfig::default());
+    // 6 normal requests: factory calls 1..=6, the even ones fail.
+    let rxs: Vec<_> = (0..6).map(|i| coord.submit(vec![1, 2 + i, 3], 3)).collect();
+    // Plus one empty prompt: its construction may succeed, prefill fails.
+    let bad_rx = coord.submit(vec![], 3);
+    let mut ok = 0;
+    let mut failed = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("every request must be answered");
+        if resp.error.is_none() {
+            assert_eq!(resp.tokens.len(), 3);
+            ok += 1;
+        } else {
+            assert!(resp.tokens.is_empty());
+            failed += 1;
+        }
+    }
+    let bad = bad_rx.recv().expect("failed prefill must still answer");
+    assert!(bad.error.is_some());
+    let snap = coord.shutdown();
+    assert_eq!(ok, 3, "odd-numbered constructions succeed");
+    assert_eq!(failed, 3, "even-numbered constructions fail");
+    assert_eq!(snap.requests_completed as usize, ok);
+    assert_eq!(snap.requests_failed as usize, failed + 1);
+}

@@ -133,15 +133,20 @@ fn cskv_admits_more_concurrency_under_same_budget() {
 
 #[test]
 fn coordinator_survives_empty_prompt() {
-    // Empty prompts fail prefill; the coordinator must log and continue
-    // serving subsequent requests (the reply channel is dropped).
+    // Empty prompts fail prefill; the coordinator must answer with an
+    // error Response (never a dropped reply, which would hang
+    // submit_wait) and keep serving subsequent requests.
     let coord = Coordinator::start(full_setup(4), CoordinatorConfig::default());
     let bad_rx = coord.submit(vec![], 3);
     let good = coord.submit_wait(vec![1, 2, 3], 3);
     assert_eq!(good.tokens.len(), 3);
-    assert!(bad_rx.recv().is_err(), "failed request must drop its reply");
+    assert!(good.error.is_none());
+    let bad = bad_rx.recv().expect("failed request must still be answered");
+    assert!(bad.tokens.is_empty());
+    assert!(bad.error.as_deref().unwrap_or("").contains("prefill failed"));
     let snap = coord.shutdown();
     assert_eq!(snap.requests_completed, 1);
+    assert_eq!(snap.requests_failed, 1);
 }
 
 #[test]

@@ -380,6 +380,55 @@ fn prop_streaming_prefill_bit_identical_to_serial_reference() {
     );
 }
 
+/// The admission pre-charge's accuracy: for fp32 policies,
+/// `kv_bytes_projected(n)` computed on an *empty* cache equals the real
+/// `kv_bytes()` after the cache actually holds `n` tokens (for int4 the
+/// projection is a documented upper bound instead).
+#[test]
+fn prop_kv_bytes_projected_matches_actual_for_fp32_policies() {
+    forall(
+        "kv_bytes_projected(n) == kv_bytes() after n tokens (fp32 policies)",
+        40,
+        zip(Gen::usize_in(1..60), Gen::usize_in(0..40)),
+        |&(prefill, appends)| {
+            let total = prefill.max(1) + appends;
+            let mk: Vec<Box<dyn KvCachePolicy>> = vec![
+                Box::new(FullCache::new(1, D)),
+                Box::new(CskvCache::new(
+                    factors(4, 1),
+                    D,
+                    CskvConfig { window: 5, quant: QuantMode::None },
+                )),
+                Box::new(StreamingLlmCache::new(1, D, 2, 9)),
+                Box::new(H2oCache::new(1, D, 8)),
+                Box::new(AsvdCache::new(factors(4, 1))),
+            ];
+            for mut policy in mk {
+                let projected = policy.kv_bytes_projected(total);
+                drive(&mut policy, prefill, appends, 9);
+                if projected != policy.kv_bytes() {
+                    eprintln!(
+                        "projection mismatch: {} projected={} actual={} total={total}",
+                        policy.name(),
+                        projected,
+                        policy.kv_bytes()
+                    );
+                    return false;
+                }
+            }
+            // Int4 projection is an upper bound (fp32 accounting).
+            let mut q = CskvCache::new(
+                factors(4, 1),
+                D,
+                CskvConfig { window: 5, quant: QuantMode::Int4 },
+            );
+            let projected = q.kv_bytes_projected(total);
+            drive(&mut q, prefill, appends, 9);
+            projected >= q.kv_bytes()
+        },
+    );
+}
+
 #[test]
 fn prop_quantized_store_tracks_token_count() {
     forall(
