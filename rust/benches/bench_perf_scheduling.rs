@@ -1,0 +1,274 @@
+//! §Perf — the preemptive tiered scheduler: fifo vs size-aware vs
+//! preemptive under a mixed workload.
+//!
+//! Workload per cell (depth × policy × scheduler): `depth/2` long
+//! requests (long prompt **and** long generation) are submitted first
+//! and allowed to go hot; `depth` short requests then arrive mid-flight.
+//! The KV budget hosts roughly one long sequence plus one short, so the
+//! control plane decides everything:
+//!
+//! * `fifo` — shorts queue behind every not-yet-admitted long (head-of-
+//!   line blocking): short TTFT ≈ the whole long backlog.
+//! * `size-aware` — shorts jump the queue, but can't displace the long
+//!   already occupying the budget: they trickle through the leftover
+//!   headroom.
+//! * `preemptive` — the hot long is swapped out to the cold tier
+//!   (compressed snapshot), the shorts run as a batch, the long resumes
+//!   bit-identically: short TTFT collapses toward a single round.
+//!
+//! Reported per cell: p50/p95 TTFT split short/long, aggregate
+//! throughput, preemption/restore counts. Acceptance: short-request p50
+//! TTFT improves vs `fifo` under every mixed cell, and `fifo` itself is
+//! the unchanged PR 3 baseline (same admission behavior as
+//! `bench_perf_serving`'s serving table).
+//!
+//! Like the other perf benches the model comes from `ModelWeights::init`
+//! so it runs anywhere (CI included; no pretrained weights needed).
+//! Results land in `runs/BENCH_perf_scheduling.json`.
+//!
+//! Run: `cargo bench --bench bench_perf_scheduling [-- --fast]`
+
+use std::sync::Arc;
+
+use cskv::compress::{KvCompressionPlan, LayerFactors, LowRankFactors, ModelFactors};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend, SchedulerKind};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::Engine;
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::Mat;
+use cskv::util::bench::{git_rev, print_bench_header};
+use cskv::util::cli::Args;
+use cskv::util::json::Json;
+use cskv::util::prng::Pcg64;
+use cskv::util::stats::Samples;
+use cskv::util::table::Table;
+
+fn factors_for(cfg: &ModelConfig) -> Arc<ModelFactors> {
+    let plan = KvCompressionPlan::uniform(0.8);
+    let (rk, rv) = (plan.rank_k(cfg.d_model), plan.rank_v(cfg.d_model));
+    let mut rng = Pcg64::new(11);
+    let layers = (0..cfg.n_layers)
+        .map(|_| LayerFactors {
+            k: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rk, 0.2, &mut rng),
+                Mat::randn(rk, cfg.d_model, 0.2, &mut rng),
+            ),
+            v: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rv, 0.2, &mut rng),
+                Mat::randn(rv, cfg.d_model, 0.2, &mut rng),
+            ),
+        })
+        .collect();
+    Arc::new(ModelFactors {
+        layers,
+        provenance: "bench-scheduling".into(),
+    })
+}
+
+fn mk_policy(
+    use_cskv: bool,
+    cfg: &ModelConfig,
+    factors: &Arc<ModelFactors>,
+) -> Box<dyn KvCachePolicy> {
+    if use_cskv {
+        Box::new(CskvCache::new(
+            Arc::clone(factors),
+            cfg.d_model,
+            CskvConfig { window: 32, quant: QuantMode::None },
+        ))
+    } else {
+        Box::new(FullCache::new(cfg.n_layers, cfg.d_model))
+    }
+}
+
+struct Cell {
+    short_ttft: Samples,
+    long_ttft: Samples,
+    tok_s: f64,
+    preemptions: u64,
+    restores: u64,
+}
+
+/// One bench cell: workload shape + control-plane choice.
+#[derive(Clone, Copy)]
+struct CellSpec {
+    use_cskv: bool,
+    kind: SchedulerKind,
+    depth: usize,
+    ctx_long: usize,
+    n_new_long: usize,
+    n_new_short: usize,
+}
+
+fn run_cell(engine: &Engine, factors: &Arc<ModelFactors>, spec: CellSpec) -> anyhow::Result<Cell> {
+    let CellSpec { use_cskv, kind, depth, ctx_long, n_new_long, n_new_short } = spec;
+    let cfg = engine.w.cfg.clone();
+    let ctx_short = 16usize;
+    // Budget: one long sequence plus one short — admission beyond that is
+    // purely the scheduler's call.
+    let pricer = mk_policy(use_cskv, &cfg, factors);
+    let budget = pricer.kv_bytes_projected(ctx_long + n_new_long)
+        + pricer.kv_bytes_projected(ctx_short + n_new_short);
+    drop(pricer);
+
+    let engine2 = engine.clone();
+    let f2 = Arc::clone(factors);
+    let cfg2 = cfg.clone();
+    let setup: Setup = Box::new(move || {
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(RustSequenceBackend::new(
+                engine2.clone(),
+                mk_policy(use_cskv, &cfg2, &f2),
+            )))
+        });
+        Ok(factory)
+    });
+    let coord = Coordinator::start(
+        setup,
+        CoordinatorConfig {
+            max_batch: depth,
+            kv_budget_bytes: Some(budget),
+            scheduler: kind,
+            ..Default::default()
+        },
+    );
+
+    let mut rng = Pcg64::new(17);
+    let n_long = (depth / 2).max(1);
+    let n_short = depth;
+    // Phase 1: the long backlog goes in and gets hot.
+    let long_rxs: Vec<_> = (0..n_long)
+        .map(|_| {
+            let prompt: Vec<usize> = (0..ctx_long).map(|_| rng.range(16, 250)).collect();
+            coord.submit(prompt, n_new_long)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    while coord.metrics().kv_bytes_current() == 0 {
+        anyhow::ensure!(t0.elapsed().as_secs() < 60, "long backlog never started");
+        std::thread::yield_now();
+    }
+    // Phase 2: shorts arrive mid-flight.
+    let short_rxs: Vec<_> = (0..n_short)
+        .map(|_| {
+            let prompt: Vec<usize> = (0..ctx_short).map(|_| rng.range(16, 250)).collect();
+            coord.submit(prompt, n_new_short)
+        })
+        .collect();
+
+    let mut short_ttft = Samples::new();
+    for rx in short_rxs {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "short request failed: {:?}", r.error);
+        short_ttft.push(r.ttft_s);
+    }
+    let mut long_ttft = Samples::new();
+    for rx in long_rxs {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "long request failed: {:?}", r.error);
+        long_ttft.push(r.ttft_s);
+    }
+    let snap = coord.shutdown();
+    Ok(Cell {
+        short_ttft,
+        long_ttft,
+        tok_s: snap.throughput_tok_s(),
+        preemptions: snap.preemptions,
+        restores: snap.restores,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_perf_scheduling",
+        "§Perf: preemptive tiered scheduler — fifo vs size-aware vs preemptive TTFT/throughput",
+    );
+    let fast = args.get_flag("fast");
+    let cfg = ModelConfig::tiny();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 42)));
+    let factors = factors_for(&cfg);
+    let mut results = Json::obj();
+
+    let depths: &[usize] = if fast { &[4, 8] } else { &[4, 8, 16] };
+    let ctx_long = if fast { 64 } else { 192 };
+    let n_new_long = if fast { 24 } else { 48 };
+    let n_new_short = 8usize;
+
+    let mut t = Table::new(
+        "scheduling (mixed workload: longs hot first, shorts arrive mid-flight)",
+        &[
+            "depth",
+            "policy",
+            "scheduler",
+            "short ttft p50 (s)",
+            "short ttft p95 (s)",
+            "long ttft p50 (s)",
+            "tok/s",
+            "preempt/restore",
+        ],
+    );
+    for &depth in depths {
+        for (label, use_cskv) in [("full", false), ("cskv80", true)] {
+            let mut fifo_short_p50 = f64::NAN;
+            for kind in [
+                SchedulerKind::Fifo,
+                SchedulerKind::SizeAware,
+                SchedulerKind::Preemptive,
+            ] {
+                let cell = run_cell(
+                    &engine,
+                    &factors,
+                    CellSpec { use_cskv, kind, depth, ctx_long, n_new_long, n_new_short },
+                )?;
+                let sp50 = cell.short_ttft.percentile(50.0);
+                let sp95 = cell.short_ttft.percentile(95.0);
+                let lp50 = cell.long_ttft.percentile(50.0);
+                if kind == SchedulerKind::Fifo {
+                    fifo_short_p50 = sp50;
+                } else {
+                    println!(
+                        "short-TTFT p50 {label} q{depth}: {} {:.2}x vs fifo \
+                         (acceptance: improving, i.e. > 1.00x)",
+                        kind.name(),
+                        fifo_short_p50 / sp50
+                    );
+                }
+                t.row(&[
+                    depth.to_string(),
+                    label.to_string(),
+                    kind.name().to_string(),
+                    format!("{sp50:.4}"),
+                    format!("{sp95:.4}"),
+                    format!("{lp50:.4}"),
+                    format!("{:.1}", cell.tok_s),
+                    format!("{}/{}", cell.preemptions, cell.restores),
+                ]);
+                let key = |m: &str| format!("sched_{}_{label}_q{depth}_{m}", kind.name());
+                results.set(&key("short_ttft_p50_s"), Json::Num(sp50));
+                results.set(&key("short_ttft_p95_s"), Json::Num(sp95));
+                results.set(&key("long_ttft_p50_s"), Json::Num(lp50));
+                results.set(&key("tok_s"), Json::Num(cell.tok_s));
+                results.set(&key("preemptions"), Json::Num(cell.preemptions as f64));
+                results.set(&key("restores"), Json::Num(cell.restores as f64));
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("perf_scheduling.csv"))?;
+
+    let root = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_perf_scheduling".to_string())),
+        (
+            "git_rev",
+            Json::Str(git_rev().unwrap_or_else(|| "unknown".to_string())),
+        ),
+        ("results", results),
+    ]);
+    let json_path = cskv::runs_dir().join("BENCH_perf_scheduling.json");
+    std::fs::write(&json_path, root.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
+    Ok(())
+}

@@ -214,9 +214,8 @@ fn main() -> anyhow::Result<()> {
                     setup,
                     CoordinatorConfig {
                         max_batch: depth,
-                        kv_budget_bytes: None,
-                        threads: 0,
                         fused,
+                        ..Default::default()
                     },
                 );
                 let n_req = depth * 2;
@@ -255,6 +254,46 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     t.save_csv(&cskv::runs_dir().join("perf_serving.csv"))?;
+
+    // ---- 3b. decode-side threading A/B: batched GEMV column split ------
+    // The ROADMAP decode-threading item: at large B × d_ff the fused
+    // round's down-projection pays for a column split across the pool.
+    {
+        use cskv::tensor::matmul::{matvec_t_batch_into, par_matvec_t_batch_into};
+        let (d_in, d_out, bsz) = (cfg.d_model, cfg.d_ff.max(4 * cfg.d_model), 16usize);
+        let mut rng = Pcg64::new(23);
+        let a = Mat::randn(d_in, d_out, 0.2, &mut rng);
+        let xs = Mat::randn(bsz, d_in, 1.0, &mut rng);
+        let mut ys = Mat::zeros(bsz, d_out);
+        let r1 = b.time(&format!("batched GEMV serial B={bsz} {d_in}x{d_out}"), || {
+            matvec_t_batch_into(&a, &xs, &mut ys);
+        });
+        let serial_ns = r1.samples.percentile(50.0) * 1e9;
+        for threads in [2usize, 4] {
+            let mut yt = Mat::zeros(bsz, d_out);
+            let rt = b.time(
+                &format!("batched GEMV col-split w={threads} B={bsz} {d_in}x{d_out}"),
+                || {
+                    par_matvec_t_batch_into(&a, &xs, &mut yt, threads);
+                },
+            );
+            assert_eq!(yt.data, ys.data, "column split must be bit-identical");
+            let par_ns = rt.samples.percentile(50.0) * 1e9;
+            println!(
+                "decode GEMV col-split w={threads}: {:.2}x vs serial",
+                serial_ns / par_ns
+            );
+            results.set(
+                &format!("batch_gemv_par_w{threads}_ns"),
+                Json::Num(par_ns),
+            );
+            results.set(
+                &format!("batch_gemv_speedup_w{threads}"),
+                Json::Num(serial_ns / par_ns),
+            );
+        }
+        results.set("batch_gemv_serial_ns", Json::Num(serial_ns));
+    }
 
     // ---- 4. pool reuse A/B ---------------------------------------------
     {

@@ -11,7 +11,8 @@ use std::sync::Arc;
 use crate::compress::ModelFactors;
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
+use crate::kvcache::snapshot::{self, tags, SnapReader, SnapWriter};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy, KvSnapshot};
 
 pub struct AsvdCache {
     factors: Arc<ModelFactors>,
@@ -128,6 +129,46 @@ impl KvCachePolicy for AsvdCache {
             .iter()
             .map(|l| 4 * tokens * (l.ck.cols + l.cv.cols))
             .sum()
+    }
+
+    fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.layers.len());
+        for l in &self.layers {
+            snapshot::write_growmat(&mut w, &l.ck);
+            snapshot::write_growmat(&mut w, &l.cv);
+            w.write_usize(l.n);
+        }
+        KvSnapshot::new(tags::ASVD, w.finish())
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::ASVD, "asvd cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let n_layers = r.read_usize()?;
+        anyhow::ensure!(
+            n_layers == self.layers.len(),
+            "asvd cache: snapshot has {n_layers} layers, target {}",
+            self.layers.len()
+        );
+        for l in &mut self.layers {
+            let ck = snapshot::read_growmat(&mut r)?;
+            let cv = snapshot::read_growmat(&mut r)?;
+            let n = r.read_usize()?;
+            anyhow::ensure!(
+                ck.cols == l.ck.cols
+                    && cv.cols == l.cv.cols
+                    && ck.rows() == n
+                    && cv.rows() == n,
+                "asvd cache: inconsistent layer snapshot (n={n}, rows={})",
+                ck.rows()
+            );
+            l.ck = ck;
+            l.cv = cv;
+            l.n = n;
+        }
+        r.expect_end()?;
+        Ok(())
     }
 }
 

@@ -11,7 +11,8 @@
 
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
+use crate::kvcache::snapshot::{self, tags, SnapReader, SnapWriter};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy, KvSnapshot};
 
 pub struct H2oCache {
     budget: usize,
@@ -211,6 +212,83 @@ impl KvCachePolicy for H2oCache {
             .iter()
             .map(|l| 4 * kept * (l.k.cols + l.v.cols) + 4 * kept)
             .sum()
+    }
+
+    fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.budget);
+        w.write_usize(self.recent);
+        w.write_usize(self.layers.len());
+        for l in &self.layers {
+            snapshot::write_growmat(&mut w, &l.k);
+            snapshot::write_growmat(&mut w, &l.v);
+            w.usizes(&l.abs_pos);
+            w.f32s(&l.score);
+            w.write_usize(l.n);
+            w.write_usize(l.evictions);
+            // Eviction log: lets a restored policy keep serving stale
+            // views exactly as the original would have.
+            w.write_usize(l.evict_log.len());
+            for &(ordinal, idx) in &l.evict_log {
+                w.write_usize(ordinal);
+                w.write_usize(idx);
+            }
+        }
+        KvSnapshot::new(tags::H2O, w.finish())
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::H2O, "h2o cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let budget = r.read_usize()?;
+        let recent = r.read_usize()?;
+        anyhow::ensure!(
+            budget == self.budget && recent == self.recent,
+            "h2o cache: snapshot budget {budget}/{recent} != target {}/{}",
+            self.budget,
+            self.recent
+        );
+        let n_layers = r.read_usize()?;
+        anyhow::ensure!(
+            n_layers == self.layers.len(),
+            "h2o cache: snapshot has {n_layers} layers, target {}",
+            self.layers.len()
+        );
+        for l in &mut self.layers {
+            let k = snapshot::read_growmat(&mut r)?;
+            let v = snapshot::read_growmat(&mut r)?;
+            let abs_pos = r.usizes()?;
+            let score = r.f32s()?;
+            let n = r.read_usize()?;
+            let evictions = r.read_usize()?;
+            let log_len = r.read_usize()?;
+            anyhow::ensure!(log_len <= EVICT_LOG_CAP, "h2o cache: log {log_len} over cap");
+            let mut evict_log = std::collections::VecDeque::with_capacity(log_len);
+            for _ in 0..log_len {
+                let ordinal = r.read_usize()?;
+                let idx = r.read_usize()?;
+                evict_log.push_back((ordinal, idx));
+            }
+            anyhow::ensure!(
+                k.cols == l.k.cols
+                    && v.cols == l.v.cols
+                    && k.rows() == abs_pos.len()
+                    && v.rows() == abs_pos.len()
+                    && score.len() == abs_pos.len()
+                    && abs_pos.len() <= n,
+                "h2o cache: inconsistent layer snapshot (kept={}, n={n})",
+                abs_pos.len()
+            );
+            l.k = k;
+            l.v = v;
+            l.abs_pos = abs_pos;
+            l.score = score;
+            l.n = n;
+            l.evictions = evictions;
+            l.evict_log = evict_log;
+        }
+        r.expect_end()?;
+        Ok(())
     }
 }
 

@@ -11,7 +11,8 @@
 
 use crate::tensor::Mat;
 
-use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy};
+use crate::kvcache::snapshot::{self, tags, SnapReader, SnapWriter};
+use crate::kvcache::{CacheView, DecodeView, GrowMat, KvCachePolicy, KvSnapshot};
 
 pub struct StreamingLlmCache {
     n_sink: usize,
@@ -157,6 +158,64 @@ impl KvCachePolicy for StreamingLlmCache {
             .iter()
             .map(|l| 4 * kept * (l.k.cols + l.v.cols))
             .sum()
+    }
+
+    fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.n_sink);
+        w.write_usize(self.budget);
+        w.write_usize(self.layers.len());
+        for l in &self.layers {
+            snapshot::write_growmat(&mut w, &l.k);
+            snapshot::write_growmat(&mut w, &l.v);
+            w.usizes(&l.abs_pos);
+            w.write_usize(l.n);
+            w.write_usize(l.evictions);
+        }
+        KvSnapshot::new(tags::STREAMING, w.finish())
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::STREAMING, "streamingllm cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let n_sink = r.read_usize()?;
+        let budget = r.read_usize()?;
+        anyhow::ensure!(
+            n_sink == self.n_sink && budget == self.budget,
+            "streamingllm cache: snapshot sink/budget {n_sink}/{budget} != target {}/{}",
+            self.n_sink,
+            self.budget
+        );
+        let n_layers = r.read_usize()?;
+        anyhow::ensure!(
+            n_layers == self.layers.len(),
+            "streamingllm cache: snapshot has {n_layers} layers, target {}",
+            self.layers.len()
+        );
+        for l in &mut self.layers {
+            let k = snapshot::read_growmat(&mut r)?;
+            let v = snapshot::read_growmat(&mut r)?;
+            let abs_pos = r.usizes()?;
+            let n = r.read_usize()?;
+            let evictions = r.read_usize()?;
+            anyhow::ensure!(
+                k.cols == l.k.cols
+                    && v.cols == l.v.cols
+                    && k.rows() == abs_pos.len()
+                    && v.rows() == abs_pos.len()
+                    && abs_pos.len() <= n
+                    && abs_pos.len() <= self.budget,
+                "streamingllm cache: inconsistent layer snapshot (kept={}, n={n})",
+                abs_pos.len()
+            );
+            l.k = k;
+            l.v = v;
+            l.abs_pos = abs_pos;
+            l.n = n;
+            l.evictions = evictions;
+        }
+        r.expect_end()?;
+        Ok(())
     }
 }
 

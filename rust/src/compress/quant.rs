@@ -92,6 +92,57 @@ pub fn quantize_block(m: &Mat, axis: QuantAxis) -> QuantizedBlock {
 }
 
 impl QuantizedBlock {
+    /// Packed int4 codes (two per byte, row-major) — snapshot serialization.
+    pub fn packed(&self) -> &[u8] {
+        &self.packed
+    }
+
+    /// Affine scales (one per channel or token, by [`QuantizedBlock::axis`]).
+    pub fn scale(&self) -> &[f32] {
+        &self.scale
+    }
+
+    /// Affine zero points.
+    pub fn zero(&self) -> &[f32] {
+        &self.zero
+    }
+
+    /// Reassemble a block from its serialized parts (snapshot restore).
+    /// Validates every length so corrupt cold-tier data errors instead
+    /// of panicking later; the codes and params are taken verbatim, so a
+    /// round-trip through [`QuantizedBlock::packed`] etc. dequantizes
+    /// bit-identically.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        axis: QuantAxis,
+        packed: Vec<u8>,
+        scale: Vec<f32>,
+        zero: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        let np = params_len(rows, cols, axis);
+        anyhow::ensure!(
+            packed.len() == (rows * cols).div_ceil(2),
+            "quant block: packed {} != {} for {rows}x{cols}",
+            packed.len(),
+            (rows * cols).div_ceil(2)
+        );
+        anyhow::ensure!(
+            scale.len() == np && zero.len() == np,
+            "quant block: params {}/{} != {np}",
+            scale.len(),
+            zero.len()
+        );
+        Ok(QuantizedBlock {
+            rows,
+            cols,
+            axis,
+            packed,
+            scale,
+            zero,
+        })
+    }
+
     /// Dequantize back to f32.
     pub fn dequantize(&self) -> Mat {
         self.dequantize_rows(0, self.rows)

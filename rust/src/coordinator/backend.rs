@@ -19,7 +19,8 @@
 
 use std::sync::Arc;
 
-use crate::kvcache::KvCachePolicy;
+use crate::kvcache::snapshot::{tags, SnapReader, SnapWriter};
+use crate::kvcache::{KvCachePolicy, KvSnapshot};
 use crate::model::engine::{
     BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine,
 };
@@ -42,6 +43,17 @@ pub trait SequenceBackend {
     /// total tokens — the scheduler's admission pre-charge, evaluated
     /// *before* prefill commits the memory.
     fn kv_bytes_projected(&self, tokens: usize) -> usize;
+
+    /// Serialize this sequence's complete execution state (cache in its
+    /// policy's own — usually compressed — representation, plus decode
+    /// bookkeeping) for the preemptive scheduler's cold tier.
+    fn snapshot(&self) -> anyhow::Result<KvSnapshot>;
+
+    /// Replace this (freshly constructed) backend's state with `snap`'s.
+    /// Decoding then continues **bit-identically** to the unpreempted
+    /// run: derived state like the engine's `DecodeView`s is rebuilt
+    /// lazily through the normal sync paths.
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()>;
 
     /// Downcast hook for fused rounds: backends able to share the Rust
     /// engine's batched data plane return themselves. Default: `None`
@@ -126,6 +138,33 @@ impl SequenceBackend for RustSequenceBackend {
 
     fn kv_bytes_projected(&self, tokens: usize) -> usize {
         self.policy.kv_bytes_projected(tokens)
+    }
+
+    fn snapshot(&self) -> anyhow::Result<KvSnapshot> {
+        // Decode bookkeeping + the policy's own snapshot, nested verbatim.
+        let mut w = SnapWriter::new();
+        w.write_usize(self.pos);
+        w.write_usize(self.last_token);
+        w.nested(&self.policy.snapshot());
+        Ok(KvSnapshot::new(tags::RUST_BACKEND, w.finish()))
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::RUST_BACKEND, "rust backend")?;
+        let mut r = SnapReader::new(snap.payload());
+        let pos = r.read_usize()?;
+        let last_token = r.read_usize()?;
+        let nested = r.nested()?;
+        r.expect_end()?;
+        self.policy.restore(&nested)?;
+        // Fresh views: the next decode step rebuilds them from the
+        // restored policy through `sync_view`'s full-rebuild path —
+        // bit-identical to the views an unpreempted run would hold.
+        self.state = DecodeState::new(&self.engine.w.cfg);
+        self.pos = pos;
+        self.last_token = last_token;
+        self.reserved_tokens = 0;
+        Ok(())
     }
 
     fn as_rust_backend(&mut self) -> Option<&mut RustSequenceBackend> {
@@ -285,6 +324,47 @@ mod tests {
         assert!(be.name().contains("full"));
         // Projection is exact for the full cache: 4 prompt + 4 decoded.
         assert_eq!(be.kv_bytes_projected(8), be.kv_bytes());
+    }
+
+    /// Preemption round-trip at the backend level: snapshot mid-decode,
+    /// restore into a fresh backend, and the continued token stream is
+    /// bit-identical to the uninterrupted one.
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 5)));
+        let prompt: Vec<usize> = (0..20).map(|i| (i * 11 + 3) % 256).collect();
+        let mk = || {
+            RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+            )
+        };
+        // Uninterrupted oracle.
+        let mut oracle = mk();
+        let mut want = vec![oracle.prefill(&prompt).unwrap()];
+        for _ in 1..9 {
+            want.push(oracle.decode_next().unwrap());
+        }
+        // Preempted run: snapshot after 4 tokens, restore into a fresh
+        // backend, finish there.
+        let mut first = mk();
+        let mut got = vec![first.prefill(&prompt).unwrap()];
+        for _ in 1..4 {
+            got.push(first.decode_next().unwrap());
+        }
+        let snap = first.snapshot().unwrap();
+        drop(first); // the hot state is gone — only the snapshot survives
+        let mut resumed = mk();
+        resumed.restore(&snap).unwrap();
+        for _ in 4..9 {
+            got.push(resumed.decode_next().unwrap());
+        }
+        assert_eq!(got, want, "restored stream must match the unpreempted run");
+        assert_eq!(resumed.kv_bytes(), oracle.kv_bytes());
+        // Wrong snapshot kind is rejected.
+        let bogus = KvSnapshot::new(tags::PJRT_FULL, vec![]);
+        assert!(mk().restore(&bogus).is_err());
     }
 
     /// Fused rounds through the backend layer must reproduce the

@@ -1,0 +1,181 @@
+//! Cold tier for preempted sequences: a blob store holding encoded
+//! [`KvSnapshot`]s, in memory by default, spilled to a directory when
+//! `--cold-tier <dir>` is configured (the tiered-storage shape of
+//! disk-backed KV offload engines: hot KV in RAM, evicted state as
+//! self-describing blobs on disk).
+//!
+//! The tier stores the snapshot's **encoded** byte form — for CSKV
+//! sequences that is the compressed representation (low-rank features +
+//! int4 groups), so a preempted compressed sequence costs roughly 20% of
+//! its hot footprint while parked. `take` removes the blob (and any
+//! spill file); a worker that dies mid-serve leaves at most already-
+//! consumed files behind, and `Drop` sweeps whatever is left.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::kvcache::KvSnapshot;
+
+enum Blob {
+    Mem(Vec<u8>),
+    Disk { path: PathBuf, bytes: usize },
+}
+
+impl Blob {
+    fn bytes(&self) -> usize {
+        match self {
+            Blob::Mem(b) => b.len(),
+            Blob::Disk { bytes, .. } => *bytes,
+        }
+    }
+}
+
+/// Blob store for swapped-out sequence state, keyed by request id.
+/// (The high-water mark lives in [`crate::coordinator::Metrics`], fed by
+/// [`ColdTier::bytes_resident`] — one owner for the peak.)
+pub struct ColdTier {
+    dir: Option<PathBuf>,
+    blobs: HashMap<u64, Blob>,
+    bytes_current: usize,
+}
+
+impl ColdTier {
+    /// `dir = None` keeps snapshots in memory; `Some(dir)` spills each
+    /// blob to `<dir>/seq-<id>.kvsnap`. An unusable directory degrades
+    /// to the in-memory store with a logged error rather than disabling
+    /// preemption.
+    pub fn new(dir: Option<PathBuf>) -> Self {
+        let dir = dir.and_then(|d| match std::fs::create_dir_all(&d) {
+            Ok(()) => Some(d),
+            Err(e) => {
+                crate::log_error!("cold tier dir {} unusable ({e}); using memory", d.display());
+                None
+            }
+        });
+        ColdTier {
+            dir,
+            blobs: HashMap::new(),
+            bytes_current: 0,
+        }
+    }
+
+    fn spill_path(&self, id: u64) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("seq-{id}.kvsnap")))
+    }
+
+    /// Park `snap` under `id`. Returns the parked byte size.
+    pub fn put(&mut self, id: u64, snap: &KvSnapshot) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            !self.blobs.contains_key(&id),
+            "cold tier already holds sequence {id}"
+        );
+        let encoded = snap.encode();
+        let bytes = encoded.len();
+        let blob = match self.spill_path(id) {
+            Some(path) => {
+                std::fs::write(&path, &encoded)
+                    .map_err(|e| anyhow::anyhow!("cold tier spill to {}: {e}", path.display()))?;
+                Blob::Disk { path, bytes }
+            }
+            None => Blob::Mem(encoded),
+        };
+        self.blobs.insert(id, blob);
+        self.bytes_current += bytes;
+        Ok(bytes)
+    }
+
+    /// Remove and decode the snapshot parked under `id`.
+    pub fn take(&mut self, id: u64) -> anyhow::Result<KvSnapshot> {
+        let blob = self
+            .blobs
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("cold tier has no sequence {id}"))?;
+        self.bytes_current -= blob.bytes();
+        let encoded = match blob {
+            Blob::Mem(b) => b,
+            Blob::Disk { path, .. } => {
+                let data = std::fs::read(&path);
+                // The entry is already gone from the index, so the spill
+                // file is deleted on *every* outcome — a failed read must
+                // not leak an orphan .kvsnap the Drop sweep can't see.
+                let _ = std::fs::remove_file(&path);
+                data.map_err(|e| anyhow::anyhow!("cold tier read {}: {e}", path.display()))?
+            }
+        };
+        KvSnapshot::decode(&encoded)
+    }
+
+    /// Number of parked sequences.
+    pub fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blobs.is_empty()
+    }
+
+    /// Bytes currently parked (memory + disk).
+    pub fn bytes_resident(&self) -> usize {
+        self.bytes_current
+    }
+}
+
+impl Drop for ColdTier {
+    fn drop(&mut self) {
+        // Best-effort sweep of any spill files never taken back.
+        for blob in self.blobs.values() {
+            if let Blob::Disk { path, .. } = blob {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::snapshot::tags;
+
+    fn snap(fill: u8, n: usize) -> KvSnapshot {
+        KvSnapshot::new(tags::FULL, vec![fill; n])
+    }
+
+    #[test]
+    fn memory_put_take_roundtrip_and_accounting() {
+        let mut tier = ColdTier::new(None);
+        assert!(tier.is_empty());
+        let b1 = tier.put(1, &snap(7, 100)).unwrap();
+        let b2 = tier.put(2, &snap(9, 40)).unwrap();
+        assert_eq!(tier.len(), 2);
+        assert_eq!(tier.bytes_resident(), b1 + b2);
+        // Double-park is a bug, not an overwrite.
+        assert!(tier.put(1, &snap(0, 1)).is_err());
+        let s = tier.take(1).unwrap();
+        assert_eq!(s.payload(), [7u8; 100]);
+        assert_eq!(tier.bytes_resident(), b2);
+        assert!(tier.take(1).is_err(), "take removes");
+        tier.take(2).unwrap();
+        assert!(tier.is_empty());
+    }
+
+    #[test]
+    fn disk_spill_roundtrip_and_cleanup() {
+        let dir = std::env::temp_dir().join(format!("cskv-coldtier-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut tier = ColdTier::new(Some(dir.clone()));
+            tier.put(5, &snap(3, 64)).unwrap();
+            let file = dir.join("seq-5.kvsnap");
+            assert!(file.exists(), "blob spilled to disk");
+            let s = tier.take(5).unwrap();
+            assert_eq!(s.tag(), tags::FULL);
+            assert_eq!(s.payload(), [3u8; 64]);
+            assert!(!file.exists(), "take deletes the spill file");
+            // A blob left parked is swept on drop.
+            tier.put(6, &snap(1, 8)).unwrap();
+            assert!(dir.join("seq-6.kvsnap").exists());
+        }
+        assert!(!dir.join("seq-6.kvsnap").exists(), "drop sweeps leftovers");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,4 +1,5 @@
-//! Serving metrics: counters, latency distributions, KV footprint.
+//! Serving metrics: counters, latency distributions, KV footprint, and
+//! the scheduler's preemption/cold-tier accounting.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -12,10 +13,23 @@ struct Inner {
     tokens_generated: u64,
     queue_wait_s: Samples,
     ttft_s: Samples,
+    /// TTFT split by outcome: sequences that ran hot end-to-end vs
+    /// sequences that were swapped to the cold tier at least once.
+    ttft_clean_s: Samples,
+    ttft_preempted_s: Samples,
     tok_latency_s: Samples,
     kv_bytes_peak: usize,
     kv_bytes_current: usize,
     active_peak: usize,
+    /// Swap-outs to the cold tier / restores back into the hot tier.
+    preemptions: u64,
+    restores: u64,
+    cold_bytes_current: usize,
+    cold_bytes_peak: usize,
+    /// Request ids in retirement order — the fairness oracle
+    /// (`rust/tests/batched_serving.rs` asserts head-of-line behavior
+    /// directly on this).
+    completion_order: Vec<u64>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -26,19 +40,43 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// One successful retirement, as recorded by the worker.
+pub struct Completion<'a> {
+    pub id: u64,
+    pub queue_wait_s: f64,
+    pub ttft_s: f64,
+    pub tokens: usize,
+    pub tok_latency_s: &'a [f64],
+    /// Times this sequence was swapped out before finishing.
+    pub preemptions: usize,
+}
+
 /// A point-in-time copy for reporting.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub requests_completed: u64,
-    /// Requests answered with an error `Response` (backend construction
-    /// or prefill failure) instead of tokens.
+    /// Requests answered with an error `Response` (backend construction,
+    /// prefill, or cold-tier restore failure) instead of tokens.
     pub requests_failed: u64,
     pub tokens_generated: u64,
     pub queue_wait_s: Samples,
     pub ttft_s: Samples,
+    /// TTFT of sequences never swapped out.
+    pub ttft_clean_s: Samples,
+    /// TTFT of sequences preempted at least once (TTFT itself is set at
+    /// first prefill; this isolates whether preemption-prone sequences
+    /// also queued longer).
+    pub ttft_preempted_s: Samples,
     pub tok_latency_s: Samples,
     pub kv_bytes_peak: usize,
     pub active_peak: usize,
+    /// Cold-tier traffic: swap-outs and bit-identical restores.
+    pub preemptions: u64,
+    pub restores: u64,
+    /// High-water mark of snapshot bytes parked in the cold tier.
+    pub cold_bytes_peak: usize,
+    /// Request ids in retirement order.
+    pub completion_order: Vec<u64>,
     pub wall_s: f64,
 }
 
@@ -53,15 +91,19 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} failed={} tokens={} throughput={:.1} tok/s | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {}",
+            "requests={} failed={} tokens={} throughput={:.1} tok/s | queue-wait {} | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {} | preempt/restore {}/{} (cold-peak {})",
             self.requests_completed,
             self.requests_failed,
             self.tokens_generated,
             self.throughput_tok_s(),
+            self.queue_wait_s.summary("s"),
             self.ttft_s.summary("s"),
             self.tok_latency_s.summary("s"),
             crate::util::table::bytes(self.kv_bytes_peak),
             self.active_peak,
+            self.preemptions,
+            self.restores,
+            crate::util::table::bytes(self.cold_bytes_peak),
         )
     }
 }
@@ -78,15 +120,21 @@ impl Metrics {
         }
     }
 
-    pub fn record_completion(&self, queue_wait_s: f64, ttft_s: f64, tokens: usize, tok_latency_s: &[f64]) {
+    pub fn record_completion(&self, c: Completion<'_>) {
         let mut g = self.inner.lock().unwrap();
         g.requests_completed += 1;
-        g.tokens_generated += tokens as u64;
-        g.queue_wait_s.push(queue_wait_s);
-        g.ttft_s.push(ttft_s);
-        for &t in tok_latency_s {
+        g.tokens_generated += c.tokens as u64;
+        g.queue_wait_s.push(c.queue_wait_s);
+        g.ttft_s.push(c.ttft_s);
+        if c.preemptions > 0 {
+            g.ttft_preempted_s.push(c.ttft_s);
+        } else {
+            g.ttft_clean_s.push(c.ttft_s);
+        }
+        for &t in c.tok_latency_s {
             g.tok_latency_s.push(t);
         }
+        g.completion_order.push(c.id);
         g.finished = Some(Instant::now());
     }
 
@@ -102,6 +150,22 @@ impl Metrics {
         g.kv_bytes_current = current_bytes;
         g.kv_bytes_peak = g.kv_bytes_peak.max(current_bytes);
         g.active_peak = g.active_peak.max(active);
+    }
+
+    /// A sequence was swapped out; `cold_bytes_now` is the tier's new
+    /// resident size.
+    pub fn record_preemption(&self, cold_bytes_now: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.preemptions += 1;
+        g.cold_bytes_current = cold_bytes_now;
+        g.cold_bytes_peak = g.cold_bytes_peak.max(cold_bytes_now);
+    }
+
+    /// A swapped sequence was restored into the hot tier.
+    pub fn record_restore(&self, cold_bytes_now: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.restores += 1;
+        g.cold_bytes_current = cold_bytes_now;
     }
 
     pub fn kv_bytes_current(&self) -> usize {
@@ -121,9 +185,15 @@ impl Metrics {
             tokens_generated: g.tokens_generated,
             queue_wait_s: g.queue_wait_s.clone(),
             ttft_s: g.ttft_s.clone(),
+            ttft_clean_s: g.ttft_clean_s.clone(),
+            ttft_preempted_s: g.ttft_preempted_s.clone(),
             tok_latency_s: g.tok_latency_s.clone(),
             kv_bytes_peak: g.kv_bytes_peak,
             active_peak: g.active_peak,
+            preemptions: g.preemptions,
+            restores: g.restores,
+            cold_bytes_peak: g.cold_bytes_peak,
+            completion_order: g.completion_order.clone(),
             wall_s,
         }
     }
@@ -133,24 +203,53 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn complete(m: &Metrics, id: u64, ttft: f64, preemptions: usize) {
+        m.record_completion(Completion {
+            id,
+            queue_wait_s: 0.01,
+            ttft_s: ttft,
+            tokens: 3,
+            tok_latency_s: &[0.01, 0.02],
+            preemptions,
+        });
+    }
+
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
         m.mark_start();
         m.record_kv(1000, 2);
         m.record_kv(500, 1);
-        m.record_completion(0.01, 0.05, 3, &[0.01, 0.02]);
-        m.record_completion(0.02, 0.06, 2, &[0.015]);
+        complete(&m, 7, 0.05, 0);
+        complete(&m, 9, 0.06, 2);
         m.record_failure();
         let s = m.snapshot();
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.requests_failed, 1);
         assert!(s.report().contains("failed=1"));
-        assert_eq!(s.tokens_generated, 5);
+        assert_eq!(s.tokens_generated, 6);
         assert_eq!(s.kv_bytes_peak, 1000);
         assert_eq!(s.active_peak, 2);
-        assert_eq!(s.tok_latency_s.len(), 3);
+        assert_eq!(s.tok_latency_s.len(), 4);
         assert!(s.throughput_tok_s() >= 0.0);
         assert!(s.report().contains("requests=2"));
+        // Per-outcome TTFT split + completion order.
+        assert_eq!(s.ttft_clean_s.len(), 1);
+        assert_eq!(s.ttft_preempted_s.len(), 1);
+        assert_eq!(s.completion_order, vec![7, 9]);
+    }
+
+    #[test]
+    fn cold_tier_counters_track_peak() {
+        let m = Metrics::new();
+        m.record_preemption(4096);
+        m.record_preemption(10240);
+        m.record_restore(6144);
+        m.record_restore(0);
+        let s = m.snapshot();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.restores, 2);
+        assert_eq!(s.cold_bytes_peak, 10240);
+        assert!(s.report().contains("preempt/restore 2/2"));
     }
 }

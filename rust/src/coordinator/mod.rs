@@ -1,34 +1,57 @@
-//! L3 serving coordinator — vLLM-router-shaped.
+//! L3 serving coordinator — vLLM-router-shaped, with a preemptive
+//! tiered control plane.
 //!
-//! The coordinator owns the event loop: requests enter a queue, a
-//! continuous batcher admits them into the active set under a **KV-memory
-//! budget** (this is where CSKV pays off operationally: the compressed
-//! cache admits ~5× more concurrent sequences at 80% compression — and
-//! admission pre-charges each prompt's projected footprint so the budget
-//! holds *before* prefill commits it), whole admission rounds prefill in
-//! one fused multi-sequence pass, decode proceeds as one GEMM-batched
-//! round across active sequences with new admissions between rounds, and
-//! metrics record queue wait, TTFT, per-token latency, failures and KV
-//! footprint. Fused rounds stream each weight set once per round instead
-//! of once per sequence; token streams are bit-identical to the
-//! per-sequence scheduler (`rust/tests/batched_serving.rs`).
+//! Two planes:
+//!
+//! * **Data plane** — whole admission rounds prefill in one fused
+//!   multi-sequence pass and decode proceeds as one GEMM-batched round
+//!   across active sequences ([`backend::prefill_batch`] /
+//!   [`backend::decode_batch`]); weights stream once per round instead
+//!   of once per sequence, and token streams are bit-identical to the
+//!   per-sequence scheduler (`rust/tests/batched_serving.rs`).
+//! * **Control plane** — a pluggable [`scheduler::Scheduler`] decides
+//!   which sequences occupy the hot tier under the **KV-memory budget**
+//!   (admission pre-charges each prompt's projected completion
+//!   footprint, so the budget holds *before* prefill commits it —
+//!   compressed CSKV caches admit ~5× more concurrent sequences at 80%
+//!   compression). `fifo` keeps strict arrival order (the A/B
+//!   baseline), `size-aware` admits shortest-remaining-work-first
+//!   within the budget (no head-of-line blocking), and `preemptive`
+//!   additionally swaps the lowest-priority active sequence out to a
+//!   cold tier under pressure.
+//!
+//! Preemption is built on sequence state migration:
+//! [`crate::kvcache::KvCachePolicy::snapshot`] serializes the cache in
+//! its **compressed** representation (≈ 20% of the hot footprint for
+//! CSKV), the [`coldtier::ColdTier`] parks it in memory or spills it to
+//! disk, and restore resumes the generation **bit-identically** — the
+//! engine rebuilds its decode views through the existing `sync_view`
+//! path. [`Metrics`] records queue waits, preemption/restore counts,
+//! cold-tier bytes, per-outcome TTFT and retirement order;
+//! `bench_perf_scheduling` measures the fleet-level effect.
 //!
 //! * [`backend`] — per-sequence execution backends: the Rust reference
 //!   engine (any [`crate::kvcache::KvCachePolicy`]) and helpers, plus
-//!   the fused round entry points ([`backend::prefill_batch`] /
-//!   [`backend::decode_batch`]).
+//!   the fused round entry points and sequence snapshot/restore.
 //! * [`pjrt_backend`] — the AOT serving path: sessions that execute
-//!   `decode_full` / `decode_cskv_r*` artifacts via PJRT.
-//! * [`server`] — the coordinator thread, admission control, scheduling.
+//!   `decode_full` / `decode_cskv_r*` artifacts via PJRT, including
+//!   their serialized snapshot forms.
+//! * [`scheduler`] — the control-plane trait and the three policies.
+//! * [`coldtier`] — the blob store for preempted sequence state.
+//! * [`server`] — the coordinator thread and the scheduling rounds.
 //! * [`request`] / [`metrics`] — request/response types and counters.
 
 pub mod backend;
+pub mod coldtier;
 pub mod metrics;
 pub mod pjrt_backend;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use backend::{RustSequenceBackend, SequenceBackend};
+pub use coldtier::ColdTier;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{Request, Response};
+pub use scheduler::{Scheduler, SchedulerKind};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -18,6 +18,8 @@ use std::sync::Arc;
 
 use crate::compress::ModelFactors;
 use crate::data::vocab;
+use crate::kvcache::snapshot::{tags, SnapReader, SnapWriter};
+use crate::kvcache::KvSnapshot;
 use crate::model::ModelWeights;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::ops;
@@ -170,6 +172,56 @@ impl SequenceBackend for PjrtFullSession {
 
     fn kv_bytes_projected(&self, tokens: usize) -> usize {
         self.ctx.cfg().kv_bytes_full(tokens)
+    }
+
+    fn snapshot(&self) -> anyhow::Result<KvSnapshot> {
+        // Only the valid rows travel: the preallocated [L, max_seq, d]
+        // buffers shrink to [L, pos, d] in the serialized form.
+        let cfg = self.ctx.cfg();
+        let (l, d, t) = (cfg.n_layers, cfg.d_model, cfg.max_seq);
+        let mut w = SnapWriter::new();
+        w.write_usize(l);
+        w.write_usize(d);
+        w.write_usize(self.pos);
+        w.write_usize(self.last_token);
+        for li in 0..l {
+            let off = li * t * d;
+            w.f32s(&self.k_buf[off..off + self.pos * d]);
+            w.f32s(&self.v_buf[off..off + self.pos * d]);
+        }
+        Ok(KvSnapshot::new(tags::PJRT_FULL, w.finish()))
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::PJRT_FULL, "pjrt full session")?;
+        let cfg = self.ctx.cfg().clone();
+        let (l, d, t) = (cfg.n_layers, cfg.d_model, cfg.max_seq);
+        let mut r = SnapReader::new(snap.payload());
+        let (sl, sd) = (r.read_usize()?, r.read_usize()?);
+        let pos = r.read_usize()?;
+        let last_token = r.read_usize()?;
+        anyhow::ensure!(
+            sl == l && sd == d && pos <= t,
+            "pjrt full session: snapshot geometry {sl}x{sd} pos {pos} != target {l}x{d} (max_seq {t})"
+        );
+        self.k_buf.fill(0.0);
+        self.v_buf.fill(0.0);
+        for li in 0..l {
+            let k = r.f32s()?;
+            let v = r.f32s()?;
+            anyhow::ensure!(
+                k.len() == pos * d && v.len() == pos * d,
+                "pjrt full session: layer {li} rows {} != pos {pos}",
+                k.len() / d.max(1)
+            );
+            let off = li * t * d;
+            self.k_buf[off..off + pos * d].copy_from_slice(&k);
+            self.v_buf[off..off + pos * d].copy_from_slice(&v);
+        }
+        r.expect_end()?;
+        self.pos = pos;
+        self.last_token = last_token;
+        Ok(())
     }
 }
 
@@ -349,6 +401,88 @@ impl SequenceBackend for PjrtCskvSession {
         let l = cfg.n_layers;
         let win = tokens.min(self.window);
         l * tokens * 2 * self.rank * 4 + l * win * 2 * cfg.d_model * 4
+    }
+
+    fn snapshot(&self) -> anyhow::Result<KvSnapshot> {
+        // The compressed representation travels: [L, n, r] feature rows
+        // plus the ≤ window full-precision rows — the same ~20%-of-hot
+        // footprint the Rust CSKV policy snapshots.
+        let cfg = self.ctx.cfg();
+        let (l, d, t, wlen) = (cfg.n_layers, cfg.d_model, cfg.max_seq, self.window);
+        let mut w = SnapWriter::new();
+        w.write_usize(l);
+        w.write_usize(d);
+        w.write_usize(self.rank);
+        w.write_usize(wlen);
+        w.write_usize(self.n);
+        w.write_usize(self.win_len);
+        w.write_usize(self.last_token);
+        for li in 0..l {
+            let coff = li * t * self.rank;
+            w.f32s(&self.ck[coff..coff + self.n * self.rank]);
+            w.f32s(&self.cv[coff..coff + self.n * self.rank]);
+            let woff = li * wlen * d;
+            w.f32s(&self.win_k[woff..woff + self.win_len * d]);
+            w.f32s(&self.win_v[woff..woff + self.win_len * d]);
+            let poff = li * wlen;
+            let pos: Vec<usize> =
+                self.win_pos[poff..poff + self.win_len].iter().map(|&p| p as usize).collect();
+            w.usizes(&pos);
+        }
+        Ok(KvSnapshot::new(tags::PJRT_CSKV, w.finish()))
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::PJRT_CSKV, "pjrt cskv session")?;
+        let cfg = self.ctx.cfg().clone();
+        let (l, d, t, wlen) = (cfg.n_layers, cfg.d_model, cfg.max_seq, self.window);
+        let mut r = SnapReader::new(snap.payload());
+        let (sl, sd) = (r.read_usize()?, r.read_usize()?);
+        let (srank, swin) = (r.read_usize()?, r.read_usize()?);
+        let n = r.read_usize()?;
+        let win_len = r.read_usize()?;
+        let last_token = r.read_usize()?;
+        anyhow::ensure!(
+            sl == l && sd == d && srank == self.rank && swin == wlen && n <= t && win_len <= wlen,
+            "pjrt cskv session: snapshot geometry (L{sl}, d{sd}, r{srank}, w{swin}, n={n}) \
+             incompatible with target (L{l}, d{d}, r{}, w{wlen})",
+            self.rank
+        );
+        self.ck.fill(0.0);
+        self.cv.fill(0.0);
+        self.win_k.fill(0.0);
+        self.win_v.fill(0.0);
+        self.win_pos.fill(0);
+        for li in 0..l {
+            let ck = r.f32s()?;
+            let cv = r.f32s()?;
+            let wk = r.f32s()?;
+            let wv = r.f32s()?;
+            let pos = r.usizes()?;
+            anyhow::ensure!(
+                ck.len() == n * self.rank
+                    && cv.len() == n * self.rank
+                    && wk.len() == win_len * d
+                    && wv.len() == win_len * d
+                    && pos.len() == win_len,
+                "pjrt cskv session: layer {li} slice lengths inconsistent with header"
+            );
+            let coff = li * t * self.rank;
+            self.ck[coff..coff + n * self.rank].copy_from_slice(&ck);
+            self.cv[coff..coff + n * self.rank].copy_from_slice(&cv);
+            let woff = li * wlen * d;
+            self.win_k[woff..woff + win_len * d].copy_from_slice(&wk);
+            self.win_v[woff..woff + win_len * d].copy_from_slice(&wv);
+            let poff = li * wlen;
+            for (slot, &p) in pos.iter().enumerate() {
+                self.win_pos[poff + slot] = p as i32;
+            }
+        }
+        r.expect_end()?;
+        self.n = n;
+        self.win_len = win_len;
+        self.last_token = last_token;
+        Ok(())
     }
 }
 

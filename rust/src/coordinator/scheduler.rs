@@ -1,0 +1,283 @@
+//! Pluggable admission/preemption policies — the coordinator's control
+//! plane.
+//!
+//! The worker loop owns the mechanism (queues, budget accounting, the
+//! cold tier, fused prefill/decode rounds); a [`Scheduler`] owns the
+//! *decisions*: which queued request to admit next, and which active
+//! sequence to swap out when the KV budget blocks a candidate. Three
+//! policies ship:
+//!
+//! * [`Fifo`] — strict arrival order, the pre-scheduler behavior and the
+//!   A/B baseline. A long prompt at the queue head blocks every request
+//!   behind it even when budget headroom exists (head-of-line blocking).
+//! * [`SizeAware`] — shortest-remaining-work-first within the KV budget:
+//!   each admission picks the queued request with the least total work
+//!   (prompt + generation) whose projected footprint fits the remaining
+//!   headroom, so short requests flow past a blocked long one.
+//! * [`Preemptive`] — [`SizeAware`] ordering plus swap-out: when the
+//!   preferred candidate cannot fit, the active sequence with the most
+//!   remaining work (the lowest priority) is snapshotted to the cold
+//!   tier — in its policy's *compressed* representation — and resumed
+//!   bit-identically once headroom returns. A victim is only taken when
+//!   its remaining work strictly exceeds the candidate's total work, so
+//!   every preemption funds a strictly shorter request and the system
+//!   always makes progress.
+//!
+//! All three see the same request descriptors ([`QueuedSeq`] /
+//! [`ActiveSeq`]); costs are the admission pre-charge
+//! (`kv_bytes_projected` at completion length), identical to the budget
+//! the worker enforces. `bench_perf_scheduling` records the fleet-level
+//! A/B; `rust/tests/batched_serving.rs` holds the fairness and
+//! round-trip oracles.
+
+/// What the scheduler sees of one queued request.
+#[derive(Clone, Debug)]
+pub struct QueuedSeq {
+    pub id: u64,
+    /// Projected completion KV footprint (prompt + n_new tokens), bytes.
+    pub cost_bytes: usize,
+    /// Total work ahead: prompt tokens to prefill + tokens to generate.
+    pub work_tokens: usize,
+}
+
+/// What the scheduler sees of one active (hot) sequence.
+#[derive(Clone, Debug)]
+pub struct ActiveSeq {
+    pub id: u64,
+    /// Projected completion KV footprint, bytes (what preempting frees
+    /// from the admission ledger).
+    pub cost_bytes: usize,
+    /// Decode steps left before this sequence retires.
+    pub remaining_tokens: usize,
+    /// Times this sequence has already been swapped out.
+    pub preemptions: usize,
+}
+
+/// `cost` fits in the remaining budget (`None` = unlimited).
+fn fits(headroom: Option<usize>, cost: usize) -> bool {
+    headroom.is_none_or(|h| cost <= h)
+}
+
+/// An admission/preemption policy. Implementations are consulted once
+/// per admission step; they never touch backends or the cold tier —
+/// the worker executes whatever they decide.
+pub trait Scheduler: Send {
+    /// Display name (metrics, benches, CLI echo).
+    fn name(&self) -> &'static str;
+
+    /// Choose the queued request to admit next, given the KV headroom
+    /// left after charging every active and already-admitted sequence at
+    /// its projected completion footprint. Returning `None` ends this
+    /// round's admission (the worker may still consult
+    /// [`Scheduler::pick_victim`] or fall back to
+    /// [`Scheduler::preferred`] when nothing at all is running).
+    fn pick_admission(&mut self, queued: &[QueuedSeq], headroom: Option<usize>) -> Option<usize>;
+
+    /// The request this policy would admit if capacity were no object —
+    /// the worker's deadlock escape hatch admits it unconditionally when
+    /// nothing is running, and preemption is evaluated on its behalf.
+    fn preferred(&self, queued: &[QueuedSeq]) -> Option<usize> {
+        if queued.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    /// Under budget pressure (`blocked` = the preferred candidate that
+    /// does not fit), choose an active sequence to swap out to the cold
+    /// tier. Default: never preempt.
+    fn pick_victim(&mut self, _blocked: &QueuedSeq, _active: &[ActiveSeq]) -> Option<usize> {
+        None
+    }
+}
+
+/// Strict arrival order — today's behavior, kept as the A/B baseline.
+#[derive(Default)]
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick_admission(&mut self, queued: &[QueuedSeq], headroom: Option<usize>) -> Option<usize> {
+        // Head of the queue or nothing: FIFO deliberately keeps the
+        // head-of-line block so the A/B against SizeAware is honest.
+        match queued.first() {
+            Some(head) if fits(headroom, head.cost_bytes) => Some(0),
+            _ => None,
+        }
+    }
+}
+
+/// Index of the queued request with the least total work (ties: lower
+/// id, i.e. earlier arrival).
+fn smallest_work(queued: &[QueuedSeq]) -> Option<usize> {
+    queued
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, q)| (q.work_tokens, q.id))
+        .map(|(i, _)| i)
+}
+
+/// Shortest-remaining-work-first within the KV budget: fixes FIFO's
+/// head-of-line blocking. Long requests are not starved forever — once
+/// the queue holds only long requests, the shortest of them is admitted;
+/// arrival order only yields to strictly smaller work.
+#[derive(Default)]
+pub struct SizeAware;
+
+impl Scheduler for SizeAware {
+    fn name(&self) -> &'static str {
+        "size-aware"
+    }
+
+    fn pick_admission(&mut self, queued: &[QueuedSeq], headroom: Option<usize>) -> Option<usize> {
+        queued
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| fits(headroom, q.cost_bytes))
+            .min_by_key(|(_, q)| (q.work_tokens, q.id))
+            .map(|(i, _)| i)
+    }
+
+    fn preferred(&self, queued: &[QueuedSeq]) -> Option<usize> {
+        smallest_work(queued)
+    }
+}
+
+/// [`SizeAware`] ordering plus cold-tier swap-out under budget pressure.
+#[derive(Default)]
+pub struct Preemptive;
+
+impl Scheduler for Preemptive {
+    fn name(&self) -> &'static str {
+        "preemptive"
+    }
+
+    fn pick_admission(&mut self, queued: &[QueuedSeq], headroom: Option<usize>) -> Option<usize> {
+        SizeAware.pick_admission(queued, headroom)
+    }
+
+    fn preferred(&self, queued: &[QueuedSeq]) -> Option<usize> {
+        smallest_work(queued)
+    }
+
+    fn pick_victim(&mut self, blocked: &QueuedSeq, active: &[ActiveSeq]) -> Option<usize> {
+        // Lowest priority = most remaining work. Only preempt when the
+        // victim's remaining work strictly exceeds the candidate's total
+        // work: each swap funds a strictly shorter request, so progress
+        // is monotone and resume cannot ping-pong with admission.
+        active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.remaining_tokens > blocked.work_tokens)
+            .max_by_key(|(_, a)| (a.remaining_tokens, a.id))
+            .map(|(i, _)| i)
+    }
+}
+
+/// Config-level scheduler selector (`cskv serve --scheduler …`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    #[default]
+    Fifo,
+    SizeAware,
+    Preemptive,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fifo" => Ok(SchedulerKind::Fifo),
+            "size-aware" => Ok(SchedulerKind::SizeAware),
+            "preemptive" => Ok(SchedulerKind::Preemptive),
+            other => anyhow::bail!("unknown scheduler {other:?} (fifo|size-aware|preemptive)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::SizeAware => "size-aware",
+            SchedulerKind::Preemptive => "preemptive",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(Fifo),
+            SchedulerKind::SizeAware => Box::new(SizeAware),
+            SchedulerKind::Preemptive => Box::new(Preemptive),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, cost: usize, work: usize) -> QueuedSeq {
+        QueuedSeq { id, cost_bytes: cost, work_tokens: work }
+    }
+
+    fn a(id: u64, cost: usize, remaining: usize) -> ActiveSeq {
+        ActiveSeq { id, cost_bytes: cost, remaining_tokens: remaining, preemptions: 0 }
+    }
+
+    #[test]
+    fn fifo_blocks_at_the_head() {
+        let mut s = Fifo;
+        let queued = vec![q(1, 100, 50), q(2, 10, 5)];
+        // Head fits ⇒ head.
+        assert_eq!(s.pick_admission(&queued, Some(200)), Some(0));
+        // Head blocked ⇒ nothing, even though #2 fits (the documented
+        // head-of-line behavior the A/B measures).
+        assert_eq!(s.pick_admission(&queued, Some(50)), None);
+        assert_eq!(s.preferred(&queued), Some(0));
+        assert_eq!(s.pick_victim(&queued[0], &[a(9, 10, 100)]), None);
+    }
+
+    #[test]
+    fn size_aware_picks_smallest_fitting_work() {
+        let mut s = SizeAware;
+        let queued = vec![q(1, 100, 50), q(2, 10, 5), q(3, 10, 5)];
+        // Smallest work that fits; ties break to the earlier arrival.
+        assert_eq!(s.pick_admission(&queued, Some(50)), Some(1));
+        // Unlimited budget still orders by work.
+        assert_eq!(s.pick_admission(&queued, None), Some(1));
+        // Nothing fits.
+        assert_eq!(s.pick_admission(&queued, Some(5)), None);
+        assert_eq!(s.preferred(&queued), Some(1));
+    }
+
+    #[test]
+    fn preemptive_victim_is_longest_remaining_and_strictly_longer() {
+        let mut s = Preemptive;
+        let blocked = q(7, 60, 20);
+        // Longest remaining work wins; only strictly-longer qualify.
+        let active = vec![a(1, 50, 19), a(2, 50, 400), a(3, 50, 90)];
+        assert_eq!(s.pick_victim(&blocked, &active), Some(1));
+        // No sequence with more remaining work than the candidate needs
+        // ⇒ no preemption (prevents thrash on equal-size workloads).
+        let short = vec![a(1, 50, 20), a(2, 50, 5)];
+        assert_eq!(s.pick_victim(&blocked, &short), None);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        for (txt, want) in [
+            ("fifo", SchedulerKind::Fifo),
+            ("size-aware", SchedulerKind::SizeAware),
+            ("preemptive", SchedulerKind::Preemptive),
+        ] {
+            let k = SchedulerKind::parse(txt).unwrap();
+            assert_eq!(k, want);
+            assert_eq!(k.name(), txt);
+            assert_eq!(k.build().name(), txt);
+        }
+        assert!(SchedulerKind::parse("lifo").is_err());
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Fifo);
+    }
+}

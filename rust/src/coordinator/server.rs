@@ -1,36 +1,50 @@
 //! The coordinator thread: queueing, KV-budget admission, continuous
-//! batching, completion.
+//! batching, preemptive tiered scheduling, completion.
 //!
-//! Scheduling model (single-worker continuous batching, **fused rounds**):
+//! Control plane / data plane split: the **data plane** (fused
+//! multi-sequence prefill, GEMM-batched decode rounds — PR 3) moves
+//! tokens; the **control plane** decides *which* sequences occupy the
+//! hot tier each round, and is pluggable through the
+//! [`super::scheduler::Scheduler`] trait (`fifo` | `size-aware` |
+//! `preemptive`, selected by [`CoordinatorConfig::scheduler`]).
 //!
-//! 1. Requests land in an mpsc queue.
-//! 2. The worker collects an *admission round*: queued requests are
-//!    admitted while `active + admitted < max_batch` **and** the
-//!    aggregate KV footprint stays under `kv_budget_bytes`. The admission
-//!    test charges every sequence at its *projected completion*
-//!    footprint — prompt plus `n_new` tokens through
-//!    [`SequenceBackend::kv_bytes_projected`] — so neither a long prompt
-//!    at prefill nor decode growth afterwards can blow past the budget,
-//!    and compressed-cache policies still admit proportionally more
-//!    concurrent sequences (the serving-side win of the paper, measured
-//!    by `bench_perf_serving`).
-//! 3. The whole admission round is prefilled in **one fused pass**
-//!    ([`super::backend::prefill_batch`]): each layer's weights stream
-//!    once across the stacked prompts, so TTFT under load stops scaling
-//!    with queue depth. With `fused: false` (A/B baseline) prefills run
-//!    per sequence, as the pre-batching scheduler did.
-//! 4. Each scheduling round decodes one token for every active sequence
-//!    in **one fused GEMM-batched call** ([`super::backend::decode_batch`]:
-//!    QKV / output / MLP / LM-head weights stream once per round instead
-//!    of once per sequence), then re-admits — i.e. new requests don't
-//!    wait for the whole batch to drain (continuous batching à la
-//!    Orca/vLLM). Fused and sequential rounds produce **bit-identical**
-//!    token streams at every batch size and thread count
-//!    (`rust/tests/batched_serving.rs`).
+//! Each scheduling round:
+//!
+//! 1. Requests land in an mpsc queue; the worker drains it.
+//! 2. **Admission**: the scheduler repeatedly picks the next queued
+//!    request that fits the headroom, every sequence charged at its
+//!    *projected completion* footprint
+//!    ([`SequenceBackend::kv_bytes_projected`]). When the preferred
+//!    candidate does not fit, a preemptive scheduler may swap the
+//!    lowest-priority active sequence (most remaining work) out to the
+//!    [`super::coldtier::ColdTier`] to fund it. If nothing at all is
+//!    running, the preferred candidate is admitted over budget — the
+//!    can't-deadlock escape hatch.
+//! 3. **Resume**: swapped-out sequences return from the cold tier
+//!    (smallest remaining work first) with whatever budget and batch
+//!    headroom is left *after* admission — so queued work the scheduler
+//!    prefers is never displaced by an eager restore, and a parked long
+//!    sequence stays parked (no snapshot/restore churn) while strictly
+//!    shorter requests keep arriving. Restores are **bit-identical**,
+//!    from the policy's own compressed [`crate::kvcache::KvSnapshot`]
+//!    representation (`DecodeView`s rebuild through the normal
+//!    `sync_view` path), and the resumed sequence joins the same
+//!    round's decode.
+//! 4. The whole admission round prefills in **one fused pass**
+//!    ([`super::backend::prefill_batch`]); each decode round advances
+//!    every active sequence in **one GEMM-batched call**
+//!    ([`super::backend::decode_batch`]). `fused: false` keeps the
+//!    per-sequence A/B baseline; token streams are bit-identical either
+//!    way (`rust/tests/batched_serving.rs`).
 //! 5. Every submitted request receives exactly one [`Response`]:
-//!    backend-construction and prefill failures answer with
-//!    [`Response::failure`] (counted in [`Metrics`]) instead of silently
-//!    dropping the reply channel, so `submit_wait` can never hang.
+//!    construction, prefill, and cold-tier/restore failures answer with
+//!    an error `Response` (counted in [`Metrics`]) instead of dropping
+//!    the reply channel, so `submit_wait` can never hang.
+//!
+//! [`Metrics`] additionally records queue waits, preemption/restore
+//! counts, cold-tier bytes, per-outcome TTFT and the retirement order —
+//! the observables `bench_perf_scheduling` and the fairness tests build
+//! on.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -39,8 +53,10 @@ use std::thread;
 use std::time::Instant;
 
 use super::backend::{decode_batch, prefill_batch, BatchScratch, SequenceBackend};
-use super::metrics::Metrics;
+use super::coldtier::ColdTier;
+use super::metrics::{Completion, Metrics};
 use super::request::{Request, Response};
+use super::scheduler::{ActiveSeq, QueuedSeq, Scheduler, SchedulerKind};
 
 /// Factory producing a fresh backend per admitted sequence. Created inside
 /// the worker thread (PJRT clients are not Send), hence the two-level
@@ -54,10 +70,10 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     /// Aggregate KV budget across active sequences (None = unlimited).
     pub kv_budget_bytes: Option<usize>,
-    /// Worker threads for the engines' parallel prefill kernels. Applied
-    /// as the **process default**
-    /// ([`crate::util::threadpool::set_global_threads`]) when the
-    /// coordinator starts, so every sequence backend (and the eval
+    /// Worker threads for the engines' parallel kernels (prefill GEMMs
+    /// and the batched decode projections). Applied as the **process
+    /// default** ([`crate::util::threadpool::set_global_threads`]) when
+    /// the coordinator starts, so every sequence backend (and the eval
     /// harness, if colocated) shares one pool width instead of each
     /// engine implicitly serializing. `0` = leave the process default
     /// untouched. Results are bit-identical at any width.
@@ -68,6 +84,13 @@ pub struct CoordinatorConfig {
     /// baseline for `bench_perf_serving`; token streams are identical
     /// either way.
     pub fused: bool,
+    /// Admission/preemption policy (`cskv serve --scheduler …`):
+    /// [`SchedulerKind::Fifo`] (default, the A/B baseline),
+    /// [`SchedulerKind::SizeAware`], or [`SchedulerKind::Preemptive`].
+    pub scheduler: SchedulerKind,
+    /// Spill directory for cold-tier snapshots (`cskv serve
+    /// --cold-tier <dir>`). `None` parks preempted sequences in memory.
+    pub cold_tier_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,10 +100,13 @@ impl Default for CoordinatorConfig {
             kv_budget_bytes: None,
             threads: 0,
             fused: true,
+            scheduler: SchedulerKind::Fifo,
+            cold_tier_dir: None,
         }
     }
 }
 
+/// One hot (actively decoding) sequence.
 struct Active {
     req: Request,
     backend: Box<dyn SequenceBackend>,
@@ -89,9 +115,40 @@ struct Active {
     ttft_s: f64,
     started: Instant,
     tok_latencies: Vec<f64>,
+    /// Admission pre-charge: projected completion footprint, bytes.
+    cost_bytes: usize,
+    /// Times this sequence has been swapped out to the cold tier.
+    preemptions: usize,
+    /// True from restore until the next decoded token: a just-restored
+    /// sequence is not preemptable again, so every swap cycle makes at
+    /// least one decode round of progress (no snapshot/restore thrash,
+    /// no starvation under a sustained short-request stream).
+    just_restored: bool,
     /// Set when a decode step errored; the sequence retires with the
     /// tokens generated so far and the error attached.
     failed: Option<String>,
+}
+
+/// One preempted sequence: its KV state is parked in the cold tier; only
+/// the request bookkeeping stays resident.
+struct Swapped {
+    req: Request,
+    generated: Vec<usize>,
+    queue_wait_s: f64,
+    ttft_s: f64,
+    started: Instant,
+    tok_latencies: Vec<f64>,
+    cost_bytes: usize,
+    preemptions: usize,
+}
+
+/// One admitted-this-round sequence, waiting for the fused prefill.
+struct Admit {
+    req: Request,
+    backend: Box<dyn SequenceBackend>,
+    cost_bytes: usize,
+    queue_wait_s: f64,
+    started: Instant,
 }
 
 /// Handle to a running coordinator.
@@ -161,7 +218,8 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Drain the queue and stop the worker.
+    /// Drain the queue (including swapped-out sequences) and stop the
+    /// worker.
     pub fn shutdown(mut self) -> super::metrics::MetricsSnapshot {
         self.tx.take(); // close channel
         if let Some(w) = self.worker.take() {
@@ -188,6 +246,25 @@ fn fail_request(req: Request, err: &str, metrics: &Metrics) {
     let _ = req.reply.send(Response::failure(&req, err));
 }
 
+/// Answer a swapped-out sequence whose resume failed (cold-tier read,
+/// backend construction, or restore error): the tokens generated before
+/// preemption are returned alongside the error.
+fn fail_swapped(s: Swapped, err: &str, metrics: &Metrics) {
+    crate::log_error!("request {} failed after preemption: {err}", s.req.id);
+    metrics.record_failure();
+    let resp = Response {
+        id: s.req.id,
+        tokens: s.generated,
+        queue_wait_s: s.queue_wait_s,
+        ttft_s: s.ttft_s,
+        total_s: s.started.elapsed().as_secs_f64() + s.queue_wait_s,
+        kv_bytes: 0,
+        backend: String::new(),
+        error: Some(err.to_string()),
+    };
+    let _ = s.req.reply.send(resp);
+}
+
 /// Retire one sequence: record metrics and answer its request. A
 /// decode-failed sequence counts as a failure (its partial tokens are
 /// returned but stay out of the success distributions).
@@ -195,7 +272,14 @@ fn retire(a: Active, metrics: &Metrics) {
     if a.failed.is_some() {
         metrics.record_failure();
     } else {
-        metrics.record_completion(a.queue_wait_s, a.ttft_s, a.generated.len(), &a.tok_latencies);
+        metrics.record_completion(Completion {
+            id: a.req.id,
+            queue_wait_s: a.queue_wait_s,
+            ttft_s: a.ttft_s,
+            tokens: a.generated.len(),
+            tok_latency_s: &a.tok_latencies,
+            preemptions: a.preemptions,
+        });
     }
     let resp = Response {
         id: a.req.id,
@@ -210,200 +294,428 @@ fn retire(a: Active, metrics: &Metrics) {
     let _ = a.req.reply.send(resp);
 }
 
+/// The worker's round state. One instance lives for the worker's whole
+/// life; [`worker_loop`] drives one scheduling round per iteration.
+struct Worker<'a> {
+    cfg: &'a CoordinatorConfig,
+    metrics: &'a Metrics,
+    scheduler: Box<dyn Scheduler>,
+    tier: ColdTier,
+    pending: VecDeque<Request>,
+    active: Vec<Active>,
+    swapped: Vec<Swapped>,
+    batch: BatchScratch,
+    /// A constructed-but-unused backend from a blocked admission.
+    /// Backends carry no request-specific state before prefill, so the
+    /// spare serves whichever request is picked next — `factory()` stays
+    /// ~1:1 with admissions instead of re-constructing every blocked
+    /// round.
+    spare: Option<Box<dyn SequenceBackend>>,
+}
+
+impl Worker<'_> {
+    /// KV bytes the budget must reserve for the hot tier: every active
+    /// plus every this-round-admitted sequence at its projected
+    /// completion footprint (or its current footprint, if a generation
+    /// somehow outgrew the projection).
+    fn committed_bytes(&self, admitted: &[Admit]) -> usize {
+        self.active
+            .iter()
+            .map(|a| a.cost_bytes.max(a.backend.kv_bytes()))
+            .sum::<usize>()
+            + admitted.iter().map(|ad| ad.cost_bytes).sum::<usize>()
+    }
+
+    fn take_or_build_backend(
+        &mut self,
+        factory: &mut BackendFactory,
+    ) -> anyhow::Result<Box<dyn SequenceBackend>> {
+        match self.spare.take() {
+            Some(b) => Ok(b),
+            None => factory(),
+        }
+    }
+
+    /// Swap the `idx`-th active sequence out to the cold tier. Returns
+    /// false (and leaves the sequence hot) if the snapshot or the tier
+    /// write fails — preemption is an optimization, never a correctness
+    /// risk.
+    fn preempt(&mut self, idx: usize) -> bool {
+        let id = self.active[idx].req.id;
+        let snap = match self.active[idx].backend.snapshot() {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_error!("snapshot failed for request {id}: {e:#}; not preempting");
+                return false;
+            }
+        };
+        if let Err(e) = self.tier.put(id, &snap) {
+            crate::log_error!("cold tier write failed for request {id}: {e:#}; not preempting");
+            return false;
+        }
+        let a = self.active.swap_remove(idx);
+        // Dropping the backend releases the hot KV memory; only the
+        // compressed snapshot (cold tier) and the bookkeeping survive.
+        self.swapped.push(Swapped {
+            req: a.req,
+            generated: a.generated,
+            queue_wait_s: a.queue_wait_s,
+            ttft_s: a.ttft_s,
+            started: a.started,
+            tok_latencies: a.tok_latencies,
+            cost_bytes: a.cost_bytes,
+            preemptions: a.preemptions + 1,
+        });
+        self.metrics.record_preemption(self.tier.bytes_resident());
+        true
+    }
+
+    /// Bring swapped-out sequences back while the batch and KV budget
+    /// have headroom, smallest remaining work first. Runs *after* the
+    /// round's admissions, so queued work the scheduler prefers always
+    /// outranks a restore — a parked sequence can't ping-pong through
+    /// the cold tier while shorter requests keep arriving. When nothing
+    /// else is runnable (no actives, no pending), one sequence is
+    /// resumed unconditionally so the cold tier can always drain.
+    fn resume_round(&mut self, factory: &mut BackendFactory) {
+        while !self.swapped.is_empty() && self.active.len() < self.cfg.max_batch {
+            let idx = self
+                .swapped
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| (s.req.n_new.saturating_sub(s.generated.len()), s.req.id))
+                .map(|(i, _)| i)
+                .expect("non-empty");
+            let committed = self.committed_bytes(&[]);
+            let fits = self
+                .cfg
+                .kv_budget_bytes
+                .is_none_or(|b| committed + self.swapped[idx].cost_bytes <= b);
+            let force = self.active.is_empty() && self.pending.is_empty();
+            if !(fits || force) {
+                return;
+            }
+            let s = self.swapped.swap_remove(idx);
+            let snap = match self.tier.take(s.req.id) {
+                Ok(x) => x,
+                Err(e) => {
+                    fail_swapped(s, &format!("cold tier read failed: {e:#}"), self.metrics);
+                    continue;
+                }
+            };
+            let mut backend = match self.take_or_build_backend(factory) {
+                Ok(b) => b,
+                Err(e) => {
+                    fail_swapped(
+                        s,
+                        &format!("backend construction failed during resume: {e:#}"),
+                        self.metrics,
+                    );
+                    continue;
+                }
+            };
+            if let Err(e) = backend.restore(&snap) {
+                // The backend may be half-written — discard it rather
+                // than keeping it as a spare.
+                fail_swapped(s, &format!("restore failed: {e:#}"), self.metrics);
+                continue;
+            }
+            self.metrics.record_restore(self.tier.bytes_resident());
+            self.active.push(Active {
+                req: s.req,
+                backend,
+                generated: s.generated,
+                queue_wait_s: s.queue_wait_s,
+                ttft_s: s.ttft_s,
+                started: s.started,
+                tok_latencies: s.tok_latencies,
+                cost_bytes: s.cost_bytes,
+                preemptions: s.preemptions,
+                just_restored: true,
+                failed: None,
+            });
+        }
+    }
+
+    /// Collect this round's admission set under the batch-size and
+    /// KV-budget constraints, consulting the scheduler for ordering and
+    /// (under pressure) preemption. See the module docs for the round
+    /// structure and the escape hatch.
+    fn collect_admissions(&mut self, factory: &mut BackendFactory) -> Vec<Admit> {
+        let mut admitted: Vec<Admit> = Vec::new();
+        // Queue descriptors, priced once per round (every fresh backend
+        // carries the same policy configuration, so one backend prices
+        // every candidate's pre-charge) and kept in lockstep with
+        // `pending` as requests are admitted or failed — admission is
+        // O(1) re-pricing per iteration instead of O(pending).
+        let mut queued: Vec<QueuedSeq> = Vec::new();
+        while self.active.len() + admitted.len() < self.cfg.max_batch && !self.pending.is_empty() {
+            let backend = match self.take_or_build_backend(factory) {
+                Ok(b) => b,
+                Err(e) => {
+                    let req = self.pending.pop_front().expect("non-empty");
+                    if !queued.is_empty() {
+                        queued.remove(0);
+                    }
+                    fail_request(req, &format!("backend construction failed: {e:#}"), self.metrics);
+                    continue;
+                }
+            };
+            if queued.len() != self.pending.len() {
+                queued = self
+                    .pending
+                    .iter()
+                    .map(|r| QueuedSeq {
+                        id: r.id,
+                        cost_bytes: backend.kv_bytes_projected(r.prompt.len() + r.n_new),
+                        work_tokens: r.prompt.len() + r.n_new,
+                    })
+                    .collect();
+            }
+            let committed = self.committed_bytes(&admitted);
+            let headroom = self.cfg.kv_budget_bytes.map(|b| b.saturating_sub(committed));
+            let pick = match self.scheduler.pick_admission(&queued, headroom) {
+                Some(i) => i,
+                None => {
+                    if self.active.is_empty() && admitted.is_empty() {
+                        // Deadlock escape: nothing is running, so the
+                        // preferred candidate is admitted over budget.
+                        match self.scheduler.preferred(&queued) {
+                            Some(i) => i,
+                            None => {
+                                self.spare = Some(backend);
+                                break;
+                            }
+                        }
+                    } else if self.cfg.kv_budget_bytes.is_some() {
+                        // Budget pressure: a preemptive scheduler may
+                        // swap out a low-priority active sequence to
+                        // fund the preferred candidate; the freed budget
+                        // is re-evaluated on the next loop iteration.
+                        let pref = self.scheduler.preferred(&queued);
+                        let victim = pref.and_then(|p| {
+                            // Just-restored sequences are off the table:
+                            // each swap cycle must decode at least once.
+                            let (idxs, actives): (Vec<usize>, Vec<ActiveSeq>) = self
+                                .active
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, a)| !a.just_restored)
+                                .map(|(i, a)| {
+                                    (
+                                        i,
+                                        ActiveSeq {
+                                            id: a.req.id,
+                                            cost_bytes: a.cost_bytes.max(a.backend.kv_bytes()),
+                                            remaining_tokens: a
+                                                .req
+                                                .n_new
+                                                .saturating_sub(a.generated.len()),
+                                            preemptions: a.preemptions,
+                                        },
+                                    )
+                                })
+                                .unzip();
+                            self.scheduler.pick_victim(&queued[p], &actives).map(|v| idxs[v])
+                        });
+                        self.spare = Some(backend);
+                        match victim {
+                            Some(v) if self.preempt(v) => continue,
+                            _ => break,
+                        }
+                    } else {
+                        self.spare = Some(backend);
+                        break;
+                    }
+                }
+            };
+            let req = self.pending.remove(pick).expect("pick in range");
+            let cost_bytes = queued.remove(pick).cost_bytes;
+            let queue_wait_s = req.submitted_at.elapsed().as_secs_f64();
+            admitted.push(Admit {
+                req,
+                backend,
+                cost_bytes,
+                queue_wait_s,
+                started: Instant::now(),
+            });
+        }
+        admitted
+    }
+
+    /// Prefill the admission round — fused (weights streamed once across
+    /// the round) or per-sequence (A/B baseline). TTFT is taken when a
+    /// sequence's first token actually exists: after the whole pass for
+    /// the fused round, after each sequence's own prefill for the
+    /// sequential baseline.
+    fn prefill_round(&mut self, mut admitted: Vec<Admit>) {
+        if admitted.is_empty() {
+            return;
+        }
+        let results: Vec<(anyhow::Result<usize>, Option<f64>)> = if self.cfg.fused {
+            let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(admitted.len());
+            let mut prompts: Vec<&[usize]> = Vec::with_capacity(admitted.len());
+            for ad in admitted.iter_mut() {
+                prompts.push(&ad.req.prompt);
+                bs.push(ad.backend.as_mut());
+            }
+            prefill_batch(&mut bs, &prompts, &mut self.batch)
+                .into_iter()
+                .map(|r| (r, None))
+                .collect()
+        } else {
+            admitted
+                .iter_mut()
+                .map(|ad| {
+                    let r = ad.backend.prefill(&ad.req.prompt);
+                    let ttft = ad.req.submitted_at.elapsed().as_secs_f64();
+                    (r, Some(ttft))
+                })
+                .collect()
+        };
+        for (ad, (res, ttft)) in admitted.into_iter().zip(results) {
+            match res {
+                Ok(first) => {
+                    let ttft_s =
+                        ttft.unwrap_or_else(|| ad.req.submitted_at.elapsed().as_secs_f64());
+                    self.active.push(Active {
+                        req: ad.req,
+                        backend: ad.backend,
+                        generated: vec![first],
+                        queue_wait_s: ad.queue_wait_s,
+                        ttft_s,
+                        started: ad.started,
+                        tok_latencies: Vec::new(),
+                        cost_bytes: ad.cost_bytes,
+                        preemptions: 0,
+                        just_restored: false,
+                        failed: None,
+                    });
+                }
+                Err(e) => {
+                    fail_request(ad.req, &format!("prefill failed: {e:#}"), self.metrics);
+                }
+            }
+        }
+    }
+
+    /// One decode round across every unfinished sequence — a single
+    /// fused call (or per-sequence steps in the A/B baseline).
+    fn decode_round(&mut self) {
+        let mut round: Vec<usize> = Vec::with_capacity(self.active.len());
+        let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(self.active.len());
+        for (i, a) in self.active.iter_mut().enumerate() {
+            if a.generated.len() < a.req.n_new {
+                round.push(i);
+                bs.push(a.backend.as_mut());
+            }
+        }
+        if bs.is_empty() {
+            return;
+        }
+        let (results, lats): (Vec<anyhow::Result<usize>>, Vec<f64>) = if self.cfg.fused {
+            let t0 = Instant::now();
+            let r = decode_batch(&mut bs, &mut self.batch);
+            // Fused rounds are timed as a whole; each sequence is
+            // attributed its per-token share.
+            let share = t0.elapsed().as_secs_f64() / r.len() as f64;
+            let n = r.len();
+            (r, vec![share; n])
+        } else {
+            let mut lats = Vec::with_capacity(bs.len());
+            let r = bs
+                .iter_mut()
+                .map(|b| {
+                    let t0 = Instant::now();
+                    let res = b.decode_next();
+                    lats.push(t0.elapsed().as_secs_f64());
+                    res
+                })
+                .collect();
+            (r, lats)
+        };
+        drop(bs);
+        for ((&i, res), lat) in round.iter().zip(results).zip(lats) {
+            match res {
+                Ok(tok) => {
+                    self.active[i].tok_latencies.push(lat);
+                    self.active[i].generated.push(tok);
+                    // Progress made: the sequence is preemptable again.
+                    self.active[i].just_restored = false;
+                }
+                Err(e) => {
+                    crate::log_error!("decode failed for request {}: {e:#}", self.active[i].req.id);
+                    self.active[i].failed = Some(format!("decode failed: {e:#}"));
+                }
+            }
+        }
+    }
+
+    /// Retire finished (or failed) sequences.
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let done = self.active[i].failed.is_some()
+                || self.active[i].generated.len() >= self.active[i].req.n_new;
+            if done {
+                retire(self.active.swap_remove(i), self.metrics);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Nothing queued, running, or parked.
+    fn drained(&self) -> bool {
+        self.active.is_empty() && self.pending.is_empty() && self.swapped.is_empty()
+    }
+}
+
 fn worker_loop(
     rx: mpsc::Receiver<Request>,
     factory: &mut BackendFactory,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) {
-    let mut pending: VecDeque<Request> = VecDeque::new();
-    let mut active: Vec<Active> = Vec::new();
-    let mut batch = BatchScratch::default();
-    // Backend built for the queue head on a round where the budget
-    // blocked admission — kept so `factory()` stays 1:1 with requests
-    // instead of re-constructing (and dropping) a backend every round
-    // the head stays blocked.
-    let mut staged: Option<Box<dyn SequenceBackend>> = None;
+    let mut w = Worker {
+        cfg,
+        metrics,
+        scheduler: cfg.scheduler.build(),
+        tier: ColdTier::new(cfg.cold_tier_dir.clone()),
+        pending: VecDeque::new(),
+        active: Vec::new(),
+        swapped: Vec::new(),
+        batch: BatchScratch::default(),
+        spare: None,
+    };
     loop {
-        // Pull everything currently queued (non-blocking), or block if idle.
-        if active.is_empty() && pending.is_empty() {
+        // Pull everything currently queued (non-blocking), or block when
+        // fully idle (a parked sequence counts as work: the resume
+        // escape hatch below needs the loop to keep turning).
+        if w.drained() {
             match rx.recv() {
-                Ok(r) => pending.push_back(r),
+                Ok(r) => w.pending.push_back(r),
                 Err(_) => break, // channel closed and nothing to do
             }
         }
         while let Ok(r) = rx.try_recv() {
-            pending.push_back(r);
+            w.pending.push_back(r);
         }
 
-        // Collect this round's admission set under the batch-size and
-        // KV-budget constraints. The budget test charges every sequence
-        // — active, admitted this round, and the incoming candidate — at
-        // its *projected completion* footprint (prompt + n_new tokens,
-        // via kv_bytes_projected), so neither a long prompt at prefill
-        // nor decode growth afterwards can push the aggregate past the
-        // budget. The first sequence is admitted unconditionally so an
-        // over-budget request can't deadlock the queue.
-        let mut admitted: Vec<(Request, Box<dyn SequenceBackend>, f64, Instant)> = Vec::new();
-        while active.len() + admitted.len() < cfg.max_batch && !pending.is_empty() {
-            let backend = match staged.take() {
-                Some(b) => b, // built for this same queue head on a blocked round
-                None => match factory() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        let req = pending.pop_front().unwrap();
-                        fail_request(req, &format!("backend construction failed: {e:#}"), metrics);
-                        continue;
-                    }
-                },
-            };
-            if let Some(budget) = cfg.kv_budget_bytes {
-                let committed: usize = active
-                    .iter()
-                    .map(|a| {
-                        a.backend
-                            .kv_bytes_projected(a.req.prompt.len() + a.req.n_new)
-                            .max(a.backend.kv_bytes())
-                    })
-                    .sum::<usize>()
-                    + admitted
-                        .iter()
-                        .map(|(r, b, ..)| b.kv_bytes_projected(r.prompt.len() + r.n_new))
-                        .sum::<usize>();
-                let head = pending.front().unwrap();
-                let incoming = backend.kv_bytes_projected(head.prompt.len() + head.n_new);
-                if (!active.is_empty() || !admitted.is_empty()) && committed + incoming > budget {
-                    staged = Some(backend);
-                    break;
-                }
-            }
-            let req = pending.pop_front().unwrap();
-            let queue_wait_s = req.submitted_at.elapsed().as_secs_f64();
-            admitted.push((req, backend, queue_wait_s, Instant::now()));
-        }
+        let admitted = w.collect_admissions(factory);
+        w.prefill_round(admitted);
+        w.resume_round(factory);
 
-        // Prefill the admission round — fused (weights streamed once
-        // across the round) or per-sequence (A/B baseline). TTFT is
-        // taken when a sequence's first token actually exists: after the
-        // whole pass for the fused round, after each sequence's own
-        // prefill for the sequential baseline.
-        if !admitted.is_empty() {
-            let results: Vec<(anyhow::Result<usize>, Option<f64>)> = if cfg.fused {
-                let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(admitted.len());
-                let mut prompts: Vec<&[usize]> = Vec::with_capacity(admitted.len());
-                for (req, backend, ..) in admitted.iter_mut() {
-                    prompts.push(&req.prompt);
-                    bs.push(backend.as_mut());
-                }
-                prefill_batch(&mut bs, &prompts, &mut batch)
-                    .into_iter()
-                    .map(|r| (r, None))
-                    .collect()
-            } else {
-                admitted
-                    .iter_mut()
-                    .map(|(req, backend, ..)| {
-                        let r = backend.prefill(&req.prompt);
-                        let ttft = req.submitted_at.elapsed().as_secs_f64();
-                        (r, Some(ttft))
-                    })
-                    .collect()
-            };
-            for ((req, backend, queue_wait_s, started), (res, ttft)) in
-                admitted.into_iter().zip(results)
-            {
-                match res {
-                    Ok(first) => {
-                        let ttft_s =
-                            ttft.unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f64());
-                        active.push(Active {
-                            req,
-                            backend,
-                            generated: vec![first],
-                            queue_wait_s,
-                            ttft_s,
-                            started,
-                            tok_latencies: Vec::new(),
-                            failed: None,
-                        });
-                    }
-                    Err(e) => {
-                        fail_request(req, &format!("prefill failed: {e:#}"), metrics);
-                    }
-                }
-            }
-        }
-        let kv_now: usize = active.iter().map(|a| a.backend.kv_bytes()).sum();
-        metrics.record_kv(kv_now, active.len());
+        let kv_now: usize = w.active.iter().map(|a| a.backend.kv_bytes()).sum();
+        metrics.record_kv(kv_now, w.active.len());
 
-        // One decode round across every unfinished sequence — a single
-        // fused call (or per-sequence steps in the A/B baseline).
-        let mut round: Vec<usize> = Vec::with_capacity(active.len());
-        {
-            let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(active.len());
-            for (i, a) in active.iter_mut().enumerate() {
-                if a.generated.len() < a.req.n_new {
-                    round.push(i);
-                    bs.push(a.backend.as_mut());
-                }
-            }
-            if !bs.is_empty() {
-                let (results, lats): (Vec<anyhow::Result<usize>>, Vec<f64>) = if cfg.fused {
-                    let t0 = Instant::now();
-                    let r = decode_batch(&mut bs, &mut batch);
-                    // Fused rounds are timed as a whole; each sequence is
-                    // attributed its per-token share.
-                    let share = t0.elapsed().as_secs_f64() / r.len() as f64;
-                    let n = r.len();
-                    (r, vec![share; n])
-                } else {
-                    let mut lats = Vec::with_capacity(bs.len());
-                    let r = bs
-                        .iter_mut()
-                        .map(|b| {
-                            let t0 = Instant::now();
-                            let res = b.decode_next();
-                            lats.push(t0.elapsed().as_secs_f64());
-                            res
-                        })
-                        .collect();
-                    (r, lats)
-                };
-                drop(bs);
-                for ((&i, res), lat) in round.iter().zip(results).zip(lats) {
-                    match res {
-                        Ok(tok) => {
-                            active[i].tok_latencies.push(lat);
-                            active[i].generated.push(tok);
-                        }
-                        Err(e) => {
-                            crate::log_error!(
-                                "decode failed for request {}: {e:#}",
-                                active[i].req.id
-                            );
-                            active[i].failed = Some(format!("decode failed: {e:#}"));
-                        }
-                    }
-                }
-            }
-        }
-
-        // Retire finished (or failed) sequences.
-        let mut i = 0;
-        while i < active.len() {
-            let done =
-                active[i].failed.is_some() || active[i].generated.len() >= active[i].req.n_new;
-            if done {
-                retire(active.swap_remove(i), metrics);
-            } else {
-                i += 1;
-            }
-        }
+        w.decode_round();
+        w.retire_finished();
 
         // Exit when the channel is closed and all work is drained.
-        if active.is_empty() && pending.is_empty() {
+        if w.drained() {
             match rx.try_recv() {
-                Ok(r) => pending.push_back(r),
+                Ok(r) => w.pending.push_back(r),
                 Err(mpsc::TryRecvError::Disconnected) => break,
                 Err(mpsc::TryRecvError::Empty) => {}
             }
@@ -451,6 +763,7 @@ mod tests {
         assert_eq!(snap.requests_completed, 5);
         assert_eq!(snap.tokens_generated, 20);
         assert!(snap.active_peak >= 2, "batching should overlap requests");
+        assert_eq!(snap.preemptions, 0, "fifo never preempts");
     }
 
     #[test]
@@ -526,5 +839,95 @@ mod tests {
         let coord = Coordinator::start(test_setup(), CoordinatorConfig::default());
         let resp = coord.submit_wait(prompt, 5);
         assert_eq!(resp.tokens, want);
+    }
+
+    /// The preemptive tentpole, end to end: a long generation hogging
+    /// the whole budget is swapped out to the cold tier when a short
+    /// request arrives, the short request runs to completion first, and
+    /// the long one resumes **bit-identically** — same token stream as
+    /// an unpreempted direct-engine run. Exercised against both cold
+    /// tiers (in-memory and disk spill).
+    #[test]
+    fn preemptive_swaps_out_long_sequence_and_resumes_bit_identically() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(StdArc::new(ModelWeights::init(&cfg, 5)));
+        let long_prompt = vec![1usize, 7, 9, 2, 30, 41];
+        let short_prompt = vec![3usize, 5, 8];
+        let (long_n, short_n) = (120usize, 2usize);
+        let mut c1 = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want_long, _) = engine.generate(&long_prompt, long_n, &mut c1);
+        let mut c2 = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want_short, _) = engine.generate(&short_prompt, short_n, &mut c2);
+
+        let disk_dir = std::env::temp_dir()
+            .join(format!("cskv-preempt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&disk_dir);
+        for cold_tier_dir in [None, Some(disk_dir.clone())] {
+            // Budget fits the long projection (126 tokens) but not long
+            // + short (131): admitting the short request requires
+            // swapping the long one out.
+            let budget = cfg.kv_bytes_full(128);
+            let coord = Coordinator::start(
+                test_setup(),
+                CoordinatorConfig {
+                    max_batch: 4,
+                    kv_budget_bytes: Some(budget),
+                    scheduler: SchedulerKind::Preemptive,
+                    cold_tier_dir,
+                    ..Default::default()
+                },
+            );
+            let long_rx = coord.submit(long_prompt.clone(), long_n);
+            // Wait until the long request is hot, then submit the short.
+            let t0 = Instant::now();
+            while coord.metrics().kv_bytes_current() == 0 {
+                assert!(t0.elapsed().as_secs() < 30, "long request never started");
+                std::thread::yield_now();
+            }
+            let short = coord.submit_wait(short_prompt.clone(), short_n);
+            assert!(short.error.is_none(), "{:?}", short.error);
+            assert_eq!(short.tokens, want_short);
+            let long = long_rx.recv().unwrap();
+            assert!(long.error.is_none(), "{:?}", long.error);
+            assert_eq!(
+                long.tokens, want_long,
+                "preempted + restored stream must equal the unpreempted run"
+            );
+            let snap = coord.shutdown();
+            assert_eq!(snap.requests_completed, 2);
+            assert!(snap.preemptions >= 1, "long sequence must be swapped out");
+            assert_eq!(snap.restores, snap.preemptions, "every swap resumes");
+            assert!(snap.cold_bytes_peak > 0);
+            assert_eq!(
+                *snap.completion_order.first().unwrap(),
+                short.id,
+                "short request retires before the preempted long one"
+            );
+            assert_eq!(snap.ttft_preempted_s.len(), 1, "long TTFT lands in the preempted split");
+        }
+        let _ = std::fs::remove_dir_all(&disk_dir);
+    }
+
+    /// SizeAware never preempts; under pressure it simply orders
+    /// admissions shortest-first. Sanity-check the config plumbing.
+    #[test]
+    fn size_aware_orders_without_preempting() {
+        let coord = Coordinator::start(
+            test_setup(),
+            CoordinatorConfig {
+                max_batch: 2,
+                scheduler: SchedulerKind::SizeAware,
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = (0..4).map(|i| coord.submit(vec![1, 2 + i, 3], 3)).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 3);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_completed, 4);
+        assert_eq!(snap.preemptions, 0);
     }
 }

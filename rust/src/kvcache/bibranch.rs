@@ -20,6 +20,7 @@ use crate::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};
 use crate::compress::ModelFactors;
 use crate::tensor::Mat;
 
+use super::snapshot::{self, tags, KvSnapshot, SnapReader, SnapWriter};
 use super::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 /// Quantization applied to the compressed branch.
@@ -148,6 +149,55 @@ impl CompressedStore {
 
     fn bytes(&self) -> usize {
         self.groups.iter().map(|g| g.bytes()).sum::<usize>() + self.resid.bytes()
+    }
+
+    /// Serialize in the compressed representation: sealed int4 groups as
+    /// packed codes + affine params, the residual as raw fp32 features.
+    fn write_snapshot(&self, w: &mut SnapWriter) {
+        w.write_usize(self.groups.len());
+        for g in &self.groups {
+            w.write_usize(g.rows);
+            w.write_usize(g.cols);
+            w.u8s(g.packed());
+            w.f32s(g.scale());
+            w.f32s(g.zero());
+        }
+        snapshot::write_growmat(w, &self.resid);
+    }
+
+    /// Replace contents from a snapshot; `rank`, `axis` and `quant` stay
+    /// as constructed (the reader validates against them).
+    fn read_snapshot(&mut self, r: &mut SnapReader<'_>) -> anyhow::Result<()> {
+        let n_groups = r.read_usize()?;
+        anyhow::ensure!(
+            n_groups == 0 || self.quant == QuantMode::Int4,
+            "compressed store: sealed groups in a {:?} snapshot",
+            self.quant
+        );
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let rows = r.read_usize()?;
+            let cols = r.read_usize()?;
+            anyhow::ensure!(
+                rows == GROUP && cols == self.rank,
+                "compressed store: group {rows}x{cols}, want {GROUP}x{}",
+                self.rank
+            );
+            let packed = r.u8s()?;
+            let scale = r.f32s()?;
+            let zero = r.f32s()?;
+            groups.push(QuantizedBlock::from_raw(rows, cols, self.axis, packed, scale, zero)?);
+        }
+        let resid = snapshot::read_growmat(r)?;
+        anyhow::ensure!(
+            resid.cols == self.rank,
+            "compressed store: residual width {} != rank {}",
+            resid.cols,
+            self.rank
+        );
+        self.groups = groups;
+        self.resid = resid;
+        Ok(())
     }
 }
 
@@ -356,6 +406,73 @@ impl KvCachePolicy for CskvCache {
             })
             .sum()
     }
+
+    fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.cfg.window);
+        w.u8(match self.cfg.quant {
+            QuantMode::None => 0,
+            QuantMode::Int4 => 1,
+        });
+        w.write_usize(self.layers.len());
+        for l in &self.layers {
+            w.write_usize(l.n);
+            l.ck.write_snapshot(&mut w);
+            l.cv.write_snapshot(&mut w);
+            snapshot::write_growmat(&mut w, &l.win_k);
+            snapshot::write_growmat(&mut w, &l.win_v);
+            w.usizes(&l.win_pos);
+        }
+        KvSnapshot::new(tags::CSKV, w.finish())
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::CSKV, "cskv cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let window = r.read_usize()?;
+        let quant = r.u8()?;
+        let want_quant = match self.cfg.quant {
+            QuantMode::None => 0u8,
+            QuantMode::Int4 => 1,
+        };
+        anyhow::ensure!(
+            window == self.cfg.window && quant == want_quant,
+            "cskv cache: snapshot config (w={window}, quant={quant}) != target (w={}, quant={want_quant})",
+            self.cfg.window
+        );
+        let n_layers = r.read_usize()?;
+        anyhow::ensure!(
+            n_layers == self.layers.len(),
+            "cskv cache: snapshot has {n_layers} layers, target {}",
+            self.layers.len()
+        );
+        for l in &mut self.layers {
+            let n = r.read_usize()?;
+            l.ck.read_snapshot(&mut r)?;
+            l.cv.read_snapshot(&mut r)?;
+            let win_k = snapshot::read_growmat(&mut r)?;
+            let win_v = snapshot::read_growmat(&mut r)?;
+            let win_pos = r.usizes()?;
+            anyhow::ensure!(
+                win_k.cols == l.win_k.cols
+                    && win_v.cols == l.win_v.cols
+                    && win_k.rows() == win_pos.len()
+                    && win_v.rows() == win_pos.len()
+                    && win_pos.len() <= self.cfg.window
+                    && l.ck.len() == n
+                    && l.cv.len() == n,
+                "cskv cache: inconsistent layer snapshot (n={n}, window rows={}, features={})",
+                win_pos.len(),
+                l.ck.len()
+            );
+            l.n = n;
+            l.win_k = win_k;
+            l.win_v = win_v;
+            l.win_pos = win_pos;
+        }
+        r.expect_end()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -545,6 +662,54 @@ mod tests {
             c.sync_view(0, &mut fresh);
             assert!(live.same_contents(&fresh), "quant={quant:?}");
             assert_eq!(live.len(), c.len(0));
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_bit_exact_across_quant_modes() {
+        let d = 16;
+        for quant in [QuantMode::None, QuantMode::Int4] {
+            let f = lowrank_factors(d, 4, 2, 11);
+            let mut c = CskvCache::new(Arc::clone(&f), d, CskvConfig { window: 3, quant });
+            let mut rng = Pcg64::new(12);
+            // GROUP + 7 tokens: one sealed group + mid-group residual, and
+            // the window is mid-migration (rolling every append).
+            let t = GROUP + 7;
+            let x = Mat::randn(t, d, 1.0, &mut rng);
+            let k = Mat::randn(t, d, 1.0, &mut rng);
+            let v = Mat::randn(t, d, 1.0, &mut rng);
+            for layer in 0..2 {
+                c.ingest_prefill(layer, &x, &k, &v);
+            }
+            for _ in 0..5 {
+                let row: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                for layer in 0..2 {
+                    c.append(layer, &row, &row, &row);
+                }
+            }
+            let snap = c.snapshot();
+            // Compressed snapshot: ≈ kv_bytes, far below the full cache.
+            assert!(snap.size_bytes() < c.kv_bytes() * 2);
+            let mut fresh = CskvCache::new(Arc::clone(&f), d, CskvConfig { window: 3, quant });
+            fresh.restore(&snap).unwrap();
+            for layer in 0..2 {
+                assert_eq!(fresh.len(layer), c.len(layer));
+                let (a, b) = (c.materialize(layer), fresh.materialize(layer));
+                assert_eq!(a.k.data, b.k.data, "quant={quant:?}");
+                assert_eq!(a.v.data, b.v.data);
+                assert_eq!(a.rope_pos, b.rope_pos);
+                // Synced views rebuild bit-identically from the restored
+                // state (the engine's restore path).
+                let mut va = DecodeView::new(d, 2, 10000.0);
+                let mut vb = DecodeView::new(d, 2, 10000.0);
+                c.sync_view(layer, &mut va);
+                fresh.sync_view(layer, &mut vb);
+                assert!(va.same_contents(&vb));
+            }
+            assert_eq!(fresh.kv_bytes(), c.kv_bytes());
+            // Mismatched target config errors.
+            let mut wrong = CskvCache::new(Arc::clone(&f), d, CskvConfig { window: 4, quant });
+            assert!(wrong.restore(&snap).is_err());
         }
     }
 

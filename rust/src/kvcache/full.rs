@@ -2,6 +2,7 @@
 
 use crate::tensor::Mat;
 
+use super::snapshot::{self, tags, KvSnapshot, SnapReader, SnapWriter};
 use super::{CacheView, DecodeView, GrowMat, KvCachePolicy};
 
 /// Stores every token's exact K/V for every layer.
@@ -89,6 +90,43 @@ impl KvCachePolicy for FullCache {
             .map(|l| 4 * tokens * (l.k.cols + l.v.cols))
             .sum()
     }
+
+    fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.layers.len());
+        for l in &self.layers {
+            snapshot::write_growmat(&mut w, &l.k);
+            snapshot::write_growmat(&mut w, &l.v);
+        }
+        KvSnapshot::new(tags::FULL, w.finish())
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        snap.expect_tag(tags::FULL, "full cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let n_layers = r.read_usize()?;
+        anyhow::ensure!(
+            n_layers == self.layers.len(),
+            "full cache: snapshot has {n_layers} layers, target {}",
+            self.layers.len()
+        );
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in &self.layers {
+            let k = snapshot::read_growmat(&mut r)?;
+            let v = snapshot::read_growmat(&mut r)?;
+            anyhow::ensure!(
+                k.cols == l.k.cols && v.cols == l.v.cols && k.rows() == v.rows(),
+                "full cache: snapshot geometry mismatch ({}x?/{} vs d_model {})",
+                k.cols,
+                v.cols,
+                l.k.cols
+            );
+            layers.push(LayerState { k, v });
+        }
+        r.expect_end()?;
+        self.layers = layers;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +154,27 @@ mod tests {
         assert_eq!(c.len(1), 0);
         // 6 tokens * 2 tensors * 8 dims * 4B in layer 0.
         assert_eq!(c.kv_bytes(), 6 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::new(3);
+        let mut c = FullCache::new(2, 8);
+        let k = Mat::randn(5, 8, 1.0, &mut rng);
+        let v = Mat::randn(5, 8, 1.0, &mut rng);
+        c.ingest_prefill(0, &k, &k, &v);
+        c.ingest_prefill(1, &v, &v, &k);
+        let snap = c.snapshot();
+        let mut fresh = FullCache::new(2, 8);
+        fresh.restore(&snap).unwrap();
+        for li in 0..2 {
+            let (a, b) = (c.materialize(li), fresh.materialize(li));
+            assert_eq!(a.k.data, b.k.data);
+            assert_eq!(a.v.data, b.v.data);
+        }
+        assert_eq!(fresh.kv_bytes(), c.kv_bytes());
+        // Geometry mismatches are errors, not corruption.
+        assert!(FullCache::new(3, 8).restore(&snap).is_err());
+        assert!(FullCache::new(2, 4).restore(&snap).is_err());
     }
 }

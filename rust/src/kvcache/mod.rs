@@ -64,9 +64,11 @@
 pub mod bibranch;
 pub mod full;
 pub mod memory;
+pub mod snapshot;
 
 pub use bibranch::{CskvCache, CskvConfig, QuantMode};
 pub use full::FullCache;
+pub use snapshot::{KvSnapshot, SnapReader, SnapWriter};
 
 use crate::tensor::{ops, Mat};
 
@@ -330,6 +332,22 @@ pub trait KvCachePolicy: Send {
     /// memory. Estimates use full-precision accounting (an upper bound
     /// for quantized stores), which keeps admission conservative.
     fn kv_bytes_projected(&self, tokens: usize) -> usize;
+
+    /// Serialize the complete cache state in the policy's **own**
+    /// representation (CSKV: low-rank features / int4 groups + window;
+    /// eviction policies: kept rows + bookkeeping) — the portable form
+    /// the preemptive scheduler swaps to the cold tier. Every f32 and
+    /// packed int4 code round-trips bit-exactly.
+    fn snapshot(&self) -> KvSnapshot;
+
+    /// Replace this policy's state with `snap`'s. The target must be
+    /// configured compatibly (same geometry / window / quant mode /
+    /// factor ranks as the snapshotted instance); mismatches error
+    /// without touching state where practical. After a successful
+    /// restore, decoding continues **bit-identically** to the
+    /// unpreempted run — the engine rebuilds its [`DecodeView`]s through
+    /// the normal [`KvCachePolicy::sync_view`] fresh-view path.
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()>;
 }
 
 /// Growable row-major matrix used by cache implementations.

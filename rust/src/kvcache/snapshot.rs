@@ -1,0 +1,389 @@
+//! KV state snapshots — the serialized, portable form of a sequence's
+//! cache that the preemptive scheduler swaps between the hot tier and
+//! the cold tier (in-memory blob store or disk spill directory).
+//!
+//! A [`KvSnapshot`] stores the policy's **own** representation — CSKV's
+//! low-rank features and int4 groups, H2O's kept rows + scores, the
+//! StreamingLLM sink/window, ASVD's features — so a preempted compressed
+//! sequence costs roughly its `kv_bytes()` (≈ 20% of the full-precision
+//! footprint at 80% compression), not the materialized cache. Restoring
+//! into a compatibly-configured policy reproduces the pre-snapshot state
+//! **bit-identically**: every f32 round-trips through its exact LE byte
+//! pattern and int4 groups round-trip their packed codes, so a preempted
+//! generation resumes with the exact token stream of an unpreempted run
+//! (`rust/tests/property_invariants.rs` holds the oracle; the engine
+//! rebuilds `DecodeView`s from the restored policy through the existing
+//! `sync_view` full-rebuild path).
+//!
+//! The same container carries coordinator-side backend snapshots (Rust
+//! backend bookkeeping wrapping a policy snapshot; PJRT session buffers)
+//! — see [`tags`] for the registry.
+
+use super::GrowMat;
+
+/// Snapshot kind registry. Policy snapshots are nested verbatim inside
+/// backend snapshots, so every kind shares one namespace.
+pub mod tags {
+    /// [`crate::kvcache::FullCache`]
+    pub const FULL: u32 = 1;
+    /// [`crate::kvcache::CskvCache`] (fp32 or int4 compressed branch)
+    pub const CSKV: u32 = 2;
+    /// [`crate::baselines::H2oCache`]
+    pub const H2O: u32 = 3;
+    /// [`crate::baselines::StreamingLlmCache`]
+    pub const STREAMING: u32 = 4;
+    /// [`crate::baselines::AsvdCache`]
+    pub const ASVD: u32 = 5;
+    /// [`crate::coordinator::RustSequenceBackend`] (wraps a policy snapshot)
+    pub const RUST_BACKEND: u32 = 16;
+    /// `PjrtFullSession` serialized buffers
+    pub const PJRT_FULL: u32 = 17;
+    /// `PjrtCskvSession` serialized buffers (compressed history + window)
+    pub const PJRT_CSKV: u32 = 18;
+}
+
+/// `"KVSN"` — guards against feeding arbitrary files to [`KvSnapshot::decode`].
+const MAGIC: u32 = 0x4b56_534e;
+/// Bump on any incompatible payload-layout change.
+const VERSION: u32 = 1;
+
+/// A serialized KV state: a kind tag plus an opaque payload written with
+/// [`SnapWriter`] and read back with [`SnapReader`].
+#[derive(Clone, Debug)]
+pub struct KvSnapshot {
+    tag: u32,
+    payload: Vec<u8>,
+}
+
+impl KvSnapshot {
+    pub fn new(tag: u32, payload: Vec<u8>) -> Self {
+        KvSnapshot { tag, payload }
+    }
+
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Cold-tier accounting: bytes this snapshot occupies when encoded.
+    pub fn size_bytes(&self) -> usize {
+        12 + self.payload.len()
+    }
+
+    /// Self-describing byte form (magic + version + tag + payload) — what
+    /// the cold tier stores in memory or spills to disk.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.tag.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<KvSnapshot> {
+        anyhow::ensure!(bytes.len() >= 12, "snapshot truncated: {} bytes", bytes.len());
+        let word = |i: usize| u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+        anyhow::ensure!(word(0) == MAGIC, "bad snapshot magic {:#x}", word(0));
+        anyhow::ensure!(word(4) == VERSION, "unsupported snapshot version {}", word(4));
+        Ok(KvSnapshot {
+            tag: word(8),
+            payload: bytes[12..].to_vec(),
+        })
+    }
+
+    /// Tag check shared by every `restore` implementation.
+    pub fn expect_tag(&self, tag: u32, who: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tag == tag,
+            "{who}: snapshot kind mismatch (got tag {}, want {tag})",
+            self.tag
+        );
+        Ok(())
+    }
+}
+
+/// Append-only payload writer. All integers are LE u64 (usize) / u32 /
+/// u8; f32 slices are raw LE bits, so round-trips are bit-exact.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        SnapWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn u8s(&mut self, v: &[u8]) {
+        self.write_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed f32 slice, exact LE bit patterns.
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.write_usize(v.len());
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed usize slice.
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.write_usize(v.len());
+        self.buf.reserve(v.len() * 8);
+        for &x in v {
+            self.buf.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+    }
+
+    /// Embed another snapshot in its encoded form, written directly into
+    /// this buffer (byte-identical to `u8s(&snap.encode())` without the
+    /// intermediate allocation — snapshots nest on the preemption hot
+    /// path, where the payload is the whole KV state).
+    pub fn nested(&mut self, snap: &KvSnapshot) {
+        self.write_usize(snap.size_bytes());
+        self.buf.reserve(snap.size_bytes());
+        self.buf.extend_from_slice(&MAGIC.to_le_bytes());
+        self.buf.extend_from_slice(&VERSION.to_le_bytes());
+        self.buf.extend_from_slice(&snap.tag().to_le_bytes());
+        self.buf.extend_from_slice(snap.payload());
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential payload reader; every accessor validates bounds so corrupt
+/// or truncated cold-tier data surfaces as an error, never a panic.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        SnapReader { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off
+                .checked_add(n)
+                .is_some_and(|end| end <= self.buf.len()),
+            "snapshot payload truncated at byte {} (need {n} more of {})",
+            self.off,
+            self.buf.len()
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn read_usize(&mut self) -> anyhow::Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn u8s(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.read_usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// A length prefix is untrusted cold-tier data: reject values whose
+    /// byte size overflows instead of panicking on the multiply.
+    fn checked_len(n: usize, elem: usize) -> anyhow::Result<usize> {
+        n.checked_mul(elem)
+            .ok_or_else(|| anyhow::anyhow!("snapshot length prefix {n} overflows"))
+    }
+
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.read_usize()?;
+        let raw = self.take(Self::checked_len(n, 4)?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn usizes(&mut self) -> anyhow::Result<Vec<usize>> {
+        let n = self.read_usize()?;
+        let raw = self.take(Self::checked_len(n, 8)?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    /// Read a snapshot embedded with [`SnapWriter::nested`], decoding
+    /// straight from the underlying buffer (no intermediate copy).
+    pub fn nested(&mut self) -> anyhow::Result<KvSnapshot> {
+        let n = self.read_usize()?;
+        let raw = self.take(n)?;
+        KvSnapshot::decode(raw)
+    }
+
+    /// All bytes must be consumed — catches writer/reader drift.
+    pub fn expect_end(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.off == self.buf.len(),
+            "snapshot payload has {} trailing bytes",
+            self.buf.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+/// Serialize a [`GrowMat`] (cols + data).
+pub fn write_growmat(w: &mut SnapWriter, g: &GrowMat) {
+    w.write_usize(g.cols);
+    w.f32s(&g.data);
+}
+
+/// Deserialize a [`GrowMat`], validating the row shape.
+pub fn read_growmat(r: &mut SnapReader<'_>) -> anyhow::Result<GrowMat> {
+    let cols = r.read_usize()?;
+    let data = r.f32s()?;
+    anyhow::ensure!(
+        cols == 0 || data.len() % cols == 0,
+        "growmat data {} not divisible by cols {cols}",
+        data.len()
+    );
+    anyhow::ensure!(cols > 0 || data.is_empty(), "growmat with 0 cols must be empty");
+    Ok(GrowMat { cols, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip_all_kinds() {
+        let mut w = SnapWriter::new();
+        w.u8(7);
+        w.u64(u64::MAX - 3);
+        w.write_usize(42);
+        w.u8s(&[1, 2, 3]);
+        w.f32s(&[0.0, -0.0, f32::MIN_POSITIVE, 1.5e30, -7.25]);
+        w.usizes(&[0, 9, usize::MAX]);
+        let buf = w.finish();
+        let mut r = SnapReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.read_usize().unwrap(), 42);
+        assert_eq!(r.u8s().unwrap(), vec![1, 2, 3]);
+        let f = r.f32s().unwrap();
+        assert_eq!(f.len(), 5);
+        // Bit-exact, including the sign of -0.0.
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f[3], 1.5e30);
+        assert_eq!(r.usizes().unwrap(), vec![0, 9, usize::MAX]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = SnapWriter::new();
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let mut buf = w.finish();
+        buf.truncate(buf.len() - 2);
+        let mut r = SnapReader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_an_error_not_a_panic() {
+        // A corrupt blob whose length prefix decodes near usize::MAX must
+        // error through the checked paths, not overflow the multiply.
+        let mut w = SnapWriter::new();
+        w.u64(u64::MAX - 1);
+        let buf = w.finish();
+        assert!(SnapReader::new(&buf).f32s().is_err());
+        assert!(SnapReader::new(&buf).usizes().is_err());
+        assert!(SnapReader::new(&buf).u8s().is_err());
+    }
+
+    #[test]
+    fn snapshot_encode_decode() {
+        let snap = KvSnapshot::new(tags::CSKV, vec![9, 8, 7]);
+        let bytes = snap.encode();
+        assert_eq!(bytes.len(), snap.size_bytes());
+        let back = KvSnapshot::decode(&bytes).unwrap();
+        assert_eq!(back.tag(), tags::CSKV);
+        assert_eq!(back.payload(), &[9, 8, 7]);
+        back.expect_tag(tags::CSKV, "test").unwrap();
+        assert!(back.expect_tag(tags::FULL, "test").is_err());
+        assert!(KvSnapshot::decode(&bytes[..8]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(KvSnapshot::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn nested_snapshot_roundtrip_matches_byte_form() {
+        let inner = KvSnapshot::new(tags::ASVD, vec![5, 6, 7, 8]);
+        // nested() is byte-identical to the u8s(encode()) form.
+        let via_nested = {
+            let mut w = SnapWriter::new();
+            w.nested(&inner);
+            w.finish()
+        };
+        let via_u8s = {
+            let mut w = SnapWriter::new();
+            w.u8s(&inner.encode());
+            w.finish()
+        };
+        assert_eq!(via_nested, via_u8s);
+        // And reads back through SnapReader::nested.
+        let mut w = SnapWriter::new();
+        w.write_usize(9);
+        w.nested(&inner);
+        let buf = w.finish();
+        let mut r = SnapReader::new(&buf);
+        assert_eq!(r.read_usize().unwrap(), 9);
+        let back = r.nested().unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.tag(), tags::ASVD);
+        assert_eq!(back.payload(), inner.payload());
+    }
+
+    #[test]
+    fn growmat_roundtrip() {
+        let mut g = GrowMat::new(3);
+        g.push_row(&[1.0, -2.5, 3.25]);
+        g.push_row(&[0.0, 7.0, -0.0]);
+        let mut w = SnapWriter::new();
+        write_growmat(&mut w, &g);
+        let buf = w.finish();
+        let mut r = SnapReader::new(&buf);
+        let back = read_growmat(&mut r).unwrap();
+        assert_eq!(back.cols, 3);
+        assert_eq!(back.data, g.data);
+        r.expect_end().unwrap();
+    }
+}

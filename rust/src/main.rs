@@ -7,6 +7,15 @@
 //! * `eval`      — run one suite × policy grid cell.
 //! * `serve`     — demo serving run through the coordinator.
 //!
+//! `serve` flags: `--requests N --n-new N --ctx N --max-batch N
+//! --kv-budget-kb N --threads N --sequential` plus the control plane:
+//! `--scheduler {fifo,size-aware,preemptive}` picks the admission/
+//! preemption policy (fifo = strict arrival order; size-aware = shortest
+//! work first within the KV budget; preemptive = size-aware + cold-tier
+//! swap-out under budget pressure) and `--cold-tier <dir>` spills
+//! preempted KV snapshots to a directory instead of holding them in
+//! memory.
+//!
 //! The benches (`cargo bench`) regenerate the paper's tables; this binary
 //! is the operational entry point a user scripts against.
 
@@ -244,7 +253,14 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         // --sequential restores per-sequence prefill/decode rounds
         // (identical token streams; fused is the fast path).
         fused: !args.get_flag("sequential"),
+        // --scheduler fifo|size-aware|preemptive: the control plane.
+        scheduler: cskv::coordinator::SchedulerKind::parse(
+            &args.get_str("scheduler", "fifo"),
+        )?,
+        // --cold-tier <dir>: spill preempted KV snapshots to disk.
+        cold_tier_dir: args.get_opt("cold-tier").map(std::path::PathBuf::from),
     };
+    let sched = coord_cfg.scheduler;
     let eng = engine.clone();
     let coord = Coordinator::start(
         Box::new(move || {
@@ -276,7 +292,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     let snap = coord.shutdown();
-    println!("served {n_req} requests (ctx up to {}):", cfg.max_seq);
+    println!(
+        "served {n_req} requests (ctx up to {}, scheduler {}):",
+        cfg.max_seq,
+        sched.name()
+    );
     println!("  {}", snap.report());
     println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
     Ok(())

@@ -69,7 +69,9 @@
 //! * [`Engine::decode_step_batch`] stacks the B current hidden states
 //!   into a `[B, d]` matrix and fuses the QKV / output / MLP / LM-head
 //!   projections into one weight-streamed pass each via
-//!   [`crate::tensor::matmul::matvec_t_batch_into`]; attention still runs
+//!   [`crate::tensor::matmul::par_matvec_t_batch_into`] (output columns
+//!   split across the persistent pool behind the `threads` knob; the
+//!   serial kernel is the bit-identity oracle); attention still runs
 //!   per-sequence against each policy's [`DecodeView`].
 //!
 //! Both paths keep every per-row reduction order identical to the
@@ -82,7 +84,7 @@
 use std::sync::Arc;
 
 use crate::kvcache::{DecodeView, KvCachePolicy};
-use crate::tensor::matmul::{axpy_row, dot, matvec_t_batch_into, matvec_t_into, par_matmul_into};
+use crate::tensor::matmul::{axpy_row, dot, matvec_t_into, par_matmul_into, par_matvec_t_batch_into};
 use crate::tensor::ops;
 use crate::tensor::Mat;
 use crate::util::threadpool::{parallel_for, resolve_threads, SendPtr};
@@ -430,23 +432,41 @@ fn matmul_skip_zeros(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// The per-head geometry every attention kernel needs, bundled so the
+/// decode helpers stay under clippy's argument budget.
+#[derive(Clone, Copy)]
+struct HeadSplit {
+    n_heads: usize,
+    d_head: usize,
+    scale: f32,
+}
+
+impl HeadSplit {
+    fn of(cfg: &ModelConfig) -> Self {
+        let d_head = cfg.d_head();
+        HeadSplit {
+            n_heads: cfg.n_heads,
+            d_head,
+            scale: 1.0 / (d_head as f32).sqrt(),
+        }
+    }
+}
+
 /// One decode step's per-sequence attention against a synced
 /// [`DecodeView`]: per-head scores + softmax + weighted-V into `attn`,
 /// aggregating per-position probabilities into `agg_probs` for the H2O
 /// feedback. Extracted so [`Engine::decode_step_with`] and
 /// [`Engine::decode_step_batch`] run the *same* code — the batched
 /// scheduler's bit-identity holds for attention by construction.
-#[allow(clippy::too_many_arguments)]
 fn decode_attention(
     view: &DecodeView,
     q: &[f32],
     attn: &mut [f32],
     scores: &mut Vec<f32>,
     agg_probs: &mut Vec<f32>,
-    n_heads: usize,
-    dh: usize,
-    scale: f32,
+    heads: HeadSplit,
 ) {
+    let HeadSplit { n_heads, d_head: dh, scale } = heads;
     let n = view.len();
     attn.fill(0.0);
     agg_probs.clear();
@@ -1045,7 +1065,7 @@ impl Engine {
     ) -> &'s [f32] {
         let cfg = &self.w.cfg;
         let (nh, dh) = (cfg.n_heads, cfg.d_head());
-        let scale = 1.0 / (dh as f32).sqrt();
+        let heads = HeadSplit::of(cfg);
         let DecodeState { views, scratch } = state;
 
         scratch.x.copy_from_slice(self.w.embed.row(token));
@@ -1075,9 +1095,7 @@ impl Engine {
                 &mut scratch.attn,
                 &mut scratch.scores,
                 &mut scratch.agg_probs,
-                nh,
-                dh,
-                scale,
+                heads,
             );
             policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
 
@@ -1126,7 +1144,8 @@ impl Engine {
         }
         let cfg = &self.w.cfg;
         let (nh, dh) = (cfg.n_heads, cfg.d_head());
-        let scale = 1.0 / (dh as f32).sqrt();
+        let heads = HeadSplit::of(cfg);
+        let threads = resolve_threads(cfg.threads);
         batch.ensure(nb, cfg);
 
         for (bi, e) in entries.iter().enumerate() {
@@ -1136,10 +1155,12 @@ impl Engine {
             for bi in 0..nb {
                 ops::rmsnorm(batch.x.row(bi), lw.ln1.row(0), cfg.eps, batch.xnorm.row_mut(bi));
             }
-            // Fused projections: each weight streamed once for the round.
-            matvec_t_batch_into(&lw.wq, &batch.xnorm, &mut batch.q);
-            matvec_t_batch_into(&lw.wk, &batch.xnorm, &mut batch.k);
-            matvec_t_batch_into(&lw.wv, &batch.xnorm, &mut batch.v);
+            // Fused projections: each weight streamed once for the round,
+            // output columns split across the pool (`threads` knob) — the
+            // serial kernel remains the bit-identity oracle.
+            par_matvec_t_batch_into(&lw.wq, &batch.xnorm, &mut batch.q, threads);
+            par_matvec_t_batch_into(&lw.wk, &batch.xnorm, &mut batch.k, threads);
+            par_matvec_t_batch_into(&lw.wv, &batch.xnorm, &mut batch.v, threads);
 
             // Per-sequence cache update, RoPE and attention — identical
             // to the single-sequence step.
@@ -1165,31 +1186,29 @@ impl Engine {
                     batch.attn.row_mut(bi),
                     &mut scratch.scores,
                     &mut scratch.agg_probs,
-                    nh,
-                    dh,
-                    scale,
+                    heads,
                 );
                 policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
             }
 
             // Output projection + residual, fused.
-            matvec_t_batch_into(&lw.wo, &batch.attn, &mut batch.o);
+            par_matvec_t_batch_into(&lw.wo, &batch.attn, &mut batch.o, threads);
             batch.x.add_assign(&batch.o);
             // MLP, fused.
             for bi in 0..nb {
                 ops::rmsnorm(batch.x.row(bi), lw.ln2.row(0), cfg.eps, batch.xn2.row_mut(bi));
             }
-            matvec_t_batch_into(&lw.w1, &batch.xn2, &mut batch.h1);
+            par_matvec_t_batch_into(&lw.w1, &batch.xn2, &mut batch.h1, threads);
             for hv in batch.h1.data.iter_mut() {
                 *hv = ops::silu(*hv);
             }
-            matvec_t_batch_into(&lw.w2, &batch.h1, &mut batch.mlp);
+            par_matvec_t_batch_into(&lw.w2, &batch.h1, &mut batch.mlp, threads);
             batch.x.add_assign(&batch.mlp);
         }
         for bi in 0..nb {
             ops::rmsnorm(batch.x.row(bi), self.w.ln_f.row(0), cfg.eps, batch.xf.row_mut(bi));
         }
-        matvec_t_batch_into(&self.w.lm_head, &batch.xf, &mut batch.logits);
+        par_matvec_t_batch_into(&self.w.lm_head, &batch.xf, &mut batch.logits, threads);
     }
 
     /// One decode step with a throwaway [`DecodeState`] (compatibility /

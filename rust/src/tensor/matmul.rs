@@ -328,6 +328,58 @@ pub fn matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat) {
     }
 }
 
+/// Minimum output-column span worth handing to one worker: below this the
+/// pool dispatch costs more than the AXPY slices it parallelizes.
+const BATCH_GEMV_MIN_COLS: usize = 64;
+
+/// [`matvec_t_batch_into`] with the **output columns** split into
+/// contiguous blocks across up to `threads` pooled workers — the
+/// decode-side threading for GEMM-batched serving rounds (large `B ×
+/// d_ff` down-projections are where the column split pays).
+///
+/// Each worker runs the full (input-dim, batch) loop over its own column
+/// block `[c0, c1)`: it streams its slice of every weight row exactly
+/// once (total weight traffic unchanged) and writes a disjoint column
+/// range of every output row. Per output element the reduction is the
+/// same ascending-input-dim order with the same `xi == 0.0` skip as the
+/// serial kernel, so the result is **bit-identical to
+/// [`matvec_t_batch_into`] at every thread count** — the serial kernel
+/// stays as the oracle, and `rust/tests/batched_serving.rs` exercises
+/// both widths end to end.
+pub fn par_matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat, threads: usize) {
+    assert_eq!(a.rows, xs.cols);
+    assert_eq!(a.cols, ys.cols);
+    assert_eq!(xs.rows, ys.rows);
+    let threads = threads.max(1).min(a.cols / BATCH_GEMV_MIN_COLS);
+    if threads <= 1 {
+        matvec_t_batch_into(a, xs, ys);
+        return;
+    }
+    let (n_in, n_out, nb) = (a.rows, a.cols, xs.rows);
+    let ptr = SendPtr(ys.data.as_mut_ptr());
+    parallel_chunks(n_out, threads, |c0, c1| {
+        let w = c1 - c0;
+        for b in 0..nb {
+            // Safety: workers receive disjoint `[c0, c1)` column ranges,
+            // so the row-b output slices never overlap, and `ys` outlives
+            // the parallel region.
+            let yrow = unsafe { ptr.slice_mut(b * n_out + c0, w) };
+            yrow.fill(0.0);
+        }
+        for i in 0..n_in {
+            let arow = &a.row(i)[c0..c1];
+            for b in 0..nb {
+                let xi = xs.at(b, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                let yrow = unsafe { ptr.slice_mut(b * n_out + c0, w) };
+                axpy_row(yrow, xi, arow);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -488,6 +540,32 @@ mod tests {
             for b in 0..batch {
                 let want = matvec_t(&a, xs.row(b));
                 assert_eq!(ys.row(b), &want[..], "({d_in},{d_out}) row {b}");
+            }
+        }
+    }
+
+    /// The decode-threading contract: the column-block parallel batched
+    /// GEMV is bit-identical to the serial kernel at every thread count,
+    /// at widths below (serial fallback), at and above the per-worker
+    /// column minimum.
+    #[test]
+    fn par_batch_matvec_t_bit_identical_at_every_width() {
+        let mut rng = Pcg64::new(22);
+        for (d_in, d_out, batch) in [(7, 33, 2), (64, 64, 1), (48, 130, 8), (96, 260, 5)] {
+            let a = Mat::randn(d_in, d_out, 1.0, &mut rng);
+            let mut xs = Mat::randn(batch, d_in, 1.0, &mut rng);
+            for v in xs.data.iter_mut().step_by(7) {
+                *v = 0.0; // the zero-skip is part of the shared semantics
+            }
+            let mut want = Mat::zeros(batch, d_out);
+            matvec_t_batch_into(&a, &xs, &mut want);
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = Mat::from_vec(batch, d_out, vec![9.0; batch * d_out]); // dirty
+                par_matvec_t_batch_into(&a, &xs, &mut got, threads);
+                assert_eq!(
+                    got.data, want.data,
+                    "({d_in},{d_out},B={batch}) threads={threads}"
+                );
             }
         }
     }

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
 use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
 use cskv::coordinator::server::{BackendFactory, Setup};
-use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend, SchedulerKind};
 use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
 use cskv::model::engine::{
     BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine,
@@ -272,6 +272,174 @@ fn short_request_admitted_mid_flight_overtakes_long_one() {
     let snap = coord.shutdown();
     assert_eq!(snap.requests_completed, 2);
     assert!(snap.active_peak >= 2, "short request must join the running batch");
+}
+
+/// A full-cache Setup that blocks inside the worker thread until `gate`
+/// fires — so a test can queue a whole workload before the scheduler
+/// sees any of it (deterministic admission order, no submit races).
+fn gated_setup(seed: u64, gate: std::sync::mpsc::Receiver<()>) -> Setup {
+    Box::new(move || {
+        let _ = gate.recv();
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+/// The scheduler fairness oracle (head-of-line blocking): one 509-token
+/// prompt queued ahead of eight 16-token prompts, with a KV budget that
+/// hosts either the long prompt or all the shorts — not both.
+///
+/// * `Fifo` admits the long head first; every short waits behind it and
+///   the long request retires **first** (the documented head-of-line
+///   block, asserted via the retirement order and queue-wait metrics).
+/// * `SizeAware` admits all eight shorts ahead of the long prompt; every
+///   short retires before the long one finishes and short queue waits
+///   drop below the long one's.
+#[test]
+fn size_aware_eliminates_head_of_line_blocking_where_fifo_must_not() {
+    let cfg = ModelConfig::test_small();
+    let mut rng = Pcg64::new(41);
+    let long_prompt: Vec<usize> = (0..509).map(|_| rng.range(16, 250)).collect();
+    let short_prompts: Vec<Vec<usize>> = (0..8)
+        .map(|_| (0..16).map(|_| rng.range(16, 250)).collect())
+        .collect();
+    let n_new = 4;
+    // Long projects to 513 tokens, the eight shorts to 8 × 20 = 160: a
+    // 524-token budget fits the long alone (with < 1 short of headroom,
+    // so fifo can't sneak a short in beside it) or all eight shorts
+    // together — never both sides at once.
+    let budget = cfg.kv_bytes_full(524);
+    for (kind, long_first) in [(SchedulerKind::Fifo, true), (SchedulerKind::SizeAware, false)] {
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let coord = Coordinator::start(
+            gated_setup(23, gate_rx),
+            CoordinatorConfig {
+                max_batch: 16,
+                kv_budget_bytes: Some(budget),
+                scheduler: kind,
+                ..Default::default()
+            },
+        );
+        let long_rx = coord.submit(long_prompt.clone(), n_new);
+        let short_rxs: Vec<_> = short_prompts
+            .iter()
+            .map(|p| coord.submit(p.clone(), n_new))
+            .collect();
+        gate_tx.send(()).unwrap(); // release the worker: the whole queue is visible at once
+        let long = long_rx.recv().unwrap();
+        assert!(long.error.is_none());
+        assert_eq!(long.tokens.len(), n_new);
+        let shorts: Vec<_> = short_rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        for s in &shorts {
+            assert!(s.error.is_none());
+            assert_eq!(s.tokens.len(), n_new);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_completed, 9);
+        assert_eq!(snap.preemptions, 0, "neither policy preempts here");
+        let long_pos = snap
+            .completion_order
+            .iter()
+            .position(|&id| id == long.id)
+            .expect("long request retired");
+        let max_short_wait = shorts.iter().map(|s| s.queue_wait_s).fold(0.0, f64::max);
+        let min_short_wait = shorts.iter().map(|s| s.queue_wait_s).fold(f64::MAX, f64::min);
+        if long_first {
+            assert_eq!(
+                long_pos, 0,
+                "fifo: the long head must retire before any short (head-of-line block)"
+            );
+            assert!(
+                min_short_wait > long.queue_wait_s,
+                "fifo: every short queues behind the long prompt \
+                 (short min {min_short_wait:.4}s vs long {:.4}s)",
+                long.queue_wait_s
+            );
+        } else {
+            assert_eq!(
+                long_pos,
+                snap.completion_order.len() - 1,
+                "size-aware: every short must retire before the long request finishes \
+                 (order {:?}, long id {})",
+                snap.completion_order,
+                long.id
+            );
+            assert!(
+                max_short_wait < long.queue_wait_s,
+                "size-aware: shorts stop queueing behind the long prompt \
+                 (short max {max_short_wait:.4}s vs long {:.4}s)",
+                long.queue_wait_s
+            );
+        }
+    }
+}
+
+/// Preemption round-trip through the whole scheduler with the paper's
+/// compressed cache: a long CSKV generation is swapped to the cold tier
+/// (its snapshot carrying the low-rank features), a short request runs,
+/// and the restored long stream is bit-identical to the direct engine.
+#[test]
+fn preemptive_scheduler_round_trips_cskv_sequences() {
+    let engine = make_engine(29);
+    let cfg = ModelConfig::test_small();
+    let long_prompt: Vec<usize> = (0..40).map(|i| (i * 13 + 5) % 256).collect();
+    let short_prompt = vec![7usize, 11, 13];
+    let (long_n, short_n) = (90usize, 2usize);
+    let want_long = {
+        let mut pol = mk_policies().swap_remove(1); // cskv fp32
+        engine.generate(&long_prompt, long_n, pol.as_mut()).0
+    };
+    let want_short = {
+        let mut pol = mk_policies().swap_remove(1);
+        engine.generate(&short_prompt, short_n, pol.as_mut()).0
+    };
+    // Budget: the cskv projection of the long sequence plus a hair — the
+    // short request can only run by swapping the long one out.
+    let long_cost = mk_policies()
+        .swap_remove(1)
+        .kv_bytes_projected(long_prompt.len() + long_n);
+    let short_cost = mk_policies()
+        .swap_remove(1)
+        .kv_bytes_projected(short_prompt.len() + short_n);
+    let budget = long_cost + short_cost / 2;
+    let coord = Coordinator::start(
+        policy_setup(29, 1),
+        CoordinatorConfig {
+            max_batch: 4,
+            kv_budget_bytes: Some(budget),
+            scheduler: SchedulerKind::Preemptive,
+            ..Default::default()
+        },
+    );
+    let long_rx = coord.submit(long_prompt.clone(), long_n);
+    let t0 = std::time::Instant::now();
+    while coord.metrics().kv_bytes_current() == 0 {
+        assert!(t0.elapsed().as_secs() < 30, "long request never started");
+        std::thread::yield_now();
+    }
+    let short = coord.submit_wait(short_prompt, short_n);
+    assert!(short.error.is_none(), "{:?}", short.error);
+    assert_eq!(short.tokens, want_short);
+    let long = long_rx.recv().unwrap();
+    assert!(long.error.is_none(), "{:?}", long.error);
+    assert_eq!(long.tokens, want_long, "compressed swap-out must resume bit-identically");
+    let snap = coord.shutdown();
+    assert!(snap.preemptions >= 1, "budget pressure must trigger a swap-out");
+    assert_eq!(snap.restores, snap.preemptions);
+    assert!(
+        snap.cold_bytes_peak > 0 && snap.cold_bytes_peak < cfg.kv_bytes_full(long_prompt.len() + long_n),
+        "cold snapshot stores the compressed representation, not the materialized cache \
+         (got {} vs full {})",
+        snap.cold_bytes_peak,
+        cfg.kv_bytes_full(long_prompt.len() + long_n)
+    );
 }
 
 /// A backend factory that fails every second construction.

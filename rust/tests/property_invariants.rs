@@ -7,8 +7,12 @@ use std::sync::Arc;
 use cskv::compress::ratio::{rank_for_keep, KvCompressionPlan};
 use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
 use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
-use cskv::kvcache::{CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, QuantMode};
+use cskv::kvcache::{
+    CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, KvSnapshot, QuantMode,
+};
+use cskv::model::engine::DecodeState;
 use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::tensor::ops;
 use cskv::tensor::Mat;
 use cskv::util::prng::Pcg64;
 use cskv::util::prop::{forall, zip, Gen};
@@ -378,6 +382,116 @@ fn prop_streaming_prefill_bit_identical_to_serial_reference() {
             true
         },
     );
+}
+
+/// Engine-geometry policy set for the preemption round-trip sweep: the
+/// paper policy in both quant modes plus every baseline.
+fn preemptable_policies() -> Vec<Box<dyn KvCachePolicy>> {
+    let cfg = ModelConfig::test_small();
+    let (l, d) = (cfg.n_layers, cfg.d_model);
+    vec![
+        Box::new(FullCache::new(l, d)),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 6, quant: QuantMode::None },
+        )),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 6, quant: QuantMode::Int4 },
+        )),
+        Box::new(StreamingLlmCache::new(l, d, 2, 12)),
+        Box::new(H2oCache::new(l, d, 10)),
+        Box::new(AsvdCache::new(engine_factors(8))),
+    ]
+}
+
+/// THE correctness oracle for the preemptive scheduler's state
+/// migration: for every policy × ctx {64, 256, 509} × threads {1, 8},
+/// a generation that is snapshotted mid-decode, round-tripped through
+/// the cold tier's encoded byte form, and restored into a **fresh**
+/// policy + fresh engine `DecodeState` (views rebuilt through the
+/// normal `sync_view` path) must produce the exact token stream — and
+/// the exact final cache state — of an unpreempted run.
+///
+/// The snapshot point (after 2 decode steps, every ctx > window) is
+/// deliberately mid-window-migration for the bi-branch cache: each
+/// append is rolling one token from the exact window into the
+/// compressed branch, and at ctx 509 the int4 store also holds a
+/// partially-filled residual group.
+#[test]
+fn snapshot_restore_decode_bit_identical_to_unpreempted() {
+    let base = ModelConfig::test_small();
+    let n_policies = preemptable_policies().len();
+    const SPLIT: usize = 2; // decode steps before the snapshot
+    const TAIL: usize = 4; // decode steps after the restore
+    for threads in [1usize, 8] {
+        let cfg = base.clone().with_threads(threads);
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+        for ctx in [64usize, 256, 509] {
+            let mut rng = Pcg64::new(ctx as u64 * 31 + threads as u64);
+            let tokens: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+            for pi in 0..n_policies {
+                // Unpreempted oracle.
+                let mut oracle = preemptable_policies().swap_remove(pi);
+                let name = oracle.name();
+                let rec = engine.prefill(&tokens, Some(oracle.as_mut()));
+                let mut ostate = DecodeState::new(&engine.w.cfg);
+                let mut tok = ops::argmax(rec.logits.row(ctx - 1));
+                let mut want = vec![tok];
+                for i in 0..(SPLIT + TAIL) {
+                    let logits =
+                        engine.decode_step_with(oracle.as_mut(), tok, ctx + i, &mut ostate);
+                    tok = ops::argmax(logits);
+                    want.push(tok);
+                }
+
+                // Preempted run: decode SPLIT steps, snapshot, drop the
+                // hot state entirely, restore into a fresh policy.
+                let mut pre = preemptable_policies().swap_remove(pi);
+                let rec2 = engine.prefill(&tokens, Some(pre.as_mut()));
+                let mut pstate = DecodeState::new(&engine.w.cfg);
+                let mut tok2 = ops::argmax(rec2.logits.row(ctx - 1));
+                let mut got = vec![tok2];
+                for i in 0..SPLIT {
+                    let logits =
+                        engine.decode_step_with(pre.as_mut(), tok2, ctx + i, &mut pstate);
+                    tok2 = ops::argmax(logits);
+                    got.push(tok2);
+                }
+                // Round-trip through the encoded byte form — exactly
+                // what the cold tier stores and reads back.
+                let snap = KvSnapshot::decode(&pre.snapshot().encode())
+                    .expect("snapshot encoding round-trips");
+                drop(pre);
+                drop(pstate);
+                let mut restored = preemptable_policies().swap_remove(pi);
+                restored
+                    .restore(&snap)
+                    .unwrap_or_else(|e| panic!("{name}: restore failed: {e:#}"));
+                let mut rstate = DecodeState::new(&engine.w.cfg);
+                for i in SPLIT..(SPLIT + TAIL) {
+                    let logits =
+                        engine.decode_step_with(restored.as_mut(), tok2, ctx + i, &mut rstate);
+                    tok2 = ops::argmax(logits);
+                    got.push(tok2);
+                }
+                assert_eq!(
+                    got, want,
+                    "{name}: ctx={ctx} threads={threads}: preempted stream must equal unpreempted"
+                );
+                // Final cache state is bit-identical too.
+                for li in 0..engine.w.cfg.n_layers {
+                    let (a, b) = (oracle.materialize(li), restored.materialize(li));
+                    assert_eq!(a.k.data, b.k.data, "{name}: K state L{li} ctx={ctx}");
+                    assert_eq!(a.v.data, b.v.data, "{name}: V state L{li} ctx={ctx}");
+                    assert_eq!(a.rope_pos, b.rope_pos, "{name}: rope L{li}");
+                    assert_eq!(a.abs_pos, b.abs_pos, "{name}: abs L{li}");
+                }
+            }
+        }
+    }
 }
 
 /// The admission pre-charge's accuracy: for fp32 policies,
