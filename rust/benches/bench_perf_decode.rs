@@ -1,12 +1,18 @@
 //! §Perf — decode latency/throughput and serving concurrency.
 //!
-//! Three measurements:
+//! Five measurements:
 //! 1. micro: per-token decode latency vs context length, full vs CSKV
 //!    (fp32 and int4) with the engine's persistent incremental
-//!    [`DecodeState`], plus "rematerialize" rows that rebuild the views
-//!    from scratch every step — exactly what the pre-incremental decode
-//!    path did, so one run shows the O(context) → O(window + rank)
-//!    speedup directly.
+//!    [`DecodeState`], plus "rematerialize" rows (at every context) that
+//!    rebuild the views from scratch every step — exactly what the
+//!    pre-incremental decode path did, so one run shows the
+//!    O(context) → O(window + rank) speedup directly.
+//! 1b. fused int4 attention kernel A/B: scoring/weighting straight off
+//!    packed [`QuantizedBlock`] groups vs dequantizing them into an f32
+//!    scratch and running the plain GEMV kernels — the win the fused
+//!    decode path banks every step.
+//! 1c. SIMD GEMV A/B: the batched decode projection kernel
+//!    ([`matvec_t_batch_into`]) dispatch vs its scalar oracle.
 //! 2. serving: coordinator throughput under a fixed KV budget, full vs
 //!    CSKV backends — the operational payoff (more concurrency at equal
 //!    memory).
@@ -22,6 +28,7 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
+use cskv::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};
 use cskv::compress::{InitMethod, KvCompressionPlan};
 use cskv::coordinator::pjrt_backend::{PjrtContext, PjrtCskvSession, PjrtFullSession};
 use cskv::coordinator::server::{BackendFactory, Setup};
@@ -32,7 +39,9 @@ use cskv::finetune::recon::QatMode;
 use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
 use cskv::model::engine::DecodeState;
 use cskv::runtime::Runtime;
-use cskv::util::bench::{print_bench_header, Bencher};
+use cskv::tensor::matmul::{axpy_row, dot, matvec_t_batch_into, matvec_t_batch_into_scalar};
+use cskv::tensor::Mat;
+use cskv::util::bench::{black_box, print_bench_header, Bencher};
 use cskv::util::cli::Args;
 use cskv::util::prng::Pcg64;
 use cskv::util::table::Table;
@@ -86,9 +95,9 @@ fn main() -> anyhow::Result<()> {
     }
     // Rematerialize rows: a fresh DecodeState every step forces the full
     // reconstruct + RoPE rebuild the pre-incremental engine paid per
-    // token — the denominator of the headline speedup.
-    {
-        let ctx = 509usize;
+    // token — the denominator of the headline speedup. Run at every
+    // context so the O(context) growth of the baseline is on record.
+    for ctx in [128usize, 256, 509] {
         let prompt: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
         for (label, quant) in variants {
             let mut p = mk_policy(quant);
@@ -118,6 +127,119 @@ fn main() -> anyhow::Result<()> {
                         remat / inc
                     );
                 }
+            }
+        }
+    }
+
+    // ---- 1b. fused int4 attention kernel vs materialize-then-GEMV -------
+    // The per-step choice the fused decode path wins: score/weight the
+    // sealed history straight off the packed codes, or first dequantize
+    // the groups into an f32 scratch and run the plain kernels (what a
+    // non-fused implementation over packed storage must do every step).
+    {
+        let d = cfg.d_model;
+        let (nh, dh) = (cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        for ctx in [128usize, 256, 509] {
+            let n_groups = ctx / GROUP;
+            let n_q = n_groups * GROUP;
+            let mut kblocks: Vec<QuantizedBlock> = Vec::new();
+            let mut vblocks: Vec<QuantizedBlock> = Vec::new();
+            for _ in 0..n_groups {
+                kblocks.push(quantize_block(&Mat::randn(GROUP, d, 1.0, &mut rng), QuantAxis::PerChannel));
+                vblocks.push(quantize_block(&Mat::randn(GROUP, d, 1.0, &mut rng), QuantAxis::PerToken));
+            }
+            let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let mut scores = vec![0.0f32; n_q];
+            let mut attn = vec![0.0f32; d];
+            b.time(&format!("decode attn int4 fused ctx={ctx}"), || {
+                attn.fill(0.0);
+                for h in 0..nh {
+                    let (lo, hi) = (h * dh, (h + 1) * dh);
+                    for (gi, g) in kblocks.iter().enumerate() {
+                        g.fused_dot_rows(&q[lo..hi], lo, hi, scale, &mut scores[gi * GROUP..(gi + 1) * GROUP]);
+                    }
+                    for (gi, g) in vblocks.iter().enumerate() {
+                        g.fused_axpy_rows(&scores[gi * GROUP..(gi + 1) * GROUP], lo, hi, &mut attn[lo..hi]);
+                    }
+                }
+                black_box(attn[0]);
+            });
+            let mut kmat = Mat::zeros(n_q, d);
+            let mut vmat = Mat::zeros(n_q, d);
+            b.time(&format!("decode attn int4 materialize ctx={ctx}"), || {
+                for (gi, g) in kblocks.iter().enumerate() {
+                    g.dequantize_rows_into(0, GROUP, &mut kmat.data[gi * GROUP * d..(gi + 1) * GROUP * d]);
+                }
+                for (gi, g) in vblocks.iter().enumerate() {
+                    g.dequantize_rows_into(0, GROUP, &mut vmat.data[gi * GROUP * d..(gi + 1) * GROUP * d]);
+                }
+                attn.fill(0.0);
+                for h in 0..nh {
+                    let (lo, hi) = (h * dh, (h + 1) * dh);
+                    for (i, s) in scores.iter_mut().enumerate() {
+                        *s = dot(&q[lo..hi], &kmat.row(i)[lo..hi]) * scale;
+                    }
+                    for (i, s) in scores.iter().enumerate() {
+                        axpy_row(&mut attn[lo..hi], *s, &vmat.row(i)[lo..hi]);
+                    }
+                }
+                black_box(attn[0]);
+            });
+        }
+        let med = |b: &Bencher, name: &str| -> Option<f64> {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.samples.percentile(50.0))
+        };
+        for ctx in [128usize, 256, 509] {
+            if let (Some(fused), Some(mat)) = (
+                med(&b, &format!("decode attn int4 fused ctx={ctx}")),
+                med(&b, &format!("decode attn int4 materialize ctx={ctx}")),
+            ) {
+                if fused > 0.0 {
+                    println!(
+                        "speedup int4 attn ctx={ctx}: fused {:.2}x vs materialize+GEMV{}",
+                        mat / fused,
+                        if ctx == 509 { "   <-- gate (>=1.3x)" } else { "" },
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- 1c. SIMD batched decode GEMV vs scalar oracle ------------------
+    {
+        let (d_in, d_out, batch) = (cfg.d_model, cfg.d_ff, 8usize);
+        let a = Mat::randn(d_in, d_out, 1.0, &mut rng);
+        let xs = Mat::randn(batch, d_in, 1.0, &mut rng);
+        let mut ys = Mat::zeros(batch, d_out);
+        b.time(&format!("batched gemv {d_in}x{d_out} B={batch} simd-dispatch"), || {
+            matvec_t_batch_into(&a, &xs, &mut ys);
+            black_box(ys.data[0]);
+        });
+        b.time(&format!("batched gemv {d_in}x{d_out} B={batch} scalar-oracle"), || {
+            matvec_t_batch_into_scalar(&a, &xs, &mut ys);
+            black_box(ys.data[0]);
+        });
+        let med = |b: &Bencher, name: &str| -> Option<f64> {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.samples.percentile(50.0))
+        };
+        if let (Some(dispatch), Some(scalar)) = (
+            med(&b, &format!("batched gemv {d_in}x{d_out} B={batch} simd-dispatch")),
+            med(&b, &format!("batched gemv {d_in}x{d_out} B={batch} scalar-oracle")),
+        ) {
+            if dispatch > 0.0 {
+                println!(
+                    "speedup batched gemv: simd dispatch {:.2}x vs scalar (feature {}){}",
+                    scalar / dispatch,
+                    if cfg!(feature = "simd") { "on" } else { "off" },
+                    if cfg!(feature = "simd") { "   <-- gate (>=1.5x)" } else { "" },
+                );
             }
         }
     }

@@ -1,10 +1,15 @@
 //! §Perf — long-context prefill latency: the second hot path, after
 //! `bench_perf_decode` covered decode.
 //!
-//! Three measurements:
+//! Four measurements:
 //! 1. GEMM inner loop A/B: the dense blocked kernel with vs without the
 //!    removed `aip == 0.0` per-element branch (the satellite's measured
-//!    before/after record).
+//!    before/after record), plus SIMD-dispatch vs scalar-oracle rows on
+//!    the same shapes.
+//! 1b. `A·Bᵀ` depth blocking A/B: the `KC`-blocked score kernel vs the
+//!    pre-PR full-length-dot baseline (kept bench-local), at a depth
+//!    below `KC` (blocking is a no-op) and one well above it (where the
+//!    B-panel re-streaming pays), with scalar-oracle rows alongside.
 //! 2. prefill: streaming tiled parallel prefill ([`Engine::prefill`]) at
 //!    1/2/4/8 worker threads vs the pre-PR serial path (kept verbatim as
 //!    [`Engine::prefill_reference`]), across context lengths — the
@@ -31,12 +36,32 @@ use cskv::compress::{KvCompressionPlan, LayerFactors, LowRankFactors, ModelFacto
 use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
 use cskv::model::engine::{Engine, PrefillScratch};
 use cskv::model::{ModelConfig, ModelWeights};
-use cskv::tensor::matmul::{axpy_row, matmul_into};
+use cskv::tensor::matmul::{
+    axpy_row, dot, matmul_into, matmul_into_scalar, matmul_nt_into, matmul_nt_into_scalar, KC,
+};
 use cskv::tensor::Mat;
 use cskv::util::bench::{black_box, print_bench_header, Bencher};
 use cskv::util::cli::Args;
 use cskv::util::prng::Pcg64;
 use cskv::util::threadpool::ThreadPool;
+
+/// The pre-PR `matmul_nt_into` — one full-length dot per output element,
+/// no `KC` depth blocking — kept here (and only here) as the baseline for
+/// the depth-blocking A/B. Uses the same dispatched [`dot`] primitive, so
+/// the row isolates blocking from SIMD.
+fn matmul_nt_into_unblocked(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let k = a.cols;
+    let n = b.rows;
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            *cj = dot(arow, &b.data[j * k..(j + 1) * k]);
+        }
+    }
+}
 
 /// The pre-PR `matmul_into` inner loop, branch included — kept here (and
 /// only here) as the A/B baseline for the removed `aip == 0.0` skip.
@@ -128,6 +153,10 @@ fn main() -> anyhow::Result<()> {
                 matmul_into_branchy(&a, &bm, &mut c);
                 black_box(c.data[0]);
             });
+            b.time(&format!("gemm {label} {m}x{k}x{n} scalar-oracle"), || {
+                matmul_into_scalar(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
         }
         let med = |b: &Bencher, name: &str| -> Option<f64> {
             b.results()
@@ -142,6 +171,65 @@ fn main() -> anyhow::Result<()> {
             ) {
                 if new > 0.0 {
                     println!("gemm branch removal {label}: {:.3}x vs pre-PR branchy", old / new);
+                }
+            }
+            if let (Some(dispatch), Some(scalar)) = (
+                med(&b, &format!("gemm {label} {m}x{k}x{n} branchless")),
+                med(&b, &format!("gemm {label} {m}x{k}x{n} scalar-oracle")),
+            ) {
+                if dispatch > 0.0 {
+                    println!(
+                        "gemm simd dispatch {label}: {:.3}x vs scalar oracle (simd feature {})",
+                        scalar / dispatch,
+                        if cfg!(feature = "simd") { "on" } else { "off" },
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- 1b. A·Bᵀ depth-blocking + SIMD A/B -----------------------------
+    {
+        let mut rng = Pcg64::new(7);
+        // Two depths around the KC boundary: the score panel prefill runs
+        // (k = d_model, below KC ⇒ blocking is a structural no-op) and a
+        // long-depth panel (k = 4·KC) where re-streaming the B panel per
+        // depth block is the point.
+        for (m, n, k) in [(509usize, 509usize, 128usize), (256, 509, 4 * KC)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let bm = Mat::randn(n, k, 1.0, &mut rng);
+            let mut c = Mat::zeros(m, n);
+            b.time(&format!("gemm-nt {m}x{n}x{k} blocked"), || {
+                matmul_nt_into(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
+            b.time(&format!("gemm-nt {m}x{n}x{k} unblocked(pre-PR)"), || {
+                matmul_nt_into_unblocked(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
+            b.time(&format!("gemm-nt {m}x{n}x{k} blocked scalar-oracle"), || {
+                matmul_nt_into_scalar(&a, &bm, &mut c);
+                black_box(c.data[0]);
+            });
+        }
+        let med = |b: &Bencher, name: &str| -> Option<f64> {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.samples.percentile(50.0))
+        };
+        for (m, n, k) in [(509usize, 509usize, 128usize), (256, 509, 4 * KC)] {
+            if let (Some(blocked), Some(unblocked), Some(scalar)) = (
+                med(&b, &format!("gemm-nt {m}x{n}x{k} blocked")),
+                med(&b, &format!("gemm-nt {m}x{n}x{k} unblocked(pre-PR)")),
+                med(&b, &format!("gemm-nt {m}x{n}x{k} blocked scalar-oracle")),
+            ) {
+                if blocked > 0.0 {
+                    println!(
+                        "gemm-nt k={k}: KC-blocking {:.3}x vs unblocked, simd {:.3}x vs scalar",
+                        unblocked / blocked,
+                        scalar / blocked,
+                    );
                 }
             }
         }

@@ -43,9 +43,21 @@ impl LowRankFactors {
         matmul::matvec_t(&self.a, x)
     }
 
+    /// [`LowRankFactors::compress_row`] into a preallocated `rank`-length
+    /// buffer (zero-alloc decode appends).
+    pub fn compress_row_into(&self, x: &[f32], out: &mut [f32]) {
+        matmul::matvec_t_into(&self.a, x, out)
+    }
+
     /// Reconstruct `K̂ = C·B` (`[n, d_out]`).
     pub fn reconstruct(&self, c: &Mat) -> Mat {
         c.matmul(&self.b)
+    }
+
+    /// [`LowRankFactors::reconstruct`] into a preallocated `[n, d_out]`
+    /// output (zero-alloc decode-time window migration).
+    pub fn reconstruct_into(&self, c: &Mat, out: &mut Mat) {
+        matmul::matmul_into(c, &self.b, out)
     }
 
     /// Effective weight `A·B` (for ASVD-style whole-weight replacement).

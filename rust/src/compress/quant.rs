@@ -6,6 +6,18 @@
 //! Tokens are quantized in groups of [`GROUP`] once a group fills; the
 //! residual (< GROUP newest tokens) stays fp32, exactly like KIVI's
 //! residual window.
+//!
+//! ## Fused GEMV over packed codes
+//!
+//! [`QuantizedBlock::fused_dot_rows`] / [`QuantizedBlock::fused_axpy_rows`]
+//! let decode attention consume a sealed block *directly* — packed codes
+//! + affine params, dequantized inline inside the reduction — instead of
+//! materializing the block into f32 rows first. Both replicate the
+//! scalar kernels' reduction order exactly (`dot_scalar`'s 4-accumulator
+//! sum, `axpy_row_scalar`'s elementwise update), so they are
+//! **bit-identical** to dequantize-then-scalar-GEMV on any block,
+//! including partial final groups and column sub-ranges (head slices) —
+//! `rust/tests/property_invariants.rs` holds the oracle.
 
 use crate::tensor::Mat;
 
@@ -22,7 +34,7 @@ pub enum QuantAxis {
 }
 
 /// A quantized `[rows, cols]` block: packed int4 codes + affine params.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantizedBlock {
     pub rows: usize,
     pub cols: usize,
@@ -176,6 +188,74 @@ impl QuantizedBlock {
         }
     }
 
+    /// Dequantize one element at row `r`, absolute column `j` — the
+    /// inline primitive the fused GEMV kernels are built from. Exactly
+    /// the arithmetic of [`QuantizedBlock::dequantize_rows_into`]
+    /// (`q as f32 * scale[p] + zero[p]`), so fused and
+    /// materialize-then-compute paths see identical f32 values.
+    #[inline(always)]
+    fn deq(&self, r: usize, j: usize) -> f32 {
+        let idx = r * self.cols + j;
+        let byte = self.packed[idx / 2];
+        let q = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        let p = match self.axis {
+            QuantAxis::PerChannel => j,
+            QuantAxis::PerToken => r,
+        };
+        q as f32 * self.scale[p] + self.zero[p]
+    }
+
+    /// Fused dequantize-dot: for every row `r` of the block,
+    /// `out[r] = dot(x, deq(row r)[c0..c1]) * scale_mul`, with the packed
+    /// codes dequantized inline — the block is never materialized to f32.
+    ///
+    /// The reduction replicates `dot_scalar` exactly (4 running
+    /// accumulators over `x[o] * deq`, summed `s0+s1+s2+s3`, sequential
+    /// remainder tail), so the result is **bit-identical** to
+    /// dequantizing rows first and calling the scalar dot on each —
+    /// decode attention's int4 key scores ride on this
+    /// (`scale_mul` folds in the per-head `1/√d_head`).
+    pub fn fused_dot_rows(&self, x: &[f32], c0: usize, c1: usize, scale_mul: f32, out: &mut [f32]) {
+        assert!(c0 <= c1 && c1 <= self.cols, "column range out of bounds");
+        assert_eq!(x.len(), c1 - c0);
+        assert_eq!(out.len(), self.rows);
+        let w = c1 - c0;
+        let chunks = w / 4;
+        for (r, or) in out.iter_mut().enumerate() {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for c in 0..chunks {
+                let o = c * 4;
+                s0 += x[o] * self.deq(r, c0 + o);
+                s1 += x[o + 1] * self.deq(r, c0 + o + 1);
+                s2 += x[o + 2] * self.deq(r, c0 + o + 2);
+                s3 += x[o + 3] * self.deq(r, c0 + o + 3);
+            }
+            let mut s = s0 + s1 + s2 + s3;
+            for o in chunks * 4..w {
+                s += x[o] * self.deq(r, c0 + o);
+            }
+            *or = s * scale_mul;
+        }
+    }
+
+    /// Fused dequantize-AXPY: `acc[j] += weights[r] * deq(r, c0 + j)` for
+    /// every row `r` ascending — the weighted value sum of decode
+    /// attention, consuming packed codes directly.
+    ///
+    /// AXPY is elementwise (one mul + one add per element), so this is
+    /// **bit-identical** to dequantizing each row and calling the scalar
+    /// AXPY per row in the same ascending order.
+    pub fn fused_axpy_rows(&self, weights: &[f32], c0: usize, c1: usize, acc: &mut [f32]) {
+        assert!(c0 <= c1 && c1 <= self.cols, "column range out of bounds");
+        assert_eq!(weights.len(), self.rows);
+        assert_eq!(acc.len(), c1 - c0);
+        for (r, &s) in weights.iter().enumerate() {
+            for (o, a) in acc.iter_mut().enumerate() {
+                *a += s * self.deq(r, c0 + o);
+            }
+        }
+    }
+
     /// True storage footprint: packed codes + affine params.
     pub fn bytes(&self) -> usize {
         self.packed.len() + (self.scale.len() + self.zero.len()) * 4
@@ -269,5 +349,48 @@ mod tests {
         let m = Mat::from_vec(4, 4, vec![3.5; 16]);
         let d = fake_quant(&m, QuantAxis::PerToken);
         assert!(d.allclose(&m, 1e-5));
+    }
+
+    /// Fused dot/axpy ≡ dequantize-then-scalar-GEMV, bitwise, including
+    /// odd column sub-ranges and a partial (non-GROUP) final block.
+    #[test]
+    fn fused_gemv_bit_identical_to_materialized() {
+        use crate::tensor::matmul::{axpy_row_scalar, dot_scalar};
+        let mut rng = Pcg64::new(6);
+        for axis in [QuantAxis::PerChannel, QuantAxis::PerToken] {
+            for (rows, cols) in [(GROUP, 16), (7, 9), (1, 1), (GROUP, 8)] {
+                let m = Mat::randn(rows, cols, 1.0, &mut rng);
+                let q = quantize_block(&m, axis);
+                let d = q.dequantize();
+                for (c0, c1) in [(0, cols), (0, cols / 2), (cols / 3, cols)] {
+                    if c0 >= c1 {
+                        continue;
+                    }
+                    let w = c1 - c0;
+                    let x: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+                    let scale = 0.37f32;
+                    let mut got = vec![0.0f32; rows];
+                    q.fused_dot_rows(&x, c0, c1, scale, &mut got);
+                    for r in 0..rows {
+                        let want = dot_scalar(&x, &d.row(r)[c0..c1]) * scale;
+                        assert_eq!(
+                            got[r].to_bits(),
+                            want.to_bits(),
+                            "dot axis={axis:?} {rows}x{cols} [{c0},{c1}) r={r}"
+                        );
+                    }
+                    let ws: Vec<f32> = (0..rows).map(|_| rng.normal().abs()).collect();
+                    let mut acc = vec![0.5f32; w];
+                    let mut want_acc = acc.clone();
+                    q.fused_axpy_rows(&ws, c0, c1, &mut acc);
+                    for r in 0..rows {
+                        axpy_row_scalar(&mut want_acc, ws[r], &d.row(r)[c0..c1]);
+                    }
+                    let gb: Vec<u32> = acc.iter().map(|v| v.to_bits()).collect();
+                    let wb: Vec<u32> = want_acc.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "axpy axis={axis:?} {rows}x{cols} [{c0},{c1})");
+                }
+            }
+        }
     }
 }

@@ -109,12 +109,26 @@ impl CompressedStore {
         self.rows_range(0, n)
     }
 
-    /// Rows `[lo, hi)` as fp32, dequantized/copied directly into one
-    /// preallocated matrix (no repeated `vcat` reallocation).
+    /// Rows `[lo, hi)` as fp32 in a fresh matrix (cold paths; the decode
+    /// hot loop goes through [`CompressedStore::rows_range_into`]).
     fn rows_range(&self, lo: usize, hi: usize) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.rows_range_into(lo, hi, &mut out);
+        out
+    }
+
+    /// Rows `[lo, hi)` as fp32, dequantized/copied into a caller-owned
+    /// grow-only matrix: `out` is reshaped in place and its backing `Vec`
+    /// reallocates only past its high-water capacity — the zero-alloc
+    /// decode-migration path. Every element of the range is written
+    /// (groups cover `[0, sealed)`, the residual covers the rest), so no
+    /// zero-fill is needed.
+    fn rows_range_into(&self, lo: usize, hi: usize, out: &mut Mat) {
         assert!(lo <= hi && hi <= self.len());
-        let mut out = Mat::zeros(hi - lo, self.rank);
         let c = self.rank;
+        out.rows = hi - lo;
+        out.cols = c;
+        out.data.resize((hi - lo) * c, 0.0);
         for (gi, g) in self.groups.iter().enumerate() {
             let g0 = gi * GROUP;
             if g0 >= hi {
@@ -133,7 +147,6 @@ impl CompressedStore {
             out.data[(s - lo) * c..(hi - lo) * c]
                 .copy_from_slice(&self.resid.data[(s - sealed) * c..(hi - sealed) * c]);
         }
-        out
     }
 
     /// Reserve storage for `additional` more tokens.
@@ -211,11 +224,50 @@ struct LayerState {
     win_pos: Vec<usize>,
 }
 
+/// Grow-only scratch for the decode hot path (`append` / `sync_view`):
+/// compressed feature staging and K̂/V̂ reconstruction buffers, shared
+/// across layers. Capacities hit their high-water mark on the first
+/// post-prefill sync (the big history migration); steady-state decode
+/// steps then allocate nothing (`rust/tests/decode_alloc.rs`).
+struct SyncScratch {
+    /// Compressed feature rows `[batch, rank]` (K and V in turn).
+    c: Mat,
+    /// Reconstructed `K̂ = C·B_K` rows `[batch, d_model]`.
+    kh: Mat,
+    /// Reconstructed `V̂ = C·B_V` rows `[batch, d_model]`.
+    vh: Mat,
+    /// Single-token compressed K feature (append path).
+    ck_row: Vec<f32>,
+    /// Single-token compressed V feature (append path).
+    cv_row: Vec<f32>,
+}
+
+impl SyncScratch {
+    fn new() -> Self {
+        SyncScratch {
+            c: Mat::zeros(0, 0),
+            kh: Mat::zeros(0, 0),
+            vh: Mat::zeros(0, 0),
+            ck_row: Vec::new(),
+            cv_row: Vec::new(),
+        }
+    }
+}
+
+/// Resize a scratch matrix in place: logical dimensions change, but the
+/// backing `Vec` only reallocates past its high-water capacity.
+fn resize_mat(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.resize(rows * cols, 0.0);
+}
+
 /// The CSKV bi-branch cache policy.
 pub struct CskvCache {
     cfg: CskvConfig,
     factors: Arc<ModelFactors>,
     layers: Vec<LayerState>,
+    scratch: SyncScratch,
     label: String,
 }
 
@@ -244,6 +296,7 @@ impl CskvCache {
             cfg,
             factors,
             layers,
+            scratch: SyncScratch::new(),
             label,
         }
     }
@@ -289,13 +342,20 @@ impl KvCachePolicy for CskvCache {
     }
 
     fn append(&mut self, layer: usize, xnorm: &[f32], k: &[f32], v: &[f32]) {
-        let lf = &self.factors.layers[layer];
-        let ckrow = lf.k.compress_row(xnorm);
-        let cvrow = lf.v.compress_row(xnorm);
+        // Compress into the reusable scratch rows — the steady-state
+        // append performs no allocation (seal events excepted).
+        {
+            let lf = &self.factors.layers[layer];
+            let s = &mut self.scratch;
+            s.ck_row.resize(lf.k.rank(), 0.0);
+            lf.k.compress_row_into(xnorm, &mut s.ck_row);
+            s.cv_row.resize(lf.v.rank(), 0.0);
+            lf.v.compress_row_into(xnorm, &mut s.cv_row);
+        }
         let pos = {
             let l = &mut self.layers[layer];
-            l.ck.push_row(&ckrow);
-            l.cv.push_row(&cvrow);
+            l.ck.push_row(&self.scratch.ck_row);
+            l.cv.push_row(&self.scratch.cv_row);
             let pos = l.n;
             l.n += 1;
             pos
@@ -304,6 +364,8 @@ impl KvCachePolicy for CskvCache {
     }
 
     fn sync_view(&mut self, layer: usize, view: &mut DecodeView) {
+        let quant = self.cfg.quant;
+        let scratch = &mut self.scratch;
         let l = &self.layers[layer];
         let lf = &self.factors.layers[layer];
         let n = l.n;
@@ -324,20 +386,46 @@ impl KvCachePolicy for CskvCache {
             valid_hist = valid_hist.min(view.stable_rows);
         }
 
-        // 1. (Re)write history rows [valid_hist, hist): K̂ = C·B, RoPE'd
-        //    at their absolute positions. Batched so the first sync after
-        //    prefill is a single GEMM; in steady state this is the one
-        //    token migrating out of the window (fp32) or the residual
-        //    tail (int4).
+        // 1. Int4: advance the view's quantized segment over every fully
+        //    sealed GROUP of history rows. The blocks are derived only
+        //    from immutable sealed storage (reconstruct → RoPE →
+        //    re-quantize inside `seal_group`), so a live view and a fresh
+        //    rebuild produce identical bits; decode attention then reads
+        //    them through the fused int4 GEMV kernels instead of f32 rows.
+        if quant == QuantMode::Int4 {
+            let quant_target = (hist.min(sealed) / GROUP) * GROUP;
+            while view.quant_rows() < quant_target {
+                let g0 = view.quant_rows();
+                l.ck.rows_range_into(g0, g0 + GROUP, &mut scratch.c);
+                resize_mat(&mut scratch.kh, GROUP, lf.k.d_out());
+                lf.k.reconstruct_into(&scratch.c, &mut scratch.kh);
+                l.cv.rows_range_into(g0, g0 + GROUP, &mut scratch.c);
+                resize_mat(&mut scratch.vh, GROUP, lf.v.d_out());
+                lf.v.reconstruct_into(&scratch.c, &mut scratch.vh);
+                view.seal_group(&scratch.kh, &scratch.vh);
+            }
+            valid_hist = valid_hist.max(view.quant_rows());
+        }
+
+        // 2. (Re)write f32 history rows [valid_hist, hist): K̂ = C·B,
+        //    RoPE'd at their absolute positions. Batched so the first
+        //    sync after prefill is a single GEMM; in steady state this is
+        //    the one token migrating out of the window. All staging goes
+        //    through the grow-only scratch — no steady-state allocation.
         if hist > valid_hist {
-            let kh = lf.k.reconstruct(&l.ck.rows_range(valid_hist, hist));
-            let vh = lf.v.reconstruct(&l.cv.rows_range(valid_hist, hist));
+            let batch = hist - valid_hist;
+            l.ck.rows_range_into(valid_hist, hist, &mut scratch.c);
+            resize_mat(&mut scratch.kh, batch, lf.k.d_out());
+            lf.k.reconstruct_into(&scratch.c, &mut scratch.kh);
+            l.cv.rows_range_into(valid_hist, hist, &mut scratch.c);
+            resize_mat(&mut scratch.vh, batch, lf.v.d_out());
+            lf.v.reconstruct_into(&scratch.c, &mut scratch.vh);
             for (j, r) in (valid_hist..hist).enumerate() {
-                view.write_row(r, kh.row(j), vh.row(j), r, r);
+                view.write_row(r, scratch.kh.row(j), scratch.vh.row(j), r, r);
             }
         }
 
-        // 2. Window rows [hist, n): row t ↔ token t, exact pre-RoPE K/V
+        // 3. Window rows [hist, n): row t ↔ token t, exact pre-RoPE K/V
         //    from the window branch. A row already present was written
         //    from the same token's immutable window entry — skip it; only
         //    genuinely new tokens are appended.
@@ -657,11 +745,21 @@ mod tests {
                 c.sync_view(0, &mut live);
                 live.validate();
             }
-            // A fresh view rebuilt from scratch must match bit-for-bit.
+            // A fresh view rebuilt from scratch must match bit-for-bit —
+            // including the quantized segment (same_contents compares the
+            // sealed blocks too).
             let mut fresh = DecodeView::new(d, 2, 10000.0);
             c.sync_view(0, &mut fresh);
             assert!(live.same_contents(&fresh), "quant={quant:?}");
             assert_eq!(live.len(), c.len(0));
+            match quant {
+                QuantMode::None => assert_eq!(live.quant_rows(), 0),
+                QuantMode::Int4 => {
+                    // n = 2·GROUP + 14, window 3 ⇒ hist ≥ 2·GROUP sealed
+                    // rows, all covered by the view's quantized segment.
+                    assert_eq!(live.quant_rows(), 2 * GROUP, "sealed spans must quantize");
+                }
+            }
         }
     }
 

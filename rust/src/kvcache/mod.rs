@@ -48,7 +48,24 @@
 //! — the point is that *rematerialization* no longer dominates, and the
 //! steady-state decode step performs no heap allocation at all for
 //! append-only policies (`rust/tests/decode_alloc.rs` enforces this for
-//! the full cache).
+//! the full cache and for CSKV int4's fused decode).
+//!
+//! ### Quantized view segments (fused int4 decode)
+//!
+//! For CSKV int4 the view no longer materializes sealed history into f32
+//! rows at all. Once a full [`GROUP`]-row span of history is backed by
+//! sealed compressed storage, the policy hands the reconstructed span to
+//! [`DecodeView::seal_group`], which RoPE's the keys and re-quantizes the
+//! span into packed int4 blocks — per-channel for keys, per-token for
+//! values, mirroring the KIVI layout of the store itself. The blocks are
+//! a deterministic function of the immutable sealed store, so live and
+//! fresh views still agree bit-for-bit. Decode attention consumes them
+//! directly through the fused dequantize-dot / dequantize-AXPY kernels
+//! ([`QuantizedBlock::fused_dot_rows`] /
+//! [`QuantizedBlock::fused_axpy_rows`]): no dequantize-to-f32 round trip,
+//! and the view's resident footprint on sealed history drops ~8×.
+//! [`DecodeView::key_row`] / [`DecodeView::value_row`] address only the
+//! f32 tail `[quant_rows, len)`; the engine dispatches per segment.
 //!
 //! ### View-consistency contract
 //!
@@ -70,6 +87,7 @@ pub use bibranch::{CskvCache, CskvConfig, QuantMode};
 pub use full::FullCache;
 pub use snapshot::{KvSnapshot, SnapReader, SnapWriter};
 
+use crate::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};
 use crate::tensor::{ops, Mat};
 
 /// Effective cache contents for one layer's decode attention, materialized
@@ -111,6 +129,12 @@ impl CacheView {
 /// groups, ASVD features) are reconstructed/dequantized/RoPE'd exactly
 /// once over a whole generation.
 ///
+/// Row storage is split into two segments: a leading **quantized
+/// segment** of `quant_rows` rows held as packed int4 blocks (only CSKV
+/// int4 populates it, via [`DecodeView::seal_group`]) and the f32 tail
+/// `[quant_rows, len)` held in the grow matrices. The position vectors
+/// span both segments, so `len()` counts every row.
+///
 /// The three cursor fields (`stable_rows`, `hist_rows`, `epoch`) are
 /// **policy-interpreted** sync bookkeeping carried by the view so that a
 /// policy stays correct when handed a fresh view (full rebuild) as well
@@ -119,10 +143,18 @@ impl CacheView {
 pub struct DecodeView {
     n_heads: usize,
     rope_base: f32,
-    /// RoPE'd keys, row-major `[len, d_model]`.
+    /// RoPE'd keys, row-major `[len - quant_rows, d_model]` (f32 tail;
+    /// view row `i` lives at matrix row `i - quant_rows`).
     k: GrowMat,
-    /// Values `[len, d_model]`.
+    /// Values `[len - quant_rows, d_model]` (f32 tail).
     v: GrowMat,
+    /// Sealed key blocks: RoPE'd, re-quantized per-channel int4,
+    /// [`GROUP`] rows each, covering view rows `[0, quant_rows)`.
+    qk: Vec<QuantizedBlock>,
+    /// Sealed value blocks (per-token int4), aligned with `qk`.
+    qv: Vec<QuantizedBlock>,
+    /// Reusable RoPE staging buffer for [`DecodeView::seal_group`].
+    seal_buf: Mat,
     rope_pos: Vec<usize>,
     abs_pos: Vec<usize>,
     /// Rows `[0, stable_rows)` are final: derived from immutable storage
@@ -147,6 +179,9 @@ impl DecodeView {
             rope_base,
             k: GrowMat::new(d_model),
             v: GrowMat::new(d_model),
+            qk: Vec::new(),
+            qv: Vec::new(),
+            seal_buf: Mat::zeros(0, 0),
             rope_pos: Vec::new(),
             abs_pos: Vec::new(),
             stable_rows: 0,
@@ -167,24 +202,41 @@ impl DecodeView {
         self.k.cols
     }
 
-    /// RoPE'd key row `i`.
+    /// RoPE'd key row `i` — f32 segment only (`i ≥ quant_rows()`); rows
+    /// below that are read through [`DecodeView::quant_key_groups`].
     #[inline]
     pub fn key_row(&self, i: usize) -> &[f32] {
-        self.k.row(i)
+        let q = self.quant_rows();
+        debug_assert!(i >= q, "key_row({i}) inside quantized segment [0, {q})");
+        self.k.row(i - q)
     }
 
-    /// Value row `i`.
+    /// Value row `i` — f32 segment only (`i ≥ quant_rows()`).
     #[inline]
     pub fn value_row(&self, i: usize) -> &[f32] {
-        self.v.row(i)
+        let q = self.quant_rows();
+        debug_assert!(i >= q, "value_row({i}) inside quantized segment [0, {q})");
+        self.v.row(i - q)
     }
 
-    pub fn keys(&self) -> &GrowMat {
-        &self.k
+    /// Number of leading rows held as packed int4 blocks — always a
+    /// multiple of [`GROUP`]; 0 for every policy but CSKV int4.
+    #[inline]
+    pub fn quant_rows(&self) -> usize {
+        self.qk.len() * GROUP
     }
 
-    pub fn values(&self) -> &GrowMat {
-        &self.v
+    /// Sealed key blocks (RoPE'd, per-channel int4), covering view rows
+    /// `[g·GROUP, (g+1)·GROUP)` for block `g`.
+    #[inline]
+    pub fn quant_key_groups(&self) -> &[QuantizedBlock] {
+        &self.qk
+    }
+
+    /// Sealed value blocks (per-token int4), aligned with the key blocks.
+    #[inline]
+    pub fn quant_value_groups(&self) -> &[QuantizedBlock] {
+        &self.qv
     }
 
     pub fn rope_positions(&self) -> &[usize] {
@@ -196,13 +248,17 @@ impl DecodeView {
     }
 
     /// Reserve capacity for `total_tokens` rows so steady-state appends
-    /// perform no allocation.
+    /// perform no allocation. (Block *contents* still allocate at seal
+    /// events — those sit outside the per-token hot loop.)
     pub fn reserve(&mut self, total_tokens: usize) {
         let extra = total_tokens.saturating_sub(self.len());
         self.k.reserve_rows(extra);
         self.v.reserve_rows(extra);
         self.rope_pos.reserve(extra);
         self.abs_pos.reserve(extra);
+        let want_groups = total_tokens / GROUP + 1;
+        self.qk.reserve(want_groups.saturating_sub(self.qk.len()));
+        self.qv.reserve(want_groups.saturating_sub(self.qv.len()));
     }
 
     /// Write row `i` (`i ≤ len`; `i == len` appends). The key is handed
@@ -213,32 +269,94 @@ impl DecodeView {
         let d = self.k.cols;
         debug_assert_eq!(k_pre_rope.len(), d);
         debug_assert_eq!(v.len(), d);
+        let q = self.quant_rows();
+        assert!(i >= q, "write into sealed quantized segment: {i} < {q}");
         assert!(i <= self.len(), "non-contiguous view write: {i} > {}", self.len());
+        let fi = i - q;
         if i == self.len() {
             self.k.push_row(k_pre_rope);
             self.v.push_row(v);
             self.rope_pos.push(rope_pos);
             self.abs_pos.push(abs_pos);
         } else {
-            self.k.row_mut(i).copy_from_slice(k_pre_rope);
-            self.v.row_mut(i).copy_from_slice(v);
+            self.k.row_mut(fi).copy_from_slice(k_pre_rope);
+            self.v.row_mut(fi).copy_from_slice(v);
             self.rope_pos[i] = rope_pos;
             self.abs_pos[i] = abs_pos;
         }
         let dh = d / self.n_heads;
-        let row = self.k.row_mut(i);
+        let row = self.k.row_mut(fi);
         for h in 0..self.n_heads {
             ops::rope_rotate(&mut row[h * dh..(h + 1) * dh], rope_pos, self.rope_base);
         }
     }
 
-    /// Drop rows `[n, len)` and clamp the cursors.
+    /// Seal the next [`GROUP`] history rows into packed int4 blocks.
+    ///
+    /// `k_pre_rope` / `v` hold the reconstructed rows for view positions
+    /// `[quant_rows(), quant_rows() + GROUP)` — keys pre-RoPE, exactly as
+    /// for [`DecodeView::write_row`]. The keys are rotated at their token
+    /// positions (the quantized mirror of `write_row`'s single RoPE
+    /// application point), both spans are quantized (per-channel keys,
+    /// per-token values), the superseded f32 rows are dropped, and
+    /// position entries are appended for rows the view had not
+    /// materialized yet (fresh-view rebuilds). Quantized segments always
+    /// cover history rows, whose `rope`/`abs` positions equal the token
+    /// index — the blocks carry no per-row position payload.
+    pub fn seal_group(&mut self, k_pre_rope: &Mat, v: &Mat) {
+        let d = self.k.cols;
+        assert_eq!((k_pre_rope.rows, k_pre_rope.cols), (GROUP, d), "bad seal K shape");
+        assert_eq!((v.rows, v.cols), (GROUP, d), "bad seal V shape");
+        let q0 = self.quant_rows();
+        debug_assert!(q0 <= self.len());
+        let dh = d / self.n_heads;
+        self.seal_buf.rows = GROUP;
+        self.seal_buf.cols = d;
+        self.seal_buf.data.resize(GROUP * d, 0.0);
+        self.seal_buf.data.copy_from_slice(&k_pre_rope.data);
+        for j in 0..GROUP {
+            let row = self.seal_buf.row_mut(j);
+            for h in 0..self.n_heads {
+                ops::rope_rotate(&mut row[h * dh..(h + 1) * dh], q0 + j, self.rope_base);
+            }
+        }
+        let kb = quantize_block(&self.seal_buf, QuantAxis::PerChannel);
+        self.qk.push(kb);
+        self.qv.push(quantize_block(v, QuantAxis::PerToken));
+        // Drop the f32 rows this group supersedes; their position entries
+        // stay (history rows already carry rope = abs = token index).
+        let overlap = (self.len() - q0).min(GROUP);
+        self.k.remove_rows(0, overlap);
+        self.v.remove_rows(0, overlap);
+        for j in 0..overlap {
+            debug_assert_eq!(self.rope_pos[q0 + j], q0 + j, "sealing a non-history row");
+            self.rope_pos[q0 + j] = q0 + j;
+            self.abs_pos[q0 + j] = q0 + j;
+        }
+        for j in overlap..GROUP {
+            self.rope_pos.push(q0 + j);
+            self.abs_pos.push(q0 + j);
+        }
+    }
+
+    /// Drop rows `[n, len)` and clamp the cursors. A cut below
+    /// `quant_rows()` must land on a [`GROUP`] boundary — sealed blocks
+    /// are indivisible.
     pub fn truncate(&mut self, n: usize) {
         if n >= self.len() {
             return;
         }
-        self.k.truncate_rows(n);
-        self.v.truncate_rows(n);
+        let q = self.quant_rows();
+        if n < q {
+            assert!(n % GROUP == 0, "truncate splits a sealed group: {n}");
+            self.qk.truncate(n / GROUP);
+            self.qv.truncate(n / GROUP);
+            self.k.truncate_rows(0);
+            self.v.truncate_rows(0);
+        } else {
+            self.k.truncate_rows(n - q);
+            self.v.truncate_rows(n - q);
+        }
         self.rope_pos.truncate(n);
         self.abs_pos.truncate(n);
         self.stable_rows = self.stable_rows.min(n);
@@ -251,18 +369,26 @@ impl DecodeView {
     }
 
     pub fn validate(&self) {
+        let q = self.quant_rows();
+        assert_eq!(self.qk.len(), self.qv.len());
         assert_eq!(self.k.rows(), self.v.rows());
-        assert_eq!(self.k.rows(), self.rope_pos.len());
-        assert_eq!(self.k.rows(), self.abs_pos.len());
+        assert_eq!(self.k.rows() + q, self.rope_pos.len());
+        assert_eq!(self.rope_pos.len(), self.abs_pos.len());
+        for (kb, vb) in self.qk.iter().zip(&self.qv) {
+            assert_eq!((kb.rows, kb.cols), (GROUP, self.k.cols));
+            assert_eq!((vb.rows, vb.cols), (GROUP, self.k.cols));
+        }
         assert!(self.stable_rows <= self.len());
         assert!(self.hist_rows <= self.len());
     }
 
-    /// Content equality (rows + positions), ignoring the sync cursors —
-    /// the property-test oracle for incremental ≡ from-scratch.
+    /// Content equality (rows, blocks + positions), ignoring the sync
+    /// cursors — the property-test oracle for incremental ≡ from-scratch.
     pub fn same_contents(&self, other: &DecodeView) -> bool {
         self.k == other.k
             && self.v == other.v
+            && self.qk == other.qk
+            && self.qv == other.qv
             && self.rope_pos == other.rope_pos
             && self.abs_pos == other.abs_pos
     }
@@ -551,5 +677,85 @@ mod tests {
     fn decode_view_rejects_gap_writes() {
         let mut view = DecodeView::new(4, 2, 10000.0);
         view.write_row(2, &[0.0; 4], &[0.0; 4], 0, 0);
+    }
+
+    /// Sealing a group drops the superseded f32 rows, shifts the tail,
+    /// stores blocks that dequantize to the RoPE'd rows (within quant
+    /// error), and matches a fresh view sealed before any f32 writes.
+    #[test]
+    fn decode_view_seal_group_replaces_f32_rows() {
+        let d = 8;
+        let nh = 2;
+        let mut rng = crate::util::prng::Pcg64::new(7);
+        let k = Mat::randn(GROUP + 3, d, 1.0, &mut rng);
+        let v = Mat::randn(GROUP + 3, d, 1.0, &mut rng);
+        let mut view = DecodeView::new(d, nh, 10000.0);
+        for i in 0..GROUP + 3 {
+            view.write_row(i, k.row(i), v.row(i), i, i);
+        }
+        let roped_keys: Vec<Vec<f32>> = (0..GROUP).map(|i| view.key_row(i).to_vec()).collect();
+        let tail_key = view.key_row(GROUP).to_vec();
+
+        view.seal_group(&k.rows_slice(0, GROUP), &v.rows_slice(0, GROUP));
+        view.validate();
+        assert_eq!(view.len(), GROUP + 3);
+        assert_eq!(view.quant_rows(), GROUP);
+        assert_eq!(view.key_row(GROUP), &tail_key[..], "f32 tail must shift in place");
+        assert_eq!(view.rope_positions().len(), GROUP + 3);
+
+        // Blocks hold the RoPE'd keys / raw values within half a step.
+        let kd = view.quant_key_groups()[0].dequantize();
+        let vd = view.quant_value_groups()[0].dequantize();
+        for i in 0..GROUP {
+            for j in 0..d {
+                assert!((kd.at(i, j) - roped_keys[i][j]).abs() < 0.5, "key ({i},{j})");
+                assert!((vd.at(i, j) - v.at(i, j)).abs() < 0.5, "value ({i},{j})");
+            }
+        }
+
+        // Fresh-view rebuild: seal first, then write the tail — identical.
+        let mut fresh = DecodeView::new(d, nh, 10000.0);
+        fresh.seal_group(&k.rows_slice(0, GROUP), &v.rows_slice(0, GROUP));
+        for i in GROUP..GROUP + 3 {
+            fresh.write_row(i, k.row(i), v.row(i), i, i);
+        }
+        fresh.validate();
+        assert!(view.same_contents(&fresh), "live seal must equal fresh rebuild");
+    }
+
+    #[test]
+    fn decode_view_truncate_respects_group_boundaries() {
+        let d = 4;
+        let mut rng = crate::util::prng::Pcg64::new(8);
+        let k = Mat::randn(GROUP + 2, d, 1.0, &mut rng);
+        let v = Mat::randn(GROUP + 2, d, 1.0, &mut rng);
+        let mut view = DecodeView::new(d, 2, 10000.0);
+        view.seal_group(&k.rows_slice(0, GROUP), &v.rows_slice(0, GROUP));
+        for i in GROUP..GROUP + 2 {
+            view.write_row(i, k.row(i), v.row(i), i, i);
+        }
+        view.truncate(GROUP + 1); // drop one f32 row
+        view.validate();
+        assert_eq!(view.len(), GROUP + 1);
+        assert_eq!(view.quant_rows(), GROUP);
+        view.truncate(GROUP); // drop the whole f32 tail, keep the block
+        view.validate();
+        assert_eq!(view.len(), GROUP);
+        assert_eq!(view.quant_rows(), GROUP);
+        view.clear(); // group boundary 0: blocks go too
+        view.validate();
+        assert_eq!(view.len(), 0);
+        assert_eq!(view.quant_rows(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_view_rejects_writes_into_sealed_segment() {
+        let d = 4;
+        let mut view = DecodeView::new(d, 2, 10000.0);
+        let k = Mat::zeros(GROUP, d);
+        let v = Mat::zeros(GROUP, d);
+        view.seal_group(&k, &v);
+        view.write_row(0, &[0.0; 4], &[0.0; 4], 0, 0);
     }
 }

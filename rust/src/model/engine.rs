@@ -83,6 +83,7 @@
 
 use std::sync::Arc;
 
+use crate::compress::quant::GROUP;
 use crate::kvcache::{DecodeView, KvCachePolicy};
 use crate::tensor::matmul::{axpy_row, dot, matvec_t_into, par_matmul_into, par_matvec_t_batch_into};
 use crate::tensor::ops;
@@ -121,9 +122,10 @@ pub struct GenStats {
 /// Every intermediate `decode_step_with` needs lives here, so a steady-
 /// state decode step performs no heap allocation (`rust/tests/
 /// decode_alloc.rs` enforces this with a counting allocator). `scores`
-/// and `agg_probs` grow with the cache; [`DecodeState::reserve`] sizes
-/// them up front.
+/// (one probability row per head, `n_heads × n`) and `agg_probs` grow
+/// with the cache; [`DecodeState::reserve`] sizes them up front.
 pub struct DecodeScratch {
+    n_heads: usize,
     x: Vec<f32>,
     xnorm: Vec<f32>,
     q: Vec<f32>,
@@ -144,6 +146,7 @@ impl DecodeScratch {
     fn new(cfg: &ModelConfig) -> Self {
         let d = cfg.d_model;
         DecodeScratch {
+            n_heads: cfg.n_heads,
             x: vec![0.0; d],
             xnorm: vec![0.0; d],
             q: vec![0.0; d],
@@ -189,7 +192,8 @@ impl DecodeState {
             v.reserve(total_tokens);
         }
         let s = &mut self.scratch;
-        s.scores.reserve(total_tokens.saturating_sub(s.scores.len()));
+        let score_len = s.n_heads * total_tokens;
+        s.scores.reserve(score_len.saturating_sub(s.scores.len()));
         s.agg_probs.reserve(total_tokens.saturating_sub(s.agg_probs.len()));
     }
 
@@ -452,12 +456,37 @@ impl HeadSplit {
     }
 }
 
+/// Minimum per-head work (`history length × d_head` elements) before
+/// [`decode_attention`] fans heads out across the persistent pool —
+/// below this the pool dispatch costs more than the head loop it splits.
+const HEAD_PAR_MIN_ELEMS: usize = 8 * 1024;
+
 /// One decode step's per-sequence attention against a synced
 /// [`DecodeView`]: per-head scores + softmax + weighted-V into `attn`,
 /// aggregating per-position probabilities into `agg_probs` for the H2O
 /// feedback. Extracted so [`Engine::decode_step_with`] and
 /// [`Engine::decode_step_batch`] run the *same* code — the batched
 /// scheduler's bit-identity holds for attention by construction.
+///
+/// Two perf structures live here:
+///
+/// * **Per-segment dispatch.** The view's sealed prefix (rows
+///   `[0, quant_rows)`) is held as packed int4 groups; those rows are
+///   scored with [`crate::compress::quant::QuantizedBlock::fused_dot_rows`]
+///   and accumulated with `fused_axpy_rows` — dequantization fused into
+///   the GEMV, no materialized f32 copy. The f32 tail (`[quant_rows, n)`)
+///   runs the classic [`dot`]/[`axpy_row`] path. For f32-only views
+///   `quant_rows == 0` and the math is bit-identical to the pre-split
+///   single-segment loop.
+/// * **Head parallelism.** `scores` holds one probability row *per head*
+///   (`n_heads × n`), so each head's pass is independent: heads fan out
+///   over the persistent pool when the per-head work clears
+///   [`HEAD_PAR_MIN_ELEMS`] and the config is wide enough. `agg_probs`
+///   is reduced *after* the head loop in ascending head order, making the
+///   output bit-identical at every thread count (the same argument as
+///   the streaming prefill's tile reduction). Narrow configs stay on the
+///   serial path, which allocates nothing — the zero-alloc decode tests
+///   cover both the full cache and the fused int4 path.
 fn decode_attention(
     view: &DecodeView,
     q: &[f32],
@@ -465,34 +494,85 @@ fn decode_attention(
     scores: &mut Vec<f32>,
     agg_probs: &mut Vec<f32>,
     heads: HeadSplit,
+    threads: usize,
 ) {
     let HeadSplit { n_heads, d_head: dh, scale } = heads;
     let n = view.len();
     attn.fill(0.0);
+    scores.clear();
+    scores.resize(n_heads * n, 0.0);
+
+    let par_threads = if n_heads >= 4 && n * dh >= HEAD_PAR_MIN_ELEMS {
+        threads
+    } else {
+        1 // narrow config: inline serial path, no pool dispatch, no allocs
+    };
+    let attn_ptr = SendPtr(attn.as_mut_ptr());
+    let score_ptr = SendPtr(scores.as_mut_ptr());
+    parallel_for(n_heads, par_threads, |h| {
+        let (lo, hi) = (h * dh, (h + 1) * dh);
+        // Safety: head h exclusively owns attn[lo..hi] and score row h;
+        // both buffers outlive the scoped workers.
+        let ah = unsafe { attn_ptr.slice_mut(lo, dh) };
+        let srow = unsafe { score_ptr.slice_mut(h * n, n) };
+        decode_attention_head(view, &q[lo..hi], ah, srow, (lo, hi), scale);
+    });
+
+    // Deterministic H2O feedback: per-position probability mass summed in
+    // ascending head order — the same additions in the same order as the
+    // pre-split inline accumulation, at every thread count.
     agg_probs.clear();
     agg_probs.resize(n, 0.0);
     for h in 0..n_heads {
-        let (lo, hi) = (h * dh, (h + 1) * dh);
-        let qh = &q[lo..hi];
-        scores.clear();
-        scores.resize(n, 0.0);
-        let mut mx = f32::NEG_INFINITY;
-        for (i, s) in scores.iter_mut().enumerate() {
-            *s = dot(qh, &view.key_row(i)[lo..hi]) * scale;
-            mx = mx.max(*s);
+        let srow = &scores[h * n..(h + 1) * n];
+        for (a, &p) in agg_probs.iter_mut().zip(srow) {
+            *a += p;
         }
-        // softmax
-        let mut sum = 0.0;
-        for s in scores.iter_mut() {
-            *s = (*s - mx).exp();
-            sum += *s;
-        }
-        let inv = 1.0 / sum;
-        for (i, s) in scores.iter_mut().enumerate() {
-            *s *= inv;
-            agg_probs[i] += *s;
-            axpy_row(&mut attn[lo..hi], *s, &view.value_row(i)[lo..hi]);
-        }
+    }
+}
+
+/// One head's score/softmax/weighted-V pass for [`decode_attention`]:
+/// fused-int4 over the view's sealed groups, f32 over the live tail.
+/// Leaves the head's probability row in `srow` for the H2O reduction.
+fn decode_attention_head(
+    view: &DecodeView,
+    qh: &[f32],
+    ah: &mut [f32],
+    srow: &mut [f32],
+    (lo, hi): (usize, usize),
+    scale: f32,
+) {
+    let n = view.len();
+    let qrows = view.quant_rows();
+    // Scores: packed int4 groups first (dequantize fused into the dot),
+    // then the f32 segment at its shifted storage index.
+    for (gi, g) in view.quant_key_groups().iter().enumerate() {
+        g.fused_dot_rows(qh, lo, hi, scale, &mut srow[gi * GROUP..(gi + 1) * GROUP]);
+    }
+    for (i, s) in srow.iter_mut().enumerate().skip(qrows) {
+        *s = dot(qh, &view.key_row(i)[lo..hi]) * scale;
+    }
+    let mut mx = f32::NEG_INFINITY;
+    for &s in srow.iter() {
+        mx = mx.max(s);
+    }
+    // softmax
+    let mut sum = 0.0;
+    for s in srow.iter_mut() {
+        *s = (*s - mx).exp();
+        sum += *s;
+    }
+    let inv = 1.0 / sum;
+    for s in srow.iter_mut() {
+        *s *= inv;
+    }
+    // Weighted V: fused dequantize-AXPY over sealed groups, then the f32
+    // tail — ascending rows throughout, the scalar reduction order.
+    for (gi, g) in view.quant_value_groups().iter().enumerate() {
+        g.fused_axpy_rows(&srow[gi * GROUP..(gi + 1) * GROUP], lo, hi, ah);
+    }
+    for i in qrows..n {
+        axpy_row(ah, srow[i], &view.value_row(i)[lo..hi]);
     }
 }
 
@@ -1053,9 +1133,11 @@ impl Engine {
     ///
     /// This is the zero-alloc hot path: all intermediates live in
     /// [`DecodeScratch`], cache keys are read from the incrementally
-    /// synced [`DecodeView`]s (already reconstructed *and RoPE'd*), and
-    /// the per-head score / weighted-sum loops run through the blocked
-    /// [`dot`] / [`axpy_row`] kernels.
+    /// synced [`DecodeView`]s (already reconstructed *and RoPE'd*; for
+    /// int4 policies the sealed prefix stays packed and is scored through
+    /// the fused dequantize-GEMV kernels), and the per-head score /
+    /// weighted-sum loops run through the blocked [`dot`] / [`axpy_row`]
+    /// kernels — see [`decode_attention`].
     pub fn decode_step_with<'s>(
         &self,
         policy: &mut dyn KvCachePolicy,
@@ -1066,6 +1148,7 @@ impl Engine {
         let cfg = &self.w.cfg;
         let (nh, dh) = (cfg.n_heads, cfg.d_head());
         let heads = HeadSplit::of(cfg);
+        let threads = resolve_threads(cfg.threads);
         let DecodeState { views, scratch } = state;
 
         scratch.x.copy_from_slice(self.w.embed.row(token));
@@ -1096,6 +1179,7 @@ impl Engine {
                 &mut scratch.scores,
                 &mut scratch.agg_probs,
                 heads,
+                threads,
             );
             policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
 
@@ -1187,6 +1271,7 @@ impl Engine {
                     &mut scratch.scores,
                     &mut scratch.agg_probs,
                     heads,
+                    threads,
                 );
                 policy.observe_decode_attn(li, view.abs_positions(), &scratch.agg_probs);
             }

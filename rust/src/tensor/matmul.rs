@@ -7,9 +7,40 @@
 //! * [`matmul_nt`] — `C = A·Bᵀ` (attention scores `Q·Kᵀ`)
 //! * [`matmul_tn`] — `C = Aᵀ·B` (gradients `Xᵀ·E` in the recon trainer)
 //!
-//! The kernel is an i-k-j loop order over `MC×KC×NC` blocks with an
-//! 8-wide unrolled inner loop; `matmul_nt` uses a 4-accumulator dot
-//! product.
+//! Every kernel is built from two primitive reductions, each with a
+//! scalar and a SIMD implementation:
+//!
+//! * **AXPY** (`crow += s·brow`) — [`axpy_row`] dispatches to the 8-lane
+//!   [`simd::axpy`](super::simd::axpy) when the `simd` feature is on and
+//!   the CPU supports it, else to [`axpy_row_scalar`]. AXPY is
+//!   elementwise, and the SIMD body uses separate mul + add (no FMA), so
+//!   **the two paths are bit-identical** — every AXPY-shaped kernel
+//!   ([`matmul_into`], [`matvec_t_into`], [`matvec_t_batch_into`],
+//!   `matmul_tn`, decode attention's value accumulation) produces the
+//!   same bits under either feature configuration.
+//! * **dot** — [`dot`] dispatches to the 8-lane accumulator
+//!   [`simd::dot`](super::simd::dot) or to the 4-accumulator
+//!   [`dot_scalar`]. The lane accumulators reassociate the sum, so
+//!   dot-shaped kernels ([`matmul_nt_into`], [`matvec_into`], attention
+//!   scores) agree with their scalar oracles only to a few ULPs at the
+//!   scale of `Σ|xᵢyᵢ|` — the property tests pin this at ≤ 4 ULPs per
+//!   depth block (`rust/tests/property_invariants.rs`).
+//!
+//! The scalar kernels are permanently kept as oracles behind `_scalar`
+//! suffixes ([`matmul_into_scalar`], [`matmul_nt_into_scalar`],
+//! [`matvec_t_into_scalar`], [`matvec_t_batch_into_scalar`]); the
+//! composite kernels share one generic body per shape, so oracle and
+//! dispatch variants differ *only* in the primitive they inline.
+//!
+//! ## Blocking
+//!
+//! The `A·B` kernel is an i-k-j loop order over `MC×KC` blocks. The
+//! `A·Bᵀ` kernel blocks its dots over the same [`KC`] depth window —
+//! long-context score panels (`k` = hundreds of channels, `n` = thousands
+//! of keys) re-stream the B panel once per depth block from L2 instead of
+//! blowing L1 with full-length dots. Per output element the reduction is
+//! ascending depth blocks, each block reduced by [`dot`], accumulated in
+//! ascending block order.
 //!
 //! ## Parallel row-block variants
 //!
@@ -20,19 +51,16 @@
 //! `KC` depth blocks, ascending `p` within a block), so the result is
 //! **bit-identical to the serial kernels at every thread count** — the
 //! prefill bit-identity property test in `rust/tests/
-//! property_invariants.rs` rests on this.
+//! property_invariants.rs` rests on this. (This holds under SIMD too:
+//! the parallel split is by output row, and each row runs the same
+//! dispatched primitive.)
 //!
 //! The historical `aip == 0.0` skip in the `matmul_into` inner loop was
 //! removed: on the dense activations the engine feeds it, the branch
-//! cost a compare per element and never fired. The one operand where it
-//! paid — the causal-softmax'd `P·V` with an exactly-zero upper triangle
-//! — no longer passes through this kernel at all (the streaming prefill
-//! skips the triangle outright, and the serial oracle
-//! `Engine::prefill_reference` keeps a private copy of the branchy
-//! kernel so the bench baseline stays faithful to the pre-PR cost).
-//! `bench_perf_prefill` records the dense before/after numbers.
-//! `matmul_tn` keeps its skip — recon-trainer gradients are the one
-//! genuinely sparse-ish operand left.
+//! cost a compare per element and never fired. `matmul_tn` keeps its
+//! skip — recon-trainer gradients are the one genuinely sparse-ish
+//! operand left. `bench_perf_prefill` records the dense before/after
+//! numbers plus the scalar-vs-SIMD and nt-blocking A/B rows.
 //!
 //! ## Batched decode projections
 //!
@@ -40,17 +68,103 @@
 //! decode kernel: one (input-dim, batch) pass that streams each weight
 //! row once across all in-flight sequences while keeping every output
 //! row's reduction semantics identical to [`matvec_t_into`] — so fused
-//! decode rounds are bit-identical to per-sequence GEMVs.
+//! decode rounds are bit-identical to per-sequence GEMVs (and, being
+//! AXPY-shaped, bit-identical across feature configurations too).
 
 use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+#[cfg(feature = "simd")]
+use super::simd;
 
 use super::Mat;
 
 /// Row-block size (fits a block of A in L1 alongside the B panel); also
 /// the unit of work handed to one parallel task.
 const MC: usize = 64;
-/// Depth-block size.
-const KC: usize = 256;
+/// Depth-block size, shared by the i-k-j GEMM and the `A·Bᵀ` dot kernel
+/// (public so benches can align their A/B shapes with the blocking).
+pub const KC: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Primitive reductions: dispatching entry points + scalar oracles.
+// ---------------------------------------------------------------------------
+
+/// `crow += s * brow` — the shared AXPY kernel behind the GEMM inner
+/// loop, `matvec_t_into`, and the decode attention's per-head weighted
+/// value sum. Dispatches to the 8-lane SIMD kernel when available;
+/// **bit-identical** to [`axpy_row_scalar`] either way (elementwise op,
+/// no FMA).
+#[inline]
+pub fn axpy_row(crow: &mut [f32], s: f32, brow: &[f32]) {
+    #[cfg(feature = "simd")]
+    if simd::available() {
+        // Safety: guarded by simd::available().
+        unsafe { simd::axpy(crow, s, brow) };
+        return;
+    }
+    axpy_row_scalar(crow, s, brow);
+}
+
+/// Scalar AXPY oracle: 8-way unrolled `crow[o] += s * brow[o]`.
+#[inline]
+pub fn axpy_row_scalar(crow: &mut [f32], s: f32, brow: &[f32]) {
+    let n = crow.len();
+    let chunks = n / 8;
+    // Unrolled body — the compiler autovectorizes this reliably.
+    for c in 0..chunks {
+        let o = c * 8;
+        crow[o] += s * brow[o];
+        crow[o + 1] += s * brow[o + 1];
+        crow[o + 2] += s * brow[o + 2];
+        crow[o + 3] += s * brow[o + 3];
+        crow[o + 4] += s * brow[o + 4];
+        crow[o + 5] += s * brow[o + 5];
+        crow[o + 6] += s * brow[o + 6];
+        crow[o + 7] += s * brow[o + 7];
+    }
+    for o in chunks * 8..n {
+        crow[o] += s * brow[o];
+    }
+}
+
+/// Dot product. Dispatches to the 8-lane SIMD kernel when available;
+/// agrees with [`dot_scalar`] to a few ULPs (lane accumulators
+/// reassociate), **not** bit-identically — see the module docs.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    #[cfg(feature = "simd")]
+    if simd::available() {
+        // Safety: guarded by simd::available().
+        return unsafe { simd::dot(x, y) };
+    }
+    dot_scalar(x, y)
+}
+
+/// Scalar dot oracle: 4 running accumulators (breaks the FP dependency
+/// chain), summed `s0+s1+s2+s3`, then a sequential remainder tail.
+#[inline]
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += x[o] * y[o];
+        s1 += x[o + 1] * y[o + 1];
+        s2 += x[o + 2] * y[o + 2];
+        s3 += x[o + 3] * y[o + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for o in chunks * 4..n {
+        s += x[o] * y[o];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// C = A·B
+// ---------------------------------------------------------------------------
 
 /// `C = A·B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -79,12 +193,42 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     }
 }
 
+/// Scalar oracle for [`matmul_into`]: identical blocking and loop order,
+/// AXPY pinned to [`axpy_row_scalar`]. Bit-identical to the dispatching
+/// kernel on every input (AXPY contract).
+pub fn matmul_into_scalar(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let m = a.rows;
+    let n = b.cols;
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        matmul_row_block_with(a, b, &mut c.data[i0 * n..i1 * n], i0, i1, &axpy_row_scalar);
+        i0 = i1;
+    }
+}
+
 /// Compute output rows `[i0, i1)` of `C = A·B` into `c_rows` (a buffer
 /// whose first element is `C[i0][0]`). The per-row reduction order —
 /// ascending `KC` depth blocks, ascending `p` within a block — is the
-/// single definition shared by the serial and parallel entry points, so
-/// both produce identical bits for every row.
+/// single definition shared by the serial, parallel and scalar-oracle
+/// entry points, so all produce identical bits for every row.
 fn matmul_row_block(a: &Mat, b: &Mat, c_rows: &mut [f32], i0: usize, i1: usize) {
+    matmul_row_block_with(a, b, c_rows, i0, i1, &axpy_row);
+}
+
+/// Shared `A·B` row-block body, generic over the AXPY primitive so the
+/// dispatching kernel and the scalar oracle are the same code.
+#[inline(always)]
+fn matmul_row_block_with<F: Fn(&mut [f32], f32, &[f32])>(
+    a: &Mat,
+    b: &Mat,
+    c_rows: &mut [f32],
+    i0: usize,
+    i1: usize,
+    axpy: &F,
+) {
     let (k, n) = (a.cols, b.cols);
     debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
     c_rows.fill(0.0);
@@ -99,7 +243,7 @@ fn matmul_row_block(a: &Mat, b: &Mat, c_rows: &mut [f32], i0: usize, i1: usize) 
                 // activations the branch never fires and costs a compare
                 // per element (A/B'd in bench_perf_prefill).
                 let brow = &b.data[p * n..(p + 1) * n];
-                axpy_row(crow, arow[p], brow);
+                axpy(crow, arow[p], brow);
             }
         }
         k0 = k1;
@@ -136,29 +280,9 @@ pub fn par_matmul_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
     });
 }
 
-/// `crow += s * brow`, 8-way unrolled — the shared AXPY kernel behind the
-/// GEMM inner loop, `matvec_t_into`, and the decode attention's per-head
-/// weighted value sum.
-#[inline]
-pub fn axpy_row(crow: &mut [f32], s: f32, brow: &[f32]) {
-    let n = crow.len();
-    let chunks = n / 8;
-    // Unrolled body — the compiler autovectorizes this reliably.
-    for c in 0..chunks {
-        let o = c * 8;
-        crow[o] += s * brow[o];
-        crow[o + 1] += s * brow[o + 1];
-        crow[o + 2] += s * brow[o + 2];
-        crow[o + 3] += s * brow[o + 3];
-        crow[o + 4] += s * brow[o + 4];
-        crow[o + 5] += s * brow[o + 5];
-        crow[o + 6] += s * brow[o + 6];
-        crow[o + 7] += s * brow[o + 7];
-    }
-    for o in chunks * 8..n {
-        crow[o] += s * brow[o];
-    }
-}
+// ---------------------------------------------------------------------------
+// C = A·Bᵀ
+// ---------------------------------------------------------------------------
 
 /// `C = A·Bᵀ` — both operands are traversed row-wise, so attention scores
 /// against a row-major K cache need no transpose copy.
@@ -181,18 +305,52 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     matmul_nt_row_block(a, b, &mut c.data[..a.rows * n], 0, a.rows);
 }
 
+/// Scalar oracle for [`matmul_nt_into`]: identical `KC` depth blocking,
+/// dot pinned to [`dot_scalar`]. Agrees with the dispatching kernel to
+/// the documented per-depth-block ULP tolerance.
+pub fn matmul_nt_into_scalar(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let n = b.rows;
+    matmul_nt_row_block_with(a, b, &mut c.data[..a.rows * n], 0, a.rows, &dot_scalar);
+}
+
 /// Output rows `[i0, i1)` of `C = A·Bᵀ` into `c_rows` (first element is
 /// `C[i0][0]`). Shared by the serial and parallel entry points.
 fn matmul_nt_row_block(a: &Mat, b: &Mat, c_rows: &mut [f32], i0: usize, i1: usize) {
+    matmul_nt_row_block_with(a, b, c_rows, i0, i1, &dot);
+}
+
+/// Shared `A·Bᵀ` row-block body: `KC`-blocked dots so a long-`k` score
+/// panel streams the B panel once per depth block instead of running
+/// full-length dots per output element. Per element the reduction is
+/// ascending depth blocks (`crow[j] += dot(block)`), each block reduced
+/// by the supplied primitive — one definition for the serial, parallel
+/// and scalar-oracle entry points.
+#[inline(always)]
+fn matmul_nt_row_block_with<F: Fn(&[f32], &[f32]) -> f32>(
+    a: &Mat,
+    b: &Mat,
+    c_rows: &mut [f32],
+    i0: usize,
+    i1: usize,
+    dotf: &F,
+) {
     let k = a.cols;
     let n = b.rows;
     debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
-    for i in i0..i1 {
-        let arow = a.row(i);
-        let crow = &mut c_rows[(i - i0) * n..(i - i0 + 1) * n];
-        for j in 0..n {
-            crow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+    c_rows.fill(0.0);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        for i in i0..i1 {
+            let arow = &a.data[i * k + k0..i * k + k1];
+            let crow = &mut c_rows[(i - i0) * n..(i - i0 + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += dotf(arow, &b.data[j * k + k0..j * k + k1]);
+            }
         }
+        k0 = k1;
     }
 }
 
@@ -218,26 +376,9 @@ pub fn par_matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
     });
 }
 
-/// 4-accumulator dot product (breaks the FP dependency chain).
-#[inline]
-pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let o = c * 4;
-        s0 += x[o] * y[o];
-        s1 += x[o + 1] * y[o + 1];
-        s2 += x[o + 2] * y[o + 2];
-        s3 += x[o + 3] * y[o + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for o in chunks * 4..n {
-        s += x[o] * y[o];
-    }
-    s
-}
+// ---------------------------------------------------------------------------
+// C = Aᵀ·B and GEMVs
+// ---------------------------------------------------------------------------
 
 /// `C = Aᵀ·B` (A is m×k ⇒ C is k×n). Streamed as rank-1 updates so A is
 /// still read row-major.
@@ -287,6 +428,20 @@ pub fn matvec_t(a: &Mat, x: &[f32]) -> Vec<f32> {
 
 /// `y = Aᵀ·x` into a preallocated output (zero-alloc decode loop).
 pub fn matvec_t_into(a: &Mat, x: &[f32], y: &mut [f32]) {
+    matvec_t_into_with(a, x, y, &axpy_row);
+}
+
+/// Scalar oracle for [`matvec_t_into`] (AXPY-shaped ⇒ bit-identical to
+/// the dispatching kernel).
+pub fn matvec_t_into_scalar(a: &Mat, x: &[f32], y: &mut [f32]) {
+    matvec_t_into_with(a, x, y, &axpy_row_scalar);
+}
+
+/// Shared `Aᵀ·x` body: ascending input dim, `xi == 0.0` contributions
+/// skipped (the skip is part of the reduction semantics the batched
+/// kernel replicates).
+#[inline(always)]
+fn matvec_t_into_with<F: Fn(&mut [f32], f32, &[f32])>(a: &Mat, x: &[f32], y: &mut [f32], axpy: &F) {
     assert_eq!(a.rows, x.len());
     assert_eq!(a.cols, y.len());
     y.fill(0.0);
@@ -294,7 +449,7 @@ pub fn matvec_t_into(a: &Mat, x: &[f32], y: &mut [f32]) {
         if xi == 0.0 {
             continue;
         }
-        axpy_row(y, xi, a.row(i));
+        axpy(y, xi, a.row(i));
     }
 }
 
@@ -312,6 +467,24 @@ pub fn matvec_t_into(a: &Mat, x: &[f32], y: &mut [f32]) {
 /// round is bit-identical to `B` independent GEMV calls at any batch
 /// size (`rust/tests/batched_serving.rs` holds the oracle).
 pub fn matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat) {
+    matvec_t_batch_into_with(a, xs, ys, &axpy_row);
+}
+
+/// Scalar oracle for [`matvec_t_batch_into`] (AXPY-shaped ⇒
+/// bit-identical to the dispatching kernel; `bench_perf_decode` A/Bs the
+/// two on the batched decode projection shape).
+pub fn matvec_t_batch_into_scalar(a: &Mat, xs: &Mat, ys: &mut Mat) {
+    matvec_t_batch_into_with(a, xs, ys, &axpy_row_scalar);
+}
+
+/// Shared batched-GEMV body, generic over the AXPY primitive.
+#[inline(always)]
+fn matvec_t_batch_into_with<F: Fn(&mut [f32], f32, &[f32])>(
+    a: &Mat,
+    xs: &Mat,
+    ys: &mut Mat,
+    axpy: &F,
+) {
     assert_eq!(a.rows, xs.cols);
     assert_eq!(a.cols, ys.cols);
     assert_eq!(xs.rows, ys.rows);
@@ -323,7 +496,7 @@ pub fn matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat) {
             if xi == 0.0 {
                 continue;
             }
-            axpy_row(ys.row_mut(b), xi, arow);
+            axpy(ys.row_mut(b), xi, arow);
         }
     }
 }
@@ -343,9 +516,10 @@ const BATCH_GEMV_MIN_COLS: usize = 64;
 /// range of every output row. Per output element the reduction is the
 /// same ascending-input-dim order with the same `xi == 0.0` skip as the
 /// serial kernel, so the result is **bit-identical to
-/// [`matvec_t_batch_into`] at every thread count** — the serial kernel
-/// stays as the oracle, and `rust/tests/batched_serving.rs` exercises
-/// both widths end to end.
+/// [`matvec_t_batch_into`] at every thread count** — AXPY is
+/// elementwise, so the column split preserves bits even under SIMD. The
+/// serial kernel stays as the oracle, and
+/// `rust/tests/batched_serving.rs` exercises both widths end to end.
 pub fn par_matvec_t_batch_into(a: &Mat, xs: &Mat, ys: &mut Mat, threads: usize) {
     assert_eq!(a.rows, xs.cols);
     assert_eq!(a.cols, ys.cols);
@@ -419,6 +593,20 @@ mod tests {
         let c = matmul_nt(&a, &b);
         let r = matmul(&a, &b.t());
         assert!(c.allclose(&r, 1e-4));
+    }
+
+    /// The nt depth-blocking must cover depths below, at, straddling and
+    /// well above `KC` (multiple blocks + remainder).
+    #[test]
+    fn nt_blocked_depths_match_transpose() {
+        let mut rng = Pcg64::new(17);
+        for k in [1usize, KC - 1, KC, KC + 1, 2 * KC + 37] {
+            let a = Mat::randn(5, k, 0.5, &mut rng);
+            let b = Mat::randn(7, k, 0.5, &mut rng);
+            let c = matmul_nt(&a, &b);
+            let r = matmul(&a, &b.t());
+            assert!(c.allclose(&r, 1e-2), "k={k} diff={}", c.max_abs_diff(&r));
+        }
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! a row-major `f32` matrix. Submodules:
 //!
 //! * [`matmul`] — cache-blocked GEMM (the L3 hot path; see §Perf).
+//! * [`simd`] — explicit-width 8-lane AXPY/dot kernels (runtime-detected;
+//!   `matmul` dispatches to them behind the `simd` cargo feature).
 //! * [`ops`] — NN primitives: softmax, RMSNorm, SiLU, RoPE, cross-entropy.
 //! * [`linalg`] — Householder QR, triangular solves, least squares.
 //! * [`svd`] — one-sided Jacobi SVD (used by SVD/ASVD init and Figure 3).
@@ -12,6 +14,7 @@
 pub mod linalg;
 pub mod matmul;
 pub mod ops;
+pub mod simd;
 pub mod svd;
 
 /// Row-major dense matrix of `f32`.

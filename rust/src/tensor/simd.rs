@@ -1,0 +1,246 @@
+//! Explicit-width SIMD kernels (8-lane f32) for the two primitive
+//! reductions every hot path funnels through: AXPY (`c += s·b`) and dot.
+//!
+//! This module is **always compiled** — the `simd` cargo feature only
+//! gates whether `tensor/matmul.rs` *dispatches* to it — so the property
+//! tests in `rust/tests/property_invariants.rs` can compare the SIMD and
+//! scalar kernels directly under either feature configuration.
+//!
+//! ## Numerics contract
+//!
+//! * [`axpy`] is **bit-identical** to the scalar
+//!   [`axpy_row_scalar`](super::matmul::axpy_row_scalar): AXPY is
+//!   elementwise (`c[i] += s * b[i]` independently per lane), and the
+//!   vector body uses a separate multiply then add — never an FMA — so
+//!   each lane performs exactly the scalar operation with the same
+//!   rounding. Every kernel built from AXPY (the i-k-j GEMM, the
+//!   transposed GEMVs, the batched decode projection, decode attention's
+//!   value accumulation) therefore stays bitwise unchanged when SIMD is
+//!   enabled.
+//! * [`dot`] reassociates: it keeps an 8-lane accumulator (then a fixed
+//!   pairwise horizontal sum) where the scalar kernel keeps 4 running
+//!   sums. Both are valid orderings of the same sum; they differ by a few
+//!   ULPs at the scale of `Σ|xᵢyᵢ|`. Kernels built on dot
+//!   (`matmul_nt`, `matvec_into`, attention scores) carry a documented
+//!   ULP tolerance against their scalar oracles instead of bit-identity.
+//!
+//! ## Dispatch
+//!
+//! [`available`] performs runtime feature detection (AVX on x86_64 —
+//! cached by `is_x86_feature_detected!` — NEON is baseline on aarch64).
+//! On other architectures it returns `false` and the unsafe kernels are
+//! unreachable; callers must guard on [`available`].
+
+/// Whether the SIMD kernels can run on this CPU. Cheap after the first
+/// call (the std detection macro caches its cpuid probe).
+#[inline]
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true // NEON is baseline on aarch64.
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// `crow += s * brow`, 8 lanes at a time. Bit-identical to the scalar
+/// kernel (separate mul + add per lane, no FMA, scalar remainder tail).
+///
+/// # Safety
+/// Requires [`available`] to have returned `true` on this CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+pub unsafe fn axpy(crow: &mut [f32], s: f32, brow: &[f32]) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(crow.len(), brow.len());
+    let n = crow.len();
+    let chunks = n / 8;
+    let vs = _mm256_set1_ps(s);
+    let cp = crow.as_mut_ptr();
+    let bp = brow.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let b = _mm256_loadu_ps(bp.add(o));
+        let cv = _mm256_loadu_ps(cp.add(o));
+        // mul then add (NOT fmadd): one rounding per op, exactly like the
+        // scalar `c += s * b` — this is what makes the lane bit-identical.
+        let prod = _mm256_mul_ps(vs, b);
+        _mm256_storeu_ps(cp.add(o), _mm256_add_ps(cv, prod));
+    }
+    for o in chunks * 8..n {
+        crow[o] += s * brow[o];
+    }
+}
+
+/// Dot product with an 8-lane accumulator and a fixed pairwise horizontal
+/// sum. Reassociated relative to the scalar kernel — callers compare
+/// against the scalar oracle with a ULP tolerance, not bit-identity.
+///
+/// # Safety
+/// Requires [`available`] to have returned `true` on this CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * 8;
+        let xv = _mm256_loadu_ps(xp.add(o));
+        let yv = _mm256_loadu_ps(yp.add(o));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+    }
+    // Fixed horizontal reduction: (lo128 + hi128), then pairwise within
+    // the 128-bit half. Deterministic order ⇒ reproducible bits.
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let s4 = _mm_add_ps(lo, hi);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0x55));
+    let mut s = _mm_cvtss_f32(s1);
+    for o in chunks * 8..n {
+        s += x[o] * y[o];
+    }
+    s
+}
+
+/// `crow += s * brow`, two 4-lane NEON vectors per iteration (8 logical
+/// lanes, matching the x86 path). Bit-identical to the scalar kernel
+/// (vmul + vadd, no fused multiply-add).
+///
+/// # Safety
+/// Requires [`available`] to have returned `true` on this CPU (always on
+/// aarch64 — NEON is baseline).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(crow: &mut [f32], s: f32, brow: &[f32]) {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(crow.len(), brow.len());
+    let n = crow.len();
+    let chunks = n / 8;
+    let vs = vdupq_n_f32(s);
+    let cp = crow.as_mut_ptr();
+    let bp = brow.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let b0 = vld1q_f32(bp.add(o));
+        let b1 = vld1q_f32(bp.add(o + 4));
+        let c0 = vld1q_f32(cp.add(o));
+        let c1 = vld1q_f32(cp.add(o + 4));
+        // vmulq + vaddq (NOT vfmaq): same two roundings as scalar.
+        vst1q_f32(cp.add(o), vaddq_f32(c0, vmulq_f32(vs, b0)));
+        vst1q_f32(cp.add(o + 4), vaddq_f32(c1, vmulq_f32(vs, b1)));
+    }
+    for o in chunks * 8..n {
+        crow[o] += s * brow[o];
+    }
+}
+
+/// Dot product with two 4-lane NEON accumulators (8 logical lanes) and a
+/// fixed pairwise horizontal sum. ULP-tolerance contract, like the x86
+/// path.
+///
+/// # Safety
+/// Requires [`available`] to have returned `true` on this CPU.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut a0 = vdupq_n_f32(0.0);
+    let mut a1 = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let o = c * 8;
+        a0 = vaddq_f32(a0, vmulq_f32(vld1q_f32(xp.add(o)), vld1q_f32(yp.add(o))));
+        a1 = vaddq_f32(a1, vmulq_f32(vld1q_f32(xp.add(o + 4)), vld1q_f32(yp.add(o + 4))));
+    }
+    let s4 = vaddq_f32(a0, a1);
+    let s2 = vadd_f32(vget_low_f32(s4), vget_high_f32(s4));
+    let mut s = vget_lane_f32::<0>(s2) + vget_lane_f32::<1>(s2);
+    for o in chunks * 8..n {
+        s += x[o] * y[o];
+    }
+    s
+}
+
+/// Unsupported architecture: [`available`] returns `false`, so these are
+/// never reached — they exist only to keep call sites compiling.
+///
+/// # Safety
+/// Never safe to call (and never called): guarded by [`available`].
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub unsafe fn axpy(_crow: &mut [f32], _s: f32, _brow: &[f32]) {
+    unreachable!("simd::axpy on unsupported arch; guard on simd::available()")
+}
+
+/// See [`axpy`] (unsupported-arch stub).
+///
+/// # Safety
+/// Never safe to call (and never called): guarded by [`available`].
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub unsafe fn dot(_x: &[f32], _y: &[f32]) -> f32 {
+    unreachable!("simd::dot on unsupported arch; guard on simd::available()")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn axpy_bit_identical_to_scalar_all_tails() {
+        if !available() {
+            return;
+        }
+        let mut rng = Pcg64::new(40);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 100, 257, 511] {
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut want: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut got = want.clone();
+            let s = rng.normal();
+            crate::tensor::matmul::axpy_row_scalar(&mut want, s, &b);
+            unsafe { axpy(&mut got, s, &b) };
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_close_to_scalar() {
+        if !available() {
+            return;
+        }
+        let mut rng = Pcg64::new(41);
+        for n in [0usize, 1, 7, 8, 9, 33, 100, 511] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want = crate::tensor::matmul::dot_scalar(&x, &y);
+            let got = unsafe { dot(&x, &y) };
+            let scale: f32 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (a * b).abs())
+                .sum::<f32>()
+                .max(f32::MIN_POSITIVE);
+            assert!(
+                (got - want).abs() <= 8.0 * f32::EPSILON * scale,
+                "n={n} got={got} want={want}"
+            );
+        }
+    }
+}

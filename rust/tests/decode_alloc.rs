@@ -1,23 +1,30 @@
-//! Steady-state decode must not touch the heap (full-cache policy).
+//! Steady-state decode must not touch the heap.
 //!
 //! A counting global allocator (thread-local, so the libtest runner's own
 //! threads can't pollute the count) wraps `System`. After reserving view,
 //! scratch and cache capacity, `Engine::decode_step_with` is driven for a
-//! run of steps and must perform **zero** allocations — the acceptance
-//! criterion for the incremental-view refactor's alloc-free hot path.
+//! run of steps and must perform **zero** allocations. Two policies are
+//! held to this bar: the full cache (the original incremental-view
+//! acceptance criterion) and CSKV int4, whose decode path additionally
+//! exercises the zero-alloc compressed append, the scratch-buffered
+//! sync migration, and the fused dequantize-GEMV attention over sealed
+//! quantized view segments.
 //!
-//! This file must stay a single-test binary: the allocator hooks are
-//! process-global even though counting is per-thread.
+//! This binary must hold only alloc-counting tests: the allocator hook is
+//! process-global (counting itself is per-thread, and each test resets
+//! its own counter, so the two tests cannot pollute each other).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use std::sync::Arc;
 
-use cskv::kvcache::{FullCache, KvCachePolicy};
+use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
 use cskv::model::engine::DecodeState;
 use cskv::model::{Engine, ModelConfig, ModelWeights};
 use cskv::tensor::ops;
+use cskv::tensor::Mat;
 use cskv::util::prng::Pcg64;
 
 thread_local! {
@@ -102,6 +109,79 @@ fn full_cache_decode_steady_state_allocates_nothing() {
         n_steps - 4
     );
     // Sanity: the run actually decoded into the persistent view.
+    assert_eq!(state.view(0).len(), prompt.len() + n_steps);
+    assert_eq!(policy.len(0), prompt.len() + n_steps);
+}
+
+/// Low-rank factors matching the `test_small` engine geometry.
+fn engine_factors(rank: usize) -> Arc<ModelFactors> {
+    let d = ModelConfig::test_small().d_model;
+    let mut rng = Pcg64::new(rank as u64 * 31 + 9);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..2).map(|_| LayerFactors { k: mk(), v: mk() }).collect(),
+        provenance: "alloc-test".into(),
+    })
+}
+
+/// The CSKV int4 fused decode path must be just as alloc-free as the full
+/// cache: compressed append into the policy's scratch row, sync-time
+/// history migration through the grow-only `SyncScratch`, and attention
+/// scored straight off the view's packed int4 segments. The geometry is
+/// chosen so the measured window crosses no policy seal (prompt 100,
+/// residual stays below a group) while the view already carries two
+/// sealed quantized groups — the fused kernels run every step.
+#[test]
+fn cskv_int4_fused_decode_steady_state_allocates_nothing() {
+    let cfg = ModelConfig::test_small();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+    let mut rng = Pcg64::new(13);
+    let prompt: Vec<usize> = (0..100).map(|_| rng.range(5, 200)).collect();
+    let n_steps = 24usize;
+
+    let mut policy = CskvCache::new(
+        engine_factors(8),
+        cfg.d_model,
+        CskvConfig { window: 32, quant: QuantMode::Int4 },
+    );
+    let _ = engine.prefill(&prompt, Some(&mut policy));
+
+    let mut state = DecodeState::new(&cfg);
+    let total = prompt.len() + n_steps + 4;
+    state.reserve(total);
+    policy.reserve(n_steps + 4);
+
+    // Warm-up: first post-prefill sync seals the view's quantized groups
+    // and sets the sync scratch high-water marks.
+    let mut tok = 42usize;
+    for i in 0..4 {
+        let logits = engine.decode_step_with(&mut policy, tok, prompt.len() + i, &mut state);
+        tok = ops::argmax(logits);
+    }
+    assert!(
+        state.view(0).quant_rows() > 0,
+        "geometry bug: the measured steps would never touch the fused int4 path"
+    );
+
+    ALLOC_COUNT.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for i in 4..n_steps {
+        let logits = engine.decode_step_with(&mut policy, tok, prompt.len() + i, &mut state);
+        tok = ops::argmax(logits);
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOC_COUNT.with(|c| c.get());
+
+    assert_eq!(
+        allocs, 0,
+        "int4 decode_step_with allocated {allocs} times over {} steady-state steps",
+        n_steps - 4
+    );
     assert_eq!(state.view(0).len(), prompt.len() + n_steps);
     assert_eq!(policy.len(0), prompt.len() + n_steps);
 }

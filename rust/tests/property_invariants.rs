@@ -4,9 +4,11 @@
 
 use std::sync::Arc;
 
+use cskv::compress::quant::{quantize_block, QuantAxis};
 use cskv::compress::ratio::{rank_for_keep, KvCompressionPlan};
 use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
 use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::tensor::matmul;
 use cskv::kvcache::{
     CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, KvSnapshot, QuantMode,
 };
@@ -572,6 +574,208 @@ fn prop_quantized_store_tracks_token_count() {
             q.len(0) == p.len(0)
                 && q.materialize(0).len() == p.materialize(0).len()
                 && q.kv_bytes() <= p.kv_bytes()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SIMD kernel layer: dispatching kernels vs their scalar oracles.
+// ---------------------------------------------------------------------------
+
+/// Exact bit comparison — `==` on f32 would paper over `-0.0` and NaN.
+fn same_bits(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One unit-in-the-last-place at the given magnitude (clamped away from
+/// zero so a fully-cancelling reduction still gets a finite budget).
+fn ulp_at(scale: f32) -> f32 {
+    let s = scale.abs().max(f32::MIN_POSITIVE);
+    f32::from_bits(s.to_bits() + 1) - s
+}
+
+/// THE contract the `simd` feature rests on, AXPY half: every AXPY-shaped
+/// kernel — raw [`matmul::axpy_row`], the GEMV [`matmul::matvec_t_into`],
+/// the blocked GEMM [`matmul::matmul_into`] and the batched decode
+/// projection [`matmul::matvec_t_batch_into`] — is **bit-identical** to
+/// its scalar oracle on arbitrary shapes (odd lengths, SIMD-width tails),
+/// and the row/column-parallel entry points preserve those bits at
+/// threads 1 and 8. With the feature off (or on a CPU without the ISA)
+/// the dispatchers *are* the oracles and this degenerates to a identity
+/// check — CI runs both feature legs.
+#[test]
+fn prop_simd_axpy_family_bit_identical_to_scalar() {
+    forall(
+        "axpy-family kernels: simd dispatch ≡ scalar oracle, bit-exact",
+        40,
+        zip(Gen::usize_in(1..512), Gen::usize_in(0..10_000)),
+        |&(n, seed)| {
+            let mut rng = Pcg64::new(seed as u64 + 1);
+            // Raw AXPY on a shared dirty base.
+            let brow: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let s = rng.normal();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut c_dispatch = base.clone();
+            let mut c_scalar = base;
+            matmul::axpy_row(&mut c_dispatch, s, &brow);
+            matmul::axpy_row_scalar(&mut c_scalar, s, &brow);
+            if !same_bits(&c_dispatch, &c_scalar) {
+                return false;
+            }
+            // GEMV `y = Aᵀ·x` into dirty buffers of different filth.
+            let m = n % 37 + 1;
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let x: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+            let mut y1 = vec![1.0f32; n];
+            let mut y2 = vec![-2.0f32; n];
+            matmul::matvec_t_into(&a, &x, &mut y1);
+            matmul::matvec_t_into_scalar(&a, &x, &mut y2);
+            if !same_bits(&y1, &y2) {
+                return false;
+            }
+            // Blocked GEMM + its row-parallel split.
+            let (mm, kk, nn) = (n % 67 + 1, n % 129 + 1, n % 33 + 1);
+            let a2 = Mat::randn(mm, kk, 1.0, &mut rng);
+            let b2 = Mat::randn(kk, nn, 1.0, &mut rng);
+            let mut c1 = Mat::zeros(mm, nn);
+            let mut c2 = Mat::zeros(mm, nn);
+            matmul::matmul_into(&a2, &b2, &mut c1);
+            matmul::matmul_into_scalar(&a2, &b2, &mut c2);
+            if !same_bits(&c1.data, &c2.data) {
+                return false;
+            }
+            for threads in [1usize, 8] {
+                let mut cp = Mat::from_vec(mm, nn, vec![3.0; mm * nn]); // dirty
+                matmul::par_matmul_into(&a2, &b2, &mut cp, threads);
+                if !same_bits(&cp.data, &c1.data) {
+                    return false;
+                }
+            }
+            // Batched decode GEMV + its column-parallel split.
+            let bsz = n % 5 + 1;
+            let xs = Mat::randn(bsz, m, 1.0, &mut rng);
+            let mut ys1 = Mat::from_vec(bsz, n, vec![9.0; bsz * n]); // dirty
+            let mut ys2 = Mat::zeros(bsz, n);
+            matmul::matvec_t_batch_into(&a, &xs, &mut ys1);
+            matmul::matvec_t_batch_into_scalar(&a, &xs, &mut ys2);
+            if !same_bits(&ys1.data, &ys2.data) {
+                return false;
+            }
+            for threads in [1usize, 8] {
+                let mut ysp = Mat::from_vec(bsz, n, vec![-1.0; bsz * n]); // dirty
+                matmul::par_matvec_t_batch_into(&a, &xs, &mut ysp, threads);
+                if !same_bits(&ysp.data, &ys1.data) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// THE contract the `simd` feature rests on, dot half: the 8-lane dot
+/// reassociates the reduction, so [`matmul::dot`] agrees with
+/// [`matmul::dot_scalar`] only to a documented tolerance — 4 ULP at the
+/// magnitude of `Σ|xᵢyᵢ|` — and [`matmul::matmul_nt_into`] inherits one
+/// such budget per `KC` depth block per element. The row-parallel nt
+/// split must still be bit-identical to the serial *dispatched* kernel
+/// (parallelism never reorders a row's reduction).
+#[test]
+fn prop_simd_dot_family_within_ulp_of_scalar() {
+    forall(
+        "dot-family kernels: simd dispatch within 4 ULP/depth-block of scalar",
+        40,
+        zip(Gen::usize_in(1..600), Gen::usize_in(0..10_000)),
+        |&(n, seed)| {
+            let mut rng = Pcg64::new(seed as u64 * 3 + 7);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let d = matmul::dot(&x, &y);
+            let ds = matmul::dot_scalar(&x, &y);
+            let mag: f32 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+            if (d - ds).abs() > 4.0 * ulp_at(mag) {
+                eprintln!("dot: n={n} |Δ|={} tol={}", (d - ds).abs(), 4.0 * ulp_at(mag));
+                return false;
+            }
+            // A·Bᵀ: 4 ULP per depth block, at the full-row product scale.
+            let (mm, nn) = (n % 7 + 1, n % 11 + 1);
+            let a = Mat::randn(mm, n, 0.5, &mut rng);
+            let b = Mat::randn(nn, n, 0.5, &mut rng);
+            let mut c1 = Mat::zeros(mm, nn);
+            let mut c2 = Mat::zeros(mm, nn);
+            matmul::matmul_nt_into(&a, &b, &mut c1);
+            matmul::matmul_nt_into_scalar(&a, &b, &mut c2);
+            let blocks = n.div_ceil(matmul::KC) as f32;
+            for i in 0..mm {
+                for j in 0..nn {
+                    let mag: f32 =
+                        a.row(i).iter().zip(b.row(j)).map(|(p, q)| (p * q).abs()).sum();
+                    if (c1.at(i, j) - c2.at(i, j)).abs() > 4.0 * blocks * ulp_at(mag) {
+                        eprintln!("nt: n={n} ({i},{j})");
+                        return false;
+                    }
+                }
+            }
+            for threads in [1usize, 8] {
+                let mut cp = Mat::from_vec(mm, nn, vec![2.0; mm * nn]); // dirty
+                matmul::par_matmul_nt_into(&a, &b, &mut cp, threads);
+                if !same_bits(&cp.data, &c1.data) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// THE contract the fused int4 decode rests on: for any block shape —
+/// including partial final groups (`rows < GROUP`) — and any head column
+/// slice, [`quantize_block`]'s fused dequantize-dot and dequantize-AXPY
+/// are **bit-identical** to dequantizing the block to f32 and running the
+/// scalar GEMV kernels, on both quantization axes. This is what lets
+/// `decode_attention` score packed segments without a correctness gap to
+/// the materialized path.
+#[test]
+fn prop_fused_int4_gemv_bit_identical_to_dequantize() {
+    forall(
+        "fused int4 dot/axpy ≡ dequantize-then-scalar-GEMV, bit-exact",
+        40,
+        zip(zip(Gen::usize_in(1..40), Gen::usize_in(1..5)), Gen::usize_in(0..10_000)),
+        |&((rows, heads), seed)| {
+            let mut rng = Pcg64::new(seed as u64 + 11);
+            let dh = 2 * (seed % 4 + 1); // head widths 2/4/6/8
+            let cols = heads * dh;
+            let m = Mat::randn(rows, cols, 1.0, &mut rng);
+            for axis in [QuantAxis::PerChannel, QuantAxis::PerToken] {
+                let blk = quantize_block(&m, axis);
+                let deq = blk.dequantize();
+                for h in 0..heads {
+                    let (lo, hi) = (h * dh, (h + 1) * dh);
+                    let x: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+                    let scale = rng.normal();
+                    let mut got = vec![0.0f32; rows];
+                    blk.fused_dot_rows(&x, lo, hi, scale, &mut got);
+                    for (r, g) in got.iter().enumerate() {
+                        let want = matmul::dot_scalar(&x, &deq.row(r)[lo..hi]) * scale;
+                        if g.to_bits() != want.to_bits() {
+                            eprintln!("fused dot: rows={rows} r={r} axis={axis:?}");
+                            return false;
+                        }
+                    }
+                    let w: Vec<f32> = (0..rows).map(|_| rng.normal().abs()).collect();
+                    let mut acc_fused: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+                    let mut acc_oracle = acc_fused.clone();
+                    blk.fused_axpy_rows(&w, lo, hi, &mut acc_fused);
+                    for (r, &wr) in w.iter().enumerate() {
+                        matmul::axpy_row_scalar(&mut acc_oracle, wr, &deq.row(r)[lo..hi]);
+                    }
+                    if !same_bits(&acc_fused, &acc_oracle) {
+                        eprintln!("fused axpy: rows={rows} axis={axis:?}");
+                        return false;
+                    }
+                }
+            }
+            true
         },
     );
 }

@@ -15,6 +15,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo test -q --no-default-features   (scalar fallback)"
+cargo test -q --no-default-features
+
 if [[ "${1:-}" == "--quick" ]]; then
     echo "==> quick mode: skipping clippy + bench smoke"
     exit 0
@@ -22,6 +25,9 @@ fi
 
 echo "==> cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo clippy --all-targets --no-default-features -- -D warnings"
+cargo clippy --all-targets --no-default-features -- -D warnings
 
 echo "==> cargo bench --bench bench_perf_decode -- --fast   (smoke)"
 cargo bench --bench bench_perf_decode -- --fast
