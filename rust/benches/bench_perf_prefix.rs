@@ -1,0 +1,251 @@
+//! §Perf — shared-prefix KV reuse: the coordinator's radix prefix cache,
+//! cold vs warm.
+//!
+//! Workload per cell (depth × policy): `depth` requests that share a
+//! `ctx`-token prompt prefix (a long system preamble) and differ only in
+//! an 8-token tail. **Cold** serves them with the prefix cache disabled
+//! — every request prefills its full prompt. **Warm** enables the cache
+//! and first retires one pre-warm request carrying the shared prefix, so
+//! the measured batch seeds from the trie and prefills only its 8-token
+//! suffix.
+//!
+//! Reported per cell: TTFT p50/p95 cold and warm, warm speedup,
+//! aggregate decode throughput, and the warm run's prefix hit rate
+//! (`depth/(depth+1)` — every measured request hits; the pre-warm is
+//! the one miss). Acceptance: warm TTFT p50 ≥ 2× better than cold at
+//! ctx ≥ 256.
+//!
+//! Like the other perf benches the model comes from `ModelWeights::init`
+//! so it runs anywhere (CI included; no pretrained weights needed).
+//! Results land in `runs/BENCH_perf_prefix.json`.
+//!
+//! Run: `cargo bench --bench bench_perf_prefix [-- --fast]`
+
+use std::sync::Arc;
+
+use cskv::compress::{KvCompressionPlan, LayerFactors, LowRankFactors, ModelFactors};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, RustSequenceBackend};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::engine::Engine;
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::Mat;
+use cskv::util::bench::{git_rev, print_bench_header};
+use cskv::util::cli::Args;
+use cskv::util::json::Json;
+use cskv::util::prng::Pcg64;
+use cskv::util::stats::Samples;
+use cskv::util::table::Table;
+
+fn factors_for(cfg: &ModelConfig) -> Arc<ModelFactors> {
+    let plan = KvCompressionPlan::uniform(0.8);
+    let (rk, rv) = (plan.rank_k(cfg.d_model), plan.rank_v(cfg.d_model));
+    let mut rng = Pcg64::new(11);
+    let layers = (0..cfg.n_layers)
+        .map(|_| LayerFactors {
+            k: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rk, 0.2, &mut rng),
+                Mat::randn(rk, cfg.d_model, 0.2, &mut rng),
+            ),
+            v: LowRankFactors::new(
+                Mat::randn(cfg.d_model, rv, 0.2, &mut rng),
+                Mat::randn(rv, cfg.d_model, 0.2, &mut rng),
+            ),
+        })
+        .collect();
+    Arc::new(ModelFactors {
+        layers,
+        provenance: "bench-prefix".into(),
+    })
+}
+
+#[derive(Clone, Copy)]
+enum Policy {
+    Full,
+    Cskv80,
+    Cskv80Int4,
+}
+
+impl Policy {
+    fn label(self) -> &'static str {
+        match self {
+            Policy::Full => "full",
+            Policy::Cskv80 => "cskv80",
+            Policy::Cskv80Int4 => "cskv80-int4",
+        }
+    }
+
+    fn build(self, cfg: &ModelConfig, factors: &Arc<ModelFactors>) -> Box<dyn KvCachePolicy> {
+        match self {
+            Policy::Full => Box::new(FullCache::new(cfg.n_layers, cfg.d_model)),
+            Policy::Cskv80 => Box::new(CskvCache::new(
+                Arc::clone(factors),
+                cfg.d_model,
+                CskvConfig { window: 32, quant: QuantMode::None },
+            )),
+            Policy::Cskv80Int4 => Box::new(CskvCache::new(
+                Arc::clone(factors),
+                cfg.d_model,
+                CskvConfig { window: 32, quant: QuantMode::Int4 },
+            )),
+        }
+    }
+}
+
+struct Cell {
+    ttft: Samples,
+    tok_s: f64,
+    hit_rate: Option<f64>,
+    shared_bytes: u64,
+}
+
+/// Serve `depth` shared-prefix requests; `warm` enables the prefix cache
+/// and retires one pre-warm request before the measured batch.
+fn run_cell(
+    engine: &Engine,
+    factors: &Arc<ModelFactors>,
+    policy: Policy,
+    depth: usize,
+    ctx: usize,
+    warm: bool,
+) -> anyhow::Result<Cell> {
+    let cfg = engine.w.cfg.clone();
+    let n_new = 8usize;
+    let engine2 = engine.clone();
+    let f2 = Arc::clone(factors);
+    let cfg2 = cfg.clone();
+    let setup: Setup = Box::new(move || {
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(RustSequenceBackend::new(
+                engine2.clone(),
+                policy.build(&cfg2, &f2),
+            )))
+        });
+        Ok(factory)
+    });
+    let coord = Coordinator::start(
+        setup,
+        CoordinatorConfig {
+            max_batch: depth,
+            prefix_cache_bytes: warm.then_some(256 << 20),
+            ..Default::default()
+        },
+    );
+
+    let mut rng = Pcg64::new(23);
+    let shared: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+    let mk = |tail_seed: u64| {
+        let mut p = shared.clone();
+        let mut r = Pcg64::new(tail_seed);
+        p.extend((0..8).map(|_| r.range(16, 250)));
+        p
+    };
+    if warm {
+        // Pre-warm: one request publishes the shared prefix, off the
+        // measured clock.
+        let r = coord.submit(mk(1000), n_new).recv()?;
+        anyhow::ensure!(r.error.is_none(), "pre-warm failed: {:?}", r.error);
+    }
+    let rxs: Vec<_> = (0..depth).map(|i| coord.submit(mk(i as u64), n_new)).collect();
+    let mut ttft = Samples::new();
+    for rx in rxs {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "request failed: {:?}", r.error);
+        ttft.push(r.ttft_s);
+    }
+    let snap = coord.shutdown();
+    Ok(Cell {
+        ttft,
+        tok_s: snap.throughput_tok_s(),
+        hit_rate: snap.prefix_hit_rate(),
+        shared_bytes: snap.prefix_shared_bytes,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    print_bench_header(
+        "bench_perf_prefix",
+        "§Perf: radix prefix cache — cold vs warm TTFT for shared-prefix workloads",
+    );
+    let fast = args.get_flag("fast");
+    let cfg = ModelConfig::tiny();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 42)));
+    let factors = factors_for(&cfg);
+    let mut results = Json::obj();
+
+    let depths: &[usize] = if fast { &[4] } else { &[4, 8] };
+    let ctxs: &[usize] = if fast { &[64] } else { &[128, 256] };
+
+    let mut t = Table::new(
+        "prefix cache (depth requests sharing a ctx-token preamble, 8-token tails)",
+        &[
+            "depth",
+            "ctx",
+            "policy",
+            "cold ttft p50 (s)",
+            "cold p95",
+            "warm ttft p50 (s)",
+            "warm p95",
+            "speedup",
+            "tok/s warm",
+            "hit rate",
+        ],
+    );
+    for &depth in depths {
+        for &ctx in ctxs {
+            for policy in [Policy::Full, Policy::Cskv80, Policy::Cskv80Int4] {
+                let cold = run_cell(&engine, &factors, policy, depth, ctx, false)?;
+                let hot = run_cell(&engine, &factors, policy, depth, ctx, true)?;
+                let (cp50, cp95) = (cold.ttft.percentile(50.0), cold.ttft.percentile(95.0));
+                let (wp50, wp95) = (hot.ttft.percentile(50.0), hot.ttft.percentile(95.0));
+                let speedup = cp50 / wp50;
+                let hit_rate = hot.hit_rate.unwrap_or(0.0);
+                let label = policy.label();
+                if ctx >= 256 {
+                    println!(
+                        "warm-TTFT p50 {label} q{depth} ctx{ctx}: {speedup:.2}x vs cold \
+                         (acceptance: >= 2.00x)"
+                    );
+                }
+                t.row(&[
+                    depth.to_string(),
+                    ctx.to_string(),
+                    label.to_string(),
+                    format!("{cp50:.4}"),
+                    format!("{cp95:.4}"),
+                    format!("{wp50:.4}"),
+                    format!("{wp95:.4}"),
+                    format!("{speedup:.2}x"),
+                    format!("{:.1}", hot.tok_s),
+                    format!("{:.0}%", hit_rate * 100.0),
+                ]);
+                let key = |m: &str| format!("prefix_{label}_q{depth}_ctx{ctx}_{m}");
+                results.set(&key("cold_ttft_p50_s"), Json::Num(cp50));
+                results.set(&key("cold_ttft_p95_s"), Json::Num(cp95));
+                results.set(&key("warm_ttft_p50_s"), Json::Num(wp50));
+                results.set(&key("warm_ttft_p95_s"), Json::Num(wp95));
+                results.set(&key("speedup_p50"), Json::Num(speedup));
+                results.set(&key("warm_tok_s"), Json::Num(hot.tok_s));
+                results.set(&key("hit_rate"), Json::Num(hit_rate));
+                results.set(&key("shared_bytes"), Json::Num(hot.shared_bytes as f64));
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&cskv::runs_dir().join("perf_prefix.csv"))?;
+
+    let root = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_perf_prefix".to_string())),
+        (
+            "git_rev",
+            Json::Str(git_rev().unwrap_or_else(|| "unknown".to_string())),
+        ),
+        ("results", results),
+    ]);
+    let json_path = cskv::runs_dir().join("BENCH_perf_prefix.json");
+    std::fs::write(&json_path, root.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    println!("done; see EXPERIMENTS.md §Perf for the recorded numbers");
+    Ok(())
+}

@@ -22,7 +22,8 @@ use std::sync::Arc;
 use crate::kvcache::snapshot::{tags, SnapReader, SnapWriter};
 use crate::kvcache::{KvCachePolicy, KvSnapshot};
 use crate::model::engine::{
-    BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine,
+    BatchDecodeEntry, BatchDecodeScratch, BatchPrefillScratch, DecodeState, Engine, PrefixSeed,
+    SeededPrefill,
 };
 use crate::tensor::ops;
 
@@ -241,6 +242,64 @@ pub fn prefill_batch(
             rb.reserve_ahead();
             rb.last_token = ops::argmax(rec.logits.row(prompt.len() - 1));
             Ok(rb.last_token)
+        })
+        .collect()
+}
+
+/// Prefill one admission round with shared-prefix seeding: the variant
+/// of [`prefill_batch`] the worker uses when its
+/// [`crate::kvcache::PrefixCache`] is enabled. Each sequence may carry a
+/// [`PrefixSeed`] (the trie's longest match for its prompt); seeded
+/// sequences compute only their unshared suffix yet end bitwise
+/// identical to a cold prefill, and with `capture` on every sequence
+/// returns its [`SeededPrefill`] so the worker can publish the prompt's
+/// prefix back into the trie.
+///
+/// Requires every backend to be a [`RustSequenceBackend`] over the same
+/// engine weights — unlike [`prefill_batch`], width-1 rounds still take
+/// the engine path (seeding/capture matter even without GEMM fusion).
+/// Mixed/PJRT rounds fall back to per-sequence [`SequenceBackend::prefill`]
+/// with seeds ignored and nothing captured (`None` per sequence).
+pub fn prefill_batch_seeded(
+    backends: &mut [&mut dyn SequenceBackend],
+    prompts: &[&[usize]],
+    seeds: &[Option<&PrefixSeed>],
+    capture: bool,
+    scratch: &mut BatchScratch,
+) -> Vec<anyhow::Result<(usize, Option<SeededPrefill>)>> {
+    assert_eq!(backends.len(), prompts.len());
+    assert_eq!(backends.len(), seeds.len());
+    let reusable = prompts.iter().all(|p| !p.is_empty()) && same_rust_engine(backends);
+    if !reusable {
+        // Also covers empty prompts: per-sequence prefill rejects those
+        // with a clean error instead of panicking mid-round.
+        return backends
+            .iter_mut()
+            .zip(prompts)
+            .map(|(b, p)| b.prefill(p).map(|tok| (tok, None)))
+            .collect();
+    }
+    let mut rbs: Vec<&mut RustSequenceBackend> = backends
+        .iter_mut()
+        .map(|b| b.as_rust_backend().expect("checked by same_rust_engine"))
+        .collect();
+    let engine = rbs[0].engine.clone();
+    let results = {
+        let mut policies: Vec<Option<&mut dyn KvCachePolicy>> = rbs
+            .iter_mut()
+            .map(|rb| Some(rb.policy.as_mut()))
+            .collect();
+        engine.prefill_batch_seeded(prompts, seeds, &mut policies, capture, &mut scratch.prefill)
+    };
+    rbs.iter_mut()
+        .zip(prompts)
+        .zip(results)
+        .map(|((rb, prompt), sp)| {
+            rb.pos = prompt.len();
+            rb.reserve_ahead();
+            // `logits` covers only the computed suffix rows.
+            rb.last_token = ops::argmax(sp.record.logits.row(prompt.len() - sp.start - 1));
+            Ok((rb.last_token, Some(sp)))
         })
         .collect()
 }

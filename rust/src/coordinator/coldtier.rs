@@ -63,6 +63,21 @@ impl ColdTier {
         self.dir.as_ref().map(|d| d.join(format!("seq-{id}.kvsnap")))
     }
 
+    /// Check up front that `dir` can hold spill files: create it and
+    /// round-trip a probe file. Lets callers (the `serve` CLI) reject a
+    /// bad `--cold-tier` with a clear error instead of silently
+    /// degrading to memory mid-run.
+    pub fn probe_dir(dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+        let probe = dir.join(".cskv-probe");
+        std::fs::write(&probe, b"probe")
+            .map_err(|e| anyhow::anyhow!("cannot write to {}: {e}", dir.display()))?;
+        std::fs::remove_file(&probe)
+            .map_err(|e| anyhow::anyhow!("cannot clean up probe in {}: {e}", dir.display()))?;
+        Ok(())
+    }
+
     /// Park `snap` under `id`. Returns the parked byte size.
     pub fn put(&mut self, id: u64, snap: &KvSnapshot) -> anyhow::Result<usize> {
         anyhow::ensure!(

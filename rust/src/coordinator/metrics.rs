@@ -30,6 +30,14 @@ struct Inner {
     /// (`rust/tests/batched_serving.rs` asserts head-of-line behavior
     /// directly on this).
     completion_order: Vec<u64>,
+    /// Prefix-cache traffic: admission lookups that matched / missed,
+    /// total bytes served from shared trie nodes, LRU evictions, and the
+    /// trie's resident-bytes high-water mark.
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_shared_bytes: u64,
+    prefix_evictions: u64,
+    prefix_bytes_peak: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -77,6 +85,15 @@ pub struct MetricsSnapshot {
     pub cold_bytes_peak: usize,
     /// Request ids in retirement order.
     pub completion_order: Vec<u64>,
+    /// Prefix-cache admission hits / misses (0/0 when the cache is off).
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Total trie-node bytes served to warm admissions.
+    pub prefix_shared_bytes: u64,
+    /// Trie LRU evictions.
+    pub prefix_evictions: u64,
+    /// High-water mark of the trie's resident payload bytes.
+    pub prefix_bytes_peak: usize,
     pub wall_s: f64,
 }
 
@@ -89,8 +106,15 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Prefix-cache hit rate over admission lookups, or `None` when the
+    /// cache never saw one (disabled).
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        let total = self.prefix_hits + self.prefix_misses;
+        (total > 0).then(|| self.prefix_hits as f64 / total as f64)
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} failed={} tokens={} throughput={:.1} tok/s | queue-wait {} | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {} | preempt/restore {}/{} (cold-peak {})",
             self.requests_completed,
             self.requests_failed,
@@ -104,7 +128,49 @@ impl MetricsSnapshot {
             self.preemptions,
             self.restores,
             crate::util::table::bytes(self.cold_bytes_peak),
-        )
+        );
+        if let Some(rate) = self.prefix_hit_rate() {
+            s.push_str(&format!(
+                " | prefix-cache {}/{} hits ({:.0}%) shared {} evictions {} (resident-peak {})",
+                self.prefix_hits,
+                self.prefix_hits + self.prefix_misses,
+                rate * 100.0,
+                crate::util::table::bytes(self.prefix_shared_bytes as usize),
+                self.prefix_evictions,
+                crate::util::table::bytes(self.prefix_bytes_peak),
+            ));
+        }
+        s
+    }
+
+    /// The latency distributions as one aligned table (mean / p50 / p95 /
+    /// n), queue-wait alongside TTFT so scheduler effects (how long a
+    /// request sat in `pending`) and prefill effects (how long its first
+    /// token took once admitted — where the prefix cache bites) are
+    /// separable at a glance. Rendered by `cskv serve` under the one-line
+    /// [`MetricsSnapshot::report`].
+    pub fn summary_table(&self) -> crate::util::table::Table {
+        let mut t = crate::util::table::Table::new(
+            "latency summary",
+            &["metric", "mean", "p50", "p95", "n"],
+        );
+        let rows: [(&str, &Samples); 5] = [
+            ("queue-wait", &self.queue_wait_s),
+            ("ttft", &self.ttft_s),
+            ("ttft-clean", &self.ttft_clean_s),
+            ("ttft-preempted", &self.ttft_preempted_s),
+            ("tok-latency", &self.tok_latency_s),
+        ];
+        for (name, s) in rows {
+            t.row(&[
+                name.to_string(),
+                format!("{:.4}s", s.mean()),
+                format!("{:.4}s", s.percentile(50.0)),
+                format!("{:.4}s", s.percentile(95.0)),
+                format!("{}", s.len()),
+            ]);
+        }
+        t
     }
 }
 
@@ -168,6 +234,27 @@ impl Metrics {
         g.cold_bytes_current = cold_bytes_now;
     }
 
+    /// An admission lookup matched `shared_bytes` of cached prefix.
+    pub fn record_prefix_hit(&self, shared_bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefix_hits += 1;
+        g.prefix_shared_bytes += shared_bytes as u64;
+    }
+
+    /// An admission lookup found no cached prefix.
+    pub fn record_prefix_miss(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefix_misses += 1;
+    }
+
+    /// Refresh the trie's occupancy gauges (`evictions` is the trie's
+    /// cumulative count, not a delta).
+    pub fn record_prefix_cache(&self, resident_bytes: usize, evictions: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefix_bytes_peak = g.prefix_bytes_peak.max(resident_bytes);
+        g.prefix_evictions = evictions;
+    }
+
     pub fn kv_bytes_current(&self) -> usize {
         self.inner.lock().unwrap().kv_bytes_current
     }
@@ -194,6 +281,11 @@ impl Metrics {
             restores: g.restores,
             cold_bytes_peak: g.cold_bytes_peak,
             completion_order: g.completion_order.clone(),
+            prefix_hits: g.prefix_hits,
+            prefix_misses: g.prefix_misses,
+            prefix_shared_bytes: g.prefix_shared_bytes,
+            prefix_evictions: g.prefix_evictions,
+            prefix_bytes_peak: g.prefix_bytes_peak,
             wall_s,
         }
     }
@@ -237,6 +329,35 @@ mod tests {
         assert_eq!(s.ttft_clean_s.len(), 1);
         assert_eq!(s.ttft_preempted_s.len(), 1);
         assert_eq!(s.completion_order, vec![7, 9]);
+    }
+
+    #[test]
+    fn prefix_counters_and_summary_table() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert!(s.prefix_hit_rate().is_none(), "cache off → no rate");
+        assert!(!s.report().contains("prefix-cache"));
+
+        m.record_prefix_hit(4096);
+        m.record_prefix_miss();
+        m.record_prefix_miss();
+        m.record_prefix_hit(4096);
+        m.record_prefix_cache(8192, 3);
+        m.record_prefix_cache(2048, 5);
+        complete(&m, 1, 0.05, 0);
+        let s = m.snapshot();
+        assert_eq!((s.prefix_hits, s.prefix_misses), (2, 2));
+        assert_eq!(s.prefix_shared_bytes, 8192);
+        assert_eq!(s.prefix_evictions, 5);
+        assert_eq!(s.prefix_bytes_peak, 8192);
+        assert!((s.prefix_hit_rate().unwrap() - 0.5).abs() < 1e-12);
+        assert!(s.report().contains("prefix-cache 2/4 hits (50%)"));
+
+        // Queue-wait sits alongside TTFT in the summary table.
+        let rendered = s.summary_table().render();
+        assert!(rendered.contains("queue-wait"));
+        assert!(rendered.contains("ttft"));
+        assert!(rendered.contains("p95"));
     }
 
     #[test]

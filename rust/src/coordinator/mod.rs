@@ -18,7 +18,12 @@
 //!   baseline), `size-aware` admits shortest-remaining-work-first
 //!   within the budget (no head-of-line blocking), and `preemptive`
 //!   additionally swaps the lowest-priority active sequence out to a
-//!   cold tier under pressure.
+//!   cold tier under pressure. With the prefix cache enabled
+//!   ([`CoordinatorConfig::prefix_cache_bytes`]), admission charges
+//!   only each request's **unshared suffix**: the cached prefix rows
+//!   already resident in [`crate::kvcache::PrefixCache`] are priced
+//!   once for the whole fleet, so prompts sharing a long system
+//!   preamble admit at a fraction of their nominal footprint.
 //!
 //! Preemption is built on sequence state migration:
 //! [`crate::kvcache::KvCachePolicy::snapshot`] serializes the cache in

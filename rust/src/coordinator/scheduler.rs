@@ -35,6 +35,9 @@
 pub struct QueuedSeq {
     pub id: u64,
     /// Projected completion KV footprint (prompt + n_new tokens), bytes.
+    /// When the coordinator's prefix cache holds a matching prompt
+    /// prefix, the worker subtracts the shared rows before building
+    /// this value, so schedulers price only the unshared suffix.
     pub cost_bytes: usize,
     /// Total work ahead: prompt tokens to prefill + tokens to generate.
     pub work_tokens: usize,

@@ -14,12 +14,24 @@
 //! 2. **Admission**: the scheduler repeatedly picks the next queued
 //!    request that fits the headroom, every sequence charged at its
 //!    *projected completion* footprint
-//!    ([`SequenceBackend::kv_bytes_projected`]). When the preferred
-//!    candidate does not fit, a preemptive scheduler may swap the
-//!    lowest-priority active sequence (most remaining work) out to the
-//!    [`super::coldtier::ColdTier`] to fund it. If nothing at all is
-//!    running, the preferred candidate is admitted over budget — the
-//!    can't-deadlock escape hatch.
+//!    ([`SequenceBackend::kv_bytes_projected`]). With the prefix cache
+//!    enabled ([`CoordinatorConfig::prefix_cache_bytes`]) a request
+//!    whose prompt opens with a cached prefix is charged only its
+//!    **unshared suffix** (`projected(prompt + n_new) −
+//!    projected(prefix)`): the shared bytes already sit in the trie and
+//!    are counted once, not once per admission. This is an
+//!    admission-time discount — after prefill the sequence's real
+//!    footprint (the policy re-ingests the full context) re-enters the
+//!    budget through the `cost.max(kv_bytes())` term in
+//!    `committed_bytes`, so the hot tier is never under-accounted for
+//!    long. When the preferred candidate does not fit, a preemptive
+//!    scheduler may swap the lowest-priority active sequence (most
+//!    remaining work) out to the [`super::coldtier::ColdTier`] to fund
+//!    it. If nothing at all is running, the preferred candidate is
+//!    admitted over budget — the can't-deadlock escape hatch.
+//!    Each admission also performs its [`PrefixCache::lookup`]: the
+//!    longest-prefix match is pinned (refcounted) and carried to the
+//!    prefill round as a [`PrefixSeed`].
 //! 3. **Resume**: swapped-out sequences return from the cold tier
 //!    (smallest remaining work first) with whatever budget and batch
 //!    headroom is left *after* admission — so queued work the scheduler
@@ -31,11 +43,18 @@
 //!    `sync_view` path), and the resumed sequence joins the same
 //!    round's decode.
 //! 4. The whole admission round prefills in **one fused pass**
-//!    ([`super::backend::prefill_batch`]); each decode round advances
-//!    every active sequence in **one GEMM-batched call**
+//!    ([`super::backend::prefill_batch`], or
+//!    [`super::backend::prefill_batch_seeded`] when the prefix cache is
+//!    on — seeded sequences compute only their unshared suffix, the
+//!    warm-TTFT win `bench_perf_prefix` measures, yet stay bitwise
+//!    identical to a cold run); each decode round advances every active
+//!    sequence in **one GEMM-batched call**
 //!    ([`super::backend::decode_batch`]). `fused: false` keeps the
 //!    per-sequence A/B baseline; token streams are bit-identical either
-//!    way (`rust/tests/batched_serving.rs`).
+//!    way (`rust/tests/batched_serving.rs`). After the round, every
+//!    prefilled prompt (cold or warm) is **published** back into the
+//!    trie and its pinned seed chain released; the trie then LRU-evicts
+//!    down to its byte budget.
 //! 5. Every submitted request receives exactly one [`Response`]:
 //!    construction, prefill, and cold-tier/restore failures answer with
 //!    an error `Response` (counted in [`Metrics`]) instead of dropping
@@ -52,11 +71,15 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use super::backend::{decode_batch, prefill_batch, BatchScratch, SequenceBackend};
+use super::backend::{
+    decode_batch, prefill_batch, prefill_batch_seeded, BatchScratch, SequenceBackend,
+};
 use super::coldtier::ColdTier;
 use super::metrics::{Completion, Metrics};
 use super::request::{Request, Response};
 use super::scheduler::{ActiveSeq, QueuedSeq, Scheduler, SchedulerKind};
+use crate::kvcache::{PrefixCache, PrefixRef};
+use crate::model::engine::{PrefixSeed, SeededPrefill};
 
 /// Factory producing a fresh backend per admitted sequence. Created inside
 /// the worker thread (PJRT clients are not Send), hence the two-level
@@ -91,6 +114,11 @@ pub struct CoordinatorConfig {
     /// Spill directory for cold-tier snapshots (`cskv serve
     /// --cold-tier <dir>`). `None` parks preempted sequences in memory.
     pub cold_tier_dir: Option<std::path::PathBuf>,
+    /// Byte budget for the shared-prefix radix cache (`cskv serve
+    /// --prefix-cache-kb <n>`). `None` disables prefix reuse; `Some(0)`
+    /// is rejected by the CLI up front (a zero-budget trie could never
+    /// retain a node).
+    pub prefix_cache_bytes: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -102,6 +130,7 @@ impl Default for CoordinatorConfig {
             fused: true,
             scheduler: SchedulerKind::Fifo,
             cold_tier_dir: None,
+            prefix_cache_bytes: None,
         }
     }
 }
@@ -149,6 +178,10 @@ struct Admit {
     cost_bytes: usize,
     queue_wait_s: f64,
     started: Instant,
+    /// The prefix cache's longest match for this prompt, acquired at
+    /// pick time: the owned seed for the prefill plus the trie
+    /// reference pinning the matched chain until the round completes.
+    seed: Option<(PrefixSeed, PrefixRef)>,
 }
 
 /// Handle to a running coordinator.
@@ -305,6 +338,9 @@ struct Worker<'a> {
     active: Vec<Active>,
     swapped: Vec<Swapped>,
     batch: BatchScratch,
+    /// Shared-prefix radix cache ([`CoordinatorConfig::prefix_cache_bytes`]);
+    /// worker-owned, no locking.
+    prefix: Option<PrefixCache>,
     /// A constructed-but-unused backend from a blocked admission.
     /// Backends carry no request-specific state before prefill, so the
     /// spare serves whichever request is picked next — `factory()` stays
@@ -462,13 +498,28 @@ impl Worker<'_> {
                 }
             };
             if queued.len() != self.pending.len() {
+                let prefix = self.prefix.as_ref();
                 queued = self
                     .pending
                     .iter()
-                    .map(|r| QueuedSeq {
-                        id: r.id,
-                        cost_bytes: backend.kv_bytes_projected(r.prompt.len() + r.n_new),
-                        work_tokens: r.prompt.len() + r.n_new,
+                    .map(|r| {
+                        let total = backend.kv_bytes_projected(r.prompt.len() + r.n_new);
+                        // Suffix-only charging: bytes the trie already
+                        // holds for this prompt's prefix are counted
+                        // once (in the trie), not per admission. `peek`
+                        // is read-only — no reference is acquired until
+                        // the request is actually picked.
+                        let cost_bytes = match prefix.map(|pc| pc.peek(&r.prompt)) {
+                            Some(p) if p > 0 => {
+                                total.saturating_sub(backend.kv_bytes_projected(p))
+                            }
+                            _ => total,
+                        };
+                        QueuedSeq {
+                            id: r.id,
+                            cost_bytes,
+                            work_tokens: r.prompt.len() + r.n_new,
+                        }
                     })
                     .collect();
             }
@@ -532,12 +583,33 @@ impl Worker<'_> {
             let req = self.pending.remove(pick).expect("pick in range");
             let cost_bytes = queued.remove(pick).cost_bytes;
             let queue_wait_s = req.submitted_at.elapsed().as_secs_f64();
+            // Acquire the prefix seed now that the pick is final: the
+            // lookup pins the matched chain against eviction until the
+            // prefill round releases it.
+            let seed = match self.prefix.as_mut() {
+                Some(pc) => {
+                    let before = pc.stats().shared_bytes;
+                    match pc.lookup(&req.prompt) {
+                        Some(hit) => {
+                            let served = (pc.stats().shared_bytes - before) as usize;
+                            self.metrics.record_prefix_hit(served);
+                            Some(hit)
+                        }
+                        None => {
+                            self.metrics.record_prefix_miss();
+                            None
+                        }
+                    }
+                }
+                None => None,
+            };
             admitted.push(Admit {
                 req,
                 backend,
                 cost_bytes,
                 queue_wait_s,
                 started: Instant::now(),
+                seed,
             });
         }
         admitted
@@ -552,7 +624,45 @@ impl Worker<'_> {
         if admitted.is_empty() {
             return;
         }
-        let results: Vec<(anyhow::Result<usize>, Option<f64>)> = if self.cfg.fused {
+        type SeededResult = (anyhow::Result<(usize, Option<SeededPrefill>)>, Option<f64>);
+        let results: Vec<SeededResult> = if self.prefix.is_some() {
+            // Prefix-cache rounds go through the seeded engine path even
+            // at width 1: warm sequences prefill only their unshared
+            // suffix, and every prompt's activations are captured for
+            // publication into the trie.
+            if self.cfg.fused {
+                let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(admitted.len());
+                let mut prompts: Vec<&[usize]> = Vec::with_capacity(admitted.len());
+                let mut seeds: Vec<Option<&PrefixSeed>> = Vec::with_capacity(admitted.len());
+                for ad in admitted.iter_mut() {
+                    prompts.push(&ad.req.prompt);
+                    seeds.push(ad.seed.as_ref().map(|(s, _)| s));
+                    bs.push(ad.backend.as_mut());
+                }
+                prefill_batch_seeded(&mut bs, &prompts, &seeds, true, &mut self.batch)
+                    .into_iter()
+                    .map(|r| (r, None))
+                    .collect()
+            } else {
+                admitted
+                    .iter_mut()
+                    .map(|ad| {
+                        let seed = ad.seed.as_ref().map(|(s, _)| s);
+                        let r = prefill_batch_seeded(
+                            &mut [ad.backend.as_mut()],
+                            &[&ad.req.prompt],
+                            &[seed],
+                            true,
+                            &mut self.batch,
+                        )
+                        .pop()
+                        .expect("one sequence in, one result out");
+                        let ttft = ad.req.submitted_at.elapsed().as_secs_f64();
+                        (r, Some(ttft))
+                    })
+                    .collect()
+            }
+        } else if self.cfg.fused {
             let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(admitted.len());
             let mut prompts: Vec<&[usize]> = Vec::with_capacity(admitted.len());
             for ad in admitted.iter_mut() {
@@ -561,7 +671,7 @@ impl Worker<'_> {
             }
             prefill_batch(&mut bs, &prompts, &mut self.batch)
                 .into_iter()
-                .map(|r| (r, None))
+                .map(|r| (r.map(|tok| (tok, None)), None))
                 .collect()
         } else {
             admitted
@@ -569,13 +679,28 @@ impl Worker<'_> {
                 .map(|ad| {
                     let r = ad.backend.prefill(&ad.req.prompt);
                     let ttft = ad.req.submitted_at.elapsed().as_secs_f64();
-                    (r, Some(ttft))
+                    (r.map(|tok| (tok, None)), Some(ttft))
                 })
                 .collect()
         };
-        for (ad, (res, ttft)) in admitted.into_iter().zip(results) {
+        for (mut ad, (res, ttft)) in admitted.into_iter().zip(results) {
+            if let Some(pc) = self.prefix.as_mut() {
+                // Release the pinned chain first so publication's LRU
+                // pass sees true refcounts, then publish this prompt's
+                // prefix (deduplicated against existing nodes; the
+                // sequence's own seed rows are owned copies, so eviction
+                // can't touch in-flight state).
+                if let Some((_, pin)) = ad.seed.take() {
+                    pc.release(pin);
+                }
+                if let Ok((_, Some(sp))) = &res {
+                    pc.publish(&ad.req.prompt, sp);
+                }
+                self.metrics
+                    .record_prefix_cache(pc.resident_bytes(), pc.stats().evictions);
+            }
             match res {
-                Ok(first) => {
+                Ok((first, _)) => {
                     let ttft_s =
                         ttft.unwrap_or_else(|| ad.req.submitted_at.elapsed().as_secs_f64());
                     self.active.push(Active {
@@ -686,6 +811,7 @@ fn worker_loop(
         active: Vec::new(),
         swapped: Vec::new(),
         batch: BatchScratch::default(),
+        prefix: cfg.prefix_cache_bytes.map(PrefixCache::new),
         spare: None,
     };
     loop {
@@ -929,5 +1055,46 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.requests_completed, 4);
         assert_eq!(snap.preemptions, 0);
+    }
+
+    /// Prefix-cache reuse must be invisible in the token stream: prompts
+    /// sharing a 64-token (block-aligned) prefix generate bit-identical
+    /// completions with the cache on vs. off, while the metrics show the
+    /// later prompts actually hit the trie and reused shared bytes.
+    #[test]
+    fn prefix_cache_seeds_shared_prompts_bit_identically() {
+        let shared: Vec<usize> = (0..64).map(|i| (i * 7 + 3) % 50).collect();
+        let mk = |tail: usize| {
+            let mut p = shared.clone();
+            p.extend_from_slice(&[tail, tail + 1, tail + 2]);
+            p
+        };
+        let run = |prefix_cache_bytes: Option<usize>| {
+            let coord = Coordinator::start(
+                test_setup(),
+                CoordinatorConfig { prefix_cache_bytes, ..Default::default() },
+            );
+            // Sequential submit/wait so each prompt's prefix is published
+            // before the next is admitted.
+            let outs: Vec<Vec<usize>> = (0..3)
+                .map(|i| {
+                    let r = coord.submit(mk(60 + 10 * i), 8).recv().unwrap();
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    r.tokens
+                })
+                .collect();
+            (outs, coord.shutdown())
+        };
+        let (cold, cold_snap) = run(None);
+        let (warm, warm_snap) = run(Some(64 << 20));
+        assert_eq!(warm, cold, "seeded prefill must not change any token");
+        assert_eq!(cold_snap.prefix_hits, 0);
+        assert!(
+            warm_snap.prefix_hits >= 2,
+            "second and third prompts should hit, got {}",
+            warm_snap.prefix_hits
+        );
+        assert!(warm_snap.prefix_shared_bytes > 0);
+        assert!(warm_snap.prefix_bytes_peak > 0);
     }
 }

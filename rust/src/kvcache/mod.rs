@@ -81,10 +81,12 @@
 pub mod bibranch;
 pub mod full;
 pub mod memory;
+pub mod prefix;
 pub mod snapshot;
 
 pub use bibranch::{CskvCache, CskvConfig, QuantMode};
 pub use full::FullCache;
+pub use prefix::{PrefixCache, PrefixRef, PrefixStats};
 pub use snapshot::{KvSnapshot, SnapReader, SnapWriter};
 
 use crate::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};

@@ -1,0 +1,759 @@
+//! Shared-prefix KV reuse: a block-granular radix trie over token-ID
+//! prefixes, owned by the serving coordinator.
+//!
+//! Serving traffic is dominated by shared system prompts and few-shot
+//! headers: most requests open with the same tokens, yet every sequence
+//! used to prefill its full prompt from scratch. The [`PrefixCache`]
+//! prefills a shared prefix **once** and seeds every later sequence from
+//! it, skipping the prefix's GEMM + attention work entirely (the TTFT
+//! lever `bench_perf_prefix` measures).
+//!
+//! ## What a node stores — replay ingestion, not policy snapshots
+//!
+//! Each trie node covers one [`PREFILL_ROW_BLOCK`]-token block of a
+//! prefix and stores, per layer, exactly that block's **prefill
+//! activations**: the attention inputs `xnorm`, the pre-RoPE,
+//! pre-replacement keys, the values (each `[BLOCK, d_model]`), plus the
+//! block's row-tile H2O mass partial. A warm sequence re-ingests the
+//! assembled full-prefix activations into its *own* policy
+//! ([`crate::model::engine::Engine::prefill_batch_seeded`] calls
+//! `ingest_prefill` / `observe_prefill_attn` with inputs bitwise equal to
+//! a cold run's) while computing GEMMs and attention only for the
+//! unshared suffix rows.
+//!
+//! The obvious-looking alternative — snapshotting each policy's *cache
+//! state* at the prefix boundary via [`KvSnapshot`] and `restore`-ing it
+//! copy-on-write into new sequences — is unsound for eviction policies:
+//! `H2oCache::observe_prefill_attn` folds the mass and evicts
+//! immediately, so its state after a `P`-token prefill has already
+//! dropped rows that a longer prompt's prefill would have kept. No
+//! stored state at `P` can reproduce the cold state at `T > P`. Storing
+//! the raw activations and replaying ingestion is the only seeding that
+//! is bitwise-cold for **every** policy — the property
+//! `rust/tests/prefix_reuse.rs` pins across all policy variants and
+//! thread counts. (The [`KvSnapshot`] codec still carries the trie
+//! itself: [`PrefixCache::snapshot`] / [`PrefixCache::from_snapshot`]
+//! round-trip the whole structure under [`tags::PREFIX`].)
+//!
+//! ## Why the mass partial makes the replay bitwise
+//!
+//! The streaming prefill folds per-tile H2O mass partials in ascending
+//! tile order, and tile `t`'s partial is zero beyond row `32·(t+1)` and
+//! a pure function of the token prefix `[0, 32·(t+1))`. Partials are
+//! sums of probabilities, hence `≥ +0.0`, and `x + 0.0 == x` bitwise for
+//! `x ≥ 0` — so refolding the stored per-block slabs in ascending order
+//! (and skipping the zero tail each slab omits) reproduces the cold
+//! fold's prefix exactly, and the warm kernel folds the suffix tiles on
+//! top in the same order the cold kernel would have.
+//!
+//! ## Sharing, refcounts, eviction
+//!
+//! Nodes form a radix trie: two prompts sharing 256 tokens share the
+//! first 8 nodes and their bytes are counted **once**. [`lookup`]
+//! acquires a reference on the whole matched chain (released by
+//! [`release`] after the seeded prefill has published back); eviction is
+//! byte-budgeted LRU over unreferenced leaves only, so a node feeding an
+//! in-flight admission can never be evicted mid-use — the refcount unit
+//! tests pin this. The budget may be transiently exceeded when every
+//! node is referenced; the next publish retries.
+//!
+//! [`lookup`]: PrefixCache::lookup
+//! [`release`]: PrefixCache::release
+
+use std::collections::HashMap;
+
+use super::snapshot::{tags, SnapReader, SnapWriter};
+use super::KvSnapshot;
+use crate::model::engine::{PrefixSeed, SeededPrefill, PREFILL_ROW_BLOCK};
+use crate::tensor::Mat;
+
+/// One trie node: a [`PREFILL_ROW_BLOCK`]-token block of some prefix and
+/// its per-layer activation payload.
+struct Node {
+    /// The block's tokens (`PREFILL_ROW_BLOCK` of them).
+    block: Vec<usize>,
+    /// 1-based: this node completes a prefix of `depth * BLOCK` tokens.
+    depth: usize,
+    parent: Option<usize>,
+    children: HashMap<Vec<usize>, usize>,
+    /// In-flight sequences holding this node (acquired chain-wide by
+    /// `lookup`, dropped by `release`). A referenced node is unevictable.
+    refs: usize,
+    /// LRU clock stamp of the last lookup/publish touching this node.
+    last_use: u64,
+    /// Payload bytes (counted once, shared by every prefix through here).
+    bytes: usize,
+    /// Per layer: attention inputs `rmsnorm(x)` for this block, `[BLOCK, d]`.
+    xnorm: Vec<Mat>,
+    /// Per layer: pre-RoPE, pre-replacement keys `[BLOCK, d]`.
+    k: Vec<Mat>,
+    /// Per layer: values `[BLOCK, d]`.
+    v: Vec<Mat>,
+    /// Per layer: this block's row-tile H2O mass partial, entries
+    /// `[0, depth * BLOCK)` (exactly zero beyond — omitted).
+    mass: Vec<Vec<f32>>,
+}
+
+impl Node {
+    fn payload_bytes(&self) -> usize {
+        let mats: usize = self
+            .xnorm
+            .iter()
+            .chain(&self.k)
+            .chain(&self.v)
+            .map(|m| m.data.len() * 4)
+            .sum();
+        let mass: usize = self.mass.iter().map(|m| m.len() * 4).sum();
+        mats + mass + self.block.len() * 8
+    }
+}
+
+/// Handle to an acquired prefix chain. Must be handed back via
+/// [`PrefixCache::release`] once the seeded prefill has completed (or
+/// failed) — the chain is pinned against eviction until then.
+#[must_use = "release() the chain or its nodes stay pinned forever"]
+pub struct PrefixRef {
+    leaf: usize,
+}
+
+/// Cumulative counters, surfaced through the coordinator's `Metrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Total payload bytes served from the trie across all hits (a
+    /// 2-block hit on a node chain of 3 counts the 2 matched blocks).
+    pub shared_bytes: u64,
+    /// Nodes evicted by the LRU to stay under the byte budget.
+    pub evictions: u64,
+    /// Current resident payload bytes.
+    pub resident_bytes: usize,
+    /// Current node count.
+    pub nodes: usize,
+}
+
+/// Coordinator-owned radix prefix cache. See the module docs for the
+/// design; all methods are `&mut self` — the single worker thread owns
+/// the cache, no interior locking.
+pub struct PrefixCache {
+    budget_bytes: usize,
+    /// Arena: `None` slots are free (reused by the free list).
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: HashMap<Vec<usize>, usize>,
+    clock: u64,
+    resident_bytes: usize,
+    hits: u64,
+    misses: u64,
+    shared_bytes: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    /// An empty trie with an LRU byte budget for node payloads.
+    pub fn new(budget_bytes: usize) -> Self {
+        PrefixCache {
+            budget_bytes,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: HashMap::new(),
+            clock: 0,
+            resident_bytes: 0,
+            hits: 0,
+            misses: 0,
+            shared_bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("live node")
+    }
+
+    fn alloc(&mut self, n: Node) -> usize {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(n);
+                id
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// The matched node chain for `tokens`, longest first-to-last, capped
+    /// at `(len - 1) / BLOCK` blocks so a seed always leaves at least one
+    /// suffix row to prefill (logits need a computed row).
+    fn walk(&self, tokens: &[usize]) -> Vec<usize> {
+        let mut chain = Vec::new();
+        if tokens.is_empty() {
+            return chain;
+        }
+        let max_blocks = (tokens.len() - 1) / PREFILL_ROW_BLOCK;
+        let mut map = &self.roots;
+        for b in 0..max_blocks {
+            let block = &tokens[b * PREFILL_ROW_BLOCK..(b + 1) * PREFILL_ROW_BLOCK];
+            match map.get(block) {
+                Some(&id) => {
+                    chain.push(id);
+                    map = &self.node(id).children;
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    /// Longest cached prefix usable for `tokens`, in tokens (0 = none).
+    /// Read-only: used by admission to price the unshared suffix without
+    /// acquiring references or touching the LRU.
+    pub fn peek(&self, tokens: &[usize]) -> usize {
+        self.walk(tokens).len() * PREFILL_ROW_BLOCK
+    }
+
+    /// Longest-prefix match for `tokens`: assemble an owned [`PrefixSeed`]
+    /// from the matched chain and pin the chain against eviction until
+    /// [`release`](PrefixCache::release). Counts a hit or a miss.
+    pub fn lookup(&mut self, tokens: &[usize]) -> Option<(PrefixSeed, PrefixRef)> {
+        let chain = self.walk(tokens);
+        if chain.is_empty() {
+            self.misses += 1;
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let p = chain.len() * PREFILL_ROW_BLOCK;
+        let n_layers = self.node(chain[0]).xnorm.len();
+        let d = self.node(chain[0]).xnorm[0].cols;
+        let mut xnorm = Vec::with_capacity(n_layers);
+        let mut k = Vec::with_capacity(n_layers);
+        let mut v = Vec::with_capacity(n_layers);
+        let mut mass = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let mut xn = Mat::zeros(p, d);
+            let mut km = Mat::zeros(p, d);
+            let mut vm = Mat::zeros(p, d);
+            // Ascending-tile refold of the stored slabs: bitwise equal to
+            // the cold fold's prefix (module docs).
+            let mut ms = vec![0.0f32; p];
+            for (bi, &id) in chain.iter().enumerate() {
+                let node = self.node(id);
+                let lo = bi * PREFILL_ROW_BLOCK * d;
+                let hi = lo + PREFILL_ROW_BLOCK * d;
+                xn.data[lo..hi].copy_from_slice(&node.xnorm[li].data);
+                km.data[lo..hi].copy_from_slice(&node.k[li].data);
+                vm.data[lo..hi].copy_from_slice(&node.v[li].data);
+                for (mj, &pj) in ms.iter_mut().zip(&node.mass[li]) {
+                    *mj += pj;
+                }
+            }
+            xnorm.push(xn);
+            k.push(km);
+            v.push(vm);
+            mass.push(ms);
+        }
+        let mut served = 0usize;
+        for &id in &chain {
+            let n = self.node_mut(id);
+            n.refs += 1;
+            n.last_use = clock;
+            served += n.bytes;
+        }
+        self.hits += 1;
+        self.shared_bytes += served as u64;
+        Some((
+            PrefixSeed {
+                len: p,
+                xnorm,
+                k,
+                v,
+                mass,
+            },
+            PrefixRef {
+                leaf: *chain.last().expect("non-empty chain"),
+            },
+        ))
+    }
+
+    /// Drop the references acquired by the matching [`lookup`]. Call
+    /// exactly once per returned [`PrefixRef`].
+    ///
+    /// [`lookup`]: PrefixCache::lookup
+    pub fn release(&mut self, r: PrefixRef) {
+        let mut cur = Some(r.leaf);
+        while let Some(id) = cur {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "release without matching lookup");
+            n.refs = n.refs.saturating_sub(1);
+            cur = n.parent;
+        }
+    }
+
+    /// Publish a completed prefill's prompt prefix back into the trie:
+    /// walk the existing chain (touching its LRU stamps) and extend it
+    /// with one node per newly-covered complete block, sliced from the
+    /// seeded record's full-length per-layer mats and the captured
+    /// per-tile mass slabs. Already-present blocks are deduplicated (node
+    /// contents are a pure function of the token prefix). Evicts down to
+    /// the byte budget afterwards.
+    pub fn publish(&mut self, tokens: &[usize], sp: &SeededPrefill) {
+        let blocks_total = tokens.len() / PREFILL_ROW_BLOCK;
+        if blocks_total == 0 {
+            return;
+        }
+        debug_assert_eq!(sp.start % PREFILL_ROW_BLOCK, 0);
+        let first_captured = sp.start / PREFILL_ROW_BLOCK;
+        self.clock += 1;
+        let clock = self.clock;
+        let mut parent: Option<usize> = None;
+        for b in 0..blocks_total {
+            let block = tokens[b * PREFILL_ROW_BLOCK..(b + 1) * PREFILL_ROW_BLOCK].to_vec();
+            let map = match parent {
+                Some(pid) => &self.node(pid).children,
+                None => &self.roots,
+            };
+            if let Some(&id) = map.get(&block) {
+                self.node_mut(id).last_use = clock;
+                parent = Some(id);
+                continue;
+            }
+            // New block: needs this run's captured tile. A gap can only
+            // appear if the caller publishes against a trie that lost the
+            // seed chain it prefilled from — stop extending, never guess.
+            let Some(lt) = b.checked_sub(first_captured) else {
+                return;
+            };
+            if lt >= sp.mass_tiles.len() {
+                return;
+            }
+            let n_layers = sp.record.xnorms.len();
+            let (lo, hi) = (b * PREFILL_ROW_BLOCK, (b + 1) * PREFILL_ROW_BLOCK);
+            let mut node = Node {
+                block: block.clone(),
+                depth: b + 1,
+                parent,
+                children: HashMap::new(),
+                refs: 0,
+                last_use: clock,
+                bytes: 0,
+                xnorm: (0..n_layers).map(|li| sp.record.xnorms[li].rows_slice(lo, hi)).collect(),
+                k: (0..n_layers).map(|li| sp.record.ks[li].rows_slice(lo, hi)).collect(),
+                v: (0..n_layers).map(|li| sp.record.vs[li].rows_slice(lo, hi)).collect(),
+                mass: sp.mass_tiles[lt].clone(),
+            };
+            debug_assert!(node.mass.iter().all(|m| m.len() == hi));
+            node.bytes = node.payload_bytes();
+            let bytes = node.bytes;
+            let id = self.alloc(node);
+            match parent {
+                Some(pid) => {
+                    self.node_mut(pid).children.insert(block, id);
+                }
+                None => {
+                    self.roots.insert(block, id);
+                }
+            }
+            self.resident_bytes += bytes;
+            parent = Some(id);
+        }
+        self.evict_to_budget();
+    }
+
+    /// LRU eviction over unreferenced, childless nodes until the payload
+    /// fits the budget (or nothing is evictable — transient overage).
+    fn evict_to_budget(&mut self) {
+        while self.resident_bytes > self.budget_bytes {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(id, slot)| slot.as_ref().map(|n| (id, n)))
+                .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+                .min_by_key(|(_, n)| n.last_use)
+                .map(|(id, _)| id);
+            let Some(id) = victim else { return };
+            self.evict(id);
+        }
+    }
+
+    fn evict(&mut self, id: usize) {
+        let n = self.nodes[id].take().expect("live node");
+        debug_assert_eq!(n.refs, 0);
+        debug_assert!(n.children.is_empty());
+        match n.parent {
+            Some(pid) => {
+                self.node_mut(pid).children.remove(&n.block);
+            }
+            None => {
+                self.roots.remove(&n.block);
+            }
+        }
+        self.resident_bytes -= n.bytes;
+        self.evictions += 1;
+        self.free.push(id);
+    }
+
+    /// Live node count.
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Current resident payload bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            shared_bytes: self.shared_bytes,
+            evictions: self.evictions,
+            resident_bytes: self.resident_bytes,
+            nodes: self.node_count(),
+        }
+    }
+
+    /// Serialize the whole trie (structure + payloads + LRU stamps; not
+    /// the transient refcounts — snapshots are taken at rest) under
+    /// [`tags::PREFIX`]. Bit-exact round-trip via
+    /// [`PrefixCache::from_snapshot`].
+    pub fn snapshot(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.budget_bytes);
+        w.u64(self.clock);
+        w.write_usize(self.roots.len());
+        // Deterministic order: sort sibling keys (HashMap order is not).
+        let mut roots: Vec<&Vec<usize>> = self.roots.keys().collect();
+        roots.sort();
+        for key in roots {
+            self.write_subtree(&mut w, self.roots[key]);
+        }
+        KvSnapshot::new(tags::PREFIX, w.finish())
+    }
+
+    fn write_subtree(&self, w: &mut SnapWriter, id: usize) {
+        let n = self.node(id);
+        w.usizes(&n.block);
+        w.u64(n.last_use);
+        w.write_usize(n.xnorm.len());
+        for li in 0..n.xnorm.len() {
+            for m in [&n.xnorm[li], &n.k[li], &n.v[li]] {
+                w.write_usize(m.rows);
+                w.write_usize(m.cols);
+                w.f32s(&m.data);
+            }
+            w.f32s(&n.mass[li]);
+        }
+        w.write_usize(n.children.len());
+        let mut keys: Vec<&Vec<usize>> = n.children.keys().collect();
+        keys.sort();
+        for key in keys {
+            self.write_subtree(w, n.children[key]);
+        }
+    }
+
+    /// Rebuild a trie from a [`PrefixCache::snapshot`].
+    pub fn from_snapshot(snap: &KvSnapshot) -> anyhow::Result<PrefixCache> {
+        snap.expect_tag(tags::PREFIX, "prefix cache")?;
+        let mut r = SnapReader::new(snap.payload());
+        let budget_bytes = r.read_usize()?;
+        let clock = r.u64()?;
+        let n_roots = r.read_usize()?;
+        let mut pc = PrefixCache::new(budget_bytes);
+        pc.clock = clock;
+        for _ in 0..n_roots {
+            pc.read_subtree(&mut r, None, 1)?;
+        }
+        r.expect_end()?;
+        Ok(pc)
+    }
+
+    fn read_subtree(
+        &mut self,
+        r: &mut SnapReader<'_>,
+        parent: Option<usize>,
+        depth: usize,
+    ) -> anyhow::Result<()> {
+        let block = r.usizes()?;
+        anyhow::ensure!(
+            block.len() == PREFILL_ROW_BLOCK,
+            "prefix node block has {} tokens, want {PREFILL_ROW_BLOCK}",
+            block.len()
+        );
+        let last_use = r.u64()?;
+        let n_layers = r.read_usize()?;
+        let mut read_mat = |r: &mut SnapReader<'_>| -> anyhow::Result<Mat> {
+            let rows = r.read_usize()?;
+            let cols = r.read_usize()?;
+            let data = r.f32s()?;
+            anyhow::ensure!(data.len() == rows * cols, "prefix node mat shape mismatch");
+            Ok(Mat::from_vec(rows, cols, data))
+        };
+        let mut xnorm = Vec::with_capacity(n_layers);
+        let mut k = Vec::with_capacity(n_layers);
+        let mut v = Vec::with_capacity(n_layers);
+        let mut mass = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            xnorm.push(read_mat(r)?);
+            k.push(read_mat(r)?);
+            v.push(read_mat(r)?);
+            mass.push(r.f32s()?);
+        }
+        let n_children = r.read_usize()?;
+        let mut node = Node {
+            block: block.clone(),
+            depth,
+            parent,
+            children: HashMap::new(),
+            refs: 0,
+            last_use,
+            bytes: 0,
+            xnorm,
+            k,
+            v,
+            mass,
+        };
+        node.bytes = node.payload_bytes();
+        let bytes = node.bytes;
+        let id = self.alloc(node);
+        match parent {
+            Some(pid) => {
+                self.node_mut(pid).children.insert(block, id);
+            }
+            None => {
+                self.roots.insert(block, id);
+            }
+        }
+        self.resident_bytes += bytes;
+        for _ in 0..n_children {
+            self.read_subtree(r, Some(id), depth + 1)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::PrefillRecord;
+
+    const B: usize = PREFILL_ROW_BLOCK;
+
+    /// Fabricate a deterministic seeded-prefill capture for `tokens`
+    /// (1 layer, d=4), distinct per token prefix so payload mismatches
+    /// would be caught by the bitwise assertions.
+    fn fake_capture(tokens: &[usize], start: usize) -> SeededPrefill {
+        let t = tokens.len();
+        let d = 4;
+        let cell = |i: usize, j: usize| (tokens[i] as f32) + 0.25 * j as f32;
+        let mut xn = Mat::zeros(t, d);
+        let mut k = Mat::zeros(t, d);
+        let mut v = Mat::zeros(t, d);
+        for i in 0..t {
+            for j in 0..d {
+                xn.row_mut(i)[j] = cell(i, j);
+                k.row_mut(i)[j] = cell(i, j) + 100.0;
+                v.row_mut(i)[j] = cell(i, j) + 200.0;
+            }
+        }
+        let mass: Vec<f32> = (0..t).map(|j| j as f32 * 0.5).collect();
+        let n_suffix_complete = (t - start) / B;
+        let mass_tiles: Vec<Vec<Vec<f32>>> = (0..n_suffix_complete)
+            .map(|lt| {
+                let at = start / B + lt;
+                vec![(0..(at + 1) * B).map(|j| j as f32 * 0.125).collect()]
+            })
+            .collect();
+        SeededPrefill {
+            record: PrefillRecord {
+                xnorms: vec![xn],
+                ks: vec![k],
+                vs: vec![v],
+                attn_mass: vec![mass],
+                logits: Mat::zeros(t - start, 3),
+            },
+            start,
+            mass_tiles,
+        }
+    }
+
+    fn toks(seed: usize, n: usize) -> Vec<usize> {
+        (0..n).map(|i| (seed * 1000 + i * 7) % 97).collect()
+    }
+
+    #[test]
+    fn publish_lookup_roundtrip_and_strict_prefix_cap() {
+        let mut pc = PrefixCache::new(usize::MAX);
+        let donor = toks(1, 3 * B);
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        assert_eq!(pc.node_count(), 3);
+
+        // Same prompt: the cap leaves ≥ 1 suffix row, so only 2 blocks.
+        assert_eq!(pc.peek(&donor), 2 * B);
+        // A longer prompt sharing the prefix gets all 3 blocks.
+        let mut target = donor.clone();
+        target.extend_from_slice(&toks(2, B));
+        assert_eq!(pc.peek(&target), 3 * B);
+
+        let (seed, r) = pc.lookup(&target).expect("hit");
+        assert_eq!(seed.len, 3 * B);
+        // Seed rows are the donor's rows, bitwise.
+        let cap = fake_capture(&donor, 0);
+        assert_eq!(seed.xnorm[0].data, cap.record.xnorms[0].data);
+        assert_eq!(seed.k[0].data, cap.record.ks[0].data);
+        assert_eq!(seed.v[0].data, cap.record.vs[0].data);
+        // Refolded mass = ascending sum of the per-block slabs.
+        let mut want = vec![0.0f32; 3 * B];
+        for slab in &cap.mass_tiles {
+            for (mj, &pj) in want.iter_mut().zip(&slab[0]) {
+                *mj += pj;
+            }
+        }
+        assert_eq!(seed.mass[0], want);
+        pc.release(r);
+
+        let s = pc.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert!(s.shared_bytes > 0);
+
+        // Unrelated prompt: miss.
+        assert!(pc.lookup(&toks(9, 2 * B)).is_none());
+        assert_eq!(pc.stats().misses, 1);
+    }
+
+    #[test]
+    fn radix_sharing_counts_shared_bytes_once() {
+        let mut pc = PrefixCache::new(usize::MAX);
+        let a = toks(1, 2 * B);
+        pc.publish(&a, &fake_capture(&a, 0));
+        let bytes_after_a = pc.resident_bytes();
+        // b shares a's full 2-block prefix and adds one more block.
+        let mut b = a.clone();
+        b.extend_from_slice(&toks(3, B));
+        pc.publish(&b, &fake_capture(&b, 0));
+        assert_eq!(pc.node_count(), 3, "shared blocks deduplicated");
+        assert!(pc.resident_bytes() > bytes_after_a);
+        assert!(
+            pc.resident_bytes() < 2 * bytes_after_a,
+            "only the unshared block adds bytes"
+        );
+    }
+
+    #[test]
+    fn evicting_a_referenced_node_is_impossible() {
+        let mut pc = PrefixCache::new(usize::MAX);
+        let donor = toks(1, 2 * B);
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        let mut target = donor.clone();
+        target.extend_from_slice(&toks(2, B));
+        let (_seed, r) = pc.lookup(&target).expect("hit");
+
+        // Shrink the budget to zero: nothing may be evicted while the
+        // chain is referenced.
+        pc.budget_bytes = 0;
+        pc.evict_to_budget();
+        assert_eq!(pc.node_count(), 2, "referenced chain survives");
+        assert_eq!(pc.stats().evictions, 0);
+
+        // Released, the same pass clears the trie.
+        pc.release(r);
+        pc.evict_to_budget();
+        assert_eq!(pc.node_count(), 0);
+        assert_eq!(pc.stats().evictions, 2);
+        assert_eq!(pc.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_unreferenced_leaf_first() {
+        let a = toks(1, B);
+        let b = toks(2, B);
+        let mut pc = PrefixCache::new(usize::MAX);
+        pc.publish(&a, &fake_capture(&a, 0));
+        pc.publish(&b, &fake_capture(&b, 0));
+        // Touch `a` (needs > B tokens for a usable match).
+        let mut a_long = a.clone();
+        a_long.push(1);
+        let (_s, r) = pc.lookup(&a_long).expect("hit");
+        pc.release(r);
+        // Budget forces one eviction: `b` is older by LRU.
+        pc.budget_bytes = pc.resident_bytes() - 1;
+        pc.evict_to_budget();
+        assert_eq!(pc.node_count(), 1);
+        assert_eq!(pc.peek(&a_long), B, "a survives");
+        let mut b_long = b.clone();
+        b_long.push(1);
+        assert_eq!(pc.peek(&b_long), 0, "b evicted");
+    }
+
+    #[test]
+    fn republish_is_idempotent() {
+        let mut pc = PrefixCache::new(usize::MAX);
+        let donor = toks(1, 2 * B);
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        let bytes = pc.resident_bytes();
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        assert_eq!(pc.node_count(), 2);
+        assert_eq!(pc.resident_bytes(), bytes);
+    }
+
+    #[test]
+    fn warm_publish_extends_existing_chain() {
+        let mut pc = PrefixCache::new(usize::MAX);
+        let donor = toks(1, 2 * B);
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        // A warm run that matched the 2-block prefix publishes a 4-block
+        // prompt with suffix-only capture (start = 2B).
+        let mut target = donor.clone();
+        target.extend_from_slice(&toks(4, 2 * B));
+        pc.publish(&target, &fake_capture(&target, 2 * B));
+        assert_eq!(pc.node_count(), 4);
+        let mut longer = target.clone();
+        longer.push(1);
+        assert_eq!(pc.peek(&longer), 4 * B);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_seeds() {
+        let mut pc = PrefixCache::new(1 << 20);
+        let donor = toks(1, 3 * B);
+        pc.publish(&donor, &fake_capture(&donor, 0));
+        let mut other = toks(5, 2 * B);
+        pc.publish(&other, &fake_capture(&other, 0));
+        other.push(2);
+
+        let snap = pc.snapshot();
+        let mut back = PrefixCache::from_snapshot(&snap).expect("decode");
+        assert_eq!(back.node_count(), pc.node_count());
+        assert_eq!(back.resident_bytes(), pc.resident_bytes());
+
+        let mut target = donor.clone();
+        target.push(9);
+        let (want, r1) = pc.lookup(&target).expect("hit");
+        let (got, r2) = back.lookup(&target).expect("hit after restore");
+        assert_eq!(got.len, want.len);
+        for li in 0..want.xnorm.len() {
+            assert_eq!(got.xnorm[li].data, want.xnorm[li].data);
+            assert_eq!(got.k[li].data, want.k[li].data);
+            assert_eq!(got.v[li].data, want.v[li].data);
+            assert_eq!(got.mass[li], want.mass[li]);
+        }
+        let (got2, r3) = back.lookup(&other).expect("second tree survives");
+        assert_eq!(got2.len, 2 * B);
+        pc.release(r1);
+        back.release(r2);
+        back.release(r3);
+
+        // Wrong tag is rejected.
+        let bogus = KvSnapshot::new(tags::FULL, vec![]);
+        assert!(PrefixCache::from_snapshot(&bogus).is_err());
+    }
+}

@@ -40,6 +40,9 @@ pub mod tags {
     pub const PJRT_FULL: u32 = 17;
     /// `PjrtCskvSession` serialized buffers (compressed history + window)
     pub const PJRT_CSKV: u32 = 18;
+    /// [`crate::kvcache::PrefixCache`] — the coordinator's shared-prefix
+    /// radix trie (per-block activation payloads + LRU bookkeeping)
+    pub const PREFIX: u32 = 19;
 }
 
 /// `"KVSN"` — guards against feeding arbitrary files to [`KvSnapshot::decode`].

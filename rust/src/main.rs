@@ -12,9 +12,16 @@
 //! `--scheduler {fifo,size-aware,preemptive}` picks the admission/
 //! preemption policy (fifo = strict arrival order; size-aware = shortest
 //! work first within the KV budget; preemptive = size-aware + cold-tier
-//! swap-out under budget pressure) and `--cold-tier <dir>` spills
+//! swap-out under budget pressure), `--cold-tier <dir>` spills
 //! preempted KV snapshots to a directory instead of holding them in
-//! memory.
+//! memory (requires `--scheduler preemptive`), and
+//! `--prefix-cache-kb N` enables the coordinator's radix prefix cache
+//! with an N-KiB byte budget (admission then charges only each
+//! request's unshared suffix). Invalid combinations — a zero prefix
+//! budget, an unwritable cold-tier dir, a cold tier without the
+//! preemptive scheduler, or zero `--requests/--n-new/--ctx/--max-batch`
+//! — are rejected up front with a clear error instead of failing
+//! mid-round.
 //!
 //! The benches (`cargo bench`) regenerate the paper's tables; this binary
 //! is the operational entry point a user scripts against.
@@ -239,9 +246,39 @@ fn eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Satellite of the prefix-cache PR: every `serve` flag combination
+/// that used to surface as a confusing mid-round failure (or a silent
+/// degrade) is rejected here, before any model work starts.
+fn validate_serve_flags(args: &Args, coord_cfg: &CoordinatorConfig) -> anyhow::Result<()> {
+    for knob in ["requests", "n-new", "ctx", "max-batch"] {
+        if let Some(v) = args.get_opt(knob) {
+            anyhow::ensure!(
+                v.parse::<usize>().map(|n| n > 0).unwrap_or(false),
+                "--{knob} must be a positive integer, got {v:?}"
+            );
+        }
+    }
+    if let Some(v) = args.get_opt("prefix-cache-kb") {
+        anyhow::ensure!(
+            v.parse::<usize>().map(|n| n > 0).unwrap_or(false),
+            "--prefix-cache-kb must be a positive KiB budget, got {v:?} \
+             (omit the flag to disable the prefix cache)"
+        );
+    }
+    if let Some(dir) = &coord_cfg.cold_tier_dir {
+        anyhow::ensure!(
+            matches!(coord_cfg.scheduler, cskv::coordinator::SchedulerKind::Preemptive),
+            "--cold-tier only takes effect with --scheduler preemptive \
+             (got {}); drop the flag or switch scheduler",
+            coord_cfg.scheduler.name()
+        );
+        cskv::coordinator::ColdTier::probe_dir(dir)
+            .map_err(|e| anyhow::anyhow!("--cold-tier dir unusable: {e}"))?;
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let engine = load_engine(args)?;
-    let cfg = engine.w.cfg.clone();
     let n_req = args.get_usize("requests", 16);
     let n_new = args.get_usize("n-new", vocab::VALUE_LEN);
     let budget_kb = args.get_usize("kv-budget-kb", 0);
@@ -259,7 +296,14 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         )?,
         // --cold-tier <dir>: spill preempted KV snapshots to disk.
         cold_tier_dir: args.get_opt("cold-tier").map(std::path::PathBuf::from),
+        // --prefix-cache-kb N: shared-prefix KV reuse across requests.
+        prefix_cache_bytes: args.get_opt("prefix-cache-kb").and_then(|v| {
+            v.parse::<usize>().ok().map(|kb| kb * 1024)
+        }),
     };
+    validate_serve_flags(args, &coord_cfg)?;
+    let engine = load_engine(args)?;
+    let cfg = engine.w.cfg.clone();
     let sched = coord_cfg.scheduler;
     let eng = engine.clone();
     let coord = Coordinator::start(
@@ -298,6 +342,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         sched.name()
     );
     println!("  {}", snap.report());
+    if let Some(rate) = snap.prefix_hit_rate() {
+        println!(
+            "  prefix cache: {:.0}% hit rate, {} shared, {} evictions, {} resident peak",
+            rate * 100.0,
+            cskv::util::table::bytes(snap.prefix_shared_bytes as usize),
+            snap.prefix_evictions,
+            cskv::util::table::bytes(snap.prefix_bytes_peak),
+        );
+    }
     println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
+    snap.summary_table().print();
     Ok(())
 }

@@ -108,6 +108,48 @@ pub struct PrefillRecord {
     pub logits: Mat,
 }
 
+/// An assembled shared-prefix seed for [`Engine::prefill_batch_seeded`]:
+/// the per-layer prefill activations of a `len`-token, block-aligned
+/// prompt prefix, owned by the caller. The serving coordinator's
+/// [`crate::kvcache::PrefixCache`] assembles one per admission hit from
+/// its radix trie; seeding replays these rows into the new sequence's
+/// policy, so the warm prefill is bitwise identical to a cold run while
+/// computing only the suffix (see the prefix module docs for why replay
+/// beats policy-state snapshots).
+pub struct PrefixSeed {
+    /// Prefix length in tokens: a multiple of [`PREFILL_ROW_BLOCK`],
+    /// strictly shorter than the prompt it seeds.
+    pub len: usize,
+    /// Per layer: attention inputs `rmsnorm(x)`, `[len, d_model]`.
+    pub xnorm: Vec<Mat>,
+    /// Per layer: pre-RoPE, pre-replacement keys `[len, d_model]`.
+    pub k: Vec<Mat>,
+    /// Per layer: values `[len, d_model]`.
+    pub v: Vec<Mat>,
+    /// Per layer: the cold fold of the prefix row-tiles' H2O mass
+    /// partials over key positions `[0, len)`.
+    pub mass: Vec<Vec<f32>>,
+}
+
+/// One sequence's result from [`Engine::prefill_batch_seeded`]: the
+/// full-context record plus what [`crate::kvcache::PrefixCache::publish`]
+/// needs to share this prompt's prefix with later admissions.
+pub struct SeededPrefill {
+    /// `xnorms` / `ks` / `vs` / `attn_mass` cover all `T` prompt rows
+    /// (prefix rows bitwise the seed's), while `logits` covers only the
+    /// computed suffix: `[T - start, vocab]`.
+    pub record: PrefillRecord,
+    /// The seed length this prefill resumed from (0 = cold).
+    pub start: usize,
+    /// Captured per-suffix-tile H2O mass partial slabs, indexed
+    /// `[suffix_tile][layer]`. Slab `lt` belongs to absolute row tile
+    /// `start/BLOCK + lt` and holds the first
+    /// `start + (lt+1)·`[`PREFILL_ROW_BLOCK`] entries of that tile's
+    /// partial (exactly zero beyond — omitted). Only complete tiles are
+    /// captured; empty when capture was off.
+    pub mass_tiles: Vec<Vec<Vec<f32>>>,
+}
+
 /// Timing + memory statistics for one generation.
 #[derive(Clone, Debug, Default)]
 pub struct GenStats {
@@ -218,32 +260,39 @@ pub const PREFILL_ROW_BLOCK: usize = 32;
 /// capture) reuse one scratch across every same-length prompt. Buffers
 /// that the [`PrefillRecord`] *returns* (`xnorm`, pre-RoPE K, V, mass,
 /// logits) are still allocated per layer by necessity.
+/// For a cold prefill the query span is the whole context (`Q = T_kv`);
+/// a prefix-seeded prefill ([`Engine::prefill_batch_seeded`]) sizes only
+/// the computed suffix (`Q = T_kv − start`) for the row buffers while the
+/// key-side buffers still cover the full context.
 pub struct PrefillScratch {
+    /// Computed (query/suffix) rows `Q`.
     t: usize,
+    /// Attended (key/value) rows `T_kv ≥ Q`.
+    t_kv: usize,
     d: usize,
     d_ff: usize,
-    /// Residual stream `[T, d]`.
+    /// Residual stream `[Q, d]`.
     x: Mat,
-    /// RoPE'd queries `[T, d]`.
+    /// RoPE'd queries `[Q, d]`.
     q: Mat,
-    /// RoPE'd attention keys `[T, d]` (copy of the policy-routed K).
+    /// RoPE'd attention keys `[T_kv, d]` (copy of the policy-routed K).
     k_rope: Mat,
-    /// Attention output `[T, d]`.
+    /// Attention output `[Q, d]`.
     attn_out: Mat,
-    /// Post-attention RMSNorm `[T, d]`.
+    /// Post-attention RMSNorm `[Q, d]`.
     xn2: Mat,
-    /// MLP hidden `[T, d_ff]`.
+    /// MLP hidden `[Q, d_ff]`.
     h1: Mat,
-    /// Shared projection output `[T, d]` (attn·Wo, then MLP down-proj).
+    /// Shared projection output `[Q, d]` (attn·Wo, then MLP down-proj).
     proj: Mat,
-    /// Final RMSNorm `[T, d]`.
-    xf: Mat,
-    /// Per-tile score rows, `n_tiles × T` (each tile holds one `O(T)`
-    /// row — the `T×T` score matrix is never materialized).
+    /// Per-query-tile score rows, `n_tiles × T_kv` (each tile holds one
+    /// `O(T_kv)` row — the `T×T` score matrix is never materialized).
     score_rows: Vec<f32>,
-    /// Per-tile H2O mass partials, `n_tiles × T`.
+    /// Per-query-tile H2O mass partials, `n_tiles × T_kv`.
     mass_part: Vec<f32>,
-    /// Cached RoPE angles for positions `0..T`.
+    /// Final RMSNorm `[Q, d]`.
+    xf: Mat,
+    /// Cached RoPE angles for positions `0..T_kv`.
     rope: ops::RopeTable,
 }
 
@@ -258,6 +307,7 @@ impl PrefillScratch {
     pub fn new() -> Self {
         PrefillScratch {
             t: 0,
+            t_kv: 0,
             d: 0,
             d_ff: 0,
             x: Mat::zeros(0, 0),
@@ -277,39 +327,63 @@ impl PrefillScratch {
     /// Size every buffer for a `t`-token prompt under `cfg` (no-op when
     /// already sized — the reuse fast path for harness loops).
     fn ensure(&mut self, t: usize, cfg: &ModelConfig) {
+        self.ensure_span(t, t, cfg);
+    }
+
+    /// Size for a seeded prefill computing `q_rows` suffix rows while
+    /// attending over `kv_rows ≥ q_rows` total context rows (no-op when
+    /// already sized). `ensure` is the cold `q_rows == kv_rows` case.
+    fn ensure_span(&mut self, q_rows: usize, kv_rows: usize, cfg: &ModelConfig) {
+        debug_assert!(kv_rows >= q_rows);
         let (d, d_ff) = (cfg.d_model, cfg.d_ff);
-        if self.t != t || self.d != d || self.d_ff != d_ff {
-            self.x = Mat::zeros(t, d);
-            self.q = Mat::zeros(t, d);
-            self.k_rope = Mat::zeros(t, d);
-            self.attn_out = Mat::zeros(t, d);
-            self.xn2 = Mat::zeros(t, d);
-            self.h1 = Mat::zeros(t, d_ff);
-            self.proj = Mat::zeros(t, d);
-            self.xf = Mat::zeros(t, d);
-            let n_tiles = t.div_ceil(PREFILL_ROW_BLOCK);
-            self.score_rows = vec![0.0; n_tiles * t];
-            self.mass_part = vec![0.0; n_tiles * t];
-            self.t = t;
+        if self.t != q_rows || self.t_kv != kv_rows || self.d != d || self.d_ff != d_ff {
+            self.x = Mat::zeros(q_rows, d);
+            self.q = Mat::zeros(q_rows, d);
+            self.k_rope = Mat::zeros(kv_rows, d);
+            self.attn_out = Mat::zeros(q_rows, d);
+            self.xn2 = Mat::zeros(q_rows, d);
+            self.h1 = Mat::zeros(q_rows, d_ff);
+            self.proj = Mat::zeros(q_rows, d);
+            self.xf = Mat::zeros(q_rows, d);
+            let n_tiles = q_rows.div_ceil(PREFILL_ROW_BLOCK);
+            self.score_rows = vec![0.0; n_tiles * kv_rows];
+            self.mass_part = vec![0.0; n_tiles * kv_rows];
+            self.t = q_rows;
+            self.t_kv = kv_rows;
             self.d = d;
             self.d_ff = d_ff;
         }
-        if !self.rope.covers(cfg.d_head(), cfg.rope_base, t) {
-            self.rope = ops::RopeTable::new(cfg.d_head(), cfg.rope_base, t);
+        if !self.rope.covers(cfg.d_head(), cfg.rope_base, kv_rows) {
+            self.rope = ops::RopeTable::new(cfg.d_head(), cfg.rope_base, kv_rows);
         }
     }
 }
 
-/// Output + scratch bundle for [`streaming_causal_attention`].
+/// Output + scratch bundle for [`streaming_causal_attention`] /
+/// [`streaming_causal_attention_resume`].
 struct AttnBuffers<'a> {
-    /// Attention output `[T, d]`, overwritten.
+    /// Attention output `[Q, d]`, overwritten (`Q` = query rows).
     out: &'a mut Mat,
-    /// Per-tile score rows (`n_tiles × T`).
+    /// Per-query-tile score rows (`n_tiles × T_kv`).
     score_rows: &'a mut [f32],
-    /// Per-tile mass partials (`n_tiles × T`).
+    /// Per-query-tile mass partials (`n_tiles × T_kv`).
     mass_part: &'a mut [f32],
-    /// Aggregated H2O mass per key position `[T]`, overwritten.
+    /// Aggregated H2O mass per key position `[T_kv]`. The resume kernel
+    /// **accumulates** onto it (the caller pre-seeds positions below the
+    /// resume point); the cold wrapper zeroes it first.
     mass: &'a mut [f32],
+}
+
+/// The non-buffer parameters of the streaming attention kernels.
+struct AttnSpan {
+    /// Absolute position of query row 0 (0 = cold full-context prefill).
+    /// Must be a multiple of [`PREFILL_ROW_BLOCK`] so warm query tiles
+    /// coincide with the cold run's — the bit-identity alignment
+    /// requirement.
+    start: usize,
+    n_heads: usize,
+    scale: f32,
+    threads: usize,
 }
 
 /// Streaming (flash-style) causal attention over RoPE'd `q`/`k` and `v`:
@@ -333,14 +407,47 @@ fn streaming_causal_attention(
     threads: usize,
     bufs: AttnBuffers<'_>,
 ) {
-    let t = q.rows;
+    debug_assert_eq!(k.rows, q.rows);
+    bufs.mass.fill(0.0);
+    let span = AttnSpan {
+        start: 0,
+        n_heads,
+        scale,
+        threads,
+    };
+    streaming_causal_attention_resume(q, k, v, &span, bufs);
+}
+
+/// The mid-context form of [`streaming_causal_attention`], used by
+/// [`Engine::prefill_batch_seeded`]: `q` holds only the `Q` **suffix**
+/// query rows (already RoPE'd at absolute positions `start..start+Q`)
+/// while `k`/`v` hold the full `T_kv = start + Q` context rows. Causal
+/// masking resumes mid-context (`valid = start + i + 1`) and the H2O mass
+/// fold **accumulates onto** `bufs.mass`, which the caller pre-seeds with
+/// the prefix tiles' fold — because `start` is tile-aligned, each suffix
+/// tile is exactly the cold run's tile `start/BLOCK + lt`, its partial is
+/// computed in the cold kernel's per-row order, and partials are folded
+/// in the same ascending tile order, so output rows *and* mass are
+/// bit-identical to the cold full-context call (the cold kernel is
+/// literally this one at `start = 0` over a zeroed mass).
+fn streaming_causal_attention_resume(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    span: &AttnSpan,
+    bufs: AttnBuffers<'_>,
+) {
+    let (start, n_heads, scale, threads) = (span.start, span.n_heads, span.scale, span.threads);
+    let qn = q.rows;
+    let t = k.rows;
     let d = q.cols;
     let dh = d / n_heads;
-    debug_assert_eq!(k.rows, t);
+    debug_assert_eq!(start % PREFILL_ROW_BLOCK, 0);
+    debug_assert_eq!(t, start + qn);
     debug_assert_eq!(v.rows, t);
-    debug_assert_eq!((bufs.out.rows, bufs.out.cols), (t, d));
+    debug_assert_eq!((bufs.out.rows, bufs.out.cols), (qn, d));
     debug_assert_eq!(bufs.mass.len(), t);
-    let n_tiles = t.div_ceil(PREFILL_ROW_BLOCK);
+    let n_tiles = qn.div_ceil(PREFILL_ROW_BLOCK);
     assert!(bufs.score_rows.len() >= n_tiles * t);
     assert!(bufs.mass_part.len() >= n_tiles * t);
 
@@ -349,7 +456,7 @@ fn streaming_causal_attention(
     let mpart_ptr = SendPtr(bufs.mass_part.as_mut_ptr());
     parallel_for(n_tiles, threads, |tile| {
         let r0 = tile * PREFILL_ROW_BLOCK;
-        let r1 = (r0 + PREFILL_ROW_BLOCK).min(t);
+        let r1 = (r0 + PREFILL_ROW_BLOCK).min(qn);
         // Safety: this tile exclusively owns output rows [r0, r1) and
         // scratch slot `tile`; `parallel_for` hands out each tile exactly
         // once and the buffers outlive the scoped workers.
@@ -359,7 +466,9 @@ fn streaming_causal_attention(
         out_rows.fill(0.0);
         mpart.fill(0.0);
         for i in r0..r1 {
-            let valid = i + 1; // causal prefix — the tile never looks past it
+            // Causal prefix at the row's absolute position — the tile
+            // never looks past it.
+            let valid = start + i + 1;
             let qrow = q.row(i);
             let orow = &mut out_rows[(i - r0) * d..(i - r0 + 1) * d];
             for h in 0..n_heads {
@@ -386,9 +495,12 @@ fn streaming_causal_attention(
         }
     });
 
-    // Deterministic H2O mass reduction: ascending tile order, independent
-    // of the thread count that produced the partials.
-    bufs.mass.fill(0.0);
+    // Deterministic H2O mass reduction: ascending tile order on top of
+    // the caller-seeded prefix fold (zeroed by the cold wrapper), so the
+    // result is independent of the thread count that produced the
+    // partials and bitwise equal to the cold fold (partials are sums of
+    // probabilities, hence ≥ +0.0, and `x + 0.0 == x` bitwise for
+    // `x ≥ 0` — the prefix tiles' zero suffix entries never perturb it).
     for tile in 0..n_tiles {
         let mpart = &bufs.mass_part[tile * t..(tile + 1) * t];
         for (mj, &pj) in bufs.mass.iter_mut().zip(mpart) {
@@ -711,8 +823,12 @@ impl BatchPrefillScratch {
         }
     }
 
-    fn ensure(&mut self, lens: &[usize], cfg: &ModelConfig) {
-        let total: usize = lens.iter().sum();
+    /// Stacked buffers sized for each sequence's **computed** rows
+    /// (`q_lens`, what the GEMMs stream) and per-sequence scratches
+    /// spanning each sequence's full attended context (`kv_lens`). A cold
+    /// batch has `q_lens == kv_lens`.
+    fn ensure_spans(&mut self, q_lens: &[usize], kv_lens: &[usize], cfg: &ModelConfig) {
+        let total: usize = q_lens.iter().sum();
         let d = cfg.d_model;
         resize_stacked(&mut self.x, total, d);
         resize_stacked(&mut self.xnorm, total, d);
@@ -724,11 +840,11 @@ impl BatchPrefillScratch {
         resize_stacked(&mut self.h1, total, cfg.d_ff);
         resize_stacked(&mut self.proj, total, d);
         resize_stacked(&mut self.xf, total, d);
-        while self.seqs.len() < lens.len() {
+        while self.seqs.len() < q_lens.len() {
             self.seqs.push(PrefillScratch::new());
         }
-        for (ss, &t) in self.seqs.iter_mut().zip(lens) {
-            ss.ensure(t, cfg);
+        for ((ss, &qt), &kt) in self.seqs.iter_mut().zip(q_lens).zip(kv_lens) {
+            ss.ensure_span(qt, kt, cfg);
         }
     }
 }
@@ -893,7 +1009,46 @@ impl Engine {
         policies: &mut [Option<&mut dyn KvCachePolicy>],
         scratch: &mut BatchPrefillScratch,
     ) -> Vec<PrefillRecord> {
+        let seeds: Vec<Option<&PrefixSeed>> = vec![None; prompts.len()];
+        self.prefill_batch_seeded(prompts, &seeds, policies, false, scratch)
+            .into_iter()
+            .map(|sp| sp.record)
+            .collect()
+    }
+
+    /// [`Engine::prefill_batch`] generalized with shared-prefix seeding:
+    /// the cold batch is literally this with no seeds and capture off.
+    ///
+    /// For a sequence with a [`PrefixSeed`] of `start` tokens, only the
+    /// `T − start` suffix rows enter the stacked residual stream — the
+    /// embedding, RMSNorm, QKV / output / MLP / logit GEMMs and the
+    /// attention *query* side all skip the prefix (the warm-TTFT win) —
+    /// while each layer assembles the full-context `xnorm`/K/V by
+    /// prepending the seed's rows to the computed suffix rows. The policy
+    /// ingests those full streams and observes the full H2O mass (prefix
+    /// positions pre-seeded from the seed's fold, suffix tiles folded on
+    /// top by [`streaming_causal_attention_resume`]), so its inputs — and
+    /// therefore its state, for **every** policy — are bitwise the cold
+    /// run's (`rust/tests/prefix_reuse.rs` holds the oracle; see
+    /// [`crate::kvcache::prefix`] for why replaying ingestion is the only
+    /// sound seeding). Per-row GEMM reductions are position-independent
+    /// and the suffix queries RoPE at their absolute positions via the
+    /// same cached table, so every computed row is bitwise the cold row.
+    ///
+    /// With `capture` on, each sequence's complete suffix row-tiles'
+    /// mass-partial slabs are saved into the returned
+    /// [`SeededPrefill::mass_tiles`] so the coordinator can publish the
+    /// prompt's prefix into its [`crate::kvcache::PrefixCache`].
+    pub fn prefill_batch_seeded(
+        &self,
+        prompts: &[&[usize]],
+        seeds: &[Option<&PrefixSeed>],
+        policies: &mut [Option<&mut dyn KvCachePolicy>],
+        capture: bool,
+        scratch: &mut BatchPrefillScratch,
+    ) -> Vec<SeededPrefill> {
         assert_eq!(prompts.len(), policies.len());
+        assert_eq!(prompts.len(), seeds.len());
         let nb = prompts.len();
         if nb == 0 {
             return Vec::new();
@@ -904,17 +1059,31 @@ impl Engine {
         let threads = resolve_threads(cfg.threads);
         let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
         assert!(lens.iter().all(|&t| t > 0), "empty prompt");
+        let starts: Vec<usize> = seeds.iter().map(|s| s.map_or(0, |s| s.len)).collect();
+        for (si, seed) in seeds.iter().enumerate() {
+            let Some(s) = seed else { continue };
+            assert!(
+                s.len % PREFILL_ROW_BLOCK == 0,
+                "prefix seed must be tile-aligned"
+            );
+            assert!(s.len < lens[si], "prefix seed must leave a suffix row");
+            debug_assert_eq!(s.xnorm.len(), cfg.n_layers);
+            debug_assert!(s.xnorm.iter().all(|m| (m.rows, m.cols) == (s.len, d)));
+            debug_assert!(s.mass.iter().all(|m| m.len() == s.len));
+        }
+        // Suffix (computed) row counts and their stacked offsets.
+        let q_lens: Vec<usize> = lens.iter().zip(&starts).map(|(&t, &s)| t - s).collect();
         let mut offs = Vec::with_capacity(nb);
         let mut total = 0usize;
-        for &t in &lens {
+        for &qt in &q_lens {
             offs.push(total);
-            total += t;
+            total += qt;
         }
-        scratch.ensure(&lens, cfg);
+        scratch.ensure_spans(&q_lens, &lens, cfg);
 
-        // Embedding lookup, all sequences stacked.
+        // Embedding lookup, suffix rows of all sequences stacked.
         for (si, prompt) in prompts.iter().enumerate() {
-            for (i, &tok) in prompt.iter().enumerate() {
+            for (i, &tok) in prompt[starts[si]..].iter().enumerate() {
                 scratch.x.row_mut(offs[si] + i).copy_from_slice(self.w.embed.row(tok));
             }
         }
@@ -927,6 +1096,16 @@ impl Engine {
             (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
         let mut masses_all: Vec<Vec<Vec<f32>>> =
             (0..nb).map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+        // Captured slabs, indexed [seq][suffix_tile][layer]. Only
+        // complete tiles are publishable (a partial tile's partial is not
+        // the cold tile's — later prompt rows would still add to it).
+        let mut tiles_all: Vec<Vec<Vec<Vec<f32>>>> = q_lens
+            .iter()
+            .map(|&qt| {
+                let n = if capture { qt / PREFILL_ROW_BLOCK } else { 0 };
+                (0..n).map(|_| Vec::with_capacity(cfg.n_layers)).collect()
+            })
+            .collect();
 
         for (li, lw) in self.w.layers.iter().enumerate() {
             // Stacked RMSNorm + one weight-streamed GEMM per projection
@@ -941,11 +1120,21 @@ impl Engine {
             // Per-sequence attention + policy ingestion, unchanged from
             // the single-sequence path.
             for si in 0..nb {
-                let (t, off) = (lens[si], offs[si]);
-                let xnorm =
-                    Mat::from_vec(t, d, scratch.xnorm.data[off * d..(off + t) * d].to_vec());
-                let k = Mat::from_vec(t, d, scratch.k.data[off * d..(off + t) * d].to_vec());
-                let v = Mat::from_vec(t, d, scratch.v.data[off * d..(off + t) * d].to_vec());
+                let (t, start, off) = (lens[si], starts[si], offs[si]);
+                let qt = q_lens[si];
+                // Full-context streams: seed prefix rows (bitwise the
+                // donor run's) ++ this pass's suffix rows.
+                let mut xnorm = Mat::zeros(t, d);
+                let mut k = Mat::zeros(t, d);
+                let mut v = Mat::zeros(t, d);
+                if let Some(s) = seeds[si] {
+                    xnorm.data[..start * d].copy_from_slice(&s.xnorm[li].data);
+                    k.data[..start * d].copy_from_slice(&s.k[li].data);
+                    v.data[..start * d].copy_from_slice(&s.v[li].data);
+                }
+                xnorm.data[start * d..].copy_from_slice(&scratch.xnorm.data[off * d..(off + qt) * d]);
+                k.data[start * d..].copy_from_slice(&scratch.k.data[off * d..(off + qt) * d]);
+                v.data[start * d..].copy_from_slice(&scratch.v.data[off * d..(off + qt) * d]);
                 let replacement = policies[si]
                     .as_deref_mut()
                     .and_then(|p| p.ingest_prefill(li, &xnorm, &k, &v));
@@ -954,18 +1143,27 @@ impl Engine {
                     None => (&k, &v),
                 };
                 let ss = &mut scratch.seqs[si];
-                ss.q.data.copy_from_slice(&scratch.q.data[off * d..(off + t) * d]);
+                // Suffix queries RoPE'd at their absolute positions;
+                // full-context keys RoPE'd from 0 — one shared table.
+                ss.q.data.copy_from_slice(&scratch.q.data[off * d..(off + qt) * d]);
                 ss.k_rope.data.copy_from_slice(&k_att.data);
-                ops::rope_rows_cached(&mut ss.q, nh, 0, &ss.rope, threads);
+                ops::rope_rows_cached(&mut ss.q, nh, start, &ss.rope, threads);
                 ops::rope_rows_cached(&mut ss.k_rope, nh, 0, &ss.rope, threads);
                 let mut mass = vec![0.0f32; t];
-                streaming_causal_attention(
+                if let Some(s) = seeds[si] {
+                    mass[..start].copy_from_slice(&s.mass[li]);
+                }
+                let span = AttnSpan {
+                    start,
+                    n_heads: nh,
+                    scale,
+                    threads,
+                };
+                streaming_causal_attention_resume(
                     &ss.q,
                     &ss.k_rope,
                     v_att,
-                    nh,
-                    scale,
-                    threads,
+                    &span,
                     AttnBuffers {
                         out: &mut ss.attn_out,
                         score_rows: &mut ss.score_rows[..],
@@ -973,10 +1171,14 @@ impl Engine {
                         mass: &mut mass,
                     },
                 );
+                for (lt, slabs) in tiles_all[si].iter_mut().enumerate() {
+                    let abs_end = start + (lt + 1) * PREFILL_ROW_BLOCK;
+                    slabs.push(ss.mass_part[lt * t..lt * t + abs_end].to_vec());
+                }
                 if let Some(p) = policies[si].as_deref_mut() {
                     p.observe_prefill_attn(li, &mass);
                 }
-                scratch.attn.data[off * d..(off + t) * d].copy_from_slice(&ss.attn_out.data);
+                scratch.attn.data[off * d..(off + qt) * d].copy_from_slice(&ss.attn_out.data);
                 masses_all[si].push(mass);
                 xnorms_all[si].push(xnorm);
                 ks_all[si].push(k);
@@ -998,14 +1200,34 @@ impl Engine {
         par_matmul_into(&scratch.xf, &self.w.lm_head, &mut logits, threads);
 
         (0..nb)
-            .map(|si| PrefillRecord {
-                xnorms: std::mem::take(&mut xnorms_all[si]),
-                ks: std::mem::take(&mut ks_all[si]),
-                vs: std::mem::take(&mut vs_all[si]),
-                attn_mass: std::mem::take(&mut masses_all[si]),
-                logits: logits.rows_slice(offs[si], offs[si] + lens[si]),
+            .map(|si| SeededPrefill {
+                record: PrefillRecord {
+                    xnorms: std::mem::take(&mut xnorms_all[si]),
+                    ks: std::mem::take(&mut ks_all[si]),
+                    vs: std::mem::take(&mut vs_all[si]),
+                    attn_mass: std::mem::take(&mut masses_all[si]),
+                    logits: logits.rows_slice(offs[si], offs[si] + q_lens[si]),
+                },
+                start: starts[si],
+                mass_tiles: std::mem::take(&mut tiles_all[si]),
             })
             .collect()
+    }
+
+    /// Single-sequence convenience over [`Engine::prefill_batch_seeded`]
+    /// (tests, the coordinator's `--sequential` A/B path).
+    pub fn prefill_seeded(
+        &self,
+        tokens: &[usize],
+        seed: Option<&PrefixSeed>,
+        policy: Option<&mut dyn KvCachePolicy>,
+        capture: bool,
+        scratch: &mut BatchPrefillScratch,
+    ) -> SeededPrefill {
+        let mut policies = [policy];
+        self.prefill_batch_seeded(&[tokens], &[seed], &mut policies, capture, scratch)
+            .pop()
+            .expect("one sequence in, one out")
     }
 
     /// The pre-streaming serial prefill, kept verbatim as the correctness

@@ -1,0 +1,201 @@
+//! Bit-identity oracle for shared-prefix KV reuse (the prefix-cache
+//! tentpole).
+//!
+//! A donor prompt is prefilled cold with capture, its prefix published
+//! into a [`PrefixCache`]; a target prompt sharing the first 64 tokens
+//! (two aligned blocks) is then prefilled **seeded** from the cache and
+//! compared field-by-field against its own cold run — logits, per-layer
+//! activations, attention mass, policy KV state, and 8 subsequent
+//! decode steps must match **bitwise**, for every cache policy ×
+//! threads {1, 8}.
+//!
+//! CSKV coverage deliberately includes a *mid-window* prefix boundary:
+//! with `window = 48` and a 96-token target, the 64-token seed boundary
+//! falls inside the uncompressed recent window, and with `window = 6`
+//! it falls deep in the compressed region. Replay ingestion makes both
+//! trivially exact (the policy observes the identical full stream), but
+//! the oracle pins that down against regressions.
+
+use std::sync::Arc;
+
+use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, PrefixCache, QuantMode};
+use cskv::model::engine::{BatchPrefillScratch, DecodeState, Engine};
+use cskv::model::{ModelConfig, ModelWeights};
+use cskv::tensor::ops;
+use cskv::tensor::Mat;
+use cskv::util::prng::Pcg64;
+
+/// Low-rank factors matching the `test_small` engine geometry.
+fn engine_factors(rank: usize) -> Arc<ModelFactors> {
+    let cfg = ModelConfig::test_small();
+    let d = cfg.d_model;
+    let mut rng = Pcg64::new(rank as u64 * 77 + 5);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..cfg.n_layers).map(|_| LayerFactors { k: mk(), v: mk() }).collect(),
+        provenance: "prefix-reuse".into(),
+    })
+}
+
+/// One instance of every cache policy. CSKV appears three times: fp32
+/// and int4 with the seed boundary mid-window (window 48 > suffix), and
+/// fp32 with the boundary far past the window (window 6).
+fn mk_policies() -> Vec<Box<dyn KvCachePolicy>> {
+    let cfg = ModelConfig::test_small();
+    let (l, d) = (cfg.n_layers, cfg.d_model);
+    vec![
+        Box::new(FullCache::new(l, d)),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 48, quant: QuantMode::None },
+        )),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 48, quant: QuantMode::Int4 },
+        )),
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            d,
+            CskvConfig { window: 6, quant: QuantMode::None },
+        )),
+        Box::new(StreamingLlmCache::new(l, d, 2, 12)),
+        Box::new(H2oCache::new(l, d, 10)),
+        Box::new(AsvdCache::new(engine_factors(8))),
+    ]
+}
+
+/// 96 deterministic donor tokens; targets share the first 64 and then
+/// diverge.
+fn donor_prompt() -> Vec<usize> {
+    let mut rng = Pcg64::new(41);
+    (0..96).map(|_| rng.range(16, 250)).collect()
+}
+
+fn target_prompt(donor: &[usize], tail_seed: u64, tail_len: usize) -> Vec<usize> {
+    let mut p = donor[..64].to_vec();
+    let mut rng = Pcg64::new(tail_seed);
+    p.extend((0..tail_len).map(|_| rng.range(16, 250)));
+    p
+}
+
+/// The oracle: seeded prefill + decode ≡ cold prefill + decode, bitwise,
+/// for every policy × threads {1, 8} × two suffix lengths (one keeping
+/// the target mid-window for CSKV's 48-token window, one shorter).
+#[test]
+fn prefix_seeded_runs_bit_identical_to_cold() {
+    let base = ModelConfig::test_small();
+    let n_policies = mk_policies().len();
+    let donor = donor_prompt();
+    for threads in [1usize, 8] {
+        let cfg = base.clone().with_threads(threads);
+        let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+        for pi in 0..n_policies {
+            // Publish the donor's prefix from a captured cold run.
+            let mut donor_pol = mk_policies().swap_remove(pi);
+            let mut scratch = BatchPrefillScratch::new();
+            let donor_sp =
+                engine.prefill_seeded(&donor, None, Some(donor_pol.as_mut()), true, &mut scratch);
+            let mut pc = PrefixCache::new(64 << 20);
+            pc.publish(&donor, &donor_sp);
+
+            for (tail_seed, tail_len) in [(97u64, 32usize), (131, 9)] {
+                let target = target_prompt(&donor, tail_seed, tail_len);
+                let t = target.len();
+
+                // Cold oracle.
+                let mut cold_pol = mk_policies().swap_remove(pi);
+                let cold = engine.prefill(&target, Some(cold_pol.as_mut()));
+
+                // Warm run, seeded from the published prefix.
+                let (seed, pin) = pc.lookup(&target).expect("64-token prefix must hit");
+                assert_eq!(seed.len, 64, "two aligned blocks of shared prefix");
+                let mut warm_pol = mk_policies().swap_remove(pi);
+                let warm = engine.prefill_seeded(
+                    &target,
+                    Some(&seed),
+                    Some(warm_pol.as_mut()),
+                    true,
+                    &mut scratch,
+                );
+                pc.release(pin);
+
+                let name = cold_pol.name();
+                assert_eq!(warm.start, 64);
+                assert_eq!(
+                    warm.record.logits.data,
+                    cold.logits.rows_slice(64, t).data,
+                    "{name}: suffix logits, threads {threads} tail {tail_len}"
+                );
+                for li in 0..cfg.n_layers {
+                    assert_eq!(warm.record.xnorms[li].data, cold.xnorms[li].data);
+                    assert_eq!(warm.record.ks[li].data, cold.ks[li].data);
+                    assert_eq!(warm.record.vs[li].data, cold.vs[li].data);
+                    assert_eq!(
+                        warm.record.attn_mass[li], cold.attn_mass[li],
+                        "{name}: attention mass L{li}, threads {threads}"
+                    );
+                    let (cv, wv) = (cold_pol.materialize(li), warm_pol.materialize(li));
+                    assert_eq!(cv.k.data, wv.k.data, "{name}: K state L{li}");
+                    assert_eq!(cv.v.data, wv.v.data, "{name}: V state L{li}");
+                    assert_eq!(cv.abs_pos, wv.abs_pos);
+                }
+                assert_eq!(cold_pol.kv_bytes(), warm_pol.kv_bytes(), "{name}: footprint");
+
+                // 8 decode steps from the shared last-token argmax.
+                let mut cold_st = DecodeState::new(&cfg);
+                let mut warm_st = DecodeState::new(&cfg);
+                let mut ct = ops::argmax(cold.logits.row(t - 1));
+                let wt = ops::argmax(warm.record.logits.row(t - 64 - 1));
+                assert_eq!(ct, wt, "{name}: first sampled token");
+                for step in 0..8 {
+                    let pos = t + step;
+                    let cl =
+                        engine.decode_step_with(cold_pol.as_mut(), ct, pos, &mut cold_st).to_vec();
+                    let wl =
+                        engine.decode_step_with(warm_pol.as_mut(), ct, pos, &mut warm_st).to_vec();
+                    assert_eq!(cl, wl, "{name}: decode step {step}, threads {threads}");
+                    ct = ops::argmax(&cl);
+                }
+                assert_eq!(cold_pol.kv_bytes(), warm_pol.kv_bytes());
+            }
+        }
+    }
+}
+
+/// Unaligned sharing still hits on whole blocks only: a target sharing
+/// 70 tokens with the donor seeds from the 64-token (2-block) node, and
+/// a target sharing fewer tokens than one block misses outright.
+#[test]
+fn lookup_is_block_granular() {
+    let cfg = ModelConfig::test_small().with_threads(1);
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 7)));
+    let donor = donor_prompt();
+    let mut pol = mk_policies().swap_remove(0);
+    let mut scratch = BatchPrefillScratch::new();
+    let sp = engine.prefill_seeded(&donor, None, Some(pol.as_mut()), true, &mut scratch);
+    let mut pc = PrefixCache::new(64 << 20);
+    pc.publish(&donor, &sp);
+
+    // Shares 70 tokens ⇒ only the 64-token boundary is usable.
+    let mut t70 = donor[..70].to_vec();
+    t70.extend_from_slice(&[3, 4, 5]);
+    let (seed, pin) = pc.lookup(&t70).expect("2-block prefix");
+    assert_eq!(seed.len, 64);
+    pc.release(pin);
+
+    // Shares 20 tokens ⇒ below one block ⇒ miss.
+    let mut t20 = donor[..20].to_vec();
+    t20.extend_from_slice(&[7, 8, 9]);
+    assert!(pc.lookup(&t20).is_none());
+    let s = pc.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+}
