@@ -10,11 +10,42 @@
 //! its hot footprint while parked. `take` removes the blob (and any
 //! spill file); a worker that dies mid-serve leaves at most already-
 //! consumed files behind, and `Drop` sweeps whatever is left.
+//!
+//! **Fault hardening:** disk I/O is the part of the control plane most
+//! exposed to transient faults, so the tier fails *partially*, never
+//! totally:
+//!
+//! * spill writes and reads retry up to [`IO_ATTEMPTS`] times with
+//!   bounded exponential backoff ([`BACKOFF_BASE_MS`] · 2^attempt);
+//! * a write that exhausts its retries keeps the blob in the in-memory
+//!   store instead of failing the preemption, and
+//!   [`DEGRADE_STREAK`] consecutive exhausted writes **degrade** the
+//!   whole tier to memory for subsequent blobs (no more doomed I/O);
+//! * a blob that reads back corrupt (the encoded form carries a CRC-32,
+//!   snapshot codec v2) fails only that `take` — the caller answers that
+//!   one sequence and keeps the round alive.
+//!
+//! Health counters ([`ColdTierStats`]) are surfaced through
+//! [`crate::coordinator::Metrics`]; the I/O paths consult the
+//! [`FaultInjector`] points `coldtier.write` / `coldtier.read` /
+//! `snapshot.corrupt`, which is how `rust/tests/chaos_serving.rs`
+//! schedules deterministic disk faults.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::kvcache::KvSnapshot;
+use crate::util::faults::FaultInjector;
+
+/// Attempts per spill write/read (1 initial + retries).
+const IO_ATTEMPTS: u32 = 3;
+/// Backoff before retry k (1-based) is `BACKOFF_BASE_MS << (k - 1)` ms —
+/// bounded at a few ms so a faulting disk slows a round, never stalls it.
+const BACKOFF_BASE_MS: u64 = 1;
+/// Consecutive exhausted-retry writes before the disk tier degrades to
+/// the in-memory store for all subsequent blobs.
+const DEGRADE_STREAK: u32 = 2;
 
 enum Blob {
     Mem(Vec<u8>),
@@ -30,6 +61,24 @@ impl Blob {
     }
 }
 
+/// Cold-tier health counters, mirrored into
+/// [`crate::coordinator::Metrics`] once per scheduling round. All values
+/// are cumulative absolutes, not deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ColdTierStats {
+    /// Spill-write attempts that failed (each is either retried or, when
+    /// the budget is exhausted, degrades that blob to memory).
+    pub spill_retries: u64,
+    /// Spill-read attempts that failed.
+    pub read_retries: u64,
+    /// Blobs whose encoded form failed checksum/decode on the way back —
+    /// each one fails exactly one sequence, never the round.
+    pub corrupt_restores: u64,
+    /// True once the disk tier has fallen back to the in-memory store
+    /// (unusable dir at construction, or a persistent write-fault streak).
+    pub degraded: bool,
+}
+
 /// Blob store for swapped-out sequence state, keyed by request id.
 /// (The high-water mark lives in [`crate::coordinator::Metrics`], fed by
 /// [`ColdTier::bytes_resident`] — one owner for the peak.)
@@ -37,18 +86,30 @@ pub struct ColdTier {
     dir: Option<PathBuf>,
     blobs: HashMap<u64, Blob>,
     bytes_current: usize,
+    faults: FaultInjector,
+    stats: ColdTierStats,
+    /// Consecutive puts whose disk write exhausted its retries.
+    write_fail_streak: u32,
 }
 
 impl ColdTier {
     /// `dir = None` keeps snapshots in memory; `Some(dir)` spills each
     /// blob to `<dir>/seq-<id>.kvsnap`. An unusable directory degrades
-    /// to the in-memory store with a logged error rather than disabling
-    /// preemption.
+    /// to the in-memory store (recorded in [`ColdTierStats::degraded`])
+    /// rather than disabling preemption.
     pub fn new(dir: Option<PathBuf>) -> Self {
+        ColdTier::with_faults(dir, FaultInjector::none())
+    }
+
+    /// [`ColdTier::new`] with a fault-injection registry threaded into
+    /// every spill write/read and the pre-decode corruption site.
+    pub fn with_faults(dir: Option<PathBuf>, faults: FaultInjector) -> Self {
+        let mut stats = ColdTierStats::default();
         let dir = dir.and_then(|d| match std::fs::create_dir_all(&d) {
             Ok(()) => Some(d),
             Err(e) => {
                 crate::log_error!("cold tier dir {} unusable ({e}); using memory", d.display());
+                stats.degraded = true;
                 None
             }
         });
@@ -56,6 +117,9 @@ impl ColdTier {
             dir,
             blobs: HashMap::new(),
             bytes_current: 0,
+            faults,
+            stats,
+            write_fail_streak: 0,
         }
     }
 
@@ -78,7 +142,65 @@ impl ColdTier {
         Ok(())
     }
 
-    /// Park `snap` under `id`. Returns the parked byte size.
+    /// One spill write with bounded retry/backoff. Each attempt consults
+    /// the `coldtier.write` fault point before touching the filesystem.
+    fn write_with_retry(&mut self, path: &std::path::Path, data: &[u8]) -> anyhow::Result<()> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..IO_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(BACKOFF_BASE_MS << (attempt - 1)));
+            }
+            let res = self.faults.trip("coldtier.write").and_then(|()| {
+                std::fs::write(path, data)
+                    .map_err(|e| anyhow::anyhow!("cold tier spill to {}: {e}", path.display()))
+            });
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    self.stats.spill_retries += 1;
+                    crate::log_warn!(
+                        "cold tier write attempt {}/{IO_ATTEMPTS} failed: {e:#}",
+                        attempt + 1
+                    );
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("IO_ATTEMPTS > 0"))
+    }
+
+    /// One spill read with bounded retry/backoff (`coldtier.read` fault
+    /// point per attempt).
+    fn read_with_retry(&mut self, path: &std::path::Path) -> anyhow::Result<Vec<u8>> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..IO_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(BACKOFF_BASE_MS << (attempt - 1)));
+            }
+            let res = self.faults.trip("coldtier.read").and_then(|()| {
+                std::fs::read(path)
+                    .map_err(|e| anyhow::anyhow!("cold tier read {}: {e}", path.display()))
+            });
+            match res {
+                Ok(data) => return Ok(data),
+                Err(e) => {
+                    self.stats.read_retries += 1;
+                    crate::log_warn!(
+                        "cold tier read attempt {}/{IO_ATTEMPTS} failed: {e:#}",
+                        attempt + 1
+                    );
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("IO_ATTEMPTS > 0"))
+    }
+
+    /// Park `snap` under `id`. Returns the parked byte size. A disk
+    /// write that exhausts its retries keeps the blob in memory — the
+    /// preemption still succeeds — and a persistent failure streak
+    /// degrades the tier to memory for subsequent blobs; the only error
+    /// left is the double-park programming bug.
     pub fn put(&mut self, id: u64, snap: &KvSnapshot) -> anyhow::Result<usize> {
         anyhow::ensure!(
             !self.blobs.contains_key(&id),
@@ -87,11 +209,29 @@ impl ColdTier {
         let encoded = snap.encode();
         let bytes = encoded.len();
         let blob = match self.spill_path(id) {
-            Some(path) => {
-                std::fs::write(&path, &encoded)
-                    .map_err(|e| anyhow::anyhow!("cold tier spill to {}: {e}", path.display()))?;
-                Blob::Disk { path, bytes }
-            }
+            Some(path) => match self.write_with_retry(&path, &encoded) {
+                Ok(()) => {
+                    self.write_fail_streak = 0;
+                    Blob::Disk { path, bytes }
+                }
+                Err(e) => {
+                    self.write_fail_streak += 1;
+                    crate::log_error!(
+                        "cold tier spill for sequence {id} failed after {IO_ATTEMPTS} attempts \
+                         ({e:#}); keeping blob in memory"
+                    );
+                    if self.write_fail_streak >= DEGRADE_STREAK {
+                        crate::log_error!(
+                            "cold tier disk degraded after {} consecutive write failures; \
+                             subsequent blobs stay in memory",
+                            self.write_fail_streak
+                        );
+                        self.dir = None;
+                        self.stats.degraded = true;
+                    }
+                    Blob::Mem(encoded)
+                }
+            },
             None => Blob::Mem(encoded),
         };
         self.blobs.insert(id, blob);
@@ -99,25 +239,53 @@ impl ColdTier {
         Ok(bytes)
     }
 
-    /// Remove and decode the snapshot parked under `id`.
+    /// Remove and decode the snapshot parked under `id`. A read or
+    /// checksum/decode failure errors for **this blob only**: the entry
+    /// (and any spill file) is always released, so the caller can fail
+    /// the one sequence and keep serving.
     pub fn take(&mut self, id: u64) -> anyhow::Result<KvSnapshot> {
         let blob = self
             .blobs
             .remove(&id)
             .ok_or_else(|| anyhow::anyhow!("cold tier has no sequence {id}"))?;
         self.bytes_current -= blob.bytes();
-        let encoded = match blob {
+        let mut encoded = match blob {
             Blob::Mem(b) => b,
             Blob::Disk { path, .. } => {
-                let data = std::fs::read(&path);
+                let data = self.read_with_retry(&path);
                 // The entry is already gone from the index, so the spill
                 // file is deleted on *every* outcome — a failed read must
                 // not leak an orphan .kvsnap the Drop sweep can't see.
                 let _ = std::fs::remove_file(&path);
-                data.map_err(|e| anyhow::anyhow!("cold tier read {}: {e}", path.display()))?
+                data?
             }
         };
-        KvSnapshot::decode(&encoded)
+        // Chaos hook: flip a seeded byte right where real bit rot would
+        // land, between the medium and the decoder.
+        self.faults.corrupt("snapshot.corrupt", &mut encoded);
+        match KvSnapshot::decode(&encoded) {
+            Ok(snap) => Ok(snap),
+            Err(e) => {
+                self.stats.corrupt_restores += 1;
+                Err(e.context(format!("cold tier blob for sequence {id} corrupt")))
+            }
+        }
+    }
+
+    /// Drop the blob parked under `id` without decoding it — how
+    /// cancelled or deadline-expired sequences release their cold-tier
+    /// state immediately. Returns whether a blob was held.
+    pub fn discard(&mut self, id: u64) -> bool {
+        match self.blobs.remove(&id) {
+            Some(blob) => {
+                self.bytes_current -= blob.bytes();
+                if let Blob::Disk { path, .. } = blob {
+                    let _ = std::fs::remove_file(&path);
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// Number of parked sequences.
@@ -132,6 +300,11 @@ impl ColdTier {
     /// Bytes currently parked (memory + disk).
     pub fn bytes_resident(&self) -> usize {
         self.bytes_current
+    }
+
+    /// Cumulative health counters (retries, corrupt restores, degraded).
+    pub fn stats(&self) -> ColdTierStats {
+        self.stats
     }
 }
 
@@ -150,9 +323,14 @@ impl Drop for ColdTier {
 mod tests {
     use super::*;
     use crate::kvcache::snapshot::tags;
+    use crate::util::faults::FaultMode;
 
     fn snap(fill: u8, n: usize) -> KvSnapshot {
         KvSnapshot::new(tags::FULL, vec![fill; n])
+    }
+
+    fn tmp(label: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cskv-coldtier-{label}-{}", std::process::id()))
     }
 
     #[test]
@@ -171,11 +349,12 @@ mod tests {
         assert!(tier.take(1).is_err(), "take removes");
         tier.take(2).unwrap();
         assert!(tier.is_empty());
+        assert_eq!(tier.stats(), ColdTierStats::default(), "clean run, clean stats");
     }
 
     #[test]
     fn disk_spill_roundtrip_and_cleanup() {
-        let dir = std::env::temp_dir().join(format!("cskv-coldtier-test-{}", std::process::id()));
+        let dir = tmp("roundtrip");
         let _ = std::fs::remove_dir_all(&dir);
         {
             let mut tier = ColdTier::new(Some(dir.clone()));
@@ -191,6 +370,108 @@ mod tests {
             assert!(dir.join("seq-6.kvsnap").exists());
         }
         assert!(!dir.join("seq-6.kvsnap").exists(), "drop sweeps leftovers");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unusable_dir_degrades_and_is_counted() {
+        // A file where the directory should be makes create_dir_all fail.
+        let bogus = tmp("unusable");
+        let _ = std::fs::remove_dir_all(&bogus);
+        std::fs::write(&bogus, b"not a dir").unwrap();
+        let mut tier = ColdTier::new(Some(bogus.clone()));
+        assert!(tier.stats().degraded, "construction fallback is observable");
+        tier.put(1, &snap(2, 16)).unwrap();
+        assert_eq!(tier.take(1).unwrap().payload(), [2u8; 16]);
+        let _ = std::fs::remove_file(&bogus);
+    }
+
+    #[test]
+    fn transient_write_fault_is_retried() {
+        let dir = tmp("wretry");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(1);
+        faults.arm("coldtier.write", FaultMode::Nth(1));
+        let mut tier = ColdTier::with_faults(Some(dir.clone()), faults);
+        tier.put(1, &snap(4, 32)).unwrap();
+        assert!(dir.join("seq-1.kvsnap").exists(), "retry landed on disk");
+        assert_eq!(tier.stats().spill_retries, 1);
+        assert!(!tier.stats().degraded);
+        assert_eq!(tier.take(1).unwrap().payload(), [4u8; 32]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_write_faults_degrade_to_memory_without_failing_puts() {
+        let dir = tmp("wdegrade");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(2);
+        faults.arm("coldtier.write", FaultMode::FromNth(1));
+        let mut tier = ColdTier::with_faults(Some(dir.clone()), faults.clone());
+        // First exhausted write: blob lands in memory, not yet degraded.
+        tier.put(1, &snap(5, 16)).unwrap();
+        assert!(!dir.join("seq-1.kvsnap").exists());
+        assert!(!tier.stats().degraded);
+        // Second in a row: the tier degrades for subsequent blobs.
+        tier.put(2, &snap(6, 16)).unwrap();
+        assert!(tier.stats().degraded);
+        let attempts_after_degrade = faults.hits("coldtier.write");
+        // Degraded tier stops attempting doomed disk I/O entirely.
+        tier.put(3, &snap(7, 16)).unwrap();
+        assert_eq!(faults.hits("coldtier.write"), attempts_after_degrade);
+        // Every blob still round-trips from memory.
+        for id in 1..=3 {
+            assert!(tier.take(id).is_ok(), "blob {id} survived the faulty disk");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_read_fault_fails_only_that_take_and_releases_the_file() {
+        let dir = tmp("rfail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(3);
+        let mut tier = ColdTier::with_faults(Some(dir.clone()), faults.clone());
+        tier.put(1, &snap(8, 16)).unwrap();
+        tier.put(2, &snap(9, 16)).unwrap();
+        faults.arm("coldtier.read", FaultMode::FromNth(1));
+        let err = tier.take(1).expect_err("all read attempts fault");
+        assert!(err.to_string().contains("injected fault"), "{err:#}");
+        assert_eq!(tier.stats().read_retries, IO_ATTEMPTS as u64);
+        assert!(!dir.join("seq-1.kvsnap").exists(), "failed take still cleans up");
+        // The sibling blob is unaffected once the fault clears.
+        faults.arm("coldtier.read", FaultMode::Nth(1));
+        assert_eq!(tier.take(2).unwrap().payload(), [9u8; 16], "one retry away");
+        assert!(tier.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_blob_fails_cleanly_and_is_counted() {
+        let faults = FaultInjector::seeded(4);
+        faults.arm("snapshot.corrupt", FaultMode::Nth(1));
+        let mut tier = ColdTier::with_faults(None, faults);
+        tier.put(1, &snap(1, 128)).unwrap();
+        tier.put(2, &snap(2, 128)).unwrap();
+        let err = tier.take(1).expect_err("corrupted blob must not decode");
+        assert!(err.to_string().contains("corrupt"), "{err:#}");
+        assert_eq!(tier.stats().corrupt_restores, 1);
+        // Only that blob: the next take round-trips untouched.
+        assert_eq!(tier.take(2).unwrap().payload(), [2u8; 128]);
+        assert_eq!(tier.bytes_resident(), 0, "failed take refunds accounting");
+    }
+
+    #[test]
+    fn discard_releases_blob_and_spill_file_without_decoding() {
+        let dir = tmp("discard");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut tier = ColdTier::new(Some(dir.clone()));
+        tier.put(7, &snap(3, 24)).unwrap();
+        assert!(dir.join("seq-7.kvsnap").exists());
+        assert!(tier.discard(7));
+        assert!(!dir.join("seq-7.kvsnap").exists());
+        assert_eq!(tier.bytes_resident(), 0);
+        assert!(!tier.discard(7), "second discard is a no-op");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -4,12 +4,22 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::coldtier::ColdTierStats;
 use crate::util::stats::Samples;
 
 #[derive(Default)]
 struct Inner {
     requests_completed: u64,
     requests_failed: u64,
+    /// Requests reaped past their deadline / by client cancellation.
+    /// Tracked apart from `requests_failed`: nothing broke, the client
+    /// changed its mind (or ran out of patience).
+    requests_expired: u64,
+    requests_cancelled: u64,
+    /// Total time-in-system of expired / cancelled requests — how long
+    /// abandoned work occupied the plane before the reaper cut it.
+    expired_s: Samples,
+    cancelled_s: Samples,
     tokens_generated: u64,
     queue_wait_s: Samples,
     ttft_s: Samples,
@@ -26,6 +36,8 @@ struct Inner {
     restores: u64,
     cold_bytes_current: usize,
     cold_bytes_peak: usize,
+    /// Cold-tier health, mirrored from [`ColdTierStats`] once per round.
+    cold_tier: ColdTierStats,
     /// Request ids in retirement order — the fairness oracle
     /// (`rust/tests/batched_serving.rs` asserts head-of-line behavior
     /// directly on this).
@@ -66,6 +78,13 @@ pub struct MetricsSnapshot {
     /// Requests answered with an error `Response` (backend construction,
     /// prefill, or cold-tier restore failure) instead of tokens.
     pub requests_failed: u64,
+    /// Requests reaped past their deadline (queued or in-flight).
+    pub requests_expired: u64,
+    /// Requests cut short by client cancellation.
+    pub requests_cancelled: u64,
+    /// Time-in-system distributions of the two reaped outcomes.
+    pub expired_s: Samples,
+    pub cancelled_s: Samples,
     pub tokens_generated: u64,
     pub queue_wait_s: Samples,
     pub ttft_s: Samples,
@@ -77,12 +96,19 @@ pub struct MetricsSnapshot {
     pub ttft_preempted_s: Samples,
     pub tok_latency_s: Samples,
     pub kv_bytes_peak: usize,
+    /// Committed KV bytes at snapshot time — 0 once the plane is drained
+    /// (the no-leak assertion chaos tests pivot on).
+    pub kv_bytes_current: usize,
     pub active_peak: usize,
     /// Cold-tier traffic: swap-outs and bit-identical restores.
     pub preemptions: u64,
     pub restores: u64,
     /// High-water mark of snapshot bytes parked in the cold tier.
     pub cold_bytes_peak: usize,
+    /// Snapshot bytes parked right now — 0 once drained.
+    pub cold_bytes_current: usize,
+    /// Cold-tier health: retry counts, corrupt restores, degraded flag.
+    pub cold_tier: ColdTierStats,
     /// Request ids in retirement order.
     pub completion_order: Vec<u64>,
     /// Prefix-cache admission hits / misses (0/0 when the cache is off).
@@ -115,9 +141,11 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={} failed={} tokens={} throughput={:.1} tok/s | queue-wait {} | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {} | preempt/restore {}/{} (cold-peak {})",
+            "requests={} failed={} expired={} cancelled={} tokens={} throughput={:.1} tok/s | queue-wait {} | ttft {} | tok-latency {} | kv-peak {} | max-concurrency {} | preempt/restore {}/{} (cold-peak {})",
             self.requests_completed,
             self.requests_failed,
+            self.requests_expired,
+            self.requests_cancelled,
             self.tokens_generated,
             self.throughput_tok_s(),
             self.queue_wait_s.summary("s"),
@@ -140,7 +168,34 @@ impl MetricsSnapshot {
                 crate::util::table::bytes(self.prefix_bytes_peak),
             ));
         }
+        if let Some(h) = self.cold_tier_health() {
+            s.push_str(&format!(" | cold-tier {h}"));
+        }
         s
+    }
+
+    /// Cold-tier health summary, or `None` when the tier ran clean (no
+    /// retries, no corrupt restores, never degraded) — the common case
+    /// stays out of the report line.
+    pub fn cold_tier_health(&self) -> Option<String> {
+        let c = &self.cold_tier;
+        if c == &ColdTierStats::default() {
+            return None;
+        }
+        let mut parts = Vec::new();
+        if c.spill_retries > 0 {
+            parts.push(format!("spill-retries={}", c.spill_retries));
+        }
+        if c.read_retries > 0 {
+            parts.push(format!("read-retries={}", c.read_retries));
+        }
+        if c.corrupt_restores > 0 {
+            parts.push(format!("corrupt-restores={}", c.corrupt_restores));
+        }
+        if c.degraded {
+            parts.push("DEGRADED(memory-only)".to_string());
+        }
+        Some(parts.join(" "))
     }
 
     /// The latency distributions as one aligned table (mean / p50 / p95 /
@@ -154,12 +209,16 @@ impl MetricsSnapshot {
             "latency summary",
             &["metric", "mean", "p50", "p95", "n"],
         );
-        let rows: [(&str, &Samples); 5] = [
+        let rows: [(&str, &Samples); 7] = [
             ("queue-wait", &self.queue_wait_s),
             ("ttft", &self.ttft_s),
             ("ttft-clean", &self.ttft_clean_s),
             ("ttft-preempted", &self.ttft_preempted_s),
             ("tok-latency", &self.tok_latency_s),
+            // Time-in-system of reaped requests: how long abandoned work
+            // sat on the plane before the deadline/cancel cut it loose.
+            ("expired", &self.expired_s),
+            ("cancelled", &self.cancelled_s),
         ];
         for (name, s) in rows {
             t.row(&[
@@ -211,6 +270,32 @@ impl Metrics {
         g.finished = Some(Instant::now());
     }
 
+    /// A request was reaped past its deadline after `total_s` in the
+    /// system (queued or in-flight).
+    pub fn record_expired(&self, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_expired += 1;
+        g.expired_s.push(total_s);
+        g.finished = Some(Instant::now());
+    }
+
+    /// A request was reaped by client cancellation after `total_s`.
+    pub fn record_cancelled(&self, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_cancelled += 1;
+        g.cancelled_s.push(total_s);
+        g.finished = Some(Instant::now());
+    }
+
+    /// Refresh cold-tier gauges: current resident bytes and the tier's
+    /// cumulative health counters (absolutes, not deltas).
+    pub fn record_cold_tier(&self, bytes_resident: usize, stats: ColdTierStats) {
+        let mut g = self.inner.lock().unwrap();
+        g.cold_bytes_current = bytes_resident;
+        g.cold_bytes_peak = g.cold_bytes_peak.max(bytes_resident);
+        g.cold_tier = stats;
+    }
+
     pub fn record_kv(&self, current_bytes: usize, active: usize) {
         let mut g = self.inner.lock().unwrap();
         g.kv_bytes_current = current_bytes;
@@ -259,6 +344,10 @@ impl Metrics {
         self.inner.lock().unwrap().kv_bytes_current
     }
 
+    pub fn cold_bytes_current(&self) -> usize {
+        self.inner.lock().unwrap().cold_bytes_current
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let wall_s = match (g.started, g.finished) {
@@ -269,6 +358,10 @@ impl Metrics {
         MetricsSnapshot {
             requests_completed: g.requests_completed,
             requests_failed: g.requests_failed,
+            requests_expired: g.requests_expired,
+            requests_cancelled: g.requests_cancelled,
+            expired_s: g.expired_s.clone(),
+            cancelled_s: g.cancelled_s.clone(),
             tokens_generated: g.tokens_generated,
             queue_wait_s: g.queue_wait_s.clone(),
             ttft_s: g.ttft_s.clone(),
@@ -276,10 +369,13 @@ impl Metrics {
             ttft_preempted_s: g.ttft_preempted_s.clone(),
             tok_latency_s: g.tok_latency_s.clone(),
             kv_bytes_peak: g.kv_bytes_peak,
+            kv_bytes_current: g.kv_bytes_current,
             active_peak: g.active_peak,
             preemptions: g.preemptions,
             restores: g.restores,
             cold_bytes_peak: g.cold_bytes_peak,
+            cold_bytes_current: g.cold_bytes_current,
+            cold_tier: g.cold_tier,
             completion_order: g.completion_order.clone(),
             prefix_hits: g.prefix_hits,
             prefix_misses: g.prefix_misses,
@@ -358,6 +454,54 @@ mod tests {
         assert!(rendered.contains("queue-wait"));
         assert!(rendered.contains("ttft"));
         assert!(rendered.contains("p95"));
+    }
+
+    #[test]
+    fn expired_and_cancelled_are_tracked_apart_from_failures() {
+        let m = Metrics::new();
+        m.record_expired(0.5);
+        m.record_cancelled(0.25);
+        m.record_cancelled(0.75);
+        let s = m.snapshot();
+        assert_eq!(s.requests_expired, 1);
+        assert_eq!(s.requests_cancelled, 2);
+        assert_eq!(s.requests_failed, 0, "reaped ≠ failed");
+        assert_eq!(s.expired_s.len(), 1);
+        assert_eq!(s.cancelled_s.len(), 2);
+        assert!((s.cancelled_s.mean() - 0.5).abs() < 1e-12);
+        assert!(s.report().contains("expired=1 cancelled=2"));
+        let rendered = s.summary_table().render();
+        assert!(rendered.contains("expired"));
+        assert!(rendered.contains("cancelled"));
+    }
+
+    #[test]
+    fn cold_tier_health_surfaces_only_when_dirty() {
+        let m = Metrics::new();
+        m.record_cold_tier(1024, ColdTierStats::default());
+        let s = m.snapshot();
+        assert!(s.cold_tier_health().is_none(), "clean tier stays quiet");
+        assert!(!s.report().contains("cold-tier"));
+        assert_eq!(s.cold_bytes_current, 1024);
+
+        m.record_cold_tier(
+            0,
+            ColdTierStats {
+                spill_retries: 3,
+                read_retries: 1,
+                corrupt_restores: 2,
+                degraded: true,
+            },
+        );
+        let s = m.snapshot();
+        let h = s.cold_tier_health().unwrap();
+        assert!(h.contains("spill-retries=3"), "{h}");
+        assert!(h.contains("read-retries=1"), "{h}");
+        assert!(h.contains("corrupt-restores=2"), "{h}");
+        assert!(h.contains("DEGRADED"), "{h}");
+        assert!(s.report().contains("cold-tier"));
+        assert_eq!(s.cold_bytes_current, 0);
+        assert_eq!(s.cold_bytes_peak, 1024, "peak survives the drain");
     }
 
     #[test]

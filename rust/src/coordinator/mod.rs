@@ -1,5 +1,5 @@
 //! L3 serving coordinator — vLLM-router-shaped, with a preemptive
-//! tiered control plane.
+//! tiered control plane hardened to fail *partially*, never totally.
 //!
 //! Two planes:
 //!
@@ -25,15 +25,69 @@
 //!   once for the whole fleet, so prompts sharing a long system
 //!   preamble admit at a fraction of their nominal footprint.
 //!
+//! # Request lifecycle
+//!
+//! Every request moves through this state machine, driven once per
+//! scheduling round by the worker:
+//!
+//! ```text
+//!                    submit
+//!                      │  (invalid: empty prompt / n_new == 0
+//!                      │   → immediate error Response, no admission)
+//!                      ▼
+//!                   queued ──────────────────────┐
+//!                      │ scheduler picks,        │ deadline passed /
+//!                      │ budget pre-charged      │ cancel token set
+//!                      ▼                         │ (reaped *before*
+//!                  admitted ── prefill err ──┐   │  the scheduler
+//!                      │ fused prefill       │   │  ever sees it)
+//!                      ▼                     │   │
+//!        ┌────────── active ── decode err ──┤   │
+//!        │ preempted   │ ▲                   │   │
+//!        ▼             │ │ restored          │   │
+//!     swapped ─────────┼─┘ (bit-identical)   │   │
+//!        │             │                     │   │
+//!        │ restore/    │ all n_new           │   │
+//!        │ read err    │ tokens done         │   │
+//!        ▼             ▼                     ▼   ▼
+//!     failed        retired              failed  expired / cancelled
+//! ```
+//!
+//! **Failure-semantics contract** (what `rust/tests/chaos_serving.rs`
+//! enforces under injected faults):
+//!
+//! * **Exactly one [`Response`] per submit**, on every path. Successful
+//!   retirement carries the full token stream; `failed` carries an error
+//!   plus whatever prefix was generated before the fault; `expired` /
+//!   `cancelled` carry the partial stream and the reason (`"deadline
+//!   exceeded"` / `"cancelled"`, client cancellation winning when both
+//!   hold). The reply channel is never silently dropped, so
+//!   `submit_wait` can never hang.
+//! * **Budget refund on every exit.** Retiring, failing, or reaping a
+//!   sequence drops its backend (hot KV bytes) and/or discards its
+//!   cold-tier blob in the same round; once the plane drains, committed
+//!   KV bytes and cold-tier residency both read zero.
+//! * **Faults are contained to the sequence they hit.** A corrupt or
+//!   unreadable cold-tier blob fails that one restore (the worker
+//!   `fail_swapped`s it and keeps the round); a failing spill *disk*
+//!   degrades the tier to memory rather than failing preemptions; a
+//!   backend-construction error fails one admission. Co-scheduled
+//!   sequences produce token streams bit-identical to a fault-free run.
+//! * **Reaped ≠ failed.** Deadline expiry and cancellation land in
+//!   their own [`Metrics`] counters (`expired` / `cancelled`), not in
+//!   `requests_failed` — nothing broke, the client moved on.
+//!
 //! Preemption is built on sequence state migration:
 //! [`crate::kvcache::KvCachePolicy::snapshot`] serializes the cache in
 //! its **compressed** representation (≈ 20% of the hot footprint for
-//! CSKV), the [`coldtier::ColdTier`] parks it in memory or spills it to
-//! disk, and restore resumes the generation **bit-identically** — the
-//! engine rebuilds its decode views through the existing `sync_view`
-//! path. [`Metrics`] records queue waits, preemption/restore counts,
-//! cold-tier bytes, per-outcome TTFT and retirement order;
-//! `bench_perf_scheduling` measures the fleet-level effect.
+//! CSKV) with a CRC-32 integrity footer (snapshot codec v2), the
+//! [`coldtier::ColdTier`] parks it in memory or spills it to disk with
+//! bounded-backoff retries, and restore resumes the generation
+//! **bit-identically** — the engine rebuilds its decode views through
+//! the existing `sync_view` path. [`Metrics`] records queue waits,
+//! preemption/restore counts, cold-tier bytes and health, per-outcome
+//! TTFT and retirement order; `bench_perf_scheduling` measures the
+//! fleet-level effect.
 //!
 //! * [`backend`] — per-sequence execution backends: the Rust reference
 //!   engine (any [`crate::kvcache::KvCachePolicy`]) and helpers, plus
@@ -42,9 +96,11 @@
 //!   `decode_full` / `decode_cskv_r*` artifacts via PJRT, including
 //!   their serialized snapshot forms.
 //! * [`scheduler`] — the control-plane trait and the three policies.
-//! * [`coldtier`] — the blob store for preempted sequence state.
+//! * [`coldtier`] — the blob store for preempted sequence state
+//!   (retry/degrade semantics, [`coldtier::ColdTierStats`]).
 //! * [`server`] — the coordinator thread and the scheduling rounds.
-//! * [`request`] / [`metrics`] — request/response types and counters.
+//! * [`request`] / [`metrics`] — request/response types (deadlines,
+//!   [`request::CancelToken`]) and counters.
 
 pub mod backend;
 pub mod coldtier;
@@ -55,8 +111,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use backend::{RustSequenceBackend, SequenceBackend};
-pub use coldtier::ColdTier;
+pub use coldtier::{ColdTier, ColdTierStats};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{Request, Response};
+pub use request::{CancelToken, Request, Response};
 pub use scheduler::{Scheduler, SchedulerKind};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, RequestHandle};

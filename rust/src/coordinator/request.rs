@@ -1,7 +1,45 @@
 //! Request/response types for the serving path.
+//!
+//! A [`Request`] carries two lifecycle controls alongside the prompt:
+//!
+//! * `deadline` — an absolute [`Instant`] after which the request is
+//!   worthless to the client. The worker checks it at every round
+//!   boundary: a still-queued request past its deadline is answered
+//!   `"deadline exceeded"` without admission; an in-flight one retires
+//!   early with whatever tokens it has.
+//! * `cancel` — a [`CancelToken`] the client can flip from any thread.
+//!   Same enforcement points, reason `"cancelled"`, and the partial
+//!   token stream is returned rather than discarded.
+//!
+//! Both resolve to a single [`Response`] whose `error` field carries the
+//! reason — the exactly-one-`Response` contract (see the
+//! [`crate::coordinator`] module docs) holds for every exit path.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
+
+/// Client-side cancellation flag. Cloning shares the flag: the client
+/// keeps one clone (via `RequestHandle`), the worker polls the other at
+/// round boundaries. Cancellation is level-triggered and sticky.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; takes effect at the worker's
+    /// next round boundary.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// A generation request.
 pub struct Request {
@@ -9,12 +47,30 @@ pub struct Request {
     pub prompt: Vec<usize>,
     pub n_new: usize,
     pub submitted_at: Instant,
+    /// Absolute point past which the request should be abandoned
+    /// (`None` = no deadline). Checked at round boundaries, so
+    /// enforcement granularity is one decode round.
+    pub deadline: Option<Instant>,
+    /// Client-held cancellation flag (see [`CancelToken`]).
+    pub cancel: CancelToken,
     /// Channel the coordinator answers on.
     pub reply: mpsc::Sender<Response>,
 }
 
+impl Request {
+    /// True once the deadline (if any) has passed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// True once the client has flipped the cancel token.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
 /// A completed (or failed) generation. Every submitted request receives
-/// exactly one `Response` — failures carry [`Response::error`] instead of
+/// exactly one `Response` — failures carry an `error` reason instead of
 /// silently dropping the reply channel, so `submit_wait` can never hang.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -29,15 +85,25 @@ pub struct Response {
     /// KV bytes held by this sequence at completion.
     pub kv_bytes: usize,
     pub backend: String,
-    /// `Some(reason)` when the request failed (backend construction or
-    /// prefill error: `tokens` is empty; decode error: `tokens` holds the
-    /// prefix generated before the failure).
+    /// `Some(reason)` when the request did not run to completion.
+    /// Backend-construction / prefill errors and pre-admission rejections
+    /// (`"deadline exceeded"` while queued, invalid submit) leave `tokens`
+    /// empty; decode-time failures and mid-stream `"cancelled"` /
+    /// `"deadline exceeded"` exits carry the partial prefix generated
+    /// before the cut.
     pub error: Option<String>,
 }
 
 impl Response {
     /// A failure response for a request that produced no tokens.
     pub fn failure(req: &Request, error: impl Into<String>) -> Response {
+        Response::error(req, error)
+    }
+
+    /// An error response for a request that produced no tokens — used
+    /// for submit-time validation failures and queued requests reaped at
+    /// a round boundary (expired/cancelled before admission).
+    pub fn error(req: &Request, reason: impl Into<String>) -> Response {
         Response {
             id: req.id,
             tokens: Vec::new(),
@@ -46,7 +112,7 @@ impl Response {
             total_s: req.submitted_at.elapsed().as_secs_f64(),
             kv_bytes: 0,
             backend: String::new(),
-            error: Some(error.into()),
+            error: Some(reason.into()),
         }
     }
 }
@@ -54,17 +120,24 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    fn request(id: u64, reply: mpsc::Sender<Response>) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            n_new: 4,
+            submitted_at: Instant::now(),
+            deadline: None,
+            cancel: CancelToken::new(),
+            reply,
+        }
+    }
 
     #[test]
     fn request_roundtrip_over_channel() {
         let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: 7,
-            prompt: vec![1, 2, 3],
-            n_new: 4,
-            submitted_at: Instant::now(),
-            reply: tx,
-        };
+        let req = request(7, tx);
         req.reply
             .send(Response {
                 id: req.id,
@@ -86,16 +159,33 @@ mod tests {
     #[test]
     fn failure_response_carries_reason() {
         let (tx, _rx) = mpsc::channel();
-        let req = Request {
-            id: 3,
-            prompt: vec![],
-            n_new: 1,
-            submitted_at: Instant::now(),
-            reply: tx,
-        };
+        let req = request(3, tx);
         let resp = Response::failure(&req, "boom");
         assert_eq!(resp.id, 3);
         assert!(resp.tokens.is_empty());
         assert_eq!(resp.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_sticky() {
+        let (tx, _rx) = mpsc::channel();
+        let req = request(1, tx);
+        assert!(!req.cancelled());
+        let client_side = req.cancel.clone();
+        client_side.cancel();
+        assert!(req.cancelled(), "clones share one flag");
+        client_side.cancel();
+        assert!(req.cancelled(), "idempotent");
+    }
+
+    #[test]
+    fn deadline_expiry_is_observable() {
+        let (tx, _rx) = mpsc::channel();
+        let mut req = request(2, tx);
+        assert!(!req.expired(), "no deadline, never expired");
+        req.deadline = Some(Instant::now() + Duration::from_secs(3600));
+        assert!(!req.expired());
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        assert!(req.expired());
     }
 }

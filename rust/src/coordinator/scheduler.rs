@@ -26,9 +26,12 @@
 //! All three see the same request descriptors ([`QueuedSeq`] /
 //! [`ActiveSeq`]); costs are the admission pre-charge
 //! (`kv_bytes_projected` at completion length), identical to the budget
-//! the worker enforces. `bench_perf_scheduling` records the fleet-level
-//! A/B; `rust/tests/batched_serving.rs` holds the fairness and
-//! round-trip oracles.
+//! the worker enforces. Schedulers never see lifecycle noise: the worker
+//! reaps cancelled and deadline-expired requests at the round boundary
+//! *before* building these descriptors, so every candidate offered here
+//! is live and worth admitting. `bench_perf_scheduling` records the
+//! fleet-level A/B; `rust/tests/batched_serving.rs` holds the fairness
+//! and round-trip oracles.
 
 /// What the scheduler sees of one queued request.
 #[derive(Clone, Debug)]

@@ -11,6 +11,14 @@
 //! Each scheduling round:
 //!
 //! 1. Requests land in an mpsc queue; the worker drains it.
+//! 1a. **Reap**: every cancelled or deadline-expired request — queued,
+//!    active, or swapped — is answered and released before the
+//!    scheduler runs (`"cancelled"` / `"deadline exceeded"`, with the
+//!    partial token stream for in-flight sequences). Deadlines come
+//!    from the request itself or the config-wide
+//!    [`CoordinatorConfig::request_timeout`]; enforcement granularity
+//!    is one round. See the [`crate::coordinator`] module docs for the
+//!    full lifecycle state machine.
 //! 2. **Admission**: the scheduler repeatedly picks the next queued
 //!    request that fits the headroom, every sequence charged at its
 //!    *projected completion* footprint
@@ -69,17 +77,18 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backend::{
     decode_batch, prefill_batch, prefill_batch_seeded, BatchScratch, SequenceBackend,
 };
 use super::coldtier::ColdTier;
 use super::metrics::{Completion, Metrics};
-use super::request::{Request, Response};
+use super::request::{CancelToken, Request, Response};
 use super::scheduler::{ActiveSeq, QueuedSeq, Scheduler, SchedulerKind};
 use crate::kvcache::{PrefixCache, PrefixRef};
 use crate::model::engine::{PrefixSeed, SeededPrefill};
+use crate::util::faults::FaultInjector;
 
 /// Factory producing a fresh backend per admitted sequence. Created inside
 /// the worker thread (PJRT clients are not Send), hence the two-level
@@ -119,6 +128,15 @@ pub struct CoordinatorConfig {
     /// is rejected by the CLI up front (a zero-budget trie could never
     /// retain a node).
     pub prefix_cache_bytes: Option<usize>,
+    /// Default per-request deadline (`cskv serve --request-timeout
+    /// <secs>`), applied at submit time to every request that doesn't
+    /// carry its own. `None` = requests wait and run indefinitely.
+    pub request_timeout: Option<Duration>,
+    /// Fault-injection registry for chaos testing
+    /// ([`crate::util::faults`]). The default is inert (one branch per
+    /// consulted error path); `rust/tests/chaos_serving.rs` passes a
+    /// seeded injector and arms points on its own clone.
+    pub faults: FaultInjector,
 }
 
 impl Default for CoordinatorConfig {
@@ -131,6 +149,8 @@ impl Default for CoordinatorConfig {
             scheduler: SchedulerKind::Fifo,
             cold_tier_dir: None,
             prefix_cache_bytes: None,
+            request_timeout: None,
+            faults: FaultInjector::none(),
         }
     }
 }
@@ -184,12 +204,22 @@ struct Admit {
     seed: Option<(PrefixSeed, PrefixRef)>,
 }
 
+/// Client-side handle to one in-flight request: the reply channel plus
+/// the [`CancelToken`] that cuts the request loose at the worker's next
+/// round boundary.
+pub struct RequestHandle {
+    pub id: u64,
+    pub cancel: CancelToken,
+    pub rx: mpsc::Receiver<Response>,
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     tx: Option<mpsc::Sender<Request>>,
     worker: Option<thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: std::sync::atomic::AtomicU64,
+    request_timeout: Option<Duration>,
 }
 
 impl Coordinator {
@@ -199,6 +229,7 @@ impl Coordinator {
         if cfg.threads > 0 {
             crate::util::threadpool::set_global_threads(cfg.threads);
         }
+        let request_timeout = cfg.request_timeout;
         let metrics = Arc::new(Metrics::new());
         let m = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -217,29 +248,60 @@ impl Coordinator {
             worker: Some(worker),
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            request_timeout,
         }
     }
 
-    /// Submit a request; returns the response channel.
-    pub fn submit(&self, prompt: Vec<usize>, n_new: usize) -> mpsc::Receiver<Response> {
+    /// Submit a request with full lifecycle control: an optional
+    /// per-request deadline (overriding the config-level
+    /// [`CoordinatorConfig::request_timeout`]) and a [`CancelToken`] the
+    /// caller keeps. Invalid requests (empty prompt, `n_new == 0`) are
+    /// answered with an immediate error `Response` without reaching the
+    /// worker — the library-level mirror of the CLI's flag validation.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<usize>,
+        n_new: usize,
+        deadline: Option<Duration>,
+    ) -> RequestHandle {
         let (reply, rx) = mpsc::channel();
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.mark_start();
+        let cancel = CancelToken::new();
         let req = Request {
             id,
             prompt,
             n_new,
             submitted_at: Instant::now(),
+            deadline: deadline.or(self.request_timeout).map(|d| Instant::now() + d),
+            cancel: cancel.clone(),
             reply,
         };
+        let invalid = if req.prompt.is_empty() {
+            Some("empty prompt")
+        } else if req.n_new == 0 {
+            Some("n_new must be at least 1")
+        } else {
+            None
+        };
+        if let Some(reason) = invalid {
+            self.metrics.record_failure();
+            let _ = req.reply.send(Response::error(&req, reason));
+            return RequestHandle { id, cancel, rx };
+        }
         self.tx
             .as_ref()
             .expect("coordinator already shut down")
             .send(req)
             .expect("coordinator worker gone");
-        rx
+        RequestHandle { id, cancel, rx }
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, prompt: Vec<usize>, n_new: usize) -> mpsc::Receiver<Response> {
+        self.submit_with(prompt, n_new, None).rx
     }
 
     /// Submit and block for the response.
@@ -296,6 +358,43 @@ fn fail_swapped(s: Swapped, err: &str, metrics: &Metrics) {
         error: Some(err.to_string()),
     };
     let _ = s.req.reply.send(resp);
+}
+
+/// Why the round-boundary reaper cut a request loose. Cancellation
+/// outranks expiry: a request both cancelled and past its deadline
+/// reports `"cancelled"` (the client's explicit signal wins).
+#[derive(Clone, Copy)]
+enum Verdict {
+    Cancelled,
+    Expired,
+}
+
+impl Verdict {
+    fn of(req: &Request) -> Option<Verdict> {
+        if req.cancelled() {
+            Some(Verdict::Cancelled)
+        } else if req.expired() {
+            Some(Verdict::Expired)
+        } else {
+            None
+        }
+    }
+
+    fn reason(self) -> &'static str {
+        match self {
+            Verdict::Cancelled => "cancelled",
+            Verdict::Expired => "deadline exceeded",
+        }
+    }
+
+    /// Reaped outcomes land in their own counters/distributions, not in
+    /// `requests_failed` — nothing broke, the client moved on.
+    fn record(self, total_s: f64, metrics: &Metrics) {
+        match self {
+            Verdict::Cancelled => metrics.record_cancelled(total_s),
+            Verdict::Expired => metrics.record_expired(total_s),
+        }
+    }
 }
 
 /// Retire one sequence: record metrics and answer its request. A
@@ -368,7 +467,78 @@ impl Worker<'_> {
     ) -> anyhow::Result<Box<dyn SequenceBackend>> {
         match self.spare.take() {
             Some(b) => Ok(b),
-            None => factory(),
+            None => {
+                // Chaos hook: a fired `backend.build` fault stands in for
+                // a real construction failure (allocation, device init).
+                self.cfg.faults.trip("backend.build")?;
+                factory()
+            }
+        }
+    }
+
+    /// Round-boundary lifecycle enforcement: answer and drop every
+    /// cancelled or deadline-expired request, wherever it lives. Queued
+    /// requests are rejected without admission; active sequences retire
+    /// early with their partial token stream (dropping the backend frees
+    /// the hot KV bytes now); swapped sequences discard their cold-tier
+    /// blob without decoding it. Runs before admission each round, so an
+    /// expired request can never consume a prefill.
+    fn reap_lifecycle(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            match Verdict::of(&self.pending[i]) {
+                Some(v) => {
+                    let req = self.pending.remove(i).expect("index in range");
+                    v.record(req.submitted_at.elapsed().as_secs_f64(), self.metrics);
+                    let _ = req.reply.send(Response::error(&req, v.reason()));
+                }
+                None => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            match Verdict::of(&self.active[i].req) {
+                Some(v) => {
+                    let a = self.active.swap_remove(i);
+                    let total_s = a.started.elapsed().as_secs_f64() + a.queue_wait_s;
+                    v.record(total_s, self.metrics);
+                    let resp = Response {
+                        id: a.req.id,
+                        tokens: a.generated,
+                        queue_wait_s: a.queue_wait_s,
+                        ttft_s: a.ttft_s,
+                        total_s,
+                        kv_bytes: 0,
+                        backend: a.backend.name(),
+                        error: Some(v.reason().to_string()),
+                    };
+                    let _ = a.req.reply.send(resp);
+                }
+                None => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < self.swapped.len() {
+            match Verdict::of(&self.swapped[i].req) {
+                Some(v) => {
+                    let s = self.swapped.swap_remove(i);
+                    self.tier.discard(s.req.id);
+                    let total_s = s.started.elapsed().as_secs_f64() + s.queue_wait_s;
+                    v.record(total_s, self.metrics);
+                    let resp = Response {
+                        id: s.req.id,
+                        tokens: s.generated,
+                        queue_wait_s: s.queue_wait_s,
+                        ttft_s: s.ttft_s,
+                        total_s,
+                        kv_bytes: 0,
+                        backend: String::new(),
+                        error: Some(v.reason().to_string()),
+                    };
+                    let _ = s.req.reply.send(resp);
+                }
+                None => i += 1,
+            }
         }
     }
 
@@ -806,7 +976,7 @@ fn worker_loop(
         cfg,
         metrics,
         scheduler: cfg.scheduler.build(),
-        tier: ColdTier::new(cfg.cold_tier_dir.clone()),
+        tier: ColdTier::with_faults(cfg.cold_tier_dir.clone(), cfg.faults.clone()),
         pending: VecDeque::new(),
         active: Vec::new(),
         swapped: Vec::new(),
@@ -828,6 +998,10 @@ fn worker_loop(
             w.pending.push_back(r);
         }
 
+        // Lifecycle first: expired/cancelled requests must never reach
+        // the scheduler, consume a prefill, or hold KV another round.
+        w.reap_lifecycle();
+
         let admitted = w.collect_admissions(factory);
         w.prefill_round(admitted);
         w.resume_round(factory);
@@ -837,6 +1011,13 @@ fn worker_loop(
 
         w.decode_round();
         w.retire_finished();
+
+        // Refresh the drain-state gauges *after* retirement so a fully
+        // drained plane reads zero committed KV and an empty cold tier —
+        // the no-leak observable the chaos suite asserts on.
+        let kv_after: usize = w.active.iter().map(|a| a.backend.kv_bytes()).sum();
+        metrics.record_kv(kv_after, w.active.len());
+        metrics.record_cold_tier(w.tier.bytes_resident(), w.tier.stats());
 
         // Exit when the channel is closed and all work is drained.
         if w.drained() {

@@ -18,6 +18,15 @@
 //! The same container carries coordinator-side backend snapshots (Rust
 //! backend bookkeeping wrapping a policy snapshot; PJRT session buffers)
 //! — see [`tags`] for the registry.
+//!
+//! **Integrity:** the encoded form ends with a CRC-32 of header +
+//! payload (codec v2). Spilled blobs live on the most fault-exposed
+//! path of the stack — disk I/O under preemption pressure — so
+//! [`KvSnapshot::decode`] verifies the checksum before any payload
+//! parsing: a blob corrupted at rest or in transit fails with a clean
+//! `snapshot checksum mismatch` error, and the coordinator fails *only
+//! that sequence* (`fail_swapped` + budget refund) instead of the round
+//! (`rust/tests/chaos_serving.rs`).
 
 use super::GrowMat;
 
@@ -48,7 +57,49 @@ pub mod tags {
 /// `"KVSN"` — guards against feeding arbitrary files to [`KvSnapshot::decode`].
 const MAGIC: u32 = 0x4b56_534e;
 /// Bump on any incompatible payload-layout change.
-const VERSION: u32 = 1;
+/// v2: a CRC-32 of header + payload is appended to the encoded form, so
+/// a blob corrupted at rest (disk spill, bit rot, a buggy transport)
+/// fails [`KvSnapshot::decode`] with a clean checksum error instead of
+/// being fed to a policy `restore`.
+const VERSION: u32 = 2;
+
+/// Header (magic + version + tag) plus the trailing CRC-32.
+const HEADER_BYTES: usize = 12;
+const FOOTER_BYTES: usize = 4;
+
+/// IEEE CRC-32 lookup table (reflected polynomial 0xEDB88320), built at
+/// compile time — the checksum variant of zlib/PNG, chosen because it is
+/// table-driven (4 ops/byte) and universally cross-checkable.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Streaming CRC-32 register update. Start from `0xFFFF_FFFF`, feed
+/// chunks in order, finalize with a bitwise NOT ([`crc32`] does all
+/// three for the single-slice case).
+fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// IEEE CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(0xFFFF_FFFF, bytes)
+}
 
 /// A serialized KV state: a kind tag plus an opaque payload written with
 /// [`SnapWriter`] and read back with [`SnapReader`].
@@ -73,28 +124,45 @@ impl KvSnapshot {
 
     /// Cold-tier accounting: bytes this snapshot occupies when encoded.
     pub fn size_bytes(&self) -> usize {
-        12 + self.payload.len()
+        HEADER_BYTES + self.payload.len() + FOOTER_BYTES
     }
 
-    /// Self-describing byte form (magic + version + tag + payload) — what
-    /// the cold tier stores in memory or spills to disk.
+    /// Self-describing byte form (magic + version + tag + payload +
+    /// CRC-32 of everything before it) — what the cold tier stores in
+    /// memory or spills to disk.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.size_bytes());
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&self.tag.to_le_bytes());
         out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
         out
     }
 
     pub fn decode(bytes: &[u8]) -> anyhow::Result<KvSnapshot> {
-        anyhow::ensure!(bytes.len() >= 12, "snapshot truncated: {} bytes", bytes.len());
+        anyhow::ensure!(
+            bytes.len() >= HEADER_BYTES + FOOTER_BYTES,
+            "snapshot truncated: {} bytes",
+            bytes.len()
+        );
         let word = |i: usize| u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
         anyhow::ensure!(word(0) == MAGIC, "bad snapshot magic {:#x}", word(0));
         anyhow::ensure!(word(4) == VERSION, "unsupported snapshot version {}", word(4));
+        // Integrity before content: a blob corrupted anywhere (header,
+        // tag, payload, or the checksum itself) is rejected here, never
+        // handed to a policy restore.
+        let body = bytes.len() - FOOTER_BYTES;
+        let (stored, computed) = (word(body), crc32(&bytes[..body]));
+        anyhow::ensure!(
+            stored == computed,
+            "snapshot checksum mismatch (stored {stored:#010x}, computed {computed:#010x}): \
+             blob corrupted"
+        );
         Ok(KvSnapshot {
             tag: word(8),
-            payload: bytes[12..].to_vec(),
+            payload: bytes[HEADER_BYTES..body].to_vec(),
         })
     }
 
@@ -164,10 +232,15 @@ impl SnapWriter {
     pub fn nested(&mut self, snap: &KvSnapshot) {
         self.write_usize(snap.size_bytes());
         self.buf.reserve(snap.size_bytes());
+        let start = self.buf.len();
         self.buf.extend_from_slice(&MAGIC.to_le_bytes());
         self.buf.extend_from_slice(&VERSION.to_le_bytes());
         self.buf.extend_from_slice(&snap.tag().to_le_bytes());
         self.buf.extend_from_slice(snap.payload());
+        // The CRC covers header + payload, computed in place over the
+        // bytes just written — still no intermediate encode() allocation.
+        let crc = crc32(&self.buf[start..]);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
     }
 
     pub fn finish(self) -> Vec<u8> {
@@ -345,6 +418,37 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] ^= 0xFF;
         assert!(KvSnapshot::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // zlib/PNG reference values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn checksum_rejects_any_single_byte_flip() {
+        let snap = KvSnapshot::new(tags::H2O, (0..=255u8).collect());
+        let bytes = snap.encode();
+        assert!(KvSnapshot::decode(&bytes).is_ok());
+        // Every offset — header, tag, payload, and the checksum itself.
+        for off in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x10;
+            let err = KvSnapshot::decode(&bad)
+                .expect_err(&format!("flip at {off} must be rejected"));
+            // Clean error, and flips past the header surface as checksum
+            // mismatches specifically.
+            if off >= 12 && off < bytes.len() - 4 {
+                assert!(err.to_string().contains("checksum"), "offset {off}: {err:#}");
+            }
+        }
+        // Truncation anywhere is still an error, not a silent short read.
+        for cut in [0, 8, 15, bytes.len() - 1] {
+            assert!(KvSnapshot::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

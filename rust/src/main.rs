@@ -17,8 +17,12 @@
 //! memory (requires `--scheduler preemptive`), and
 //! `--prefix-cache-kb N` enables the coordinator's radix prefix cache
 //! with an N-KiB byte budget (admission then charges only each
-//! request's unshared suffix). Invalid combinations — a zero prefix
-//! budget, an unwritable cold-tier dir, a cold tier without the
+//! request's unshared suffix), and `--request-timeout <secs>` gives
+//! every request a deadline — a request still queued or decoding past
+//! it is answered `"deadline exceeded"` (with its partial tokens, if
+//! any) and its KV/cold-tier state released at the next round boundary.
+//! Invalid combinations — a zero prefix budget, a non-positive request
+//! timeout, an unwritable cold-tier dir, a cold tier without the
 //! preemptive scheduler, or zero `--requests/--n-new/--ctx/--max-batch`
 //! — are rejected up front with a clear error instead of failing
 //! mid-round.
@@ -265,6 +269,13 @@ fn validate_serve_flags(args: &Args, coord_cfg: &CoordinatorConfig) -> anyhow::R
              (omit the flag to disable the prefix cache)"
         );
     }
+    if let Some(v) = args.get_opt("request-timeout") {
+        anyhow::ensure!(
+            v.parse::<f64>().map(|s| s > 0.0 && s.is_finite()).unwrap_or(false),
+            "--request-timeout must be a positive number of seconds, got {v:?} \
+             (omit the flag to let requests wait indefinitely)"
+        );
+    }
     if let Some(dir) = &coord_cfg.cold_tier_dir {
         anyhow::ensure!(
             matches!(coord_cfg.scheduler, cskv::coordinator::SchedulerKind::Preemptive),
@@ -300,6 +311,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         prefix_cache_bytes: args.get_opt("prefix-cache-kb").and_then(|v| {
             v.parse::<usize>().ok().map(|kb| kb * 1024)
         }),
+        // --request-timeout <secs>: default deadline for every request.
+        // (The filter keeps from_secs_f64 panic-safe; bad values are
+        // rejected with a message by validate_serve_flags below.)
+        request_timeout: args.get_opt("request-timeout").and_then(|v| {
+            v.parse::<f64>()
+                .ok()
+                .filter(|s| *s > 0.0 && s.is_finite())
+                .map(std::time::Duration::from_secs_f64)
+        }),
+        faults: cskv::util::faults::FaultInjector::none(),
     };
     validate_serve_flags(args, &coord_cfg)?;
     let engine = load_engine(args)?;
@@ -350,6 +371,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             snap.prefix_evictions,
             cskv::util::table::bytes(snap.prefix_bytes_peak),
         );
+    }
+    if let Some(health) = snap.cold_tier_health() {
+        println!("  cold tier: {health}");
     }
     println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
     snap.summary_table().print();

@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serving control plane.
+//!
+//! Production I/O faults (a full disk, a flaky mount, a corrupted blob)
+//! are rare and unreproducible; this module makes them *scheduled*. A
+//! [`FaultInjector`] is a registry of **named fault points** — strings
+//! like `"coldtier.write"` — that production code consults on its error
+//! paths. Each armed point carries a [`FaultMode`] deciding which hits
+//! fire (fail-the-Nth, fail-from-the-Nth, fail-with-probability) and a
+//! PRNG forked deterministically from the injector's seed and the point
+//! name, so a given `(seed, arm calls)` pair replays the exact same
+//! fault schedule on every run — the property `rust/tests/
+//! chaos_serving.rs` builds its oracles on.
+//!
+//! The default injector is **inert**: no allocation, no locking beyond a
+//! single `Option` check, and every fault point reports "don't fail".
+//! Production builds pay one branch per consulted error path.
+//!
+//! Registered points in the coordinator:
+//!
+//! | point | consulted by | effect when fired |
+//! |-------|--------------|-------------------|
+//! | `coldtier.write` | each spill-write attempt | that attempt errors |
+//! | `coldtier.read`  | each spill-read attempt  | that attempt errors |
+//! | `snapshot.corrupt` | cold-tier restore, pre-decode | one seeded byte of the encoded blob is flipped |
+//! | `backend.build` | worker backend construction | the build errors |
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::prng::{Pcg64, SplitMix64};
+
+/// Which hits of a fault point fire. Hit counts are 1-based.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultMode {
+    /// Fire on exactly the `n`th hit (transient fault: retry succeeds).
+    Nth(u64),
+    /// Fire on the `n`th hit and every later one (persistent fault:
+    /// retries are exhausted). `FromNth(1)` fails always.
+    FromNth(u64),
+    /// Fire each hit independently with probability `p`, drawn from the
+    /// point's seeded PRNG stream.
+    Probability(f64),
+}
+
+struct Point {
+    mode: FaultMode,
+    hits: u64,
+    trips: u64,
+    rng: Pcg64,
+}
+
+impl Point {
+    /// Count a hit; true when the armed mode says this one fires.
+    fn fire(&mut self) -> bool {
+        self.hits += 1;
+        let fired = match self.mode {
+            FaultMode::Nth(n) => self.hits == n,
+            FaultMode::FromNth(n) => self.hits >= n,
+            FaultMode::Probability(p) => self.rng.chance(p),
+        };
+        if fired {
+            self.trips += 1;
+        }
+        fired
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    seed: u64,
+    points: HashMap<String, Point>,
+}
+
+/// Handle to a shared fault registry. Cloning shares the registry (the
+/// test arms points on its clone; the worker thread consults its own),
+/// and the inert default makes the production path a no-op.
+#[derive(Clone, Default)]
+pub struct FaultInjector {
+    inner: Option<Arc<Mutex<Registry>>>,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            Some(_) => write!(f, "FaultInjector(armed)"),
+            None => write!(f, "FaultInjector(inert)"),
+        }
+    }
+}
+
+/// FNV-1a over the point name: mixes the name into the per-point PRNG
+/// seed so two points armed in any order get independent streams.
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl FaultInjector {
+    /// The inert injector: every point reports "don't fail".
+    pub fn none() -> Self {
+        FaultInjector::default()
+    }
+
+    /// An active (but initially empty) registry. `seed` drives every
+    /// probabilistic trigger and every corruption site deterministically.
+    pub fn seeded(seed: u64) -> Self {
+        FaultInjector {
+            inner: Some(Arc::new(Mutex::new(Registry {
+                seed,
+                points: HashMap::new(),
+            }))),
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Arm `point` with `mode` (re-arming resets its hit/trip counters).
+    /// No-op on the inert injector.
+    pub fn arm(&self, point: &str, mode: FaultMode) {
+        if let Some(inner) = &self.inner {
+            let mut g = inner.lock().unwrap();
+            let rng = Pcg64::new(SplitMix64::new(g.seed ^ name_hash(point)).next_u64());
+            g.points.insert(
+                point.to_string(),
+                Point { mode, hits: 0, trips: 0, rng },
+            );
+        }
+    }
+
+    /// Count a hit at `point`; `Err` when an armed fault fires. Inert or
+    /// unarmed points always return `Ok`.
+    pub fn trip(&self, point: &str) -> anyhow::Result<()> {
+        if let Some(inner) = &self.inner {
+            let mut g = inner.lock().unwrap();
+            if let Some(p) = g.points.get_mut(point) {
+                if p.fire() {
+                    let hit = p.hits;
+                    anyhow::bail!("injected fault at {point} (hit {hit})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Count a hit at `point`; when the armed fault fires, XOR one
+    /// seeded byte of `bytes` with a seeded non-zero mask. Returns
+    /// whether a corruption was injected.
+    pub fn corrupt(&self, point: &str, bytes: &mut [u8]) -> bool {
+        if bytes.is_empty() {
+            return false;
+        }
+        if let Some(inner) = &self.inner {
+            let mut g = inner.lock().unwrap();
+            if let Some(p) = g.points.get_mut(point) {
+                if p.fire() {
+                    let off = p.rng.below(bytes.len());
+                    let mask = (p.rng.range(1, 256)) as u8;
+                    bytes[off] ^= mask;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Times `point` was consulted (hit), regardless of firing.
+    pub fn hits(&self, point: &str) -> u64 {
+        self.counter(point, |p| p.hits)
+    }
+
+    /// Times `point` actually fired — the test-side observability hook
+    /// ("every injected fault yields exactly one error `Response`").
+    pub fn trips(&self, point: &str) -> u64 {
+        self.counter(point, |p| p.trips)
+    }
+
+    fn counter(&self, point: &str, get: impl Fn(&Point) -> u64) -> u64 {
+        match &self.inner {
+            Some(inner) => inner
+                .lock()
+                .unwrap()
+                .points
+                .get(point)
+                .map(&get)
+                .unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_injector_never_fails() {
+        let f = FaultInjector::none();
+        assert!(!f.is_armed());
+        f.arm("x", FaultMode::FromNth(1)); // silently ignored
+        for _ in 0..10 {
+            assert!(f.trip("x").is_ok());
+        }
+        let mut b = [1u8, 2, 3];
+        assert!(!f.corrupt("x", &mut b));
+        assert_eq!(b, [1, 2, 3]);
+        assert_eq!(f.trips("x"), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let f = FaultInjector::seeded(1);
+        f.arm("p", FaultMode::Nth(3));
+        let fired: Vec<bool> = (0..6).map(|_| f.trip("p").is_err()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(f.hits("p"), 6);
+        assert_eq!(f.trips("p"), 1);
+        // Unarmed points on an armed injector pass through.
+        assert!(f.trip("other").is_ok());
+    }
+
+    #[test]
+    fn from_nth_is_persistent() {
+        let f = FaultInjector::seeded(2);
+        f.arm("p", FaultMode::FromNth(2));
+        let fired: Vec<bool> = (0..4).map(|_| f.trip("p").is_err()).collect();
+        assert_eq!(fired, [false, true, true, true]);
+        assert_eq!(f.trips("p"), 3);
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            let f = FaultInjector::seeded(seed);
+            f.arm("p", FaultMode::Probability(0.5));
+            (0..64).map(|_| f.trip("p").is_err()).collect()
+        };
+        assert_eq!(schedule(7), schedule(7), "same seed, same schedule");
+        assert_ne!(schedule(7), schedule(8), "distinct seeds diverge");
+        let n = schedule(7).iter().filter(|&&b| b).count();
+        assert!((16..=48).contains(&n), "p=0.5 over 64 hits, got {n}");
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_byte_deterministically() {
+        let run = |seed: u64| -> Vec<u8> {
+            let f = FaultInjector::seeded(seed);
+            f.arm("c", FaultMode::Nth(1));
+            let mut b = vec![0u8; 32];
+            assert!(f.corrupt("c", &mut b));
+            b
+        };
+        let (a, b) = (run(5), run(5));
+        assert_eq!(a, b, "same seed corrupts the same byte");
+        assert_eq!(a.iter().filter(|&&x| x != 0).count(), 1);
+        // After the Nth(1) trigger, later hits leave data untouched.
+        let f = FaultInjector::seeded(5);
+        f.arm("c", FaultMode::Nth(1));
+        let mut x = vec![9u8; 8];
+        assert!(f.corrupt("c", &mut x));
+        let snapshot = x.clone();
+        assert!(!f.corrupt("c", &mut x));
+        assert_eq!(x, snapshot);
+    }
+
+    #[test]
+    fn rearm_resets_counters() {
+        let f = FaultInjector::seeded(3);
+        f.arm("p", FaultMode::Nth(1));
+        assert!(f.trip("p").is_err());
+        f.arm("p", FaultMode::Nth(1));
+        assert_eq!(f.hits("p"), 0);
+        assert!(f.trip("p").is_err(), "fresh counters: first hit fires again");
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let f = FaultInjector::seeded(4);
+        let g = f.clone();
+        f.arm("p", FaultMode::Nth(2));
+        assert!(g.trip("p").is_ok());
+        assert!(g.trip("p").is_err(), "hits accumulate across clones");
+        assert_eq!(f.trips("p"), 1);
+    }
+}

@@ -6,6 +6,7 @@
 //! implemented here from scratch:
 //!
 //! * [`prng`] — SplitMix64 / Xoshiro256** deterministic RNG.
+//! * [`faults`] — seeded fault-injection registry (chaos testing).
 //! * [`json`] — minimal JSON parser + writer (artifact manifests, results).
 //! * [`cli`] — declarative command-line argument parser.
 //! * [`log`] — leveled logger controlled by `CSKV_LOG`.
@@ -17,6 +18,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod log;
 pub mod prng;

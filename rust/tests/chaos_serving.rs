@@ -1,0 +1,428 @@
+//! Deterministic chaos harness for the fault-hardened serving plane.
+//!
+//! Every test arms named fault points on a seeded
+//! [`FaultInjector`] (`CSKV_CHAOS_SEED` overrides the default seed, as
+//! CI does) and then proves the coordinator's failure-semantics
+//! contract (see the `cskv::coordinator` module docs) under that exact
+//! fault schedule:
+//!
+//! * **Exactly one `Response` per submit** — faulted requests answer
+//!   with an error (plus any partial tokens), never a dropped channel.
+//! * **No hang** — every `recv` below returns; `shutdown` drains.
+//! * **No budget leak** — after drain, committed KV bytes and cold-tier
+//!   residency both read zero.
+//! * **Blast-radius containment** — co-scheduled sequences untouched by
+//!   the fault produce token streams bit-identical to a fault-free run
+//!   (the direct-engine oracle).
+//!
+//! Fault points exercised: `coldtier.write` (transient → retry;
+//! persistent → degrade-to-memory), `coldtier.read` (persistent → one
+//! failed restore), `snapshot.corrupt` (CRC-32 rejection), and
+//! `backend.build` (one failed admission). Deadline expiry, mid-decode
+//! cancellation, and submit-time validation round out the lifecycle.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, RustSequenceBackend, SchedulerKind};
+use cskv::kvcache::FullCache;
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::util::faults::{FaultInjector, FaultMode};
+
+/// Fault schedule seed — fixed default, overridable so CI can pin (or
+/// sweep) the schedule explicitly.
+fn chaos_seed() -> u64 {
+    std::env::var("CSKV_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC5CA05)
+}
+
+fn make_engine(seed: u64) -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), seed)))
+}
+
+fn full_setup(seed: u64) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+/// A setup that blocks inside the worker until `gate` fires, so a whole
+/// workload can be queued before the first scheduling round.
+fn gated_setup(seed: u64, gate: std::sync::mpsc::Receiver<()>) -> Setup {
+    Box::new(move || {
+        let _ = gate.recv();
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            Ok(Box::new(RustSequenceBackend::new(
+                engine.clone(),
+                Box::new(FullCache::new(c.n_layers, c.d_model)),
+            )))
+        });
+        Ok(factory)
+    })
+}
+
+/// Direct-engine oracle for a full-cache generation.
+fn oracle(seed: u64, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let engine = make_engine(seed);
+    let cfg = engine.w.cfg.clone();
+    let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+    engine.generate(prompt, n_new, &mut cache).0
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed().as_secs() < 30, "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+/// The no-leak invariant: a drained plane holds zero committed KV bytes
+/// and an empty cold tier.
+fn assert_drained(snap: &MetricsSnapshot) {
+    assert_eq!(snap.kv_bytes_current, 0, "committed KV must refund to zero after drain");
+    assert_eq!(snap.cold_bytes_current, 0, "cold tier must be empty after drain");
+}
+
+/// The proven preemption geometry (same as the scheduler tests): a long
+/// generation whose projection fills the whole budget, so admitting the
+/// short request requires swapping the long one out.
+const LONG_PROMPT: [usize; 6] = [1, 7, 9, 2, 30, 41];
+const SHORT_PROMPT: [usize; 3] = [3, 5, 8];
+
+fn preemptive_cfg(budget_tokens: usize, faults: FaultInjector, dir: Option<std::path::PathBuf>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        max_batch: 4,
+        kv_budget_bytes: Some(ModelConfig::test_small().kv_bytes_full(budget_tokens)),
+        scheduler: SchedulerKind::Preemptive,
+        cold_tier_dir: dir,
+        faults,
+        ..Default::default()
+    }
+}
+
+fn tmp(label: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cskv-chaos-{label}-{}", std::process::id()))
+}
+
+/// A transient spill-write fault (fails the 1st attempt only) is
+/// absorbed by the retry: both streams bit-identical, nothing degraded,
+/// the retry visible in the health counters.
+#[test]
+fn transient_spill_write_fault_is_retried_and_invisible() {
+    let (long_n, short_n) = (120usize, 2usize);
+    let want_long = oracle(5, &LONG_PROMPT, long_n);
+    let want_short = oracle(5, &SHORT_PROMPT, short_n);
+    let dir = tmp("wretry");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let faults = FaultInjector::seeded(chaos_seed());
+    faults.arm("coldtier.write", FaultMode::Nth(1));
+    let coord = Coordinator::start(full_setup(5), preemptive_cfg(128, faults, Some(dir.clone())));
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    let short = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(short.error.is_none(), "{:?}", short.error);
+    assert_eq!(short.tokens, want_short);
+    let long = long_rx.recv().unwrap();
+    assert!(long.error.is_none(), "{:?}", long.error);
+    assert_eq!(long.tokens, want_long, "retried spill must restore bit-identically");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 2);
+    assert_eq!(snap.requests_failed, 0);
+    assert!(snap.preemptions >= 1);
+    assert!(snap.cold_tier.spill_retries >= 1, "the injected write fault was retried");
+    assert!(!snap.cold_tier.degraded, "one transient fault must not degrade the tier");
+    assert_drained(&snap);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A persistently failing spill disk degrades the tier to memory —
+/// every preemption still succeeds, every stream stays bit-identical,
+/// and the degradation is observable in the metrics.
+#[test]
+fn persistent_spill_faults_degrade_tier_without_losing_requests() {
+    // Long enough that the long sequence is still mid-decode across two
+    // preemption windows.
+    let (long_n, short_n) = (1200usize, 2usize);
+    let want_long = oracle(6, &LONG_PROMPT, long_n);
+    let want_short = oracle(6, &SHORT_PROMPT, short_n);
+    let dir = tmp("wdegrade");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let faults = FaultInjector::seeded(chaos_seed() ^ 1);
+    faults.arm("coldtier.write", FaultMode::FromNth(1));
+    // Budget fits the long projection (1206 tokens) but not long + short.
+    let coord = Coordinator::start(full_setup(6), preemptive_cfg(1206, faults, Some(dir.clone())));
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    // First preemption: the spill write exhausts its retries, the blob
+    // stays in memory, the preemption succeeds anyway.
+    let s1 = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(s1.error.is_none(), "{:?}", s1.error);
+    assert_eq!(s1.tokens, want_short);
+    // Wait for the long sequence to be restored and hot again, then
+    // trigger the second preemption — the failure streak degrades the
+    // tier to memory for all subsequent blobs.
+    wait_until("long request restored", || {
+        let m = coord.metrics();
+        m.cold_bytes_current() == 0 && m.kv_bytes_current() > 0
+    });
+    let s2 = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(s2.error.is_none(), "{:?}", s2.error);
+    assert_eq!(s2.tokens, want_short);
+    let long = long_rx.recv().unwrap();
+    assert!(long.error.is_none(), "{:?}", long.error);
+    assert_eq!(long.tokens, want_long, "memory-fallback blobs must restore bit-identically");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 3);
+    assert_eq!(snap.requests_failed, 0, "a failing disk must not fail any request");
+    assert!(snap.preemptions >= 2, "got {} preemptions", snap.preemptions);
+    assert_eq!(snap.restores, snap.preemptions);
+    assert!(snap.cold_tier.spill_retries >= 4);
+    assert!(snap.cold_tier.degraded, "persistent write faults must degrade the tier");
+    assert_drained(&snap);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A persistently unreadable spill blob fails exactly the sequence that
+/// owned it — partial tokens + error, one Response — while the
+/// co-scheduled short request stays bit-identical and the plane drains.
+#[test]
+fn unreadable_cold_blob_fails_only_its_own_sequence() {
+    let (long_n, short_n) = (120usize, 2usize);
+    let want_long = oracle(7, &LONG_PROMPT, long_n);
+    let want_short = oracle(7, &SHORT_PROMPT, short_n);
+    let dir = tmp("rfail");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let faults = FaultInjector::seeded(chaos_seed() ^ 2);
+    faults.arm("coldtier.read", FaultMode::FromNth(1));
+    let coord = Coordinator::start(full_setup(7), preemptive_cfg(128, faults.clone(), Some(dir.clone())));
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    let short = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(short.error.is_none(), "{:?}", short.error);
+    assert_eq!(short.tokens, want_short, "unaffected sequence must be bit-identical");
+
+    let long = long_rx.recv().expect("failed restore must still answer");
+    let err = long.error.as_deref().expect("unreadable blob must surface as an error");
+    assert!(err.contains("injected fault"), "error must carry the root cause: {err}");
+    assert!(!long.tokens.is_empty(), "partial pre-preemption tokens are returned");
+    assert!(long.tokens.len() < long_n);
+    assert_eq!(long.tokens[..], want_long[..long.tokens.len()], "partial stream is a prefix");
+    assert!(long_rx.recv().is_err(), "exactly one Response per request");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 1);
+    assert_eq!(snap.requests_failed, 1);
+    assert!(snap.cold_tier.read_retries >= 3, "all read attempts were retried");
+    assert_drained(&snap);
+    assert!(faults.trips("coldtier.read") >= 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupted snapshot blob is rejected by the CRC-32 footer at
+/// restore: that sequence fails cleanly (never a truncated cache), the
+/// corruption is counted, and the rest of the round is untouched.
+#[test]
+fn corrupt_snapshot_is_rejected_by_checksum_not_decoded() {
+    let (long_n, short_n) = (120usize, 2usize);
+    let want_long = oracle(8, &LONG_PROMPT, long_n);
+    let want_short = oracle(8, &SHORT_PROMPT, short_n);
+
+    let faults = FaultInjector::seeded(chaos_seed() ^ 3);
+    faults.arm("snapshot.corrupt", FaultMode::Nth(1));
+    // In-memory tier: corruption is injected between the store and the
+    // decoder, so the CRC must catch it with no disk involved at all.
+    let coord = Coordinator::start(full_setup(8), preemptive_cfg(128, faults, None));
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    let short = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(short.error.is_none(), "{:?}", short.error);
+    assert_eq!(short.tokens, want_short, "unaffected sequence must be bit-identical");
+
+    let long = long_rx.recv().expect("corrupt restore must still answer");
+    let err = long.error.as_deref().expect("corruption must surface as an error");
+    assert!(err.contains("corrupt"), "error names the corruption: {err}");
+    assert_eq!(long.tokens[..], want_long[..long.tokens.len()], "partial stream is a prefix");
+    assert!(long_rx.recv().is_err(), "exactly one Response per request");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 1);
+    assert_eq!(snap.requests_failed, 1);
+    assert_eq!(snap.cold_tier.corrupt_restores, 1);
+    assert_drained(&snap);
+}
+
+/// A backend-construction fault fails exactly one admission; the other
+/// queued requests are served bit-identically to the fault-free oracle.
+#[test]
+fn backend_build_fault_fails_one_admission_only() {
+    let n_new = 4usize;
+    let prompts: Vec<Vec<usize>> = (0..3).map(|i| vec![1, 2 + i, 3, 4]).collect();
+    let oracles: Vec<Vec<usize>> = prompts.iter().map(|p| oracle(9, p, n_new)).collect();
+
+    let faults = FaultInjector::seeded(chaos_seed() ^ 4);
+    faults.arm("backend.build", FaultMode::Nth(1));
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let coord = Coordinator::start(
+        gated_setup(9, gate_rx),
+        CoordinatorConfig { faults: faults.clone(), ..Default::default() },
+    );
+    let rxs: Vec<_> = prompts.iter().map(|p| coord.submit(p.clone(), n_new)).collect();
+    gate_tx.send(()).unwrap(); // whole queue visible at the first round
+    let mut failed = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("every request must be answered");
+        match resp.error {
+            Some(e) => {
+                assert!(e.contains("injected fault"), "{e}");
+                assert!(resp.tokens.is_empty());
+                failed += 1;
+            }
+            None => assert_eq!(resp.tokens, oracles[i], "survivor {i} must be bit-identical"),
+        }
+    }
+    assert_eq!(failed, 1, "Nth(1) fails exactly one construction");
+    assert_eq!(faults.trips("backend.build"), 1);
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 2);
+    assert_eq!(snap.requests_failed, 1);
+    assert_drained(&snap);
+}
+
+/// Mid-decode cancellation: the client flips the token, the worker cuts
+/// the sequence at the next round boundary and returns the partial
+/// stream — a strict prefix of the uncancelled oracle — with reason
+/// `"cancelled"`, and the KV budget is refunded.
+#[test]
+fn mid_decode_cancellation_returns_partial_prefix() {
+    let prompt = vec![1usize, 2, 3, 4];
+    let n_new = 1200usize;
+    let want = oracle(10, &prompt, n_new);
+
+    let coord = Coordinator::start(full_setup(10), CoordinatorConfig::default());
+    let handle = coord.submit_with(prompt, n_new, None);
+    wait_until("request hot", || coord.metrics().kv_bytes_current() > 0);
+    handle.cancel.cancel();
+    let resp = handle.rx.recv().expect("cancelled request must still answer");
+    assert_eq!(resp.error.as_deref(), Some("cancelled"));
+    assert!(!resp.tokens.is_empty(), "prefill token precedes the cancellation");
+    assert!(resp.tokens.len() < n_new, "cancellation must cut the stream short");
+    assert_eq!(resp.tokens[..], want[..resp.tokens.len()], "partial stream is a prefix");
+    assert!(handle.rx.recv().is_err(), "exactly one Response per request");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_cancelled, 1);
+    assert_eq!(snap.requests_completed, 0);
+    assert_eq!(snap.requests_failed, 0, "cancellation is not a failure");
+    assert_eq!(snap.cancelled_s.len(), 1);
+    assert_drained(&snap);
+}
+
+/// A queued request whose deadline passes before the scheduler ever
+/// runs is rejected without admission — empty tokens, zero TTFT,
+/// `"deadline exceeded"` — while a co-queued request without a deadline
+/// is served bit-identically.
+#[test]
+fn expired_queued_request_is_rejected_without_admission() {
+    let live_prompt = vec![5usize, 6, 7, 8];
+    let n_new = 4usize;
+    let want_live = oracle(11, &live_prompt, n_new);
+
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let coord = Coordinator::start(gated_setup(11, gate_rx), CoordinatorConfig::default());
+    let doomed = coord.submit_with(vec![1, 2, 3], n_new, Some(Duration::from_millis(1)));
+    let live_rx = coord.submit(live_prompt, n_new);
+    // Let the deadline lapse while the worker is still gated, then open
+    // the gate: the first round must reap before it admits.
+    std::thread::sleep(Duration::from_millis(20));
+    gate_tx.send(()).unwrap();
+
+    let resp = doomed.rx.recv().expect("expired request must still answer");
+    assert_eq!(resp.error.as_deref(), Some("deadline exceeded"));
+    assert!(resp.tokens.is_empty(), "never admitted, no tokens");
+    assert_eq!(resp.ttft_s, 0.0, "no prefill ever ran");
+    assert!(doomed.rx.recv().is_err(), "exactly one Response per request");
+    let live = live_rx.recv().unwrap();
+    assert!(live.error.is_none(), "{:?}", live.error);
+    assert_eq!(live.tokens, want_live, "undeadlined request must be untouched");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_expired, 1);
+    assert_eq!(snap.requests_completed, 1);
+    assert_eq!(snap.requests_failed, 0, "expiry is not a failure");
+    assert_drained(&snap);
+}
+
+/// The config-wide `request_timeout` gives every request a default
+/// deadline: an in-flight sequence past it retires early with its
+/// partial stream and releases its KV state.
+#[test]
+fn config_request_timeout_retires_in_flight_sequence_early() {
+    let prompt = vec![9usize, 8, 7, 6];
+    let n_new = 5000usize; // far more decode rounds than the timeout allows
+    let want = oracle(12, &prompt, n_new);
+
+    let coord = Coordinator::start(
+        full_setup(12),
+        CoordinatorConfig {
+            request_timeout: Some(Duration::from_millis(40)),
+            ..Default::default()
+        },
+    );
+    let resp = coord.submit_wait(prompt, n_new);
+    assert_eq!(resp.error.as_deref(), Some("deadline exceeded"));
+    assert!(!resp.tokens.is_empty(), "admitted and decoding before the deadline");
+    assert!(resp.tokens.len() < n_new, "the deadline must cut the stream short");
+    assert_eq!(resp.tokens[..], want[..resp.tokens.len()], "partial stream is a prefix");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_expired, 1);
+    assert_eq!(snap.expired_s.len(), 1);
+    assert_eq!(snap.requests_completed, 0);
+    assert_drained(&snap);
+}
+
+/// Submit-time validation: an empty prompt or a zero token budget is
+/// answered immediately (the worker never sees it), and the coordinator
+/// keeps serving valid requests afterwards.
+#[test]
+fn invalid_submits_get_immediate_error_responses() {
+    let valid_prompt = vec![1usize, 2, 3];
+    let n_new = 3usize;
+    let want = oracle(13, &valid_prompt, n_new);
+
+    let coord = Coordinator::start(full_setup(13), CoordinatorConfig::default());
+    let empty = coord.submit(vec![], n_new).recv().expect("validation must answer");
+    assert_eq!(empty.error.as_deref(), Some("empty prompt"));
+    assert!(empty.tokens.is_empty());
+    let zero = coord.submit(valid_prompt.clone(), 0).recv().expect("validation must answer");
+    assert_eq!(zero.error.as_deref(), Some("n_new must be at least 1"));
+    assert!(zero.tokens.is_empty());
+
+    let ok = coord.submit_wait(valid_prompt, n_new);
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(ok.tokens, want, "valid traffic unaffected by rejected submits");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_failed, 2);
+    assert_eq!(snap.requests_completed, 1);
+    assert_drained(&snap);
+}

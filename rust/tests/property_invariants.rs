@@ -779,3 +779,77 @@ fn prop_fused_int4_gemv_bit_identical_to_dequantize() {
         },
     );
 }
+
+/// THE integrity oracle for the snapshot codec's CRC-32 footer: for
+/// every policy's encoded mid-decode snapshot, flipping any single byte
+/// — header, version, tag, payload body, or the checksum itself — must
+/// make [`KvSnapshot::decode`] return a clean `Err`, never a
+/// silently-truncated or bit-rotted cache. Truncations at every
+/// boundary (empty, header-only, mid-payload, missing footer) must
+/// error too. This is what lets a corrupt cold-tier blob fail exactly
+/// one sequence instead of poisoning a restore.
+#[test]
+fn snapshot_corruption_is_always_rejected() {
+    let base = ModelConfig::test_small();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&base, 7)));
+    let ctx = 64usize;
+    let mut rng = Pcg64::new(2026);
+    let tokens: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+    let n_policies = preemptable_policies().len();
+    for pi in 0..n_policies {
+        // Mid-decode snapshot, same split point as the round-trip sweep.
+        let mut policy = preemptable_policies().swap_remove(pi);
+        let name = policy.name();
+        let rec = engine.prefill(&tokens, Some(policy.as_mut()));
+        let mut state = DecodeState::new(&engine.w.cfg);
+        let mut tok = ops::argmax(rec.logits.row(ctx - 1));
+        for i in 0..2 {
+            let logits = engine.decode_step_with(policy.as_mut(), tok, ctx + i, &mut state);
+            tok = ops::argmax(logits);
+        }
+        let clean = policy.snapshot().encode();
+        assert!(
+            KvSnapshot::decode(&clean).is_ok(),
+            "{name}: pristine snapshot must decode"
+        );
+
+        // Single-byte flips across every region of the layout.
+        let n = clean.len();
+        let offsets = [
+            0,         // magic
+            5,         // version / header field
+            9,         // header length field
+            12,        // first payload byte
+            n / 2,     // payload body
+            n - 5,     // last payload byte
+            n - 4,     // first checksum byte
+            n - 1,     // last checksum byte
+        ];
+        for &off in &offsets {
+            for flip in [0x01u8, 0x80] {
+                let mut bad = clean.clone();
+                bad[off] ^= flip;
+                assert!(
+                    KvSnapshot::decode(&bad).is_err(),
+                    "{name}: flip 0x{flip:02x} at byte {off}/{n} must be rejected"
+                );
+            }
+        }
+
+        // Truncations at every structural boundary.
+        for keep in [0usize, 4, 11, 12, n / 2, n - 4, n - 1] {
+            assert!(
+                KvSnapshot::decode(&clean[..keep]).is_err(),
+                "{name}: truncation to {keep}/{n} bytes must be rejected"
+            );
+        }
+
+        // Trailing garbage is not silently ignored either.
+        let mut padded = clean.clone();
+        padded.push(0);
+        assert!(
+            KvSnapshot::decode(&padded).is_err(),
+            "{name}: trailing byte must be rejected"
+        );
+    }
+}
