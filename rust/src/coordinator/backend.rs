@@ -173,6 +173,55 @@ impl SequenceBackend for RustSequenceBackend {
     }
 }
 
+/// A delegating backend that sleeps before every decode step — a test
+/// hook (`cskv serve --decode-throttle-ms`, the drain/migrate and HTTP
+/// chaos tests) that stretches generations into a window long enough to
+/// deterministically catch a sequence *mid-decode* with a drain or
+/// disconnect. Token streams are unchanged. `as_rust_backend` stays
+/// `None`, so fused rounds fall back to per-sequence calls and the delay
+/// is actually applied each step.
+pub struct ThrottledBackend {
+    inner: Box<dyn SequenceBackend>,
+    delay: std::time::Duration,
+}
+
+impl ThrottledBackend {
+    pub fn new(inner: Box<dyn SequenceBackend>, delay: std::time::Duration) -> Self {
+        ThrottledBackend { inner, delay }
+    }
+}
+
+impl SequenceBackend for ThrottledBackend {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn prefill(&mut self, prompt: &[usize]) -> anyhow::Result<usize> {
+        self.inner.prefill(prompt)
+    }
+
+    fn decode_next(&mut self) -> anyhow::Result<usize> {
+        std::thread::sleep(self.delay);
+        self.inner.decode_next()
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.inner.kv_bytes()
+    }
+
+    fn kv_bytes_projected(&self, tokens: usize) -> usize {
+        self.inner.kv_bytes_projected(tokens)
+    }
+
+    fn snapshot(&self) -> anyhow::Result<KvSnapshot> {
+        self.inner.snapshot()
+    }
+
+    fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
+        self.inner.restore(snap)
+    }
+}
+
 /// Reusable stacked work buffers for fused rounds, owned by the
 /// scheduler and threaded through [`prefill_batch`] / [`decode_batch`].
 #[derive(Default)]

@@ -1,0 +1,783 @@
+//! Hand-rolled HTTP/1.1 serving front-end over the [`Coordinator`].
+//!
+//! `cskv serve --listen <addr>` binds a [`std::net::TcpListener`] and
+//! exposes the serving plane over plain sockets — no framework, no
+//! dependencies, one thread per connection. The worker thread is never
+//! blocked by a client: the connection thread owns the socket and the
+//! per-token stream channel; all it shares with the worker are
+//! unbounded `mpsc` channels and the request's [`CancelToken`].
+//!
+//! # Endpoints
+//!
+//! | Method | Path        | Behaviour                                        |
+//! |--------|-------------|--------------------------------------------------|
+//! | POST   | `/generate` | Submit `{"prompt":[..],"n_new":N}`; SSE stream   |
+//! | GET    | `/healthz`  | Liveness: `200 ok` while the process runs        |
+//! | GET    | `/readyz`   | Readiness: `503 draining` once drain starts      |
+//! | GET    | `/stats`    | Metrics + cold-tier + prefix-cache JSON snapshot |
+//! | POST   | `/drain`    | Graceful drain; `409` if already draining        |
+//!
+//! # Robustness contract
+//!
+//! * **Disconnect maps to cancel.** Any write failure on the SSE stream
+//!   (client closed the socket, injected `http.write` short write, or a
+//!   slow client exceeding the stall timeout) flips the request's
+//!   [`CancelToken`]; the worker retires the sequence at its next round
+//!   boundary and frees its KV / cold-tier bytes. Exactly one terminal
+//!   outcome per request (`cancelled` here) still holds.
+//! * **Slow clients never block the worker.** The socket carries a
+//!   write timeout of [`HttpConfig::client_stall_timeout`]; a stalled
+//!   `write_all` surfaces as an error on the connection thread only,
+//!   which then cancels as above. Tokens queue in the unbounded stream
+//!   channel meanwhile — the worker's sends never block.
+//! * **Overload sheds, never queues unboundedly.** An atomic in-flight
+//!   gate admits at most [`HttpConfig::max_queued`] concurrent
+//!   `/generate` requests; excess connections get `429` with a
+//!   `Retry-After` header (counted via `requests_shed`).
+//! * **Graceful drain.** `SIGTERM` or `POST /drain` stops admissions
+//!   (`/readyz` flips to 503, `/generate` answers 503), gives in-flight
+//!   sequences [`HttpConfig::drain_grace`] to finish, then snapshots the
+//!   rest into a [`DrainBundle`] written to [`HttpConfig::drain_file`].
+//!   Migrated requests see a terminal `migrated` SSE event; a second
+//!   process started with `--resume-from` restores them bit-identically.
+//!
+//! # SSE wire format
+//!
+//! Data frames are `event: <name>\ndata: <json>\n\n`:
+//!
+//! * `token` — `{"i":<index>,"token":<id>}` per generated token;
+//! * `done` — `{"id":..,"tokens":[..],"backend":".."}` terminal success
+//!   (`tokens` is the *complete* stream, prompt excluded);
+//! * `migrated` — `{"id":..,"streamed":N,"error":".."}` when a drain cut
+//!   the sequence loose mid-generation;
+//! * `error` — `{"id":..,"streamed":N,"error":".."}` for every other
+//!   failure (deadline, cancel, backend error).
+//!
+//! Idle gaps carry `: ping` comment frames (~4/s) so dead clients are
+//! detected even between tokens. Pings bypass the `http.write` fault
+//! point so `FaultMode::Nth` arming counts data frames deterministically.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use super::metrics::MetricsSnapshot;
+use super::request::{Response, DRAINED};
+use super::server::{Coordinator, DrainBundle, RequestHandle};
+use crate::util::faults::FaultInjector;
+use crate::util::json::Json;
+
+/// Serving-plane knobs. `Default` matches the CLI defaults of
+/// `cskv serve`.
+pub struct HttpConfig {
+    /// Maximum concurrent `/generate` requests before shedding with 429.
+    pub max_queued: usize,
+    /// Socket write timeout: a client that cannot absorb a frame for
+    /// this long is treated as gone (write error → cancel).
+    pub client_stall_timeout: Duration,
+    /// Seconds advertised in `Retry-After` on 429/503 responses.
+    pub retry_after_s: u64,
+    /// Grace period handed to [`Coordinator::drain`] before in-flight
+    /// sequences are snapshotted.
+    pub drain_grace: Duration,
+    /// Where the [`DrainBundle`] is written on drain (`None`: the bundle
+    /// is dropped after answering the migrated requests).
+    pub drain_file: Option<PathBuf>,
+    /// Reject prompt tokens `>= vocab_size` at the door (0 = unchecked).
+    pub vocab_size: usize,
+    /// Reject `prompt.len() + n_new > max_seq` at the door (0 = unchecked).
+    pub max_seq: usize,
+    /// Fault registry consulted at `http.accept` / `http.write`.
+    pub faults: FaultInjector,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_queued: 64,
+            client_stall_timeout: Duration::from_secs(10),
+            retry_after_s: 1,
+            drain_grace: Duration::from_secs(5),
+            drain_file: None,
+            vocab_size: 0,
+            max_seq: 0,
+            faults: FaultInjector::none(),
+        }
+    }
+}
+
+/// Parse a `--listen` address, with a CLI-grade error message.
+pub fn parse_listen(s: &str) -> anyhow::Result<SocketAddr> {
+    s.parse::<SocketAddr>().map_err(|e| {
+        anyhow!("invalid --listen address {s:?}: {e} (expected ip:port, e.g. 127.0.0.1:8080)")
+    })
+}
+
+/// State shared between the accept loop and connection threads.
+struct Shared {
+    coord: Coordinator,
+    cfg: HttpConfig,
+    /// Concurrent `/generate` requests currently admitted.
+    inflight: AtomicUsize,
+    /// Set once a drain starts; admissions stop immediately.
+    draining: AtomicBool,
+    /// Set once the drain completes; the accept loop exits.
+    done: AtomicBool,
+}
+
+/// Decrements the in-flight gauge on every exit path of a `/generate`
+/// handler (shed, parse error, stream end, panic unwind).
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(unix)]
+mod sigterm {
+    //! Minimal `SIGTERM` hook: an async-signal-safe flag flip, polled by
+    //! the accept loop. `signal(2)` is reached through a direct libc
+    //! declaration — the crate stays dependency-free.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FIRED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigterm(_signum: i32) {
+        FIRED.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_sigterm as usize);
+        }
+    }
+
+    pub fn fired() -> bool {
+        FIRED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigterm {
+    pub fn install() {}
+    pub fn fired() -> bool {
+        false
+    }
+}
+
+/// Run the serving loop until a drain completes (via `SIGTERM` or
+/// `POST /drain`), then shut the coordinator down and return its final
+/// metrics snapshot. Consumes the coordinator: once drained, nothing
+/// can be admitted anyway.
+pub fn serve(
+    coord: Coordinator,
+    listener: TcpListener,
+    cfg: HttpConfig,
+) -> anyhow::Result<MetricsSnapshot> {
+    sigterm::install();
+    listener
+        .set_nonblocking(true)
+        .context("set_nonblocking on listener")?;
+    let shared = Arc::new(Shared {
+        coord,
+        cfg,
+        inflight: AtomicUsize::new(0),
+        draining: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+    });
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !shared.done.load(Ordering::SeqCst) {
+        if sigterm::fired() && !shared.draining.load(Ordering::SeqCst) {
+            match do_drain(&shared) {
+                Ok((n, _)) => crate::log_info!("sigterm: drained, {n} sequence(s) migrated"),
+                Err(e) => crate::log_warn!("sigterm drain: {e:#}"),
+            }
+            continue;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.cfg.faults.trip("http.accept").is_err() {
+                    // Injected accept fault: the connection is dropped
+                    // before a single byte is read — the client sees a
+                    // reset, the serving plane sees nothing.
+                    drop(stream);
+                    continue;
+                }
+                let s = Arc::clone(&shared);
+                handles.push(thread::spawn(move || {
+                    if let Err(e) = handle_connection(stream, &s) {
+                        crate::log_debug!("connection {peer}: {e:#}");
+                    }
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(anyhow!("accept failed: {e}")),
+        }
+        // Reap finished connection threads so long-lived servers don't
+        // accumulate handles.
+        let mut live = Vec::with_capacity(handles.len());
+        for h in handles.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push(h);
+            }
+        }
+        handles = live;
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let shared = Arc::try_unwrap(shared)
+        .map_err(|_| anyhow!("a connection thread still holds server state after join"))?;
+    Ok(shared.coord.shutdown())
+}
+
+/// Start the drain exactly once; concurrent callers get an error (the
+/// HTTP handler maps it to `409`). On success the accept loop exits at
+/// its next iteration via the `done` flag.
+fn do_drain(s: &Shared) -> anyhow::Result<(usize, Option<PathBuf>)> {
+    if s.draining.swap(true, Ordering::SeqCst) {
+        bail!("drain already in progress");
+    }
+    let res = (|| {
+        let bundle = s.coord.drain(s.cfg.drain_grace)?;
+        let mut saved = None;
+        if let Some(path) = &s.cfg.drain_file {
+            bundle.save(path)?;
+            saved = Some(path.clone());
+        }
+        Ok((bundle.seqs.len(), saved))
+    })();
+    // Even a failed drain stops the server: the worker is no longer in a
+    // state where admitting more work makes sense.
+    s.done.store(true, Ordering::SeqCst);
+    res
+}
+
+fn handle_connection(mut stream: TcpStream, s: &Shared) -> anyhow::Result<()> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("set_read_timeout")?;
+    stream
+        .set_write_timeout(Some(s.cfg.client_stall_timeout))
+        .context("set_write_timeout")?;
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_simple(
+                &mut stream,
+                400,
+                "text/plain",
+                format!("bad request: {e:#}\n").as_bytes(),
+                &[],
+            );
+            return Ok(());
+        }
+    };
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => write_simple(&mut stream, 200, "text/plain", b"ok\n", &[])?,
+        ("GET", "/readyz") => {
+            if s.draining.load(Ordering::SeqCst) || s.done.load(Ordering::SeqCst) {
+                write_simple(&mut stream, 503, "text/plain", b"draining\n", &[])?;
+            } else {
+                write_simple(&mut stream, 200, "text/plain", b"ready\n", &[])?;
+            }
+        }
+        ("GET", "/stats") => {
+            let mut j = s.coord.metrics().snapshot().to_json();
+            j.set(
+                "draining",
+                Json::from(s.draining.load(Ordering::SeqCst) || s.done.load(Ordering::SeqCst)),
+            );
+            j.set("inflight", Json::from(s.inflight.load(Ordering::SeqCst)));
+            write_simple(
+                &mut stream,
+                200,
+                "application/json",
+                j.to_string_compact().as_bytes(),
+                &[],
+            )?;
+        }
+        ("POST", "/drain") => match do_drain(s) {
+            Ok((n, file)) => {
+                let mut j = Json::from_pairs(vec![("migrated", Json::from(n))]);
+                if let Some(p) = file {
+                    j.set("bundle", Json::from(p.display().to_string()));
+                }
+                write_simple(
+                    &mut stream,
+                    200,
+                    "application/json",
+                    j.to_string_compact().as_bytes(),
+                    &[],
+                )?;
+            }
+            Err(e) => {
+                write_simple(&mut stream, 409, "text/plain", format!("{e:#}\n").as_bytes(), &[])?;
+            }
+        },
+        ("POST", "/generate") => handle_generate(&mut stream, s, &body)?,
+        ("GET" | "POST", _) => write_simple(&mut stream, 404, "text/plain", b"not found\n", &[])?,
+        _ => write_simple(&mut stream, 405, "text/plain", b"method not allowed\n", &[])?,
+    }
+    Ok(())
+}
+
+/// Read one HTTP/1.1 request: head (≤16 KiB) up to the blank line, then
+/// `Content-Length` bytes of body (≤4 MiB). Returns
+/// `(method, path-without-query, body)`.
+fn read_request(stream: &mut TcpStream) -> anyhow::Result<(String, String, Vec<u8>)> {
+    const MAX_HEAD: usize = 16 * 1024;
+    const MAX_BODY: usize = 4 * 1024 * 1024;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        ensure!(buf.len() <= MAX_HEAD, "request head exceeds {MAX_HEAD} bytes");
+        let n = stream.read(&mut chunk).context("read request head")?;
+        ensure!(n > 0, "connection closed before full request head");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let reqline = lines.next().unwrap_or("");
+    let mut parts = reqline.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let raw_path = parts.next().unwrap_or("");
+    ensure!(
+        !method.is_empty() && !raw_path.is_empty(),
+        "malformed request line {reqline:?}"
+    );
+    let path = raw_path.split('?').next().unwrap_or(raw_path).to_string();
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("invalid Content-Length {:?}", v.trim()))?;
+            }
+        }
+    }
+    ensure!(content_len <= MAX_BODY, "body exceeds {MAX_BODY} bytes");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut chunk).context("read request body")?;
+        ensure!(n > 0, "connection closed before full request body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_len);
+    Ok((method, path, body))
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn handle_generate(stream: &mut TcpStream, s: &Shared, body: &[u8]) -> anyhow::Result<()> {
+    let retry = [("Retry-After", s.cfg.retry_after_s.to_string())];
+    if s.draining.load(Ordering::SeqCst) || s.done.load(Ordering::SeqCst) {
+        s.coord.metrics().record_shed();
+        write_simple(
+            stream,
+            503,
+            "text/plain",
+            b"draining: not admitting requests\n",
+            &retry,
+        )?;
+        return Ok(());
+    }
+    // Admission gate: increment first, check after — two racing
+    // borderline requests may then both shed, but the gate can never
+    // admit more than `max_queued`.
+    let held = s.inflight.fetch_add(1, Ordering::SeqCst);
+    let _guard = InflightGuard(&s.inflight);
+    if held >= s.cfg.max_queued {
+        s.coord.metrics().record_shed();
+        write_simple(
+            stream,
+            429,
+            "text/plain",
+            b"overloaded: queue full, retry later\n",
+            &retry,
+        )?;
+        return Ok(());
+    }
+    let (prompt, n_new, deadline) = match parse_generate_body(body, &s.cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            write_simple(
+                stream,
+                400,
+                "text/plain",
+                format!("bad request: {e:#}\n").as_bytes(),
+                &[],
+            )?;
+            return Ok(());
+        }
+    };
+    let (handle, tokens) = s.coord.submit_streaming(prompt, n_new, deadline);
+    stream_sse(stream, s, handle, tokens)
+}
+
+/// Strict token parse: non-negative integer, rejecting floats and
+/// negatives that `f64 as usize` would silently clamp.
+fn as_token(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n >= usize::MAX as f64 {
+        return None;
+    }
+    Some(n as usize)
+}
+
+type GenerateParams = (Vec<usize>, usize, Option<Duration>);
+
+fn parse_generate_body(body: &[u8], cfg: &HttpConfig) -> anyhow::Result<GenerateParams> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let j = Json::parse(text).map_err(|e| anyhow!("invalid JSON at byte {}: {}", e.pos, e.msg))?;
+    let prompt_json = j
+        .at("prompt")
+        .ok_or_else(|| anyhow!("missing \"prompt\" (array of token ids)"))?;
+    let Json::Arr(items) = prompt_json else {
+        bail!("\"prompt\" must be an array of token ids");
+    };
+    let mut prompt = Vec::with_capacity(items.len());
+    for it in items {
+        let tok =
+            as_token(it).ok_or_else(|| anyhow!("prompt entries must be non-negative integers"))?;
+        if cfg.vocab_size > 0 && tok >= cfg.vocab_size {
+            bail!("prompt token {tok} out of range (vocab size {})", cfg.vocab_size);
+        }
+        prompt.push(tok);
+    }
+    ensure!(!prompt.is_empty(), "\"prompt\" must be non-empty");
+    let n_new = j
+        .at("n_new")
+        .and_then(as_token)
+        .ok_or_else(|| anyhow!("missing or invalid \"n_new\" (positive integer)"))?;
+    ensure!(n_new >= 1, "\"n_new\" must be at least 1");
+    if cfg.max_seq > 0 {
+        ensure!(
+            prompt.len() + n_new <= cfg.max_seq,
+            "prompt ({}) + n_new ({n_new}) exceeds max sequence length {}",
+            prompt.len(),
+            cfg.max_seq
+        );
+    }
+    let deadline = match j.at("deadline_ms") {
+        Some(v) => {
+            let ms = as_token(v)
+                .filter(|&ms| ms > 0)
+                .ok_or_else(|| anyhow!("\"deadline_ms\" must be a positive integer"))?;
+            Some(Duration::from_millis(ms as u64))
+        }
+        None => None,
+    };
+    Ok((prompt, n_new, deadline))
+}
+
+/// Forward the token stream as SSE until the terminal [`Response`]
+/// arrives. Every write failure cancels the request — the worker frees
+/// its KV at the next round boundary — and ends the connection.
+fn stream_sse(
+    stream: &mut TcpStream,
+    s: &Shared,
+    handle: RequestHandle,
+    tokens: mpsc::Receiver<usize>,
+) -> anyhow::Result<()> {
+    const HEAD: &str = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    const PING_EVERY: Duration = Duration::from_millis(250);
+    let faults = &s.cfg.faults;
+    if let Err(e) = stream.write_all(HEAD.as_bytes()) {
+        handle.cancel.cancel();
+        bail!("client gone before stream start (request {} cancelled): {e}", handle.id);
+    }
+    let mut streamed = 0usize;
+    let mut last_ping = Instant::now();
+    loop {
+        match tokens.recv_timeout(Duration::from_millis(20)) {
+            Ok(tok) => {
+                if let Err(e) = emit_token(stream, streamed, tok, faults) {
+                    handle.cancel.cancel();
+                    bail!("client write failed (request {} cancelled): {e}", handle.id);
+                }
+                streamed += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if let Ok(resp) = handle.rx.try_recv() {
+                    return drain_and_finish(stream, &handle, &tokens, resp, streamed, faults);
+                }
+                if last_ping.elapsed() >= PING_EVERY {
+                    // Keep-alive comment frame, written raw: pings bypass
+                    // the `http.write` fault point so Nth-frame arming
+                    // counts data frames only.
+                    if let Err(e) = stream.write_all(b": ping\n\n") {
+                        handle.cancel.cancel();
+                        bail!("client gone at ping (request {} cancelled): {e}", handle.id);
+                    }
+                    last_ping = Instant::now();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // The worker dropped the stream sender: the terminal
+                // Response is already sent (exactly-one-Response).
+                let resp = handle
+                    .rx
+                    .recv()
+                    .map_err(|_| anyhow!("worker dropped reply for request {}", handle.id))?;
+                return drain_and_finish(stream, &handle, &tokens, resp, streamed, faults);
+            }
+        }
+    }
+}
+
+/// Flush any tokens still buffered in the stream channel, then emit the
+/// terminal SSE event for `resp`.
+fn drain_and_finish(
+    stream: &mut TcpStream,
+    handle: &RequestHandle,
+    tokens: &mpsc::Receiver<usize>,
+    resp: Response,
+    mut streamed: usize,
+    faults: &FaultInjector,
+) -> anyhow::Result<()> {
+    for tok in tokens.try_iter() {
+        if let Err(e) = emit_token(stream, streamed, tok, faults) {
+            handle.cancel.cancel(); // no-op post-terminal; kept for symmetry
+            bail!("client write failed at tail of request {}: {e}", handle.id);
+        }
+        streamed += 1;
+    }
+    finish_sse(stream, &resp, streamed, faults)
+        .map_err(|e| anyhow!("client write failed at terminal event of request {}: {e}", resp.id))
+}
+
+fn emit_token(
+    stream: &mut TcpStream,
+    i: usize,
+    tok: usize,
+    faults: &FaultInjector,
+) -> std::io::Result<()> {
+    let data = Json::from_pairs(vec![("i", Json::from(i)), ("token", Json::from(tok))]);
+    write_sse(stream, "token", &data.to_string_compact(), faults)
+}
+
+/// Map the terminal [`Response`] onto its SSE event: `done` on success,
+/// `migrated` when a graceful drain snapshotted the sequence
+/// ([`DRAINED`]), `error` otherwise.
+fn finish_sse(
+    stream: &mut TcpStream,
+    resp: &Response,
+    streamed: usize,
+    faults: &FaultInjector,
+) -> std::io::Result<()> {
+    let id = Json::from(resp.id as usize);
+    let (event, data) = match resp.error.as_deref() {
+        None => (
+            "done",
+            Json::from_pairs(vec![
+                ("id", id),
+                (
+                    "tokens",
+                    Json::Arr(resp.tokens.iter().map(|&t| Json::from(t)).collect()),
+                ),
+                ("backend", Json::from(resp.backend.as_str())),
+            ]),
+        ),
+        Some(e) if e == DRAINED => (
+            "migrated",
+            Json::from_pairs(vec![
+                ("id", id),
+                ("streamed", Json::from(streamed)),
+                ("error", Json::from(e)),
+            ]),
+        ),
+        Some(e) => (
+            "error",
+            Json::from_pairs(vec![
+                ("id", id),
+                ("streamed", Json::from(streamed)),
+                ("error", Json::from(e)),
+            ]),
+        ),
+    };
+    write_sse(stream, event, &data.to_string_compact(), faults)
+}
+
+/// Write one SSE frame through the `http.write` fault point: an armed
+/// fault truncates the frame mid-write (a deterministic "short write")
+/// and surfaces `BrokenPipe`, exactly like a client vanishing between
+/// two TCP segments.
+fn write_sse(
+    stream: &mut TcpStream,
+    event: &str,
+    data: &str,
+    faults: &FaultInjector,
+) -> std::io::Result<()> {
+    let frame = format!("event: {event}\ndata: {data}\n\n");
+    if faults.trip("http.write").is_err() {
+        let half = frame.len() / 2;
+        let _ = stream.write_all(&frame.as_bytes()[..half]);
+        let _ = stream.flush();
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "injected short write at http.write",
+        ));
+    }
+    stream.write_all(frame.as_bytes())
+}
+
+/// Write a complete non-streaming response with `Connection: close`.
+fn write_simple(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Resume every sequence of a [`DrainBundle`] on `coord`, blocking until
+/// all have completed. Returns `(id, tokens, error)` per sequence in
+/// bundle order — `tokens` is the *full* stream (carried + regenerated),
+/// so a successful resume is bit-identical to an undisturbed run. Used
+/// by `cskv serve --resume-from` and the cross-process migration tests.
+pub fn resume_bundle(
+    coord: &Coordinator,
+    bundle: DrainBundle,
+) -> Vec<(u64, Vec<usize>, Option<String>)> {
+    let mut pending = Vec::new();
+    for seq in bundle.seqs {
+        let id = seq.id;
+        let carried = seq.generated.clone();
+        let (handle, tokens) = coord.resume_drained(seq, None);
+        pending.push((id, carried, handle, tokens));
+    }
+    let mut out = Vec::new();
+    for (id, carried, handle, _tokens) in pending {
+        match handle.rx.recv() {
+            Ok(resp) => {
+                let toks = if resp.error.is_none() {
+                    // `resp.tokens` already includes the carried prefix
+                    // for restored sequences; re-run queued sequences
+                    // start from scratch and also return the full stream.
+                    resp.tokens
+                } else {
+                    carried
+                };
+                out.push((id, toks, resp.error));
+            }
+            Err(_) => out.push((id, carried, Some("worker dropped reply".to_string()))),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_listen_accepts_ip_port_and_rejects_garbage() {
+        let a = parse_listen("127.0.0.1:8080").unwrap();
+        assert_eq!(a.port(), 8080);
+        assert!(a.ip().is_loopback());
+        assert!(parse_listen("0.0.0.0:0").is_ok());
+        for bad in ["", "8080", "localhost:8080", "127.0.0.1", "127.0.0.1:banana"] {
+            let err = parse_listen(bad).unwrap_err().to_string();
+            assert!(err.contains("invalid --listen"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn token_parse_rejects_floats_negatives_and_non_numbers() {
+        assert_eq!(as_token(&Json::from(7usize)), Some(7));
+        assert_eq!(as_token(&Json::from(0usize)), Some(0));
+        assert_eq!(as_token(&Json::Num(3.5)), None);
+        assert_eq!(as_token(&Json::Num(-1.0)), None);
+        assert_eq!(as_token(&Json::Num(f64::NAN)), None);
+        assert_eq!(as_token(&Json::from("9")), None);
+    }
+
+    #[test]
+    fn generate_body_validation_covers_every_field() {
+        let cfg = HttpConfig {
+            vocab_size: 50,
+            max_seq: 16,
+            ..HttpConfig::default()
+        };
+        let ok = parse_generate_body(br#"{"prompt":[1,2,3],"n_new":4}"#, &cfg).unwrap();
+        assert_eq!(ok, (vec![1, 2, 3], 4, None));
+        let with_deadline =
+            parse_generate_body(br#"{"prompt":[1],"n_new":1,"deadline_ms":250}"#, &cfg).unwrap();
+        assert_eq!(with_deadline.2, Some(Duration::from_millis(250)));
+        let cases: &[(&[u8], &str)] = &[
+            (b"not json", "invalid JSON"),
+            (br#"{"n_new":4}"#, "missing \"prompt\""),
+            (br#"{"prompt":"hi","n_new":4}"#, "must be an array"),
+            (br#"{"prompt":[],"n_new":4}"#, "non-empty"),
+            (br#"{"prompt":[1.5],"n_new":4}"#, "non-negative integers"),
+            (br#"{"prompt":[99],"n_new":4}"#, "out of range"),
+            (br#"{"prompt":[1]}"#, "n_new"),
+            (br#"{"prompt":[1],"n_new":0}"#, "n_new"),
+            (br#"{"prompt":[1,2],"n_new":15}"#, "exceeds max sequence"),
+            (br#"{"prompt":[1],"n_new":1,"deadline_ms":0}"#, "deadline_ms"),
+        ];
+        for (body, want) in cases {
+            let err = format!("{:#}", parse_generate_body(body, &cfg).unwrap_err());
+            assert!(err.contains(want), "body {:?}: {err}", String::from_utf8_lossy(body));
+        }
+        // Unchecked limits admit anything structurally valid.
+        let open = HttpConfig::default();
+        assert!(parse_generate_body(br#"{"prompt":[99999],"n_new":500}"#, &open).is_ok());
+    }
+
+    #[test]
+    fn subslice_finder_locates_header_terminator() {
+        assert_eq!(find_subslice(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subslice(b"ab", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+}

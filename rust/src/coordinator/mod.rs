@@ -77,6 +77,48 @@
 //!   their own [`Metrics`] counters (`expired` / `cancelled`), not in
 //!   `requests_failed` — nothing broke, the client moved on.
 //!
+//! # HTTP serving lifecycle
+//!
+//! The [`http`] module lifts the same contract onto the wire
+//! (`cskv serve --listen <addr>`). A connection moves through:
+//!
+//! ```text
+//!   connect ──► admit ──────► stream (SSE) ──► terminal event ──► close
+//!      │          │ queue full    │ client gone /      done | migrated
+//!      │          │ or draining   │ stall timeout /    | error
+//!      │          ▼               │ short write
+//!      │     429 / 503            ▼
+//!      ▼     (+Retry-After,   CancelToken::cancel()
+//!   dropped   requests_shed)  → worker frees KV at the
+//!  (http.accept                 next round boundary;
+//!   fault)                      terminal = "cancelled"
+//! ```
+//!
+//! * **Admit/shed** — an atomic in-flight gate bounds concurrent
+//!   `/generate` requests; excess load is shed with `429` and a
+//!   `Retry-After` header, never queued unboundedly. Once a drain
+//!   starts, `/readyz` flips to `503` and `/generate` sheds with `503`.
+//! * **Stream** — tokens flow worker → unbounded channel → SSE frames
+//!   (`event: token`, `data: {"i":..,"token":..}`); the worker never
+//!   blocks on a slow socket. Idle gaps carry `: ping` comment frames.
+//! * **Disconnect maps to cancel** — any socket write failure (closed
+//!   connection, stall past `--client-stall-timeout`, injected
+//!   `http.write` short write) flips the request's [`CancelToken`]; the
+//!   sequence retires as `cancelled` at the next round boundary and its
+//!   KV / cold bytes are freed. Exactly-one-terminal still holds.
+//! * **Drain/migrate** — `SIGTERM` or `POST /drain` stops admissions,
+//!   waits out `--drain-grace`, then snapshots every in-flight sequence
+//!   into a [`DrainBundle`] (v2 snapshot codec, `tags::DRAIN`) written
+//!   to `--drain-file`. Each migrated request's stream ends with an
+//!   `event: migrated` terminal; `cskv serve --resume-from <bundle>`
+//!   restores every sequence in a fresh process and re-generates
+//!   bit-identically (mid-decode sequences resume from their restored
+//!   KV state; still-queued ones re-run from the prompt).
+//! * **Stats** — `GET /stats` returns the full [`MetricsSnapshot`] as
+//!   JSON (`requests{completed,failed,expired,cancelled,shed,drained}`,
+//!   latency quantiles, `kv`, `cold_tier`, `prefix_cache`), plus the
+//!   live `draining` flag and `inflight` gauge.
+//!
 //! Preemption is built on sequence state migration:
 //! [`crate::kvcache::KvCachePolicy::snapshot`] serializes the cache in
 //! its **compressed** representation (≈ 20% of the hot footprint for
@@ -98,21 +140,25 @@
 //! * [`scheduler`] — the control-plane trait and the three policies.
 //! * [`coldtier`] — the blob store for preempted sequence state
 //!   (retry/degrade semantics, [`coldtier::ColdTierStats`]).
-//! * [`server`] — the coordinator thread and the scheduling rounds.
+//! * [`server`] — the coordinator thread and the scheduling rounds,
+//!   plus graceful drain and the [`DrainBundle`] migration codec.
+//! * [`http`] — the std-only HTTP/1.1 + SSE front-end (`cskv serve`).
 //! * [`request`] / [`metrics`] — request/response types (deadlines,
-//!   [`request::CancelToken`]) and counters.
+//!   [`request::CancelToken`], streaming/resume hooks) and counters.
 
 pub mod backend;
 pub mod coldtier;
+pub mod http;
 pub mod metrics;
 pub mod pjrt_backend;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use backend::{RustSequenceBackend, SequenceBackend};
+pub use backend::{RustSequenceBackend, SequenceBackend, ThrottledBackend};
 pub use coldtier::{ColdTier, ColdTierStats};
+pub use http::{parse_listen, resume_bundle, serve, HttpConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{CancelToken, Request, Response};
+pub use request::{CancelToken, Request, Response, DRAINED};
 pub use scheduler::{Scheduler, SchedulerKind};
-pub use server::{Coordinator, CoordinatorConfig, RequestHandle};
+pub use server::{Coordinator, CoordinatorConfig, DrainBundle, DrainedSeq, RequestHandle};

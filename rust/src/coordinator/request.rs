@@ -14,10 +14,31 @@
 //! Both resolve to a single [`Response`] whose `error` field carries the
 //! reason — the exactly-one-`Response` contract (see the
 //! [`crate::coordinator`] module docs) holds for every exit path.
+//!
+//! Two optional channels ride along for the HTTP serving plane:
+//!
+//! * `stream` — a per-token sink the worker feeds as tokens are
+//!   generated (prefill's first token, then every decode step). The
+//!   final [`Response`] still carries the complete stream; `stream` is
+//!   pure fan-out for SSE forwarding and never blocks the worker (the
+//!   channel is unbounded; a gone receiver is ignored).
+//! * `resume` — a [`ResumeSeed`] marking this request as a migrated
+//!   sequence from a drained coordinator: instead of prefilling, the
+//!   worker restores the nested backend snapshot and continues decoding
+//!   from `generated`, bit-identically to the undisturbed run. Only
+//!   tokens generated *after* the migration are streamed.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
+
+use crate::kvcache::KvSnapshot;
+
+/// `Response::error` reason for sequences cut loose by a graceful drain:
+/// their state was snapshotted into the drain bundle rather than run to
+/// completion. The HTTP layer maps this onto the `migrated` SSE terminal
+/// event; everything else is a plain `error` terminal.
+pub const DRAINED: &str = "drained: state migrated to snapshot bundle";
 
 /// Client-side cancellation flag. Cloning shares the flag: the client
 /// keeps one clone (via `RequestHandle`), the worker polls the other at
@@ -55,6 +76,21 @@ pub struct Request {
     pub cancel: CancelToken,
     /// Channel the coordinator answers on.
     pub reply: mpsc::Sender<Response>,
+    /// Optional per-token sink for SSE streaming (`None` for plain
+    /// request/response submits). Send-only from the worker; a
+    /// disconnected receiver is silently ignored.
+    pub stream: Option<mpsc::Sender<usize>>,
+    /// Set when this request resumes a drained sequence: the worker
+    /// restores the snapshot instead of prefilling the prompt.
+    pub resume: Option<ResumeSeed>,
+}
+
+/// Mid-generation state carried by a migrated request: the backend
+/// snapshot from the drained process plus the tokens already generated
+/// (and already delivered to the original client) before the cut.
+pub struct ResumeSeed {
+    pub snapshot: KvSnapshot,
+    pub generated: Vec<usize>,
 }
 
 impl Request {
@@ -66,6 +102,16 @@ impl Request {
     /// True once the client has flipped the cancel token.
     pub fn cancelled(&self) -> bool {
         self.cancel.is_cancelled()
+    }
+
+    /// Fan a freshly generated token out to the streaming sink, if any.
+    /// Never blocks and never fails: the channel is unbounded and a
+    /// dropped receiver (client gone) is the cancel path's business, not
+    /// the data plane's.
+    pub fn stream_token(&self, tok: usize) {
+        if let Some(s) = &self.stream {
+            let _ = s.send(tok);
+        }
     }
 }
 
@@ -131,7 +177,24 @@ mod tests {
             deadline: None,
             cancel: CancelToken::new(),
             reply,
+            stream: None,
+            resume: None,
         }
+    }
+
+    #[test]
+    fn stream_sink_receives_tokens_and_tolerates_gone_receiver() {
+        let (tx, _rx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        let mut req = request(4, tx);
+        req.stream_token(9); // no sink: no-op
+        req.stream = Some(stx);
+        req.stream_token(1);
+        req.stream_token(2);
+        assert_eq!(srx.try_recv(), Ok(1));
+        assert_eq!(srx.try_recv(), Ok(2));
+        drop(srx);
+        req.stream_token(3); // receiver gone: still no panic
     }
 
     #[test]

@@ -84,9 +84,10 @@ use super::backend::{
 };
 use super::coldtier::ColdTier;
 use super::metrics::{Completion, Metrics};
-use super::request::{CancelToken, Request, Response};
+use super::request::{CancelToken, Request, Response, ResumeSeed, DRAINED};
 use super::scheduler::{ActiveSeq, QueuedSeq, Scheduler, SchedulerKind};
-use crate::kvcache::{PrefixCache, PrefixRef};
+use crate::kvcache::snapshot::{tags, SnapReader, SnapWriter};
+use crate::kvcache::{KvSnapshot, PrefixCache, PrefixRef};
 use crate::model::engine::{PrefixSeed, SeededPrefill};
 use crate::util::faults::FaultInjector;
 
@@ -213,9 +214,108 @@ pub struct RequestHandle {
     pub rx: mpsc::Receiver<Response>,
 }
 
+/// What the coordinator's control channel carries: requests, or the
+/// graceful-drain order.
+enum Msg {
+    Submit(Request),
+    Drain {
+        grace: Duration,
+        reply: mpsc::Sender<DrainBundle>,
+    },
+}
+
+/// An in-progress drain inside the worker: stop admitting, let actives
+/// run until the deadline, then snapshot whatever is left.
+struct DrainGoal {
+    deadline: Instant,
+    reply: mpsc::Sender<DrainBundle>,
+}
+
+/// One sequence migrated out by a graceful drain. `snapshot` is the
+/// backend's complete execution state for sequences that were mid-decode
+/// (hot or parked in the cold tier); `None` means the request was still
+/// queued — a restore re-runs it from the prompt. `generated` holds the
+/// tokens already produced (and already streamed to the original
+/// client); a resumed stream emits only the tokens after them.
+pub struct DrainedSeq {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub n_new: usize,
+    pub generated: Vec<usize>,
+    pub snapshot: Option<KvSnapshot>,
+}
+
+/// Everything a drained coordinator hands to its successor, serialized
+/// through the v2 snapshot codec (tag [`tags::DRAIN`], CRC-checked) so a
+/// *different process* can load it and resume every sequence
+/// bit-identically ([`Coordinator::resume_drained`]). File handoff:
+/// [`DrainBundle::save`] / [`DrainBundle::load`].
+pub struct DrainBundle {
+    pub seqs: Vec<DrainedSeq>,
+}
+
+impl DrainBundle {
+    pub fn encode(&self) -> KvSnapshot {
+        let mut w = SnapWriter::new();
+        w.write_usize(self.seqs.len());
+        for s in &self.seqs {
+            w.u64(s.id);
+            w.usizes(&s.prompt);
+            w.write_usize(s.n_new);
+            w.usizes(&s.generated);
+            match &s.snapshot {
+                Some(snap) => {
+                    w.u8(1);
+                    w.nested(snap);
+                }
+                None => w.u8(0),
+            }
+        }
+        KvSnapshot::new(tags::DRAIN, w.finish())
+    }
+
+    pub fn decode(snap: &KvSnapshot) -> anyhow::Result<DrainBundle> {
+        snap.expect_tag(tags::DRAIN, "drain bundle")?;
+        let mut r = SnapReader::new(snap.payload());
+        let n = r.read_usize()?;
+        let mut seqs = Vec::new();
+        for _ in 0..n {
+            let id = r.u64()?;
+            let prompt = r.usizes()?;
+            let n_new = r.read_usize()?;
+            let generated = r.usizes()?;
+            let snapshot = match r.u8()? {
+                0 => None,
+                1 => Some(r.nested()?),
+                x => anyhow::bail!("drain bundle: bad snapshot marker {x}"),
+            };
+            seqs.push(DrainedSeq {
+                id,
+                prompt,
+                n_new,
+                generated,
+                snapshot,
+            });
+        }
+        r.expect_end()?;
+        Ok(DrainBundle { seqs })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.encode().encode())
+            .map_err(|e| anyhow::anyhow!("writing drain bundle {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<DrainBundle> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading drain bundle {}: {e}", path.display()))?;
+        DrainBundle::decode(&KvSnapshot::decode(&bytes)?)
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<Request>>,
+    tx: Option<mpsc::Sender<Msg>>,
     worker: Option<thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: std::sync::atomic::AtomicU64,
@@ -232,7 +332,7 @@ impl Coordinator {
         let request_timeout = cfg.request_timeout;
         let metrics = Arc::new(Metrics::new());
         let m = Arc::clone(&metrics);
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let worker = thread::spawn(move || {
             let mut factory = match setup() {
                 Ok(f) => f,
@@ -264,6 +364,51 @@ impl Coordinator {
         n_new: usize,
         deadline: Option<Duration>,
     ) -> RequestHandle {
+        self.submit_inner(prompt, n_new, deadline, None, None)
+    }
+
+    /// [`Self::submit_with`] plus a per-token stream: the second return
+    /// is fed each token as the worker generates it (prefill's first
+    /// token, then every decode step). The final [`Response`] still
+    /// arrives on the handle with the complete stream — the HTTP layer's
+    /// SSE path consumes both.
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<usize>,
+        n_new: usize,
+        deadline: Option<Duration>,
+    ) -> (RequestHandle, mpsc::Receiver<usize>) {
+        let (stx, srx) = mpsc::channel();
+        let h = self.submit_inner(prompt, n_new, deadline, Some(stx), None);
+        (h, srx)
+    }
+
+    /// Resume one sequence from another coordinator's [`DrainBundle`].
+    /// Mid-decode sequences restore their backend snapshot and continue
+    /// bit-identically (the stream emits only post-migration tokens);
+    /// still-queued sequences re-run from the prompt.
+    pub fn resume_drained(
+        &self,
+        seq: DrainedSeq,
+        deadline: Option<Duration>,
+    ) -> (RequestHandle, mpsc::Receiver<usize>) {
+        let (stx, srx) = mpsc::channel();
+        let resume = seq.snapshot.map(|snapshot| ResumeSeed {
+            snapshot,
+            generated: seq.generated,
+        });
+        let h = self.submit_inner(seq.prompt, seq.n_new, deadline, Some(stx), resume);
+        (h, srx)
+    }
+
+    fn submit_inner(
+        &self,
+        prompt: Vec<usize>,
+        n_new: usize,
+        deadline: Option<Duration>,
+        stream: Option<mpsc::Sender<usize>>,
+        resume: Option<ResumeSeed>,
+    ) -> RequestHandle {
         let (reply, rx) = mpsc::channel();
         let id = self
             .next_id
@@ -278,6 +423,8 @@ impl Coordinator {
             deadline: deadline.or(self.request_timeout).map(|d| Instant::now() + d),
             cancel: cancel.clone(),
             reply,
+            stream,
+            resume,
         };
         let invalid = if req.prompt.is_empty() {
             Some("empty prompt")
@@ -291,12 +438,33 @@ impl Coordinator {
             let _ = req.reply.send(Response::error(&req, reason));
             return RequestHandle { id, cancel, rx };
         }
-        self.tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(req)
-            .expect("coordinator worker gone");
+        let tx = self.tx.as_ref().expect("coordinator already shut down");
+        if let Err(mpsc::SendError(Msg::Submit(req))) = tx.send(Msg::Submit(req)) {
+            // Worker already exited (a completed drain): shed instead of
+            // panicking — the exactly-one-Response contract holds.
+            self.metrics.record_shed();
+            let _ = req
+                .reply
+                .send(Response::error(&req, "coordinator stopped: not admitting requests"));
+        }
         RequestHandle { id, cancel, rx }
+    }
+
+    /// Gracefully drain the worker: stop admitting, give in-flight
+    /// sequences `grace` to finish, then snapshot whatever is left (hot,
+    /// cold-parked, or still queued) into a [`DrainBundle`]. Every
+    /// migrated request is answered with its partial tokens and the
+    /// [`DRAINED`] error reason. Errors if a drain is already running.
+    pub fn drain(&self, grace: Duration) -> anyhow::Result<DrainBundle> {
+        let (reply, rx) = mpsc::channel();
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator already shut down"))?;
+        tx.send(Msg::Drain { grace, reply })
+            .map_err(|_| anyhow::anyhow!("coordinator worker already stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("drain already in progress"))
     }
 
     /// Submit a request; returns the response channel.
@@ -446,6 +614,10 @@ struct Worker<'a> {
     /// ~1:1 with admissions instead of re-constructing every blocked
     /// round.
     spare: Option<Box<dyn SequenceBackend>>,
+    /// `Some` while a graceful drain is in progress: no admissions, no
+    /// cold-tier resumes; actives run until the deadline, then
+    /// [`Worker::complete_drain`] migrates everything left.
+    drain: Option<DrainGoal>,
 }
 
 impl Worker<'_> {
@@ -482,8 +654,10 @@ impl Worker<'_> {
     /// early with their partial token stream (dropping the backend frees
     /// the hot KV bytes now); swapped sequences discard their cold-tier
     /// blob without decoding it. Runs before admission each round, so an
-    /// expired request can never consume a prefill.
-    fn reap_lifecycle(&mut self) {
+    /// expired request can never consume a prefill. Returns how many
+    /// requests were reaped (the idle wait's progress signal).
+    fn reap_lifecycle(&mut self) -> usize {
+        let mut reaped = 0;
         let mut i = 0;
         while i < self.pending.len() {
             match Verdict::of(&self.pending[i]) {
@@ -491,6 +665,7 @@ impl Worker<'_> {
                     let req = self.pending.remove(i).expect("index in range");
                     v.record(req.submitted_at.elapsed().as_secs_f64(), self.metrics);
                     let _ = req.reply.send(Response::error(&req, v.reason()));
+                    reaped += 1;
                 }
                 None => i += 1,
             }
@@ -513,6 +688,7 @@ impl Worker<'_> {
                         error: Some(v.reason().to_string()),
                     };
                     let _ = a.req.reply.send(resp);
+                    reaped += 1;
                 }
                 None => i += 1,
             }
@@ -536,10 +712,12 @@ impl Worker<'_> {
                         error: Some(v.reason().to_string()),
                     };
                     let _ = s.req.reply.send(resp);
+                    reaped += 1;
                 }
                 None => i += 1,
             }
         }
+        reaped
     }
 
     /// Swap the `idx`-th active sequence out to the cold tier. Returns
@@ -583,7 +761,8 @@ impl Worker<'_> {
     /// the cold tier while shorter requests keep arriving. When nothing
     /// else is runnable (no actives, no pending), one sequence is
     /// resumed unconditionally so the cold tier can always drain.
-    fn resume_round(&mut self, factory: &mut BackendFactory) {
+    fn resume_round(&mut self, factory: &mut BackendFactory) -> usize {
+        let mut resumed = 0;
         while !self.swapped.is_empty() && self.active.len() < self.cfg.max_batch {
             let idx = self
                 .swapped
@@ -599,7 +778,7 @@ impl Worker<'_> {
                 .is_none_or(|b| committed + self.swapped[idx].cost_bytes <= b);
             let force = self.active.is_empty() && self.pending.is_empty();
             if !(fits || force) {
-                return;
+                return resumed;
             }
             let s = self.swapped.swap_remove(idx);
             let snap = match self.tier.take(s.req.id) {
@@ -640,7 +819,9 @@ impl Worker<'_> {
                 just_restored: true,
                 failed: None,
             });
+            resumed += 1;
         }
+        resumed
     }
 
     /// Collect this round's admission set under the batch-size and
@@ -678,8 +859,15 @@ impl Worker<'_> {
                         // holds for this prompt's prefix are counted
                         // once (in the trie), not per admission. `peek`
                         // is read-only — no reference is acquired until
-                        // the request is actually picked.
-                        let cost_bytes = match prefix.map(|pc| pc.peek(&r.prompt)) {
+                        // the request is actually picked. Migrated
+                        // sequences restore a snapshot instead of
+                        // prefilling, so no prefix discount applies.
+                        let peeked = if r.resume.is_some() {
+                            None
+                        } else {
+                            prefix.map(|pc| pc.peek(&r.prompt))
+                        };
+                        let cost_bytes = match peeked {
                             Some(p) if p > 0 => {
                                 total.saturating_sub(backend.kv_bytes_projected(p))
                             }
@@ -755,8 +943,9 @@ impl Worker<'_> {
             let queue_wait_s = req.submitted_at.elapsed().as_secs_f64();
             // Acquire the prefix seed now that the pick is final: the
             // lookup pins the matched chain against eviction until the
-            // prefill round releases it.
-            let seed = match self.prefix.as_mut() {
+            // prefill round releases it. Migrated sequences skip the
+            // cache entirely — they never prefill.
+            let seed = match self.prefix.as_mut().filter(|_| req.resume.is_none()) {
                 Some(pc) => {
                     let before = pc.stats().shared_bytes;
                     match pc.lookup(&req.prompt) {
@@ -790,7 +979,15 @@ impl Worker<'_> {
     /// sequence's first token actually exists: after the whole pass for
     /// the fused round, after each sequence's own prefill for the
     /// sequential baseline.
-    fn prefill_round(&mut self, mut admitted: Vec<Admit>) {
+    fn prefill_round(&mut self, admitted: Vec<Admit>) {
+        // Migrated sequences restore their snapshot instead of
+        // prefilling; the rest go through the (possibly fused) prefill.
+        let (resumes, mut admitted): (Vec<Admit>, Vec<Admit>) = admitted
+            .into_iter()
+            .partition(|ad| ad.req.resume.is_some());
+        for ad in resumes {
+            self.restore_admit(ad);
+        }
         if admitted.is_empty() {
             return;
         }
@@ -873,6 +1070,7 @@ impl Worker<'_> {
                 Ok((first, _)) => {
                     let ttft_s =
                         ttft.unwrap_or_else(|| ad.req.submitted_at.elapsed().as_secs_f64());
+                    ad.req.stream_token(first);
                     self.active.push(Active {
                         req: ad.req,
                         backend: ad.backend,
@@ -894,9 +1092,42 @@ impl Worker<'_> {
         }
     }
 
+    /// Admit one migrated sequence: restore the drained process's
+    /// backend snapshot and rejoin the decode rounds mid-generation.
+    /// Tokens in `generated` were already streamed by the original
+    /// process, so they are not re-emitted; the next decode step
+    /// continues the stream bit-identically.
+    fn restore_admit(&mut self, mut ad: Admit) {
+        let seed = ad.req.resume.take().expect("partitioned on resume");
+        if let Err(e) = ad.backend.restore(&seed.snapshot) {
+            fail_request(
+                ad.req,
+                &format!("restore of migrated sequence failed: {e:#}"),
+                self.metrics,
+            );
+            return;
+        }
+        self.active.push(Active {
+            req: ad.req,
+            backend: ad.backend,
+            generated: seed.generated,
+            queue_wait_s: ad.queue_wait_s,
+            // First token belonged to the drained process; this side's
+            // TTFT is not meaningful.
+            ttft_s: 0.0,
+            started: ad.started,
+            tok_latencies: Vec::new(),
+            cost_bytes: ad.cost_bytes,
+            preemptions: 0,
+            just_restored: false,
+            failed: None,
+        });
+    }
+
     /// One decode round across every unfinished sequence — a single
-    /// fused call (or per-sequence steps in the A/B baseline).
-    fn decode_round(&mut self) {
+    /// fused call (or per-sequence steps in the A/B baseline). Returns
+    /// how many sequences stepped.
+    fn decode_round(&mut self) -> usize {
         let mut round: Vec<usize> = Vec::with_capacity(self.active.len());
         let mut bs: Vec<&mut dyn SequenceBackend> = Vec::with_capacity(self.active.len());
         for (i, a) in self.active.iter_mut().enumerate() {
@@ -906,7 +1137,7 @@ impl Worker<'_> {
             }
         }
         if bs.is_empty() {
-            return;
+            return 0;
         }
         let (results, lats): (Vec<anyhow::Result<usize>>, Vec<f64>) = if self.cfg.fused {
             let t0 = Instant::now();
@@ -930,11 +1161,13 @@ impl Worker<'_> {
             (r, lats)
         };
         drop(bs);
+        let stepped = round.len();
         for ((&i, res), lat) in round.iter().zip(results).zip(lats) {
             match res {
                 Ok(tok) => {
                     self.active[i].tok_latencies.push(lat);
                     self.active[i].generated.push(tok);
+                    self.active[i].req.stream_token(tok);
                     // Progress made: the sequence is preemptable again.
                     self.active[i].just_restored = false;
                 }
@@ -944,30 +1177,188 @@ impl Worker<'_> {
                 }
             }
         }
+        stepped
     }
 
-    /// Retire finished (or failed) sequences.
-    fn retire_finished(&mut self) {
+    /// Retire finished (or failed) sequences. Returns how many retired.
+    fn retire_finished(&mut self) -> usize {
+        let mut retired = 0;
         let mut i = 0;
         while i < self.active.len() {
             let done = self.active[i].failed.is_some()
                 || self.active[i].generated.len() >= self.active[i].req.n_new;
             if done {
                 retire(self.active.swap_remove(i), self.metrics);
+                retired += 1;
             } else {
                 i += 1;
             }
         }
+        retired
     }
 
     /// Nothing queued, running, or parked.
     fn drained(&self) -> bool {
         self.active.is_empty() && self.pending.is_empty() && self.swapped.is_empty()
     }
+
+    /// Route one control message. During a drain, new submissions are
+    /// shed immediately (answered, counted) instead of queued; a second
+    /// drain order is rejected by dropping its reply channel.
+    fn accept(&mut self, m: Msg) {
+        match m {
+            Msg::Submit(req) => {
+                if self.drain.is_some() {
+                    self.metrics.record_shed();
+                    let _ = req
+                        .reply
+                        .send(Response::error(&req, "draining: not admitting new requests"));
+                } else {
+                    self.pending.push_back(req);
+                }
+            }
+            Msg::Drain { grace, reply } => {
+                if self.drain.is_none() {
+                    self.drain = Some(DrainGoal {
+                        deadline: Instant::now() + grace,
+                        reply,
+                    });
+                }
+                // else: drop `reply` — the second drain() call errors.
+            }
+        }
+    }
+
+    /// How long the idle wait may sleep: until the earliest deadline
+    /// anywhere in the system (queued, active, swapped, or the drain
+    /// grace), capped at a short poll tick so client-side cancellation
+    /// is also noticed promptly. This is the satellite fix for deadline
+    /// skew — a request can no longer sit past its deadline just
+    /// because the submission queue is quiet.
+    fn next_wakeup(&self) -> Duration {
+        const POLL: Duration = Duration::from_millis(25);
+        let now = Instant::now();
+        let mut wait = POLL;
+        let mut consider = |deadline: Option<Instant>| {
+            if let Some(d) = deadline {
+                wait = wait.min(d.saturating_duration_since(now));
+            }
+        };
+        for r in &self.pending {
+            consider(r.deadline);
+        }
+        for a in &self.active {
+            consider(a.req.deadline);
+        }
+        for s in &self.swapped {
+            consider(s.req.deadline);
+        }
+        if let Some(g) = &self.drain {
+            consider(Some(g.deadline));
+        }
+        wait
+    }
+
+    /// Finish a drain: everything still in the system is migrated into a
+    /// [`DrainBundle`] — hot actives snapshot their backend state,
+    /// cold-parked sequences contribute the blob already in the tier,
+    /// queued requests travel as prompt + `n_new` (no state yet). Each
+    /// migrated request is answered with its partial tokens and the
+    /// [`DRAINED`] reason; snapshot failures degrade to plain failures
+    /// (the request is answered either way). Gauges are re-zeroed so the
+    /// no-leak invariant (`kv_bytes_current == 0`, `cold_bytes_current
+    /// == 0`) holds after the worker exits.
+    fn complete_drain(&mut self, goal: DrainGoal) {
+        let mut seqs = Vec::new();
+        for a in self.active.drain(..) {
+            match a.backend.snapshot() {
+                Ok(snap) => {
+                    self.metrics.record_drained();
+                    let resp = Response {
+                        id: a.req.id,
+                        tokens: a.generated.clone(),
+                        queue_wait_s: a.queue_wait_s,
+                        ttft_s: a.ttft_s,
+                        total_s: a.started.elapsed().as_secs_f64() + a.queue_wait_s,
+                        kv_bytes: 0,
+                        backend: a.backend.name(),
+                        error: Some(DRAINED.to_string()),
+                    };
+                    let _ = a.req.reply.send(resp);
+                    seqs.push(DrainedSeq {
+                        id: a.req.id,
+                        prompt: a.req.prompt.clone(),
+                        n_new: a.req.n_new,
+                        generated: a.generated,
+                        snapshot: Some(snap),
+                    });
+                }
+                Err(e) => {
+                    self.metrics.record_failure();
+                    crate::log_error!("drain snapshot failed for request {}: {e:#}", a.req.id);
+                    let resp = Response {
+                        id: a.req.id,
+                        tokens: a.generated,
+                        queue_wait_s: a.queue_wait_s,
+                        ttft_s: a.ttft_s,
+                        total_s: a.started.elapsed().as_secs_f64() + a.queue_wait_s,
+                        kv_bytes: 0,
+                        backend: a.backend.name(),
+                        error: Some(format!("drain snapshot failed: {e:#}")),
+                    };
+                    let _ = a.req.reply.send(resp);
+                }
+            }
+        }
+        for s in std::mem::take(&mut self.swapped) {
+            match self.tier.take(s.req.id) {
+                Ok(snap) => {
+                    self.metrics.record_drained();
+                    let resp = Response {
+                        id: s.req.id,
+                        tokens: s.generated.clone(),
+                        queue_wait_s: s.queue_wait_s,
+                        ttft_s: s.ttft_s,
+                        total_s: s.started.elapsed().as_secs_f64() + s.queue_wait_s,
+                        kv_bytes: 0,
+                        backend: String::new(),
+                        error: Some(DRAINED.to_string()),
+                    };
+                    let _ = s.req.reply.send(resp);
+                    seqs.push(DrainedSeq {
+                        id: s.req.id,
+                        prompt: s.req.prompt.clone(),
+                        n_new: s.req.n_new,
+                        generated: s.generated,
+                        snapshot: Some(snap),
+                    });
+                }
+                Err(e) => {
+                    fail_swapped(s, &format!("cold tier read failed during drain: {e:#}"), self.metrics);
+                }
+            }
+        }
+        for req in self.pending.drain(..) {
+            self.metrics.record_drained();
+            let resp = Response::error(&req, DRAINED);
+            seqs.push(DrainedSeq {
+                id: req.id,
+                prompt: req.prompt.clone(),
+                n_new: req.n_new,
+                generated: Vec::new(),
+                snapshot: None,
+            });
+            let _ = req.reply.send(resp);
+        }
+        self.metrics.record_kv(0, 0);
+        self.metrics
+            .record_cold_tier(self.tier.bytes_resident(), self.tier.stats());
+        let _ = goal.reply.send(DrainBundle { seqs });
+    }
 }
 
 fn worker_loop(
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Msg>,
     factory: &mut BackendFactory,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
@@ -983,34 +1374,73 @@ fn worker_loop(
         batch: BatchScratch::default(),
         prefix: cfg.prefix_cache_bytes.map(PrefixCache::new),
         spare: None,
+        drain: None,
     };
+    // Did the previous round change any state? While true the loop spins
+    // hot (real work is flowing); once false it sleeps deadline-aware
+    // (`next_wakeup`) so a quiet queue never delays expiry enforcement
+    // and a stuck plane never busy-waits.
+    let mut progress = true;
+    let mut closed = false;
     loop {
-        // Pull everything currently queued (non-blocking), or block when
-        // fully idle (a parked sequence counts as work: the resume
-        // escape hatch below needs the loop to keep turning).
-        if w.drained() {
+        if w.drained() && w.drain.is_none() {
+            // Fully idle: block until the next message (a parked or
+            // draining plane never reaches this branch).
+            if closed {
+                break;
+            }
             match rx.recv() {
-                Ok(r) => w.pending.push_back(r),
+                Ok(m) => w.accept(m),
                 Err(_) => break, // channel closed and nothing to do
             }
+        } else if !progress {
+            if closed {
+                if w.active.is_empty() && w.swapped.is_empty() && w.drain.is_none() {
+                    // Nothing can ever run these (e.g. `max_batch` 0 with
+                    // no deadline) and no submitter remains — answer
+                    // rather than sleep forever.
+                    for req in w.pending.drain(..) {
+                        fail_request(req, "coordinator stopped before this request could run", metrics);
+                    }
+                    break;
+                }
+                thread::sleep(w.next_wakeup());
+            } else {
+                match rx.recv_timeout(w.next_wakeup()) {
+                    Ok(m) => w.accept(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                }
+            }
         }
-        while let Ok(r) = rx.try_recv() {
-            w.pending.push_back(r);
+        while let Ok(m) = rx.try_recv() {
+            w.accept(m);
         }
 
         // Lifecycle first: expired/cancelled requests must never reach
         // the scheduler, consume a prefill, or hold KV another round.
-        w.reap_lifecycle();
+        let reaped = w.reap_lifecycle();
 
-        let admitted = w.collect_admissions(factory);
+        // A draining plane admits and resumes nothing: pending requests
+        // are held for migration, cold-parked blobs are bundled as-is.
+        let admitted = if w.drain.is_some() {
+            Vec::new()
+        } else {
+            w.collect_admissions(factory)
+        };
+        let n_admitted = admitted.len();
         w.prefill_round(admitted);
-        w.resume_round(factory);
+        let resumed = if w.drain.is_some() {
+            0
+        } else {
+            w.resume_round(factory)
+        };
 
         let kv_now: usize = w.active.iter().map(|a| a.backend.kv_bytes()).sum();
         metrics.record_kv(kv_now, w.active.len());
 
-        w.decode_round();
-        w.retire_finished();
+        let stepped = w.decode_round();
+        let retired = w.retire_finished();
 
         // Refresh the drain-state gauges *after* retirement so a fully
         // drained plane reads zero committed KV and an empty cold tier —
@@ -1019,10 +1449,41 @@ fn worker_loop(
         metrics.record_kv(kv_after, w.active.len());
         metrics.record_cold_tier(w.tier.bytes_resident(), w.tier.stats());
 
+        // A drain completes when the hot tier empties or the grace
+        // deadline passes — whichever comes first. Afterwards the worker
+        // only sheds: every late submission is still answered (the
+        // exactly-one-Response contract), and the thread exits when the
+        // coordinator handle closes the channel.
+        if w
+            .drain
+            .as_ref()
+            .is_some_and(|g| w.active.is_empty() || Instant::now() >= g.deadline)
+        {
+            let goal = w.drain.take().expect("checked above");
+            w.complete_drain(goal);
+            while let Ok(m) = rx.recv() {
+                match m {
+                    Msg::Submit(req) => {
+                        metrics.record_shed();
+                        let _ = req
+                            .reply
+                            .send(Response::error(&req, "draining: coordinator already drained"));
+                    }
+                    Msg::Drain { reply, .. } => {
+                        // Idempotent: a second drain finds nothing left.
+                        let _ = reply.send(DrainBundle { seqs: Vec::new() });
+                    }
+                }
+            }
+            break;
+        }
+
+        progress = reaped + n_admitted + resumed + stepped + retired > 0;
+
         // Exit when the channel is closed and all work is drained.
-        if w.drained() {
+        if w.drained() && w.drain.is_none() {
             match rx.try_recv() {
-                Ok(r) => w.pending.push_back(r),
+                Ok(m) => w.accept(m),
                 Err(mpsc::TryRecvError::Disconnected) => break,
                 Err(mpsc::TryRecvError::Empty) => {}
             }
@@ -1277,5 +1738,139 @@ mod tests {
         );
         assert!(warm_snap.prefix_shared_bytes > 0);
         assert!(warm_snap.prefix_bytes_peak > 0);
+    }
+
+    #[test]
+    fn streaming_submit_emits_every_token_in_order() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(StdArc::new(ModelWeights::init(&cfg, 5)));
+        let prompt = vec![1usize, 7, 9, 2];
+        let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want, _) = engine.generate(&prompt, 6, &mut cache);
+        let coord = Coordinator::start(test_setup(), CoordinatorConfig::default());
+        let (h, tokens) = coord.submit_streaming(prompt, 6, None);
+        let resp = h.rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, want);
+        let streamed: Vec<usize> = tokens.try_iter().collect();
+        assert_eq!(streamed, want, "stream must mirror the final response");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drain_bundle_codec_roundtrips_via_file() {
+        let bundle = DrainBundle {
+            seqs: vec![
+                DrainedSeq {
+                    id: 7,
+                    prompt: vec![1, 2, 3],
+                    n_new: 9,
+                    generated: vec![4, 5],
+                    snapshot: Some(KvSnapshot::new(tags::FULL, vec![1, 2, 3, 4])),
+                },
+                DrainedSeq {
+                    id: 9,
+                    prompt: vec![8],
+                    n_new: 2,
+                    generated: Vec::new(),
+                    snapshot: None,
+                },
+            ],
+        };
+        let path = std::env::temp_dir()
+            .join(format!("cskv-drain-bundle-test-{}.bin", std::process::id()));
+        bundle.save(&path).unwrap();
+        let back = DrainBundle::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.seqs.len(), 2);
+        assert_eq!(back.seqs[0].id, 7);
+        assert_eq!(back.seqs[0].prompt, vec![1, 2, 3]);
+        assert_eq!(back.seqs[0].n_new, 9);
+        assert_eq!(back.seqs[0].generated, vec![4, 5]);
+        let s = back.seqs[0].snapshot.as_ref().unwrap();
+        assert_eq!(s.tag(), tags::FULL);
+        assert_eq!(s.payload(), &[1, 2, 3, 4]);
+        assert!(back.seqs[1].snapshot.is_none());
+    }
+
+    #[test]
+    fn drain_idle_coordinator_returns_empty_bundle_and_sheds_afterwards() {
+        let coord = Coordinator::start(test_setup(), CoordinatorConfig::default());
+        let bundle = coord.drain(Duration::from_millis(10)).unwrap();
+        assert!(bundle.seqs.is_empty());
+        // Submissions after the drain are shed (answered), never dropped.
+        let resp = coord.submit_wait(vec![1, 2, 3], 2);
+        let err = resp.error.expect("post-drain submit must be answered with an error");
+        assert!(err.contains("drain") || err.contains("stopped"), "{err}");
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_shed, 1);
+    }
+
+    /// A still-queued request migrates as prompt + `n_new` (no backend
+    /// state), is answered `DRAINED`, and a *fresh* coordinator resumes
+    /// it from the bundle producing the undisturbed token stream.
+    #[test]
+    fn drain_migrates_queued_request_and_fresh_coordinator_runs_it() {
+        let cfg = ModelConfig::test_small();
+        let engine = Engine::new(StdArc::new(ModelWeights::init(&cfg, 5)));
+        let prompt = vec![1usize, 7, 9, 2];
+        let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+        let (want, _) = engine.generate(&prompt, 5, &mut cache);
+
+        // `max_batch: 0` keeps the request queued until the drain order
+        // lands (both messages ride the same FIFO channel).
+        let coord = Coordinator::start(
+            test_setup(),
+            CoordinatorConfig { max_batch: 0, ..Default::default() },
+        );
+        let h = coord.submit_with(prompt.clone(), 5, None);
+        let bundle = coord.drain(Duration::ZERO).unwrap();
+        let resp = h.rx.recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some(DRAINED));
+        assert!(resp.tokens.is_empty());
+        assert_eq!(bundle.seqs.len(), 1);
+        assert!(bundle.seqs[0].snapshot.is_none(), "still queued: no state yet");
+        assert_eq!(bundle.seqs[0].prompt, prompt);
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_drained, 1);
+        assert_eq!(snap.kv_bytes_current, 0, "drained plane leaks no KV");
+        assert_eq!(snap.cold_bytes_current, 0);
+
+        let coord2 = Coordinator::start(test_setup(), CoordinatorConfig::default());
+        let (h2, tokens) =
+            coord2.resume_drained(bundle.seqs.into_iter().next().unwrap(), None);
+        let resp2 = h2.rx.recv().unwrap();
+        assert!(resp2.error.is_none(), "{:?}", resp2.error);
+        assert_eq!(resp2.tokens, want, "resumed run must match the undisturbed one");
+        let streamed: Vec<usize> = tokens.try_iter().collect();
+        assert_eq!(streamed, want);
+        coord2.shutdown();
+    }
+
+    /// The satellite fix: with a quiet submission queue and nothing
+    /// runnable (`max_batch: 0`), deadline expiry and cancellation are
+    /// answered by the timeout-aware idle wait — not deferred until the
+    /// next submission arrives.
+    #[test]
+    fn queued_deadline_and_cancel_answer_promptly_on_a_quiet_queue() {
+        let coord = Coordinator::start(
+            test_setup(),
+            CoordinatorConfig { max_batch: 0, ..Default::default() },
+        );
+        let t0 = Instant::now();
+        let h = coord.submit_with(vec![1, 2, 3], 4, Some(Duration::from_millis(80)));
+        let resp = h.rx.recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some("deadline exceeded"));
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "expiry must answer without a follow-up submission, took {:?}",
+            t0.elapsed()
+        );
+
+        let h2 = coord.submit_with(vec![1, 2, 3], 4, None);
+        h2.cancel.cancel();
+        let resp2 = h2.rx.recv().unwrap();
+        assert_eq!(resp2.error.as_deref(), Some("cancelled"));
+        drop(coord); // worker exits cleanly once drained
     }
 }

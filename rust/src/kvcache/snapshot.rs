@@ -52,6 +52,13 @@ pub mod tags {
     /// [`crate::kvcache::PrefixCache`] — the coordinator's shared-prefix
     /// radix trie (per-block activation payloads + LRU bookkeeping)
     pub const PREFIX: u32 = 19;
+    /// [`crate::coordinator::DrainBundle`] — a drained coordinator's
+    /// in-flight sequence manifest: per sequence, the request identity
+    /// (prompt, `n_new`, tokens generated so far) plus a nested backend
+    /// snapshot for sequences that were mid-decode. The self-describing
+    /// + CRC-checked container is what makes cross-process live
+    /// migration safe over a plain file handoff.
+    pub const DRAIN: u32 = 20;
 }
 
 /// `"KVSN"` — guards against feeding arbitrary files to [`KvSnapshot::decode`].

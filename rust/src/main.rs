@@ -27,6 +27,23 @@
 //! — are rejected up front with a clear error instead of failing
 //! mid-round.
 //!
+//! With `--listen <ip:port>` the demo loop is replaced by the HTTP/1.1
+//! front-end ([`cskv::coordinator::http`]): `POST /generate` streams
+//! tokens over SSE, `GET /healthz` / `/readyz` / `/stats` expose the
+//! serving plane, and `POST /drain` (or `SIGTERM`) gracefully drains —
+//! in-flight sequences are snapshotted to `--drain-file` and a second
+//! process started with `--resume-from <bundle>` finishes them
+//! bit-identically. Supporting flags: `--max-queued N` bounds
+//! concurrent requests before 429-shedding (default 64, must be ≥ 1),
+//! `--client-stall-timeout <secs>` cuts clients that stall a write that
+//! long (default 10, must be positive), `--drain-grace <secs>` is the
+//! finish window before snapshotting (default 5, must be ≥ 0),
+//! `--seed-weights <seed>` serves freshly initialised `test_small`
+//! weights (no artifacts needed — CI smoke path), and
+//! `--decode-throttle-ms N` slows each decode step (deterministic
+//! mid-stream windows for drain/disconnect testing). All are validated
+//! up front like the rest of the `serve` flags.
+//!
 //! The benches (`cargo bench`) regenerate the paper's tables; this binary
 //! is the operational entry point a user scripts against.
 
@@ -286,6 +303,43 @@ fn validate_serve_flags(args: &Args, coord_cfg: &CoordinatorConfig) -> anyhow::R
         cskv::coordinator::ColdTier::probe_dir(dir)
             .map_err(|e| anyhow::anyhow!("--cold-tier dir unusable: {e}"))?;
     }
+    // HTTP front-end flags (only meaningful with --listen, but validated
+    // whenever supplied so a typo'd invocation fails loudly either way).
+    if let Some(v) = args.get_opt("listen") {
+        cskv::coordinator::parse_listen(&v)?;
+    }
+    if let Some(v) = args.get_opt("max-queued") {
+        anyhow::ensure!(
+            v.parse::<usize>().map(|n| n > 0).unwrap_or(false),
+            "--max-queued must be a positive integer, got {v:?} \
+             (the admission gate needs room for at least one request)"
+        );
+    }
+    if let Some(v) = args.get_opt("client-stall-timeout") {
+        anyhow::ensure!(
+            v.parse::<f64>().map(|s| s > 0.0 && s.is_finite()).unwrap_or(false),
+            "--client-stall-timeout must be a positive number of seconds, got {v:?}"
+        );
+    }
+    if let Some(v) = args.get_opt("drain-grace") {
+        anyhow::ensure!(
+            v.parse::<f64>().map(|s| s >= 0.0 && s.is_finite()).unwrap_or(false),
+            "--drain-grace must be a non-negative number of seconds, got {v:?} \
+             (0 snapshots in-flight sequences immediately)"
+        );
+    }
+    if let Some(v) = args.get_opt("seed-weights") {
+        anyhow::ensure!(
+            v.parse::<u64>().is_ok(),
+            "--seed-weights must be an integer seed, got {v:?}"
+        );
+    }
+    if let Some(v) = args.get_opt("decode-throttle-ms") {
+        anyhow::ensure!(
+            v.parse::<usize>().is_ok(),
+            "--decode-throttle-ms must be a non-negative integer, got {v:?}"
+        );
+    }
     Ok(())
 }
 
@@ -323,24 +377,47 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         faults: cskv::util::faults::FaultInjector::none(),
     };
     validate_serve_flags(args, &coord_cfg)?;
-    let engine = load_engine(args)?;
+    let engine = match args.get_opt("seed-weights") {
+        // Freshly initialised weights: the HTTP smoke path needs no
+        // pretrain artifacts and stays bit-reproducible across processes.
+        Some(v) => {
+            cskv::util::threadpool::set_global_threads(args.get_usize("threads", 1));
+            let seed: u64 = v.parse().expect("checked by validate_serve_flags");
+            let cfg = cskv::model::ModelConfig::test_small();
+            Engine::new(Arc::new(ModelWeights::init(&cfg, seed)))
+        }
+        None => load_engine(args)?,
+    };
     let cfg = engine.w.cfg.clone();
     let sched = coord_cfg.scheduler;
+    let throttle = args.get_usize("decode-throttle-ms", 0);
     let eng = engine.clone();
     let coord = Coordinator::start(
         Box::new(move || {
             let engine = eng;
             let factory: cskv::coordinator::server::BackendFactory = Box::new(move || {
                 let c = engine.w.cfg.clone();
-                Ok(Box::new(RustSequenceBackend::new(
-                    engine.clone(),
-                    Box::new(FullCache::new(c.n_layers, c.d_model)),
-                )))
+                let inner: Box<dyn cskv::coordinator::SequenceBackend> =
+                    Box::new(RustSequenceBackend::new(
+                        engine.clone(),
+                        Box::new(FullCache::new(c.n_layers, c.d_model)),
+                    ));
+                Ok(if throttle == 0 {
+                    inner
+                } else {
+                    Box::new(cskv::coordinator::ThrottledBackend::new(
+                        inner,
+                        std::time::Duration::from_millis(throttle as u64),
+                    ))
+                })
             });
             Ok(factory)
         }),
         coord_cfg,
     );
+    if let Some(listen) = args.get_opt("listen") {
+        return serve_http(args, coord, &cfg, &listen);
+    }
     let mut rng = Pcg64::new(7);
     let mut correct = 0usize;
     let mut rxs = Vec::new();
@@ -377,5 +454,52 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     }
     println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
     snap.summary_table().print();
+    Ok(())
+}
+
+/// The `--listen` serving path: bind, optionally resume another
+/// process's drain bundle, then run the HTTP front-end until a drain
+/// (`POST /drain` or `SIGTERM`) stops it.
+fn serve_http(
+    args: &Args,
+    coord: Coordinator,
+    cfg: &cskv::model::ModelConfig,
+    listen: &str,
+) -> anyhow::Result<()> {
+    use cskv::util::json::Json;
+    let addr = cskv::coordinator::parse_listen(listen)?;
+    let http_cfg = cskv::coordinator::HttpConfig {
+        max_queued: args.get_usize("max-queued", 64),
+        client_stall_timeout: std::time::Duration::from_secs_f64(
+            args.get_f64("client-stall-timeout", 10.0),
+        ),
+        drain_grace: std::time::Duration::from_secs_f64(args.get_f64("drain-grace", 5.0)),
+        drain_file: args.get_opt("drain-file").map(std::path::PathBuf::from),
+        vocab_size: cfg.vocab_size,
+        max_seq: cfg.max_seq,
+        ..Default::default()
+    };
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+    // The test harness (and any supervisor binding port 0) parses this
+    // line for the resolved address.
+    println!("listening on {}", listener.local_addr()?);
+    if let Some(p) = args.get_opt("resume-from") {
+        let bundle = cskv::coordinator::DrainBundle::load(std::path::Path::new(&p))
+            .map_err(|e| anyhow::anyhow!("--resume-from {p}: {e:#}"))?;
+        println!("resuming {} migrated sequence(s) from {p}", bundle.seqs.len());
+        for (id, tokens, error) in cskv::coordinator::resume_bundle(&coord, bundle) {
+            match error {
+                None => {
+                    let toks = Json::Arr(tokens.into_iter().map(Json::from).collect());
+                    println!("resumed id={id} tokens={}", toks.to_string_compact());
+                }
+                Some(e) => println!("resume id={id} failed: {e}"),
+            }
+        }
+    }
+    let snap = cskv::coordinator::serve(coord, listener, http_cfg)?;
+    println!("drained; final stats:");
+    println!("  {}", snap.report());
     Ok(())
 }

@@ -23,6 +23,8 @@
 //! | `coldtier.read`  | each spill-read attempt  | that attempt errors |
 //! | `snapshot.corrupt` | cold-tier restore, pre-decode | one seeded byte of the encoded blob is flipped |
 //! | `backend.build` | worker backend construction | the build errors |
+//! | `http.accept` | the HTTP accept loop, per connection | the connection is dropped before any byte is read (client sees a reset) |
+//! | `http.write` | each SSE data frame (pings exempt) | the frame is truncated mid-write ("short write"), surfacing `BrokenPipe` → the request is cancelled |
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

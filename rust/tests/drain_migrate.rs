@@ -1,0 +1,245 @@
+//! Drain → migrate → restore: the graceful-drain counterpart of the
+//! preemption round-trip sweep.
+//!
+//! For **every policy variant** (full, CSKV fp32, CSKV int4,
+//! StreamingLLM, H2O, ASVD) a sequence is caught mid-decode by
+//! `Coordinator::drain(ZERO)`:
+//!
+//! * the drained request is answered exactly once, with reason
+//!   [`DRAINED`] and the partial tokens generated so far (an exact
+//!   prefix of the undisturbed oracle);
+//! * the [`DrainBundle`] carries one sequence with a live backend
+//!   snapshot, and survives the file round-trip (`save`/`load` — the
+//!   cross-process handoff path `cskv serve --drain-file`/
+//!   `--resume-from` uses);
+//! * the drained coordinator leaks nothing (zero KV / cold bytes) and
+//!   counts the migration in `requests_drained`;
+//! * a **fresh** coordinator resumes the sequence via `resume_drained`
+//!   and completes it **bit-identically** to the oracle, streaming only
+//!   the post-migration tokens.
+//!
+//! Decode is slowed by [`ThrottledBackend`] so "mid-decode" is a wide,
+//! deterministic window rather than a race.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
+use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{
+    Coordinator, CoordinatorConfig, DrainBundle, MetricsSnapshot, RustSequenceBackend,
+    ThrottledBackend, DRAINED,
+};
+use cskv::kvcache::{CskvCache, CskvConfig, FullCache, KvCachePolicy, QuantMode};
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::tensor::Mat;
+use cskv::util::prng::Pcg64;
+
+const PROMPT: [usize; 6] = [1, 7, 9, 2, 30, 41];
+const N_NEW: usize = 60;
+const WEIGHT_SEED: u64 = 5;
+/// Per-token decode delay in the first coordinator: wide enough that
+/// the drain lands mid-decode with hundreds of milliseconds to spare.
+const THROTTLE: Duration = Duration::from_millis(4);
+
+fn make_engine() -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), WEIGHT_SEED)))
+}
+
+/// Low-rank factors matching the `test_small` engine geometry — same
+/// construction as the property-invariants sweep, so CSKV/ASVD states
+/// here correspond to proven snapshot round-trip geometry.
+fn engine_factors(rank: usize) -> Arc<ModelFactors> {
+    let d = ModelConfig::test_small().d_model;
+    let mut rng = Pcg64::new(rank as u64 * 77 + 5);
+    let mut mk = move || {
+        LowRankFactors::new(
+            Mat::randn(d, rank, 0.2, &mut rng),
+            Mat::randn(rank, d, 0.2, &mut rng),
+        )
+    };
+    Arc::new(ModelFactors {
+        layers: (0..2).map(|_| LayerFactors { k: mk(), v: mk() }).collect(),
+        provenance: "drain-migrate".into(),
+    })
+}
+
+/// The six policy variants, as capture-free constructors so both
+/// coordinators (and the oracle) build identical fresh instances.
+fn policies() -> Vec<(&'static str, fn() -> Box<dyn KvCachePolicy>)> {
+    fn full() -> Box<dyn KvCachePolicy> {
+        let c = ModelConfig::test_small();
+        Box::new(FullCache::new(c.n_layers, c.d_model))
+    }
+    fn cskv_fp32() -> Box<dyn KvCachePolicy> {
+        let c = ModelConfig::test_small();
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            c.d_model,
+            CskvConfig { window: 6, quant: QuantMode::None },
+        ))
+    }
+    fn cskv_int4() -> Box<dyn KvCachePolicy> {
+        let c = ModelConfig::test_small();
+        Box::new(CskvCache::new(
+            engine_factors(8),
+            c.d_model,
+            CskvConfig { window: 6, quant: QuantMode::Int4 },
+        ))
+    }
+    fn streaming() -> Box<dyn KvCachePolicy> {
+        let c = ModelConfig::test_small();
+        Box::new(StreamingLlmCache::new(c.n_layers, c.d_model, 2, 12))
+    }
+    fn h2o() -> Box<dyn KvCachePolicy> {
+        let c = ModelConfig::test_small();
+        Box::new(H2oCache::new(c.n_layers, c.d_model, 10))
+    }
+    fn asvd() -> Box<dyn KvCachePolicy> {
+        Box::new(AsvdCache::new(engine_factors(8)))
+    }
+    vec![
+        ("full", full as fn() -> Box<dyn KvCachePolicy>),
+        ("cskv-fp32", cskv_fp32),
+        ("cskv-int4", cskv_int4),
+        ("streaming-llm", streaming),
+        ("h2o", h2o),
+        ("asvd", asvd),
+    ]
+}
+
+/// Coordinator setup running `mk`-policy backends, optionally throttled.
+fn setup(mk: fn() -> Box<dyn KvCachePolicy>, throttle: Option<Duration>) -> Setup {
+    Box::new(move || {
+        let engine = make_engine();
+        let factory: BackendFactory = Box::new(move || {
+            let inner: Box<dyn cskv::coordinator::SequenceBackend> =
+                Box::new(RustSequenceBackend::new(engine.clone(), mk()));
+            Ok(match throttle {
+                Some(d) => Box::new(ThrottledBackend::new(inner, d)),
+                None => inner,
+            })
+        });
+        Ok(factory)
+    })
+}
+
+fn assert_drained_clean(name: &str, snap: &MetricsSnapshot) {
+    assert_eq!(snap.kv_bytes_current, 0, "{name}: KV bytes must refund to zero");
+    assert_eq!(snap.cold_bytes_current, 0, "{name}: cold tier must be empty");
+}
+
+fn tmp(label: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cskv-drainmig-{label}-{}", std::process::id()))
+}
+
+/// The full migration round-trip for every policy variant.
+#[test]
+fn drain_mid_decode_restores_bit_identically_for_every_policy() {
+    for (name, mk) in policies() {
+        // Oracle: the undisturbed generation under this exact policy.
+        let engine = make_engine();
+        let mut cache = mk();
+        let want = engine.generate(&PROMPT, N_NEW, cache.as_mut()).0;
+        assert_eq!(want.len(), N_NEW);
+
+        // Coordinator 1: throttled decode, drained mid-stream.
+        let coord = Coordinator::start(setup(mk, Some(THROTTLE)), CoordinatorConfig::default());
+        let (handle, stream) = coord.submit_streaming(PROMPT.to_vec(), N_NEW, None);
+        for i in 0..2 {
+            let tok = stream
+                .recv_timeout(Duration::from_secs(20))
+                .unwrap_or_else(|e| panic!("{name}: no streamed token {i}: {e}"));
+            assert_eq!(tok, want[i], "{name}: streamed token {i} must match the oracle");
+        }
+        let bundle = coord.drain(Duration::ZERO).expect("drain");
+        assert_eq!(bundle.seqs.len(), 1, "{name}: one in-flight sequence to migrate");
+        let resp = handle.rx.recv().expect("drained request must still answer");
+        assert_eq!(resp.error.as_deref(), Some(DRAINED), "{name}");
+        assert!(
+            !resp.tokens.is_empty() && resp.tokens.len() < N_NEW,
+            "{name}: drain must land mid-decode (got {} tokens)",
+            resp.tokens.len()
+        );
+        assert_eq!(
+            resp.tokens[..],
+            want[..resp.tokens.len()],
+            "{name}: partial stream is an oracle prefix"
+        );
+        assert!(handle.rx.recv().is_err(), "{name}: exactly one Response");
+        let seq = &bundle.seqs[0];
+        assert!(seq.snapshot.is_some(), "{name}: mid-decode sequences carry a snapshot");
+        assert_eq!(seq.generated, resp.tokens, "{name}: bundle carries the delivered prefix");
+        assert_eq!(seq.prompt, PROMPT.to_vec());
+        assert_eq!(seq.n_new, N_NEW);
+
+        // File round-trip: the cross-process handoff path.
+        let path = tmp(name);
+        bundle.save(&path).expect("save bundle");
+        let loaded = DrainBundle::load(&path).expect("load bundle");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded.seqs.len(), 1);
+
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests_drained, 1, "{name}");
+        assert_eq!(snap.requests_completed, 0, "{name}");
+        assert_eq!(snap.requests_failed, 0, "{name}");
+        assert_drained_clean(name, &snap);
+
+        // Coordinator 2: fresh process stand-in, unthrottled; the resumed
+        // stream must be bit-identical to the oracle.
+        let carried = resp.tokens.len();
+        let coord2 = Coordinator::start(setup(mk, None), CoordinatorConfig::default());
+        let (h2, s2) = coord2.resume_drained(loaded.seqs.into_iter().next().unwrap(), None);
+        let resp2 = h2.rx.recv().expect("resumed request must answer");
+        assert!(resp2.error.is_none(), "{name}: resume failed: {:?}", resp2.error);
+        assert_eq!(resp2.tokens, want, "{name}: resumed stream must be bit-identical");
+        let streamed2: Vec<usize> = s2.try_iter().collect();
+        assert_eq!(
+            streamed2[..],
+            want[carried..],
+            "{name}: only post-migration tokens are re-streamed"
+        );
+        let snap2 = coord2.shutdown();
+        assert_eq!(snap2.requests_completed, 1, "{name}");
+        assert_drained_clean(name, &snap2);
+    }
+}
+
+/// Still-queued sequences migrate without a snapshot and re-run from
+/// the prompt — bit-identical for a lossless-deterministic policy.
+#[test]
+fn drain_migrates_queued_sequences_without_snapshot() {
+    let (name, mk) = policies().remove(0); // full cache
+    let engine = make_engine();
+    let mut cache = mk();
+    let want = engine.generate(&PROMPT, 8, cache.as_mut()).0;
+
+    // max_batch 0: nothing is ever admitted, the request stays queued.
+    let coord = Coordinator::start(
+        setup(mk, None),
+        CoordinatorConfig { max_batch: 0, ..Default::default() },
+    );
+    let (handle, _stream) = coord.submit_streaming(PROMPT.to_vec(), 8, None);
+    let bundle = coord.drain(Duration::ZERO).expect("drain");
+    assert_eq!(bundle.seqs.len(), 1);
+    assert!(bundle.seqs[0].snapshot.is_none(), "queued sequences carry no snapshot");
+    assert!(bundle.seqs[0].generated.is_empty());
+    let resp = handle.rx.recv().unwrap();
+    assert_eq!(resp.error.as_deref(), Some(DRAINED));
+    assert!(resp.tokens.is_empty());
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_drained, 1);
+    assert_drained_clean(name, &snap);
+
+    let coord2 = Coordinator::start(setup(mk, None), CoordinatorConfig::default());
+    let (h2, s2) = coord2.resume_drained(bundle.seqs.into_iter().next().unwrap(), None);
+    let resp2 = h2.rx.recv().unwrap();
+    assert!(resp2.error.is_none(), "{:?}", resp2.error);
+    assert_eq!(resp2.tokens, want, "queued migration re-runs from the prompt");
+    let streamed: Vec<usize> = s2.try_iter().collect();
+    assert_eq!(streamed, want, "a re-run streams every token");
+    let snap2 = coord2.shutdown();
+    assert_drained_clean(name, &snap2);
+}

@@ -1,0 +1,645 @@
+//! HTTP-level chaos scenarios for the `cskv serve --listen` front-end,
+//! plus the cross-process binary smoke (`CARGO_BIN_EXE_cskv`).
+//!
+//! In-process scenarios drive a real [`TcpListener`] + `serve()` loop
+//! over loopback sockets and assert the robustness contract end to end:
+//!
+//! * **SSE correctness** — the streamed tokens and the terminal `done`
+//!   event are bit-identical to the direct-engine oracle; `/healthz`,
+//!   `/readyz` and `/stats` report truthfully alongside.
+//! * **Mid-stream disconnect** — dropping the client socket cancels the
+//!   request at the next round boundary (terminal outcome `cancelled`,
+//!   KV bytes freed), while a concurrent bystander stays bit-identical.
+//! * **Injected short write** (`http.write`, `FaultMode::Nth`) — a
+//!   truncated SSE frame surfaces as a write error and cancels exactly
+//!   that request; the server keeps serving afterwards.
+//! * **Overload shedding** — with `max_queued = 1`, a burst during an
+//!   active stream gets `429` + `Retry-After` (counted in
+//!   `requests_shed`); the admitted stream is unaffected.
+//! * **Drain with restore** — `POST /drain` mid-stream ends the SSE
+//!   stream with a `migrated` terminal event, writes the bundle to
+//!   disk, and a fresh coordinator resumes it bit-identically.
+//! * **Accept fault** (`http.accept`) — a dropped connection at accept
+//!   hits only that client; the listener keeps serving.
+//!
+//! Every scenario asserts exactly one terminal outcome per request
+//! (completed / cancelled / shed / drained sum to the submit count) and
+//! zero KV + cold bytes after drain.
+//!
+//! The binary tests spawn the real `cskv serve --listen` process (seeded
+//! weights, throttled decode), exercise one streaming request, one
+//! mid-stream disconnect, and a drain-to-file, then prove a second
+//! process resumes the migrated sequence bit-identically
+//! (`--resume-from`). Flag validation is covered the same way PR 7's
+//! suite covers the offline flags: bad values exit non-zero with a
+//! pointed message before any model work.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cskv::coordinator::server::{BackendFactory, Setup};
+use cskv::coordinator::{
+    Coordinator, CoordinatorConfig, DrainBundle, HttpConfig, MetricsSnapshot,
+    RustSequenceBackend, ThrottledBackend,
+};
+use cskv::kvcache::FullCache;
+use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
+use cskv::util::faults::{FaultInjector, FaultMode};
+use cskv::util::json::Json;
+
+const LONG_PROMPT: [usize; 6] = [1, 7, 9, 2, 30, 41];
+const SHORT_PROMPT: [usize; 3] = [3, 5, 8];
+const WEIGHT_SEED: u64 = 5;
+
+fn make_engine(seed: u64) -> Engine {
+    Engine::new(Arc::new(ModelWeights::init(&ModelConfig::test_small(), seed)))
+}
+
+fn oracle(seed: u64, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let engine = make_engine(seed);
+    let cfg = engine.w.cfg.clone();
+    let mut cache = FullCache::new(cfg.n_layers, cfg.d_model);
+    engine.generate(prompt, n_new, &mut cache).0
+}
+
+/// Full-cache backends, optionally throttled so decode spans a wide,
+/// schedulable window.
+fn throttled_setup(seed: u64, throttle: Option<Duration>) -> Setup {
+    Box::new(move || {
+        let engine = make_engine(seed);
+        let factory: BackendFactory = Box::new(move || {
+            let c = engine.w.cfg.clone();
+            let inner: Box<dyn cskv::coordinator::SequenceBackend> =
+                Box::new(RustSequenceBackend::new(
+                    engine.clone(),
+                    Box::new(FullCache::new(c.n_layers, c.d_model)),
+                ));
+            Ok(match throttle {
+                Some(d) => Box::new(ThrottledBackend::new(inner, d)),
+                None => inner,
+            })
+        });
+        Ok(factory)
+    })
+}
+
+struct TestServer {
+    addr: SocketAddr,
+    join: std::thread::JoinHandle<anyhow::Result<MetricsSnapshot>>,
+}
+
+impl TestServer {
+    /// Bind loopback, start `serve()` on a thread, return the resolved
+    /// address + the handle that yields the final metrics snapshot.
+    fn start(seed: u64, throttle_ms: u64, tweak: impl FnOnce(&mut HttpConfig)) -> TestServer {
+        let throttle = (throttle_ms > 0).then(|| Duration::from_millis(throttle_ms));
+        let coord = Coordinator::start(
+            throttled_setup(seed, throttle),
+            CoordinatorConfig::default(),
+        );
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap();
+        let mut cfg = HttpConfig {
+            drain_grace: Duration::ZERO,
+            ..HttpConfig::default()
+        };
+        tweak(&mut cfg);
+        let join = std::thread::spawn(move || cskv::coordinator::serve(coord, listener, cfg));
+        TestServer { addr, join }
+    }
+
+    /// `POST /drain`, then join the serve loop for its final snapshot.
+    fn drain_and_join(self) -> (usize, MetricsSnapshot) {
+        let (status, _, body) = http_request(self.addr, "POST", "/drain", "");
+        assert_eq!(status, 200, "drain must succeed: {}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let migrated = j.at("migrated").and_then(Json::as_usize).unwrap();
+        let snap = self.join.join().unwrap().expect("serve loop exits cleanly");
+        (migrated, snap)
+    }
+}
+
+/// One complete request/response exchange (`Connection: close`), raw.
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .expect("send request");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read response");
+    split_response(&buf)
+}
+
+fn split_response(raw: &[u8]) -> (u16, String, Vec<u8>) {
+    let pos = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("complete response head");
+    let head = String::from_utf8_lossy(&raw[..pos]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    (status, head, raw[pos + 4..].to_vec())
+}
+
+fn generate_body(prompt: &[usize], n_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\":[{}],\"n_new\":{n_new}}}", toks.join(","))
+}
+
+/// Parse complete SSE frames, skipping `: ping` comments and any
+/// truncated trailing frame (short-write scenarios cut mid-frame).
+fn parse_sse(body: &str) -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    for frame in body.split("\n\n") {
+        let (mut event, mut data) = (None, None);
+        for line in frame.lines() {
+            if let Some(e) = line.strip_prefix("event: ") {
+                event = Some(e.to_string());
+            } else if let Some(d) = line.strip_prefix("data: ") {
+                data = Some(d.to_string());
+            }
+        }
+        if let (Some(e), Some(d)) = (event, data) {
+            if let Ok(j) = Json::parse(&d) {
+                out.push((e, j));
+            }
+        }
+    }
+    out
+}
+
+fn sse_tokens(events: &[(String, Json)]) -> Vec<usize> {
+    events
+        .iter()
+        .filter(|(e, _)| e == "token")
+        .map(|(_, j)| j.at("token").and_then(Json::as_usize).unwrap())
+        .collect()
+}
+
+/// Run one `/generate` to completion and return its parsed SSE events.
+fn sse_collect(addr: SocketAddr, prompt: &[usize], n_new: usize) -> Vec<(String, Json)> {
+    let (status, head, body) = http_request(addr, "POST", "/generate", &generate_body(prompt, n_new));
+    assert_eq!(status, 200, "{head}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    parse_sse(std::str::from_utf8(&body).unwrap())
+}
+
+fn stats(addr: SocketAddr) -> Json {
+    let (status, _, body) = http_request(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    Json::parse(std::str::from_utf8(&body).unwrap()).expect("stats is valid JSON")
+}
+
+fn stat_usize(j: &Json, path: &str) -> usize {
+    j.at(path).and_then(Json::as_usize).unwrap_or(usize::MAX)
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed().as_secs() < 30, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn assert_no_leak(snap: &MetricsSnapshot) {
+    assert_eq!(snap.kv_bytes_current, 0, "KV bytes must refund to zero after drain");
+    assert_eq!(snap.cold_bytes_current, 0, "cold tier must be empty after drain");
+}
+
+fn tmp(label: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cskv-http-{label}-{}", std::process::id()))
+}
+
+/// Scenario 0 (baseline): a streamed generation is bit-identical to the
+/// oracle, token frames and terminal `done` alike, and the probe
+/// endpoints tell the truth before/after.
+#[test]
+fn sse_stream_is_bit_identical_and_probes_report_truthfully() {
+    let want = oracle(WEIGHT_SEED, &SHORT_PROMPT, 6);
+    let srv = TestServer::start(WEIGHT_SEED, 0, |_| {});
+
+    let (st, _, body) = http_request(srv.addr, "GET", "/healthz", "");
+    assert_eq!((st, &body[..]), (200, &b"ok\n"[..]));
+    let (st, _, body) = http_request(srv.addr, "GET", "/readyz", "");
+    assert_eq!((st, &body[..]), (200, &b"ready\n"[..]));
+    let (st, _, _) = http_request(srv.addr, "GET", "/nope", "");
+    assert_eq!(st, 404);
+    let (st, _, body) = http_request(srv.addr, "POST", "/generate", "{\"n_new\":1}");
+    assert_eq!(st, 400, "missing prompt must 400");
+    assert!(String::from_utf8_lossy(&body).contains("prompt"));
+
+    let events = sse_collect(srv.addr, &SHORT_PROMPT, 6);
+    assert_eq!(sse_tokens(&events), want, "streamed tokens match the oracle");
+    let (ev, data) = events.last().expect("terminal event");
+    assert_eq!(ev, "done");
+    let done_tokens: Vec<usize> = match data.at("tokens") {
+        Some(Json::Arr(a)) => a.iter().map(|v| v.as_usize().unwrap()).collect(),
+        other => panic!("done.tokens missing: {other:?}"),
+    };
+    assert_eq!(done_tokens, want, "terminal event carries the complete stream");
+
+    let j = stats(srv.addr);
+    assert_eq!(stat_usize(&j, "requests.completed"), 1);
+    assert_eq!(stat_usize(&j, "requests.failed"), 0, "a 400 never reaches the coordinator");
+    assert_eq!(stat_usize(&j, "kv.bytes_current"), 0, "retired stream holds no KV");
+    assert_eq!(stat_usize(&j, "inflight"), 0);
+    assert_eq!(j.at("draining").and_then(Json::as_bool), Some(false));
+
+    let (migrated, snap) = srv.drain_and_join();
+    assert_eq!(migrated, 0);
+    assert_eq!(snap.requests_completed, 1);
+    assert_no_leak(&snap);
+}
+
+/// Scenario 1: a client that vanishes mid-stream cancels its request at
+/// the next round boundary; the concurrent bystander is bit-identical
+/// and every submit gets exactly one terminal outcome.
+#[test]
+fn mid_stream_disconnect_cancels_and_frees_kv() {
+    let bystander_want = oracle(WEIGHT_SEED, &SHORT_PROMPT, 4);
+    let srv = TestServer::start(WEIGHT_SEED, 3, |_| {});
+
+    // Doomed client: submit a long generation, read the first token
+    // frame, then drop the socket without reading further.
+    let mut doomed = TcpStream::connect(srv.addr).unwrap();
+    let body = generate_body(&LONG_PROMPT, 2000);
+    doomed
+        .write_all(
+            format!(
+                "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut got = Vec::new();
+    let mut chunk = [0u8; 256];
+    wait_until("first token frame", || {
+        let n = doomed.read(&mut chunk).unwrap_or(0);
+        got.extend_from_slice(&chunk[..n]);
+        String::from_utf8_lossy(&got).contains("event: token")
+    });
+    drop(doomed);
+
+    // Bystander runs while the cancel percolates.
+    let events = sse_collect(srv.addr, &SHORT_PROMPT, 4);
+    assert_eq!(sse_tokens(&events), bystander_want, "bystander must be bit-identical");
+    assert_eq!(events.last().unwrap().0, "done");
+
+    wait_until("disconnect maps to cancel", || {
+        stat_usize(&stats(srv.addr), "requests.cancelled") == 1
+    });
+    wait_until("cancelled KV is freed", || {
+        stat_usize(&stats(srv.addr), "kv.bytes_current") == 0
+    });
+
+    let (migrated, snap) = srv.drain_and_join();
+    assert_eq!(migrated, 0, "the cancelled sequence must not reach the drain bundle");
+    assert_eq!(snap.requests_cancelled, 1);
+    assert_eq!(snap.requests_completed, 1);
+    assert_eq!(snap.requests_failed, 0, "a vanished client is not a failure");
+    assert_no_leak(&snap);
+}
+
+/// Scenario 2: an injected `http.write` short write (Nth data frame)
+/// cancels exactly that request; the server keeps serving bit-identical
+/// streams afterwards.
+#[test]
+fn injected_short_write_cancels_only_that_request() {
+    let want = oracle(WEIGHT_SEED, &LONG_PROMPT, 50);
+    let faults = FaultInjector::seeded(0x5EED);
+    faults.arm("http.write", FaultMode::Nth(3));
+    let f = faults.clone();
+    let srv = TestServer::start(WEIGHT_SEED, 3, move |c| c.faults = f);
+
+    // The faulted request runs alone so the Nth counting is per-request
+    // deterministic: frames 1 and 2 arrive whole, frame 3 is truncated,
+    // then the connection dies.
+    let (status, head, body) =
+        http_request(srv.addr, "POST", "/generate", &generate_body(&LONG_PROMPT, 50));
+    assert_eq!(status, 200, "{head}");
+    let events = parse_sse(std::str::from_utf8(&body).unwrap_or(""));
+    let toks = sse_tokens(&events);
+    assert_eq!(toks, want[..2], "exactly the two pre-fault frames arrive intact");
+    assert!(
+        !events.iter().any(|(e, _)| e != "token"),
+        "no terminal event reaches the client after a short write"
+    );
+    assert_eq!(faults.trips("http.write"), 1, "the fault fired exactly once");
+
+    wait_until("short write maps to cancel", || {
+        stat_usize(&stats(srv.addr), "requests.cancelled") == 1
+    });
+
+    // The plane is healthy: a follow-up stream is bit-identical.
+    let after = sse_collect(srv.addr, &SHORT_PROMPT, 4);
+    assert_eq!(sse_tokens(&after), oracle(WEIGHT_SEED, &SHORT_PROMPT, 4));
+
+    let (migrated, snap) = srv.drain_and_join();
+    assert_eq!(migrated, 0);
+    assert_eq!(snap.requests_cancelled, 1);
+    assert_eq!(snap.requests_completed, 1);
+    assert_no_leak(&snap);
+}
+
+/// Scenario 3: overload shedding — while one stream occupies the only
+/// admission slot, burst traffic gets `429` + `Retry-After` and is
+/// counted shed; the admitted stream completes bit-identically.
+#[test]
+fn burst_beyond_max_queued_sheds_with_429_and_retry_after() {
+    let want = oracle(WEIGHT_SEED, &LONG_PROMPT, 200);
+    let srv = TestServer::start(WEIGHT_SEED, 5, |c| c.max_queued = 1);
+    let addr = srv.addr;
+
+    let streamer = std::thread::spawn(move || sse_collect(addr, &LONG_PROMPT, 200));
+    wait_until("streamer occupies the admission slot", || {
+        stat_usize(&stats(addr), "inflight") == 1
+    });
+
+    for i in 0..5 {
+        let (status, head, _) =
+            http_request(addr, "POST", "/generate", &generate_body(&SHORT_PROMPT, 2));
+        assert_eq!(status, 429, "burst request {i} must shed");
+        assert!(
+            head.to_ascii_lowercase().contains("retry-after"),
+            "shed response advertises Retry-After: {head}"
+        );
+    }
+
+    let events = streamer.join().unwrap();
+    assert_eq!(sse_tokens(&events), want, "the admitted stream is unaffected by the burst");
+    assert_eq!(events.last().unwrap().0, "done");
+
+    let (migrated, snap) = srv.drain_and_join();
+    assert_eq!(migrated, 0);
+    assert_eq!(snap.requests_shed, 5, "every burst request counted shed");
+    assert_eq!(snap.requests_completed, 1);
+    assert_no_leak(&snap);
+}
+
+/// Scenario 4: graceful drain mid-stream — the SSE stream ends with a
+/// `migrated` terminal, the bundle lands on disk, and a fresh
+/// coordinator resumes it bit-identically.
+#[test]
+fn drain_mid_stream_migrates_and_restores_bit_identically() {
+    let want = oracle(WEIGHT_SEED, &LONG_PROMPT, 60);
+    let path = tmp("drain-restore");
+    let _ = std::fs::remove_file(&path);
+    let p = path.clone();
+    let srv = TestServer::start(WEIGHT_SEED, 3, move |c| c.drain_file = Some(p));
+    let addr = srv.addr;
+
+    let streamer = std::thread::spawn(move || {
+        let (status, _, body) =
+            http_request(addr, "POST", "/generate", &generate_body(&LONG_PROMPT, 60));
+        assert_eq!(status, 200);
+        parse_sse(std::str::from_utf8(&body).unwrap())
+    });
+    wait_until("stream is hot", || stat_usize(&stats(addr), "kv.bytes_current") > 0);
+
+    let (migrated, snap) = srv.drain_and_join();
+    assert_eq!(migrated, 1, "the in-flight stream must migrate");
+    assert_eq!(snap.requests_drained, 1);
+    assert_eq!(snap.requests_completed, 0);
+    assert_no_leak(&snap);
+
+    let events = streamer.join().unwrap();
+    let streamed = sse_tokens(&events);
+    assert!(!streamed.is_empty() && streamed.len() < 60, "cut mid-stream");
+    assert_eq!(streamed[..], want[..streamed.len()], "streamed prefix matches the oracle");
+    let (ev, data) = events.last().unwrap();
+    assert_eq!(ev, "migrated", "drain maps onto the migrated terminal event");
+    assert_eq!(data.at("streamed").and_then(Json::as_usize), Some(streamed.len()));
+
+    // Readiness flipped during the drain; the listener is gone after.
+    let bundle = DrainBundle::load(&path).expect("bundle on disk");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(bundle.seqs.len(), 1);
+    assert_eq!(bundle.seqs[0].generated, streamed, "bundle carries exactly the delivered prefix");
+
+    let coord2 = Coordinator::start(throttled_setup(WEIGHT_SEED, None), CoordinatorConfig::default());
+    let results = cskv::coordinator::resume_bundle(&coord2, bundle);
+    assert_eq!(results.len(), 1);
+    let (_, tokens, error) = &results[0];
+    assert!(error.is_none(), "{error:?}");
+    assert_eq!(*tokens, want, "cross-coordinator resume is bit-identical");
+    let snap2 = coord2.shutdown();
+    assert_eq!(snap2.requests_completed, 1);
+    assert_no_leak(&snap2);
+}
+
+/// Scenario 5: an injected `http.accept` fault drops exactly one
+/// connection at the door; the next connection is served normally.
+#[test]
+fn injected_accept_fault_drops_one_connection_only() {
+    let faults = FaultInjector::seeded(0xACC);
+    faults.arm("http.accept", FaultMode::Nth(1));
+    let f = faults.clone();
+    let srv = TestServer::start(WEIGHT_SEED, 0, move |c| c.faults = f);
+
+    // First connection: accepted then dropped before any response.
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf); // EOF or reset — never a response
+    assert!(buf.is_empty(), "faulted accept must not answer: {:?}", String::from_utf8_lossy(&buf));
+    assert_eq!(faults.trips("http.accept"), 1);
+
+    // Second connection: business as usual.
+    let (st, _, body) = http_request(srv.addr, "GET", "/healthz", "");
+    assert_eq!((st, &body[..]), (200, &b"ok\n"[..]));
+
+    let (_, snap) = srv.drain_and_join();
+    assert_no_leak(&snap);
+}
+
+// ---------------------------------------------------------------------------
+// Binary end-to-end: the real `cskv serve` process over real sockets.
+// ---------------------------------------------------------------------------
+
+struct ServeProc {
+    child: std::process::Child,
+    stdout: BufReader<std::process::ChildStdout>,
+    addr: SocketAddr,
+}
+
+impl ServeProc {
+    fn spawn(extra: &[&str]) -> ServeProc {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_cskv"));
+        cmd.args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--seed-weights",
+            "5",
+            "--decode-throttle-ms",
+            "2",
+            "--drain-grace",
+            "0",
+        ])
+        .args(extra)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit());
+        let mut child = cmd.spawn().expect("spawn cskv serve");
+        let mut stdout = BufReader::new(child.stdout.take().unwrap());
+        let mut line = String::new();
+        let addr = loop {
+            line.clear();
+            assert!(
+                stdout.read_line(&mut line).expect("read child stdout") > 0,
+                "child exited before printing its address"
+            );
+            if let Some(rest) = line.trim().strip_prefix("listening on ") {
+                break rest.parse().expect("child printed a valid address");
+            }
+        };
+        ServeProc { child, stdout, addr }
+    }
+
+    fn wait_exit_ok(mut self) {
+        let t0 = Instant::now();
+        loop {
+            if let Some(status) = self.child.try_wait().expect("wait child") {
+                assert!(status.success(), "serve process must exit cleanly: {status}");
+                return;
+            }
+            assert!(t0.elapsed().as_secs() < 30, "serve process did not exit after drain");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+/// The CI smoke: a real server process serves a bit-identical stream,
+/// survives a mid-stream disconnect, drains to a bundle file, exits 0 —
+/// and a second process resumes the migrated sequence bit-identically.
+#[test]
+fn serve_binary_streams_survives_disconnect_and_migrates_across_processes() {
+    let stream_want = oracle(5, &SHORT_PROMPT, 4);
+    let migrate_prompt = [2usize, 4, 6];
+    let migrate_want = oracle(5, &migrate_prompt, 100);
+    let bundle = tmp("bin-bundle");
+    let _ = std::fs::remove_file(&bundle);
+
+    let a = ServeProc::spawn(&["--drain-file", bundle.to_str().unwrap(), "--max-queued", "8"]);
+
+    // 1. One complete streaming request, bit-identical to the oracle.
+    let events = sse_collect(a.addr, &SHORT_PROMPT, 4);
+    assert_eq!(sse_tokens(&events), stream_want);
+    assert_eq!(events.last().unwrap().0, "done");
+
+    // 2. Mid-stream disconnect: read one token frame, drop the socket,
+    //    and wait for the cancel to register server-side.
+    let body = generate_body(&LONG_PROMPT, 100);
+    let mut doomed = TcpStream::connect(a.addr).unwrap();
+    doomed
+        .write_all(
+            format!(
+                "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut got = Vec::new();
+    let mut chunk = [0u8; 256];
+    wait_until("binary: first token frame", || {
+        let n = doomed.read(&mut chunk).unwrap_or(0);
+        got.extend_from_slice(&chunk[..n]);
+        String::from_utf8_lossy(&got).contains("event: token")
+    });
+    drop(doomed);
+    wait_until("binary: disconnect cancels", || {
+        stat_usize(&stats(a.addr), "requests.cancelled") == 1
+    });
+
+    // 3. Drain mid-stream: a third request is cut loose into the bundle.
+    let addr = a.addr;
+    let streamer = std::thread::spawn(move || {
+        let (status, _, body) =
+            http_request(addr, "POST", "/generate", &generate_body(&migrate_prompt, 100));
+        assert_eq!(status, 200);
+        parse_sse(std::str::from_utf8(&body).unwrap())
+    });
+    wait_until("binary: migration stream hot", || {
+        stat_usize(&stats(addr), "kv.bytes_current") > 0
+    });
+    let (st, _, dbody) = http_request(addr, "POST", "/drain", "");
+    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&dbody));
+    let dj = Json::parse(std::str::from_utf8(&dbody).unwrap()).unwrap();
+    assert_eq!(dj.at("migrated").and_then(Json::as_usize), Some(1));
+    let events = streamer.join().unwrap();
+    let streamed = sse_tokens(&events);
+    assert_eq!(events.last().unwrap().0, "migrated");
+    assert!(!streamed.is_empty() && streamed.len() < 100);
+    assert_eq!(streamed[..], migrate_want[..streamed.len()]);
+    a.wait_exit_ok();
+
+    // 4. Process B resumes the bundle and reports the full stream —
+    //    bit-identical across processes.
+    let mut b = ServeProc::spawn(&["--resume-from", bundle.to_str().unwrap()]);
+    let mut resumed = String::new();
+    wait_until("binary: resumed line", || {
+        resumed.clear();
+        b.stdout.read_line(&mut resumed).expect("read B stdout") > 0
+            && resumed.trim().starts_with("resumed id=")
+    });
+    let toks_json = resumed.trim().split_once("tokens=").expect("tokens field").1;
+    let resumed_tokens: Vec<usize> = match Json::parse(toks_json).expect("tokens JSON") {
+        Json::Arr(a) => a.iter().map(|v| v.as_usize().unwrap()).collect(),
+        other => panic!("unexpected tokens payload: {other:?}"),
+    };
+    assert_eq!(
+        resumed_tokens, migrate_want,
+        "the resumed process must reproduce the oracle stream bit-identically"
+    );
+    let (st, _, _) = http_request(b.addr, "POST", "/drain", "");
+    assert_eq!(st, 200);
+    b.wait_exit_ok();
+    let _ = std::fs::remove_file(&bundle);
+}
+
+/// Flag validation: bad serve/HTTP flags exit non-zero with a pointed
+/// message before any model work starts.
+#[test]
+fn serve_flag_validation_rejects_bad_http_flags() {
+    let cases: &[(&[&str], &str)] = &[
+        (&["serve", "--listen", "not-an-addr"], "invalid --listen"),
+        (&["serve", "--listen", "127.0.0.1"], "invalid --listen"),
+        (&["serve", "--listen", "127.0.0.1:0", "--max-queued", "0"], "--max-queued"),
+        (
+            &["serve", "--listen", "127.0.0.1:0", "--client-stall-timeout", "0"],
+            "--client-stall-timeout",
+        ),
+        (
+            &["serve", "--listen", "127.0.0.1:0", "--client-stall-timeout", "nan"],
+            "--client-stall-timeout",
+        ),
+        (&["serve", "--listen", "127.0.0.1:0", "--drain-grace", "-1"], "--drain-grace"),
+        (&["serve", "--listen", "127.0.0.1:0", "--seed-weights", "x"], "--seed-weights"),
+        (
+            &["serve", "--listen", "127.0.0.1:0", "--decode-throttle-ms", "fast"],
+            "--decode-throttle-ms",
+        ),
+    ];
+    for (args, want) in cases {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_cskv"))
+            .args(*args)
+            .output()
+            .expect("run cskv");
+        assert!(!out.status.success(), "{args:?} must be rejected");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(want), "{args:?}: missing {want:?} in {err}");
+    }
+}
