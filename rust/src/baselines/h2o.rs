@@ -193,6 +193,26 @@ impl KvCachePolicy for H2oCache {
         }
     }
 
+    fn attention_profile(&self) -> Option<Vec<f32>> {
+        // Accumulated mass per absolute token position, summed across
+        // layers. Positions this cache already evicted carry 0.0 — they
+        // cost nothing to park cold, which is exactly the signal the
+        // pager wants.
+        let tokens = self.layers.iter().map(|l| l.n).max().unwrap_or(0);
+        if tokens == 0 {
+            return None;
+        }
+        let mut mass = vec![0.0f32; tokens];
+        for l in &self.layers {
+            for (&pos, &s) in l.abs_pos.iter().zip(&l.score) {
+                if pos < tokens {
+                    mass[pos] += s;
+                }
+            }
+        }
+        Some(mass)
+    }
+
     fn len(&self, layer: usize) -> usize {
         self.layers[layer].abs_pos.len()
     }

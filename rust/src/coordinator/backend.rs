@@ -56,6 +56,15 @@ pub trait SequenceBackend {
     /// lazily through the normal sync paths.
     fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()>;
 
+    /// Accumulated attention mass per absolute token position, where the
+    /// underlying policy tracks it (H2O). The pager ranks this
+    /// sequence's history blocks with it at preemption time; `None`
+    /// falls back to age/position scoring. Eviction-ordering hint only —
+    /// never affects restored state.
+    fn attention_profile(&self) -> Option<Vec<f32>> {
+        None
+    }
+
     /// Downcast hook for fused rounds: backends able to share the Rust
     /// engine's batched data plane return themselves. Default: `None`
     /// (the scheduler falls back to per-sequence calls).
@@ -168,6 +177,10 @@ impl SequenceBackend for RustSequenceBackend {
         Ok(())
     }
 
+    fn attention_profile(&self) -> Option<Vec<f32>> {
+        self.policy.attention_profile()
+    }
+
     fn as_rust_backend(&mut self) -> Option<&mut RustSequenceBackend> {
         Some(self)
     }
@@ -219,6 +232,10 @@ impl SequenceBackend for ThrottledBackend {
 
     fn restore(&mut self, snap: &KvSnapshot) -> anyhow::Result<()> {
         self.inner.restore(snap)
+    }
+
+    fn attention_profile(&self) -> Option<Vec<f32>> {
+        self.inner.attention_profile()
     }
 }
 

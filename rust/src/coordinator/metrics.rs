@@ -1,10 +1,10 @@
 //! Serving metrics: counters, latency distributions, KV footprint, and
-//! the scheduler's preemption/cold-tier accounting.
+//! the scheduler's preemption/pager accounting.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
-use super::coldtier::ColdTierStats;
+use super::pager::PagerStats;
 use crate::util::stats::Samples;
 
 #[derive(Default)]
@@ -38,13 +38,21 @@ struct Inner {
     kv_bytes_peak: usize,
     kv_bytes_current: usize,
     active_peak: usize,
-    /// Swap-outs to the cold tier / restores back into the hot tier.
+    /// Swap-outs to the pager / restores back into the hot tier.
     preemptions: u64,
     restores: u64,
+    /// Total pager-resident bytes (warm + disk) — the old cold-tier
+    /// gauge, kept so no-leak assertions read one number.
     cold_bytes_current: usize,
     cold_bytes_peak: usize,
-    /// Cold-tier health, mirrored from [`ColdTierStats`] once per round.
-    cold_tier: ColdTierStats,
+    /// Per-tier split of the same residency.
+    warm_bytes_current: usize,
+    disk_bytes_current: usize,
+    /// Pager health, mirrored from [`PagerStats`] once per round.
+    pager: PagerStats,
+    /// Wall time `resume_round` spent blocked on pager reads — the
+    /// stall the prefetcher exists to hide (one sample per restore).
+    restore_stall_s: Samples,
     /// Request ids in retirement order — the fairness oracle
     /// (`rust/tests/batched_serving.rs` asserts head-of-line behavior
     /// directly on this).
@@ -112,15 +120,22 @@ pub struct MetricsSnapshot {
     /// (the no-leak assertion chaos tests pivot on).
     pub kv_bytes_current: usize,
     pub active_peak: usize,
-    /// Cold-tier traffic: swap-outs and bit-identical restores.
+    /// Pager traffic: swap-outs and bit-identical restores.
     pub preemptions: u64,
     pub restores: u64,
-    /// High-water mark of snapshot bytes parked in the cold tier.
+    /// High-water mark of snapshot bytes parked in the pager (all tiers).
     pub cold_bytes_peak: usize,
-    /// Snapshot bytes parked right now — 0 once drained.
+    /// Snapshot bytes parked right now (warm + disk) — 0 once drained.
     pub cold_bytes_current: usize,
-    /// Cold-tier health: retry counts, corrupt restores, degraded flag.
-    pub cold_tier: ColdTierStats,
+    /// Per-tier split of the same residency: encoded blocks held in the
+    /// warm RAM tier vs spilled to the disk tier.
+    pub warm_bytes_current: usize,
+    pub disk_bytes_current: usize,
+    /// Pager health: per-tier peaks, block spill/promote traffic,
+    /// prefetch hit/miss counts, retry counts, degraded flag.
+    pub pager: PagerStats,
+    /// Per-restore wall time the worker spent blocked on pager reads.
+    pub restore_stall_s: Samples,
     /// Request ids in retirement order.
     pub completion_order: Vec<u64>,
     /// Prefix-cache admission hits / misses (0/0 when the cache is off).
@@ -182,18 +197,59 @@ impl MetricsSnapshot {
                 crate::util::table::bytes(self.prefix_bytes_peak),
             ));
         }
-        if let Some(h) = self.cold_tier_health() {
-            s.push_str(&format!(" | cold-tier {h}"));
+        if let Some(t) = self.pager_tiers() {
+            s.push_str(&format!(" | pager {t}"));
+        }
+        if let Some(h) = self.pager_health() {
+            s.push_str(&format!(" | pager-health {h}"));
         }
         s
     }
 
-    /// Cold-tier health summary, or `None` when the tier ran clean (no
+    /// Per-tier pager traffic summary, or `None` when the pager never
+    /// held a block (no preemptions) — quiet planes stay off the line.
+    pub fn pager_tiers(&self) -> Option<String> {
+        let p = &self.pager;
+        if p.warm_bytes_peak == 0 && p.disk_bytes_peak == 0 {
+            return None;
+        }
+        let b = crate::util::table::bytes;
+        let mut s = format!(
+            "warm {}/{} disk {}/{} spill {}blk/{} promote {}blk/{}",
+            b(self.warm_bytes_current),
+            b(p.warm_bytes_peak),
+            b(self.disk_bytes_current),
+            b(p.disk_bytes_peak),
+            p.block_spills,
+            b(p.spill_bytes as usize),
+            p.block_promotes,
+            b(p.promote_bytes as usize),
+        );
+        if p.prefetch_hits + p.prefetch_misses > 0 {
+            s.push_str(&format!(
+                " prefetch {}h/{}m",
+                p.prefetch_hits, p.prefetch_misses
+            ));
+        }
+        if self.restore_stall_s.len() > 0 {
+            s.push_str(&format!(
+                " stall {:.4}s/restore",
+                self.restore_stall_s.mean()
+            ));
+        }
+        Some(s)
+    }
+
+    /// Pager fault summary, or `None` when every tier ran clean (no
     /// retries, no corrupt restores, never degraded) — the common case
     /// stays out of the report line.
-    pub fn cold_tier_health(&self) -> Option<String> {
-        let c = &self.cold_tier;
-        if c == &ColdTierStats::default() {
+    pub fn pager_health(&self) -> Option<String> {
+        let c = &self.pager;
+        if c.spill_retries == 0
+            && c.read_retries == 0
+            && c.corrupt_restores == 0
+            && !c.degraded
+        {
             return None;
         }
         let mut parts = Vec::new();
@@ -207,14 +263,14 @@ impl MetricsSnapshot {
             parts.push(format!("corrupt-restores={}", c.corrupt_restores));
         }
         if c.degraded {
-            parts.push("DEGRADED(memory-only)".to_string());
+            parts.push("DEGRADED(warm-only)".to_string());
         }
         Some(parts.join(" "))
     }
 
     /// The wire form of the HTTP stats endpoint: every counter, the
-    /// latency distributions (mean/p50/p95/n), the KV / cold-tier /
-    /// prefix-cache gauges, and the cold-tier health block, as one JSON
+    /// latency distributions (mean/p50/p95/n), the KV / pager /
+    /// prefix-cache gauges, and the pager health block, as one JSON
     /// object built on [`crate::util::json::Json`]. Shape documented in
     /// the [`crate::coordinator`] module docs.
     pub fn to_json(&self) -> crate::util::json::Json {
@@ -249,15 +305,26 @@ impl MetricsSnapshot {
             ("bytes_peak", Json::from(self.kv_bytes_peak)),
             ("active_peak", Json::from(self.active_peak)),
         ]);
-        let cold = Json::from_pairs(vec![
+        let pager = Json::from_pairs(vec![
             ("bytes_current", Json::from(self.cold_bytes_current)),
             ("bytes_peak", Json::from(self.cold_bytes_peak)),
+            ("warm_bytes_current", Json::from(self.warm_bytes_current)),
+            ("warm_bytes_peak", Json::from(self.pager.warm_bytes_peak)),
+            ("disk_bytes_current", Json::from(self.disk_bytes_current)),
+            ("disk_bytes_peak", Json::from(self.pager.disk_bytes_peak)),
             ("preemptions", Json::from(self.preemptions as usize)),
             ("restores", Json::from(self.restores as usize)),
-            ("spill_retries", Json::from(self.cold_tier.spill_retries as usize)),
-            ("read_retries", Json::from(self.cold_tier.read_retries as usize)),
-            ("corrupt_restores", Json::from(self.cold_tier.corrupt_restores as usize)),
-            ("degraded", Json::from(self.cold_tier.degraded)),
+            ("block_spills", Json::from(self.pager.block_spills as usize)),
+            ("block_promotes", Json::from(self.pager.block_promotes as usize)),
+            ("spill_bytes", Json::from(self.pager.spill_bytes as usize)),
+            ("promote_bytes", Json::from(self.pager.promote_bytes as usize)),
+            ("prefetch_hits", Json::from(self.pager.prefetch_hits as usize)),
+            ("prefetch_misses", Json::from(self.pager.prefetch_misses as usize)),
+            ("restore_stall_s", Json::Num(self.restore_stall_s.mean() * self.restore_stall_s.len() as f64)),
+            ("spill_retries", Json::from(self.pager.spill_retries as usize)),
+            ("read_retries", Json::from(self.pager.read_retries as usize)),
+            ("corrupt_restores", Json::from(self.pager.corrupt_restores as usize)),
+            ("degraded", Json::from(self.pager.degraded)),
         ]);
         let prefix = Json::from_pairs(vec![
             ("hits", Json::from(self.prefix_hits as usize)),
@@ -272,7 +339,7 @@ impl MetricsSnapshot {
             ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
             ("latency", latency),
             ("kv", kv),
-            ("cold_tier", cold),
+            ("pager", pager),
             ("prefix_cache", prefix),
             ("wall_s", Json::Num(self.wall_s)),
         ])
@@ -289,12 +356,15 @@ impl MetricsSnapshot {
             "latency summary",
             &["metric", "mean", "p50", "p95", "n"],
         );
-        let rows: [(&str, &Samples); 7] = [
+        let rows: [(&str, &Samples); 8] = [
             ("queue-wait", &self.queue_wait_s),
             ("ttft", &self.ttft_s),
             ("ttft-clean", &self.ttft_clean_s),
             ("ttft-preempted", &self.ttft_preempted_s),
             ("tok-latency", &self.tok_latency_s),
+            // Per-restore wall time blocked on pager reads — near zero
+            // when the prefetcher lands blocks ahead of the resume.
+            ("restore-stall", &self.restore_stall_s),
             // Time-in-system of reaped requests: how long abandoned work
             // sat on the plane before the deadline/cancel cut it loose.
             ("expired", &self.expired_s),
@@ -379,13 +449,15 @@ impl Metrics {
         self.inner.lock().unwrap().requests_drained += 1;
     }
 
-    /// Refresh cold-tier gauges: current resident bytes and the tier's
-    /// cumulative health counters (absolutes, not deltas).
-    pub fn record_cold_tier(&self, bytes_resident: usize, stats: ColdTierStats) {
+    /// Refresh pager gauges: current per-tier resident bytes and the
+    /// pager's cumulative health counters (absolutes, not deltas).
+    pub fn record_pager(&self, warm_bytes: usize, disk_bytes: usize, stats: PagerStats) {
         let mut g = self.inner.lock().unwrap();
-        g.cold_bytes_current = bytes_resident;
-        g.cold_bytes_peak = g.cold_bytes_peak.max(bytes_resident);
-        g.cold_tier = stats;
+        g.warm_bytes_current = warm_bytes;
+        g.disk_bytes_current = disk_bytes;
+        g.cold_bytes_current = warm_bytes + disk_bytes;
+        g.cold_bytes_peak = g.cold_bytes_peak.max(g.cold_bytes_current);
+        g.pager = stats;
     }
 
     pub fn record_kv(&self, current_bytes: usize, active: usize) {
@@ -395,8 +467,8 @@ impl Metrics {
         g.active_peak = g.active_peak.max(active);
     }
 
-    /// A sequence was swapped out; `cold_bytes_now` is the tier's new
-    /// resident size.
+    /// A sequence was swapped out; `cold_bytes_now` is the pager's new
+    /// resident size (all tiers).
     pub fn record_preemption(&self, cold_bytes_now: usize) {
         let mut g = self.inner.lock().unwrap();
         g.preemptions += 1;
@@ -404,11 +476,14 @@ impl Metrics {
         g.cold_bytes_peak = g.cold_bytes_peak.max(cold_bytes_now);
     }
 
-    /// A swapped sequence was restored into the hot tier.
-    pub fn record_restore(&self, cold_bytes_now: usize) {
+    /// A swapped sequence was restored into the hot tier after the
+    /// worker spent `stall_s` blocked on the pager read (≈0 when the
+    /// prefetcher already landed the blocks).
+    pub fn record_restore(&self, cold_bytes_now: usize, stall_s: f64) {
         let mut g = self.inner.lock().unwrap();
         g.restores += 1;
         g.cold_bytes_current = cold_bytes_now;
+        g.restore_stall_s.push(stall_s);
     }
 
     /// An admission lookup matched `shared_bytes` of cached prefix.
@@ -469,7 +544,10 @@ impl Metrics {
             restores: g.restores,
             cold_bytes_peak: g.cold_bytes_peak,
             cold_bytes_current: g.cold_bytes_current,
-            cold_tier: g.cold_tier,
+            warm_bytes_current: g.warm_bytes_current,
+            disk_bytes_current: g.disk_bytes_current,
+            pager: g.pager,
+            restore_stall_s: g.restore_stall_s.clone(),
             completion_order: g.completion_order.clone(),
             prefix_hits: g.prefix_hits,
             prefix_misses: g.prefix_misses,
@@ -570,32 +648,87 @@ mod tests {
     }
 
     #[test]
-    fn cold_tier_health_surfaces_only_when_dirty() {
+    fn pager_health_surfaces_only_when_dirty() {
         let m = Metrics::new();
-        m.record_cold_tier(1024, ColdTierStats::default());
+        m.record_pager(1024, 0, PagerStats::default());
         let s = m.snapshot();
-        assert!(s.cold_tier_health().is_none(), "clean tier stays quiet");
-        assert!(!s.report().contains("cold-tier"));
+        assert!(s.pager_health().is_none(), "clean pager stays quiet");
+        assert!(!s.report().contains("pager-health"));
         assert_eq!(s.cold_bytes_current, 1024);
+        assert_eq!(s.warm_bytes_current, 1024);
 
-        m.record_cold_tier(
+        m.record_pager(
             0,
-            ColdTierStats {
+            0,
+            PagerStats {
                 spill_retries: 3,
                 read_retries: 1,
                 corrupt_restores: 2,
                 degraded: true,
+                ..Default::default()
             },
         );
         let s = m.snapshot();
-        let h = s.cold_tier_health().unwrap();
+        let h = s.pager_health().unwrap();
         assert!(h.contains("spill-retries=3"), "{h}");
         assert!(h.contains("read-retries=1"), "{h}");
         assert!(h.contains("corrupt-restores=2"), "{h}");
         assert!(h.contains("DEGRADED"), "{h}");
-        assert!(s.report().contains("cold-tier"));
+        assert!(s.report().contains("pager-health"));
         assert_eq!(s.cold_bytes_current, 0);
         assert_eq!(s.cold_bytes_peak, 1024, "peak survives the drain");
+    }
+
+    #[test]
+    fn pager_tier_traffic_flows_through_report_and_table() {
+        let m = Metrics::new();
+        assert!(
+            m.snapshot().pager_tiers().is_none(),
+            "a pager that never held a block stays off the report line"
+        );
+        m.record_pager(
+            2048,
+            4096,
+            PagerStats {
+                warm_bytes_peak: 8192,
+                disk_bytes_peak: 4096,
+                block_spills: 5,
+                block_promotes: 3,
+                spill_bytes: 4096,
+                promote_bytes: 2048,
+                prefetch_hits: 3,
+                prefetch_misses: 1,
+                ..Default::default()
+            },
+        );
+        m.record_restore(0, 0.002);
+        m.record_restore(0, 0.004);
+        let s = m.snapshot();
+        let t = s.pager_tiers().unwrap();
+        assert!(t.contains("spill 5blk"), "{t}");
+        assert!(t.contains("promote 3blk"), "{t}");
+        assert!(t.contains("prefetch 3h/1m"), "{t}");
+        assert!(t.contains("stall 0.0030s/restore"), "{t}");
+        assert!(s.report().contains("pager warm"));
+        assert_eq!(s.restore_stall_s.len(), 2);
+
+        // restore-stall sits alongside the latency rows.
+        let rendered = s.summary_table().render();
+        assert!(rendered.contains("restore-stall"));
+
+        let j = s.to_json();
+        assert_eq!(
+            j.at("pager.prefetch_hits").and_then(|v| v.as_usize()),
+            Some(3)
+        );
+        assert_eq!(
+            j.at("pager.warm_bytes_peak").and_then(|v| v.as_usize()),
+            Some(8192)
+        );
+        assert_eq!(
+            j.at("pager.block_spills").and_then(|v| v.as_usize()),
+            Some(5)
+        );
     }
 
     #[test]
@@ -638,7 +771,7 @@ mod tests {
             "record_completion does not move the kv gauge"
         );
         assert_eq!(
-            j.at("cold_tier.degraded").and_then(|v| v.as_bool()),
+            j.at("pager.degraded").and_then(|v| v.as_bool()),
             Some(false)
         );
         // The whole thing round-trips through the hand-rolled parser —
@@ -652,12 +785,12 @@ mod tests {
     }
 
     #[test]
-    fn cold_tier_counters_track_peak() {
+    fn pager_counters_track_peak() {
         let m = Metrics::new();
         m.record_preemption(4096);
         m.record_preemption(10240);
-        m.record_restore(6144);
-        m.record_restore(0);
+        m.record_restore(6144, 0.001);
+        m.record_restore(0, 0.0);
         let s = m.snapshot();
         assert_eq!(s.preemptions, 2);
         assert_eq!(s.restores, 2);

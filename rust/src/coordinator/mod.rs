@@ -65,10 +65,11 @@
 //!   `submit_wait` can never hang.
 //! * **Budget refund on every exit.** Retiring, failing, or reaping a
 //!   sequence drops its backend (hot KV bytes) and/or discards its
-//!   cold-tier blob in the same round; once the plane drains, committed
-//!   KV bytes and cold-tier residency both read zero.
+//!   parked pager blocks in the same round; once the plane drains,
+//!   committed KV bytes and pager residency (warm + disk) both read
+//!   zero.
 //! * **Faults are contained to the sequence they hit.** A corrupt or
-//!   unreadable cold-tier blob fails that one restore (the worker
+//!   unreadable parked snapshot fails that one restore (the worker
 //!   `fail_swapped`s it and keeps the round); a failing spill *disk*
 //!   degrades the tier to memory rather than failing preemptions; a
 //!   backend-construction error fails one admission. Co-scheduled
@@ -116,20 +117,26 @@
 //!   KV state; still-queued ones re-run from the prompt).
 //! * **Stats** — `GET /stats` returns the full [`MetricsSnapshot`] as
 //!   JSON (`requests{completed,failed,expired,cancelled,shed,drained}`,
-//!   latency quantiles, `kv`, `cold_tier`, `prefix_cache`), plus the
-//!   live `draining` flag and `inflight` gauge.
+//!   latency quantiles, `kv`, `pager` with per-tier occupancy, and
+//!   `prefix_cache`), plus the live `draining` flag and `inflight`
+//!   gauge.
 //!
-//! Preemption is built on sequence state migration:
+//! Preemption is built on sequence state migration across a
+//! **multi-tier memory hierarchy**:
 //! [`crate::kvcache::KvCachePolicy::snapshot`] serializes the cache in
 //! its **compressed** representation (≈ 20% of the hot footprint for
-//! CSKV) with a CRC-32 integrity footer (snapshot codec v2), the
-//! [`coldtier::ColdTier`] parks it in memory or spills it to disk with
-//! bounded-backoff retries, and restore resumes the generation
-//! **bit-identically** — the engine rebuilds its decode views through
-//! the existing `sync_view` path. [`Metrics`] records queue waits,
-//! preemption/restore counts, cold-tier bytes and health, per-outcome
-//! TTFT and retirement order; `bench_perf_scheduling` measures the
-//! fleet-level effect.
+//! CSKV) with a CRC-32 integrity footer (snapshot codec v2); the
+//! [`pager::Pager`] splits it into independently stored block runs that
+//! park in a budgeted warm RAM tier and spill — lowest attention-mass
+//! first — to disk (`--hot-kb` / `--warm-kb` / `--disk-dir`). A
+//! background thread prefetches the blocks the next round's resumes
+//! will need so restores hide behind the current decode round, and
+//! restore resumes the generation **bit-identically** — the engine
+//! rebuilds its decode views through the existing `sync_view` path.
+//! [`Metrics`] records queue waits, preemption/restore counts,
+//! per-tier occupancy and pager health, restore-stall time,
+//! per-outcome TTFT and retirement order; `bench_perf_scheduling` and
+//! `bench_perf_paging` measure the fleet-level effect.
 //!
 //! * [`backend`] — per-sequence execution backends: the Rust reference
 //!   engine (any [`crate::kvcache::KvCachePolicy`]) and helpers, plus
@@ -138,8 +145,10 @@
 //!   `decode_full` / `decode_cskv_r*` artifacts via PJRT, including
 //!   their serialized snapshot forms.
 //! * [`scheduler`] — the control-plane trait and the three policies.
-//! * [`coldtier`] — the blob store for preempted sequence state
-//!   (retry/degrade semantics, [`coldtier::ColdTierStats`]).
+//! * [`pager`] — the multi-tier block store for preempted sequence
+//!   state: warm/disk budgets, attention-aware eviction scoring,
+//!   prefetch-overlapped restores, retry/degrade semantics
+//!   ([`pager::PagerStats`]).
 //! * [`server`] — the coordinator thread and the scheduling rounds,
 //!   plus graceful drain and the [`DrainBundle`] migration codec.
 //! * [`http`] — the std-only HTTP/1.1 + SSE front-end (`cskv serve`).
@@ -147,16 +156,16 @@
 //!   [`request::CancelToken`], streaming/resume hooks) and counters.
 
 pub mod backend;
-pub mod coldtier;
 pub mod http;
 pub mod metrics;
+pub mod pager;
 pub mod pjrt_backend;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use backend::{RustSequenceBackend, SequenceBackend, ThrottledBackend};
-pub use coldtier::{ColdTier, ColdTierStats};
+pub use pager::{EvictionScoring, Pager, PagerConfig, PagerStats};
 pub use http::{parse_listen, resume_bundle, serve, HttpConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{CancelToken, Request, Response, DRAINED};

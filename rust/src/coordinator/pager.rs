@@ -1,0 +1,1015 @@
+//! Attention-aware multi-tier pager for preempted sequence state.
+//!
+//! The memory hierarchy has three tiers:
+//!
+//! * **hot** — the policy's own cache (f32 / int4), budgeted by the
+//!   coordinator's KV admission pre-charge (`--hot-kb`, alias of the
+//!   original `--kv-budget-kb`);
+//! * **warm** — this pager's RAM store of **encoded** block runs
+//!   (`--warm-kb`): a preempted sequence's snapshot is split into
+//!   [`SnapshotBlock`] runs (byte ranges of the canonical encoding,
+//!   each framed with its own CRC-32) that park here at the snapshot's
+//!   compressed size;
+//! * **disk** — one file per block (`<dir>/seq-<id>.blk<index>`,
+//!   `--disk-dir`), holding whatever the warm budget cannot.
+//!
+//! **Eviction-scoring contract.** When the warm tier is over budget the
+//! pager spills the *globally lowest-scored* warm block (ties broken by
+//! sequence id, then block index — deterministic across runs). A
+//! block's score comes from the policy's accumulated attention mass
+//! ([`crate::kvcache::KvCachePolicy::attention_profile`], H2O's
+//! heavy-hitter scores) mapped onto the block's byte span: every
+//! policy's payload stores each layer's rows in token order, so a
+//! block's byte-offset fraction tracks its token-position fraction, and
+//! the block scores the **mean mass over that token span**. Sequences
+//! without a profile — and every sequence under
+//! [`EvictionScoring::Age`], the A/B baseline — score by relative
+//! position instead (later history hotter, StreamingLLM-style recency).
+//! Scores order eviction only; they never affect restored bytes — a
+//! take reassembles all runs and re-verifies the snapshot's end-to-end
+//! CRC, so token streams stay bit-identical to a never-preempted run
+//! regardless of where the blocks sat.
+//!
+//! **Prefetch/overlap.** A background restore thread reads the disk
+//! blocks the scheduler expects to resume next round
+//! ([`Pager::prefetch`]) into a landing zone, so the decode round hides
+//! the I/O; [`Pager::take`] consumes landed blocks for free
+//! (`prefetch_hits`) and falls back to a synchronous retried read for
+//! anything missing or failed (`prefetch_misses`, stall time in
+//! [`PagerStats::restore_stall_s`]). Prefetch performs I/O only — a
+//! missed, failed, or never-issued prefetch changes latency, never
+//! bytes.
+//!
+//! **Fault hardening** (carried over from the PR 4 cold tier, points
+//! renamed `pager.write` / `pager.read`): spill writes and synchronous
+//! reads retry with bounded backoff; an exhausted write keeps the block
+//! warm (over budget if need be — parked state is never dropped, so
+//! admission cannot deadlock on a dead disk) and a persistent streak
+//! degrades the disk tier entirely; the prefetch thread does a single
+//! attempt and leaves retrying to the synchronous fallback; a blob that
+//! reassembles corrupt fails only that sequence's take. The
+//! [`FaultInjector`] points `pager.write` / `pager.read` /
+//! `snapshot.corrupt` are how `rust/tests/chaos_serving.rs` schedules
+//! deterministic faults into all of this.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kvcache::snapshot::{merge_blocks, split_blocks, SnapshotBlock};
+use crate::kvcache::KvSnapshot;
+use crate::util::faults::FaultInjector;
+
+/// Attempts per spill write / synchronous read (1 initial + retries).
+const IO_ATTEMPTS: u32 = 3;
+/// Backoff before retry k (1-based) is `BACKOFF_BASE_MS << (k - 1)` ms.
+const BACKOFF_BASE_MS: u64 = 1;
+/// Consecutive exhausted-retry writes before the disk tier degrades.
+const DEGRADE_STREAK: u32 = 2;
+/// Default split granularity: small enough that a long sequence yields
+/// tens of independently evictable runs, large enough that per-block
+/// framing (20 bytes) and per-file syscalls stay noise.
+pub const DEFAULT_BLOCK_BYTES: usize = 16 * 1024;
+/// Upper bound on waiting for an in-flight prefetch before giving up
+/// and re-reading synchronously (guards against a dead worker thread).
+const PREFETCH_WAIT_CAP: Duration = Duration::from_secs(10);
+
+/// How spill priority is computed. `Attention` is the default;
+/// `Age` is the A/B baseline `bench_perf_paging` compares against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionScoring {
+    /// Attention mass where the policy tracks it, position otherwise.
+    #[default]
+    Attention,
+    /// Relative token position only (later history hotter).
+    Age,
+}
+
+impl EvictionScoring {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "attention" => Ok(EvictionScoring::Attention),
+            "age" => Ok(EvictionScoring::Age),
+            other => anyhow::bail!("unknown eviction scoring '{other}' (attention | age)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionScoring::Attention => "attention",
+            EvictionScoring::Age => "age",
+        }
+    }
+}
+
+/// Tier shape and knobs. [`PagerConfig::default`] reproduces the PR 4
+/// cold-tier behavior: no disk dir and no warm budget parks everything
+/// in RAM; a disk dir with no warm budget spills everything to disk.
+#[derive(Clone, Debug)]
+pub struct PagerConfig {
+    /// Disk tier directory (`--disk-dir`). `None` disables the disk
+    /// tier; the warm budget then cannot be enforced (blocks park warm
+    /// over budget rather than being dropped).
+    pub disk_dir: Option<PathBuf>,
+    /// Warm (RAM) tier budget in bytes (`--warm-kb`). `None` means
+    /// unbounded when there is no disk tier, and **zero** when there is
+    /// one — i.e. a bare `--disk-dir` spills whole sequences, exactly
+    /// like the old `--cold-tier`.
+    pub warm_budget_bytes: Option<usize>,
+    /// Split granularity for block runs.
+    pub block_bytes: usize,
+    /// Spill-priority mode.
+    pub scoring: EvictionScoring,
+    /// Run the background prefetch thread. Off = every disk restore is
+    /// synchronous (the bench's baseline).
+    pub prefetch: bool,
+}
+
+impl Default for PagerConfig {
+    fn default() -> Self {
+        PagerConfig {
+            disk_dir: None,
+            warm_budget_bytes: None,
+            block_bytes: DEFAULT_BLOCK_BYTES,
+            scoring: EvictionScoring::Attention,
+            prefetch: true,
+        }
+    }
+}
+
+/// Pager health counters, mirrored into [`crate::coordinator::Metrics`]
+/// once per scheduling round. All values are cumulative absolutes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PagerStats {
+    /// Spill-write attempts that failed (retried, or — budget exhausted
+    /// — the block stays warm).
+    pub spill_retries: u64,
+    /// Synchronous read attempts that failed, plus prefetch reads whose
+    /// single attempt failed (observed at take time).
+    pub read_retries: u64,
+    /// Sequences whose reassembled snapshot failed checksum/decode —
+    /// each fails exactly one sequence, never the round.
+    pub corrupt_restores: u64,
+    /// True once the disk tier is out of play (unusable dir at
+    /// construction, or a persistent write-fault streak).
+    pub degraded: bool,
+    /// Block runs spilled warm → disk / promoted disk → hot, and the
+    /// bytes they moved.
+    pub block_spills: u64,
+    pub block_promotes: u64,
+    pub spill_bytes: u64,
+    pub promote_bytes: u64,
+    /// Disk blocks consumed from the prefetch landing zone vs. restored
+    /// synchronously.
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    /// Wall-clock the pager spent blocking takes on disk I/O (sync
+    /// reads + waits for in-flight prefetches) — what prefetch exists
+    /// to hide.
+    pub restore_stall_s: f64,
+    /// Tier occupancy high-water marks.
+    pub warm_bytes_peak: usize,
+    pub disk_bytes_peak: usize,
+}
+
+enum BlockLoc {
+    /// At-rest encoded form ([`SnapshotBlock::encode`]) held in RAM.
+    Warm(Vec<u8>),
+    /// Spilled to this file.
+    Disk(PathBuf),
+}
+
+struct BlockSlot {
+    score: f32,
+    /// At-rest encoded size (what both tiers account).
+    bytes: usize,
+    loc: BlockLoc,
+}
+
+struct SeqEntry {
+    blocks: Vec<BlockSlot>,
+}
+
+enum Fetch {
+    Pending,
+    Done(Vec<u8>),
+    Failed,
+}
+
+/// Shared landing zone between the prefetch thread and `take`.
+struct Landing {
+    slots: Mutex<HashMap<(u64, usize), Fetch>>,
+    cv: Condvar,
+}
+
+enum Claim {
+    Absent,
+    Done(Vec<u8>),
+    Failed,
+}
+
+impl Landing {
+    /// Consume the landing slot for one block, waiting out an in-flight
+    /// read (bounded by [`PREFETCH_WAIT_CAP`]).
+    fn claim(&self, key: (u64, usize)) -> Claim {
+        let mut m = self.slots.lock().unwrap();
+        let deadline = Instant::now() + PREFETCH_WAIT_CAP;
+        loop {
+            match m.get(&key) {
+                None => return Claim::Absent,
+                Some(Fetch::Pending) => {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        m.remove(&key);
+                        return Claim::Absent;
+                    }
+                    m = self.cv.wait_timeout(m, left).unwrap().0;
+                }
+                Some(Fetch::Done(_)) => match m.remove(&key) {
+                    Some(Fetch::Done(data)) => return Claim::Done(data),
+                    _ => unreachable!("checked above under the same lock"),
+                },
+                Some(Fetch::Failed) => {
+                    m.remove(&key);
+                    return Claim::Failed;
+                }
+            }
+        }
+    }
+
+    /// Prefetch-thread side: deliver a result, unless the slot was
+    /// already abandoned (taken or discarded meanwhile).
+    fn complete(&self, key: (u64, usize), result: Result<Vec<u8>, ()>) {
+        let mut m = self.slots.lock().unwrap();
+        if let Some(slot) = m.get_mut(&key) {
+            *slot = match result {
+                Ok(data) => Fetch::Done(data),
+                Err(()) => Fetch::Failed,
+            };
+            self.cv.notify_all();
+        }
+    }
+
+    fn forget(&self, key: (u64, usize)) {
+        self.slots.lock().unwrap().remove(&key);
+    }
+}
+
+/// Background restore thread + its job queue and landing zone.
+struct Prefetcher {
+    jobs: mpsc::Sender<(u64, usize, PathBuf)>,
+    landing: Arc<Landing>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    fn start(faults: FaultInjector) -> Self {
+        let landing = Arc::new(Landing {
+            slots: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
+        let (jobs, rx) = mpsc::channel::<(u64, usize, PathBuf)>();
+        let zone = Arc::clone(&landing);
+        let handle = std::thread::Builder::new()
+            .name("cskv-pager-prefetch".into())
+            .spawn(move || {
+                // One attempt per block: a fault here degrades to the
+                // synchronous (retried) path in `take`, never corrupts.
+                for (id, index, path) in rx {
+                    let read = faults
+                        .trip("pager.read")
+                        .and_then(|()| std::fs::read(&path).map_err(anyhow::Error::from));
+                    zone.complete((id, index), read.map_err(|_| ()));
+                }
+            })
+            .expect("spawn pager prefetch thread");
+        Prefetcher {
+            jobs,
+            landing,
+            handle: Some(handle),
+        }
+    }
+
+    /// Queue one block read unless it is already in flight or landed.
+    fn request(&self, key: (u64, usize), path: PathBuf) {
+        let mut m = self.landing.slots.lock().unwrap();
+        if m.contains_key(&key) {
+            return;
+        }
+        m.insert(key, Fetch::Pending);
+        drop(m);
+        if self.jobs.send((key.0, key.1, path)).is_err() {
+            self.landing.forget(key);
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Closing the channel ends the thread after the queued jobs.
+        let (dead, _) = mpsc::channel();
+        self.jobs = dead;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Block store for swapped-out sequence state, keyed by request id.
+/// (The cross-tier high-water mark lives in
+/// [`crate::coordinator::Metrics`], fed by [`Pager::bytes_resident`].)
+pub struct Pager {
+    dir: Option<PathBuf>,
+    warm_budget: usize,
+    block_bytes: usize,
+    scoring: EvictionScoring,
+    /// BTreeMap so eviction tie-breaks (and tests) are deterministic.
+    seqs: BTreeMap<u64, SeqEntry>,
+    warm_bytes: usize,
+    disk_bytes: usize,
+    faults: FaultInjector,
+    stats: PagerStats,
+    /// Consecutive block spills whose disk write exhausted its retries.
+    write_fail_streak: u32,
+    prefetcher: Option<Prefetcher>,
+}
+
+impl Pager {
+    pub fn new(cfg: PagerConfig) -> Self {
+        Pager::with_faults(cfg, FaultInjector::none())
+    }
+
+    /// [`Pager::new`] with a fault-injection registry threaded into
+    /// every disk write/read (sync and prefetch) and the pre-decode
+    /// corruption site.
+    pub fn with_faults(cfg: PagerConfig, faults: FaultInjector) -> Self {
+        let mut stats = PagerStats::default();
+        let dir = cfg.disk_dir.and_then(|d| match std::fs::create_dir_all(&d) {
+            Ok(()) => Some(d),
+            Err(e) => {
+                crate::log_error!("pager disk dir {} unusable ({e}); warm tier only", d.display());
+                stats.degraded = true;
+                None
+            }
+        });
+        let warm_budget = cfg
+            .warm_budget_bytes
+            .unwrap_or(if dir.is_some() { 0 } else { usize::MAX });
+        let prefetcher = (cfg.prefetch && dir.is_some())
+            .then(|| Prefetcher::start(faults.clone()));
+        Pager {
+            dir,
+            warm_budget,
+            block_bytes: cfg.block_bytes.max(1),
+            scoring: cfg.scoring,
+            seqs: BTreeMap::new(),
+            warm_bytes: 0,
+            disk_bytes: 0,
+            faults,
+            stats,
+            write_fail_streak: 0,
+            prefetcher,
+        }
+    }
+
+    fn block_path(dir: &Path, id: u64, index: usize) -> PathBuf {
+        dir.join(format!("seq-{id}.blk{index}"))
+    }
+
+    /// Check up front that `dir` can hold spill files: create it and
+    /// round-trip a probe file. Lets the `serve` CLI reject a bad
+    /// `--disk-dir` with a clear error instead of silently degrading.
+    pub fn probe_dir(dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+        let probe = dir.join(".cskv-probe");
+        std::fs::write(&probe, b"probe")
+            .map_err(|e| anyhow::anyhow!("cannot write to {}: {e}", dir.display()))?;
+        std::fs::remove_file(&probe)
+            .map_err(|e| anyhow::anyhow!("cannot clean up probe in {}: {e}", dir.display()))?;
+        Ok(())
+    }
+
+    /// Map per-token attention mass onto `total` byte blocks (mean mass
+    /// over each block's token span); position fallback otherwise.
+    fn score_blocks(&self, total: usize, profile: Option<&[f32]>) -> Vec<f32> {
+        if let (EvictionScoring::Attention, Some(mass)) = (self.scoring, profile) {
+            if !mass.is_empty() {
+                let t = mass.len();
+                return (0..total)
+                    .map(|i| {
+                        let lo = i * t / total;
+                        let hi = ((i + 1) * t / total).clamp(lo + 1, t);
+                        mass[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
+                    })
+                    .collect();
+            }
+        }
+        // Later history hotter: recency, the only signal available.
+        (0..total).map(|i| (i + 1) as f32 / total as f32).collect()
+    }
+
+    fn note_peaks(&mut self) {
+        self.stats.warm_bytes_peak = self.stats.warm_bytes_peak.max(self.warm_bytes);
+        self.stats.disk_bytes_peak = self.stats.disk_bytes_peak.max(self.disk_bytes);
+    }
+
+    /// One spill write with bounded retry/backoff. Each attempt
+    /// consults the `pager.write` fault point before the filesystem.
+    fn write_with_retry(&mut self, path: &Path, data: &[u8]) -> anyhow::Result<()> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..IO_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(BACKOFF_BASE_MS << (attempt - 1)));
+            }
+            let res = self.faults.trip("pager.write").and_then(|()| {
+                std::fs::write(path, data)
+                    .map_err(|e| anyhow::anyhow!("pager spill to {}: {e}", path.display()))
+            });
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    self.stats.spill_retries += 1;
+                    crate::log_warn!(
+                        "pager write attempt {}/{IO_ATTEMPTS} failed: {e:#}",
+                        attempt + 1
+                    );
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("IO_ATTEMPTS > 0"))
+    }
+
+    /// One synchronous block read with bounded retry/backoff
+    /// (`pager.read` fault point per attempt).
+    fn read_with_retry(&mut self, path: &Path) -> anyhow::Result<Vec<u8>> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..IO_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(BACKOFF_BASE_MS << (attempt - 1)));
+            }
+            let res = self.faults.trip("pager.read").and_then(|()| {
+                std::fs::read(path)
+                    .map_err(|e| anyhow::anyhow!("pager read {}: {e}", path.display()))
+            });
+            match res {
+                Ok(data) => return Ok(data),
+                Err(e) => {
+                    self.stats.read_retries += 1;
+                    crate::log_warn!(
+                        "pager read attempt {}/{IO_ATTEMPTS} failed: {e:#}",
+                        attempt + 1
+                    );
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("IO_ATTEMPTS > 0"))
+    }
+
+    /// Spill the globally lowest-scored warm blocks until the warm tier
+    /// fits its budget. A write that exhausts its retries leaves the
+    /// block warm (over budget — parked state is never dropped) and
+    /// stops this pass; a persistent streak degrades the disk tier.
+    fn enforce_warm_budget(&mut self) {
+        while self.warm_bytes > self.warm_budget {
+            let Some(dir) = self.dir.clone() else { return };
+            // Globally lowest (score, id, index) among warm blocks.
+            let victim = self
+                .seqs
+                .iter()
+                .flat_map(|(&id, e)| {
+                    e.blocks
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| matches!(s.loc, BlockLoc::Warm(_)))
+                        .map(move |(i, s)| (s.score, id, i))
+                })
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+            let Some((_, id, index)) = victim else { return };
+            let path = Self::block_path(&dir, id, index);
+            let slot = &self.seqs[&id].blocks[index];
+            let (bytes, data) = match &slot.loc {
+                BlockLoc::Warm(data) => (slot.bytes, data.clone()),
+                BlockLoc::Disk(_) => unreachable!("victim filter keeps warm blocks only"),
+            };
+            match self.write_with_retry(&path, &data) {
+                Ok(()) => {
+                    self.write_fail_streak = 0;
+                    let slot = self
+                        .seqs
+                        .get_mut(&id)
+                        .expect("victim entry")
+                        .blocks
+                        .get_mut(index)
+                        .expect("victim block");
+                    slot.loc = BlockLoc::Disk(path);
+                    self.warm_bytes -= bytes;
+                    self.disk_bytes += bytes;
+                    self.stats.block_spills += 1;
+                    self.stats.spill_bytes += bytes as u64;
+                    self.note_peaks();
+                }
+                Err(e) => {
+                    self.write_fail_streak += 1;
+                    crate::log_error!(
+                        "pager spill of seq {id} block {index} failed after {IO_ATTEMPTS} \
+                         attempts ({e:#}); block stays warm"
+                    );
+                    if self.write_fail_streak >= DEGRADE_STREAK {
+                        crate::log_error!(
+                            "pager disk tier degraded after {} consecutive write failures; \
+                             blocks stay warm",
+                            self.write_fail_streak
+                        );
+                        self.dir = None;
+                        self.prefetcher = None;
+                        self.stats.degraded = true;
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Park `snap` under `id`: split into block runs, score them with
+    /// `profile` (the sequence's attention mass, if its policy tracks
+    /// any), land them warm, then spill down to the warm budget.
+    /// Returns the parked byte size. The only error left is the
+    /// double-park programming bug — I/O trouble degrades, never fails
+    /// a preemption.
+    pub fn put(&mut self, id: u64, snap: &KvSnapshot, profile: Option<&[f32]>) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            !self.seqs.contains_key(&id),
+            "pager already holds sequence {id}"
+        );
+        let encoded = snap.encode();
+        let runs = split_blocks(&encoded, self.block_bytes);
+        let scores = self.score_blocks(runs.len(), profile);
+        let mut total = 0usize;
+        let blocks: Vec<BlockSlot> = runs
+            .iter()
+            .zip(&scores)
+            .map(|(run, &score)| {
+                let at_rest = run.encode();
+                total += at_rest.len();
+                BlockSlot {
+                    score,
+                    bytes: at_rest.len(),
+                    loc: BlockLoc::Warm(at_rest),
+                }
+            })
+            .collect();
+        self.seqs.insert(id, SeqEntry { blocks });
+        self.warm_bytes += total;
+        self.note_peaks();
+        self.enforce_warm_budget();
+        Ok(total)
+    }
+
+    /// Queue background reads for these sequences' disk blocks, so a
+    /// following [`Pager::take`] finds them landed. I/O only — calling
+    /// this for a sequence that never resumes wastes a read, nothing
+    /// more.
+    pub fn prefetch(&mut self, ids: &[u64]) {
+        let Some(p) = &self.prefetcher else { return };
+        for &id in ids {
+            let Some(entry) = self.seqs.get(&id) else { continue };
+            for (index, slot) in entry.blocks.iter().enumerate() {
+                if let BlockLoc::Disk(path) = &slot.loc {
+                    p.request((id, index), path.clone());
+                }
+            }
+        }
+    }
+
+    /// Fetch one disk block: landed prefetch if available, synchronous
+    /// retried read otherwise. Accumulates stall time for every path
+    /// that blocks the caller.
+    fn fetch_disk_block(&mut self, id: u64, index: usize, path: &Path) -> anyhow::Result<Vec<u8>> {
+        if let Some(p) = &self.prefetcher {
+            let started = Instant::now();
+            let claim = p.landing.claim((id, index));
+            self.stats.restore_stall_s += started.elapsed().as_secs_f64();
+            match claim {
+                Claim::Done(data) => {
+                    self.stats.prefetch_hits += 1;
+                    return Ok(data);
+                }
+                Claim::Failed => {
+                    // The single prefetch attempt failed; the retried
+                    // synchronous path below is the degrade.
+                    self.stats.read_retries += 1;
+                }
+                Claim::Absent => {}
+            }
+        }
+        self.stats.prefetch_misses += 1;
+        let started = Instant::now();
+        let read = self.read_with_retry(path);
+        self.stats.restore_stall_s += started.elapsed().as_secs_f64();
+        read
+    }
+
+    /// Remove and decode the snapshot parked under `id`, promoting its
+    /// disk blocks back. A read or checksum/decode failure errors for
+    /// **this sequence only**: the entry, its landing slots, and every
+    /// spill file are always released, so the caller can fail the one
+    /// sequence and keep serving.
+    pub fn take(&mut self, id: u64) -> anyhow::Result<KvSnapshot> {
+        let entry = self
+            .seqs
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("pager has no sequence {id}"))?;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut runs: Vec<SnapshotBlock> = Vec::with_capacity(entry.blocks.len());
+        for (index, slot) in entry.blocks.into_iter().enumerate() {
+            let at_rest = match slot.loc {
+                BlockLoc::Warm(data) => {
+                    self.warm_bytes -= slot.bytes;
+                    Ok(data)
+                }
+                BlockLoc::Disk(path) => {
+                    self.disk_bytes -= slot.bytes;
+                    let read = self.fetch_disk_block(id, index, &path);
+                    // The entry is already gone from the index, so the
+                    // spill file is deleted on *every* outcome — a
+                    // failed read must not leak an orphan block file.
+                    let _ = std::fs::remove_file(&path);
+                    if read.is_ok() {
+                        self.stats.block_promotes += 1;
+                        self.stats.promote_bytes += slot.bytes as u64;
+                    }
+                    read
+                }
+            };
+            match at_rest.and_then(|b| SnapshotBlock::decode(&b)) {
+                Ok(run) => runs.push(run),
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context(format!("pager blocks for sequence {id} unreadable")));
+        }
+        let mut encoded = merge_blocks(&runs)
+            .map_err(|e| e.context(format!("pager block set for sequence {id}")))?;
+        // Chaos hook: flip a seeded byte right where real bit rot would
+        // land, between the medium and the decoder.
+        self.faults.corrupt("snapshot.corrupt", &mut encoded);
+        match KvSnapshot::decode(&encoded) {
+            Ok(snap) => Ok(snap),
+            Err(e) => {
+                self.stats.corrupt_restores += 1;
+                Err(e.context(format!("pager blob for sequence {id} corrupt")))
+            }
+        }
+    }
+
+    /// Drop everything parked under `id` without decoding — how
+    /// cancelled or deadline-expired sequences release their parked
+    /// state immediately. Returns whether anything was held.
+    pub fn discard(&mut self, id: u64) -> bool {
+        match self.seqs.remove(&id) {
+            Some(entry) => {
+                for (index, slot) in entry.blocks.into_iter().enumerate() {
+                    match slot.loc {
+                        BlockLoc::Warm(_) => self.warm_bytes -= slot.bytes,
+                        BlockLoc::Disk(path) => {
+                            self.disk_bytes -= slot.bytes;
+                            if let Some(p) = &self.prefetcher {
+                                p.landing.forget((id, index));
+                            }
+                            let _ = std::fs::remove_file(&path);
+                        }
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of parked sequences.
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Bytes currently parked across both tiers.
+    pub fn bytes_resident(&self) -> usize {
+        self.warm_bytes + self.disk_bytes
+    }
+
+    /// Warm (RAM) tier occupancy.
+    pub fn warm_bytes_resident(&self) -> usize {
+        self.warm_bytes
+    }
+
+    /// Disk tier occupancy.
+    pub fn disk_bytes_resident(&self) -> usize {
+        self.disk_bytes
+    }
+
+    /// Cumulative health counters.
+    pub fn stats(&self) -> PagerStats {
+        self.stats
+    }
+}
+
+impl Drop for Pager {
+    fn drop(&mut self) {
+        // Stop the prefetch thread before sweeping, so it cannot race
+        // the file removals below.
+        self.prefetcher = None;
+        for entry in self.seqs.values() {
+            for slot in &entry.blocks {
+                if let BlockLoc::Disk(path) = &slot.loc {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::snapshot::tags;
+    use crate::util::faults::FaultMode;
+
+    fn snap(fill: u8, n: usize) -> KvSnapshot {
+        KvSnapshot::new(tags::FULL, vec![fill; n])
+    }
+
+    fn tmp(label: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cskv-pager-{label}-{}", std::process::id()))
+    }
+
+    fn cfg(dir: Option<PathBuf>) -> PagerConfig {
+        PagerConfig {
+            disk_dir: dir,
+            block_bytes: 64,
+            ..PagerConfig::default()
+        }
+    }
+
+    fn counters_clean(s: &PagerStats) {
+        assert_eq!(s.spill_retries, 0);
+        assert_eq!(s.read_retries, 0);
+        assert_eq!(s.corrupt_restores, 0);
+        assert!(!s.degraded);
+    }
+
+    #[test]
+    fn memory_put_take_roundtrip_and_accounting() {
+        let mut pager = Pager::new(cfg(None));
+        assert!(pager.is_empty());
+        let b1 = pager.put(1, &snap(7, 300), None).unwrap();
+        let b2 = pager.put(2, &snap(9, 40), None).unwrap();
+        assert_eq!(pager.len(), 2);
+        assert_eq!(pager.bytes_resident(), b1 + b2);
+        assert_eq!(pager.warm_bytes_resident(), b1 + b2, "no disk tier: all warm");
+        assert_eq!(pager.disk_bytes_resident(), 0);
+        // Double-park is a bug, not an overwrite.
+        assert!(pager.put(1, &snap(0, 1), None).is_err());
+        let s = pager.take(1).unwrap();
+        assert_eq!(s.payload(), [7u8; 300]);
+        assert_eq!(pager.bytes_resident(), b2);
+        assert!(pager.take(1).is_err(), "take removes");
+        pager.take(2).unwrap();
+        assert!(pager.is_empty());
+        assert_eq!(pager.bytes_resident(), 0);
+        counters_clean(&pager.stats());
+        assert_eq!(pager.stats().block_spills, 0, "nothing hit disk");
+    }
+
+    #[test]
+    fn disk_spill_roundtrip_and_cleanup() {
+        let dir = tmp("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            // Bare disk dir = warm budget 0: whole sequences spill,
+            // the old cold-tier behavior.
+            let mut pager = Pager::new(cfg(Some(dir.clone())));
+            pager.put(5, &snap(3, 300), None).unwrap();
+            assert_eq!(pager.warm_bytes_resident(), 0);
+            assert!(pager.disk_bytes_resident() > 0);
+            let files = [dir.join("seq-5.blk0"), dir.join("seq-5.blk4")];
+            assert!(files.iter().all(|f| f.exists()), "blocks spilled to disk");
+            let s = pager.take(5).unwrap();
+            assert_eq!(s.tag(), tags::FULL);
+            assert_eq!(s.payload(), [3u8; 300]);
+            assert!(files.iter().all(|f| !f.exists()), "take deletes spill files");
+            let st = pager.stats();
+            assert_eq!(st.block_spills, st.block_promotes);
+            assert_eq!(st.spill_bytes, st.promote_bytes);
+            assert!(st.disk_bytes_peak > 0);
+            // Blocks left parked are swept on drop.
+            pager.put(6, &snap(1, 8), None).unwrap();
+            assert!(dir.join("seq-6.blk0").exists());
+        }
+        assert!(!dir.join("seq-6.blk0").exists(), "drop sweeps leftovers");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_budget_keeps_high_scored_blocks_warm() {
+        let dir = tmp("budget");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = cfg(Some(dir.clone()));
+        // Fits roughly one of the two sequences.
+        c.warm_budget_bytes = Some(450);
+        let mut pager = Pager::new(c);
+        // Seq 1 carries high attention mass everywhere, seq 2 low.
+        pager.put(1, &snap(1, 300), Some(&[9.0; 32])).unwrap();
+        pager.put(2, &snap(2, 300), Some(&[0.1; 32])).unwrap();
+        assert!(pager.warm_bytes_resident() <= 450, "budget enforced");
+        assert!(!dir.join("seq-1.blk0").exists(), "high-mass blocks stay warm");
+        assert!(dir.join("seq-2.blk0").exists(), "low-mass blocks spilled");
+        assert_eq!(pager.take(1).unwrap().payload(), [1u8; 300]);
+        assert_eq!(pager.take(2).unwrap().payload(), [2u8; 300]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn attention_scoring_spills_low_mass_spans_age_spills_early_history() {
+        let dir = tmp("scoring");
+        let _ = std::fs::remove_dir_all(&dir);
+        // Mass concentrated at the START of the sequence.
+        let mut mass = vec![0.0f32; 32];
+        for m in mass.iter_mut().take(16) {
+            *m = 5.0;
+        }
+        let run = |scoring: EvictionScoring, sub: &str| {
+            let d = dir.join(sub);
+            let mut c = cfg(Some(d.clone()));
+            c.warm_budget_bytes = Some(200);
+            c.scoring = scoring;
+            let mut pager = Pager::new(c);
+            pager.put(1, &snap(4, 300), Some(&mass)).unwrap();
+            let spilled: Vec<bool> = (0..5)
+                .map(|i| Pager::block_path(&d, 1, i).exists())
+                .collect();
+            assert_eq!(pager.take(1).unwrap().payload(), [4u8; 300]);
+            spilled
+        };
+        let attention = run(EvictionScoring::Attention, "attn");
+        let age = run(EvictionScoring::Age, "age");
+        // Attention parks the low-mass TAIL cold; age parks the HEAD.
+        assert!(attention[4] && !attention[0], "attention spills tail: {attention:?}");
+        assert!(age[0] && !age[4], "age spills head: {age:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetch_lands_blocks_and_take_consumes_them() {
+        let dir = tmp("prefetch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut pager = Pager::new(cfg(Some(dir.clone())));
+        pager.put(1, &snap(6, 500), None).unwrap();
+        let n_blocks = 500usize.div_ceil(64) + 1; // payload + header/footer
+        pager.prefetch(&[1]);
+        // Claim waits out in-flight reads, so no sleep is needed: every
+        // disk block must resolve as a hit, not a sync fallback.
+        assert_eq!(pager.take(1).unwrap().payload(), [6u8; 500]);
+        let st = pager.stats();
+        assert_eq!(st.prefetch_misses, 0, "all blocks landed or were awaited");
+        assert!(st.prefetch_hits >= n_blocks as u64 - 1, "{st:?}");
+        assert_eq!(st.read_retries, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetch_read_fault_degrades_to_synchronous_restore() {
+        let dir = tmp("prefetch-fault");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(11);
+        let mut pager = Pager::with_faults(cfg(Some(dir.clone())), faults.clone());
+        pager.put(1, &snap(2, 40), None).unwrap(); // single block
+        faults.arm("pager.read", FaultMode::Nth(1));
+        pager.prefetch(&[1]);
+        // The one prefetch attempt faults; take falls back to the
+        // synchronous retried read and still round-trips bit-exactly.
+        assert_eq!(pager.take(1).unwrap().payload(), [2u8; 40]);
+        let st = pager.stats();
+        assert!(st.read_retries >= 1, "failed prefetch observed: {st:?}");
+        assert_eq!(st.prefetch_hits, 0);
+        assert_eq!(st.prefetch_misses, 1);
+        assert_eq!(st.corrupt_restores, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unusable_dir_degrades_and_is_counted() {
+        // A file where the directory should be makes create_dir_all fail.
+        let bogus = tmp("unusable");
+        let _ = std::fs::remove_dir_all(&bogus);
+        std::fs::write(&bogus, b"not a dir").unwrap();
+        let mut pager = Pager::new(cfg(Some(bogus.clone())));
+        assert!(pager.stats().degraded, "construction fallback is observable");
+        pager.put(1, &snap(2, 16), None).unwrap();
+        assert_eq!(pager.take(1).unwrap().payload(), [2u8; 16]);
+        let _ = std::fs::remove_file(&bogus);
+    }
+
+    #[test]
+    fn transient_write_fault_is_retried() {
+        let dir = tmp("wretry");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(1);
+        faults.arm("pager.write", FaultMode::Nth(1));
+        let mut pager = Pager::with_faults(cfg(Some(dir.clone())), faults);
+        pager.put(1, &snap(4, 32), None).unwrap();
+        assert!(dir.join("seq-1.blk0").exists(), "retry landed on disk");
+        assert_eq!(pager.stats().spill_retries, 1);
+        assert!(!pager.stats().degraded);
+        assert_eq!(pager.take(1).unwrap().payload(), [4u8; 32]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_write_faults_degrade_to_warm_without_failing_puts() {
+        let dir = tmp("wdegrade");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(2);
+        faults.arm("pager.write", FaultMode::FromNth(1));
+        let mut pager = Pager::with_faults(cfg(Some(dir.clone())), faults.clone());
+        // First exhausted write: the block stays warm, not yet degraded.
+        pager.put(1, &snap(5, 16), None).unwrap();
+        assert!(!dir.join("seq-1.blk0").exists());
+        assert!(!pager.stats().degraded);
+        assert!(pager.warm_bytes_resident() > 0, "block parked warm over budget");
+        // Second in a row: the disk tier degrades entirely.
+        pager.put(2, &snap(6, 16), None).unwrap();
+        assert!(pager.stats().degraded);
+        let attempts_after_degrade = faults.hits("pager.write");
+        // Degraded pager stops attempting doomed disk I/O entirely.
+        pager.put(3, &snap(7, 16), None).unwrap();
+        assert_eq!(faults.hits("pager.write"), attempts_after_degrade);
+        // Every sequence still round-trips from the warm tier.
+        for id in 1..=3 {
+            assert!(pager.take(id).is_ok(), "seq {id} survived the faulty disk");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_read_fault_fails_only_that_take_and_releases_the_file() {
+        let dir = tmp("rfail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let faults = FaultInjector::seeded(3);
+        let mut c = cfg(Some(dir.clone()));
+        c.prefetch = false; // exercise the pure synchronous path
+        let mut pager = Pager::with_faults(c, faults.clone());
+        pager.put(1, &snap(8, 16), None).unwrap();
+        pager.put(2, &snap(9, 16), None).unwrap();
+        faults.arm("pager.read", FaultMode::FromNth(1));
+        let err = pager.take(1).expect_err("all read attempts fault");
+        assert!(err.to_string().contains("unreadable"), "{err:#}");
+        assert_eq!(pager.stats().read_retries, IO_ATTEMPTS as u64);
+        assert!(!dir.join("seq-1.blk0").exists(), "failed take still cleans up");
+        // The sibling sequence is unaffected once the fault clears.
+        faults.arm("pager.read", FaultMode::Nth(1));
+        assert_eq!(pager.take(2).unwrap().payload(), [9u8; 16], "one retry away");
+        assert!(pager.is_empty());
+        assert_eq!(pager.bytes_resident(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_blob_fails_cleanly_and_is_counted() {
+        let faults = FaultInjector::seeded(4);
+        faults.arm("snapshot.corrupt", FaultMode::Nth(1));
+        let mut pager = Pager::with_faults(cfg(None), faults);
+        pager.put(1, &snap(1, 128), None).unwrap();
+        pager.put(2, &snap(2, 128), None).unwrap();
+        let err = pager.take(1).expect_err("corrupted blob must not decode");
+        assert!(err.to_string().contains("corrupt"), "{err:#}");
+        assert_eq!(pager.stats().corrupt_restores, 1);
+        // Only that sequence: the next take round-trips untouched.
+        assert_eq!(pager.take(2).unwrap().payload(), [2u8; 128]);
+        assert_eq!(pager.bytes_resident(), 0, "failed take refunds accounting");
+    }
+
+    #[test]
+    fn discard_releases_blocks_and_spill_files_without_decoding() {
+        let dir = tmp("discard");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut pager = Pager::new(cfg(Some(dir.clone())));
+        pager.put(7, &snap(3, 200), None).unwrap();
+        assert!(dir.join("seq-7.blk0").exists());
+        assert!(pager.discard(7));
+        assert!(!dir.join("seq-7.blk0").exists());
+        assert!(!dir.join("seq-7.blk1").exists());
+        assert_eq!(pager.bytes_resident(), 0);
+        assert!(!pager.discard(7), "second discard is a no-op");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

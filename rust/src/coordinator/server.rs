@@ -34,13 +34,19 @@
 //!    `committed_bytes`, so the hot tier is never under-accounted for
 //!    long. When the preferred candidate does not fit, a preemptive
 //!    scheduler may swap the lowest-priority active sequence (most
-//!    remaining work) out to the [`super::coldtier::ColdTier`] to fund
+//!    remaining work) out to the [`super::pager::Pager`] to fund
 //!    it. If nothing at all is running, the preferred candidate is
-//!    admitted over budget — the can't-deadlock escape hatch.
+//!    admitted over budget — the can't-deadlock escape hatch. Admission
+//!    also **prices resume cost**: a swapped sequence parked for
+//!    [`STARVATION_ROUNDS`] rounds has its footprint reserved out of
+//!    the headroom the scheduler sees, so a preemption storm cannot
+//!    starve restores behind an endless stream of small admits (the
+//!    escape hatch is untouched — reservation narrows admission, never
+//!    blocks the only runnable work).
 //!    Each admission also performs its [`PrefixCache::lookup`]: the
 //!    longest-prefix match is pinned (refcounted) and carried to the
 //!    prefill round as a [`PrefixSeed`].
-//! 3. **Resume**: swapped-out sequences return from the cold tier
+//! 3. **Resume**: swapped-out sequences return from the pager
 //!    (smallest remaining work first) with whatever budget and batch
 //!    headroom is left *after* admission — so queued work the scheduler
 //!    prefers is never displaced by an eager restore, and a parked long
@@ -49,7 +55,10 @@
 //!    from the policy's own compressed [`crate::kvcache::KvSnapshot`]
 //!    representation (`DecodeView`s rebuild through the normal
 //!    `sync_view` path), and the resumed sequence joins the same
-//!    round's decode.
+//!    round's decode. After resuming, the worker predicts the *next*
+//!    round's resume picks and queues [`super::pager::Pager::prefetch`]
+//!    for their disk blocks, so those reads overlap the decode round
+//!    about to run instead of stalling the following one.
 //! 4. The whole admission round prefills in **one fused pass**
 //!    ([`super::backend::prefill_batch`], or
 //!    [`super::backend::prefill_batch_seeded`] when the prefix cache is
@@ -82,8 +91,8 @@ use std::time::{Duration, Instant};
 use super::backend::{
     decode_batch, prefill_batch, prefill_batch_seeded, BatchScratch, SequenceBackend,
 };
-use super::coldtier::ColdTier;
 use super::metrics::{Completion, Metrics};
+use super::pager::{EvictionScoring, Pager, PagerConfig};
 use super::request::{CancelToken, Request, Response, ResumeSeed, DRAINED};
 use super::scheduler::{ActiveSeq, QueuedSeq, Scheduler, SchedulerKind};
 use crate::kvcache::snapshot::{tags, SnapReader, SnapWriter};
@@ -121,9 +130,21 @@ pub struct CoordinatorConfig {
     /// [`SchedulerKind::Fifo`] (default, the A/B baseline),
     /// [`SchedulerKind::SizeAware`], or [`SchedulerKind::Preemptive`].
     pub scheduler: SchedulerKind,
-    /// Spill directory for cold-tier snapshots (`cskv serve
-    /// --cold-tier <dir>`). `None` parks preempted sequences in memory.
-    pub cold_tier_dir: Option<std::path::PathBuf>,
+    /// Disk tier directory for the pager (`cskv serve --disk-dir <dir>`,
+    /// `--cold-tier` kept as an alias). `None` parks preempted
+    /// sequences in RAM only.
+    pub disk_dir: Option<std::path::PathBuf>,
+    /// Warm (RAM) tier byte budget for parked block runs (`cskv serve
+    /// --warm-kb <n>`). `None` = unbounded without a disk tier, zero
+    /// with one (whole sequences spill — the old cold-tier shape).
+    pub warm_budget_bytes: Option<usize>,
+    /// Spill-priority mode for the pager: attention-mass scoring
+    /// (default) or the age-only A/B baseline.
+    pub pager_scoring: EvictionScoring,
+    /// Run the pager's background prefetch thread (default). `false`
+    /// makes every disk restore synchronous — the overlap A/B baseline
+    /// for `bench_perf_paging`.
+    pub pager_prefetch: bool,
     /// Byte budget for the shared-prefix radix cache (`cskv serve
     /// --prefix-cache-kb <n>`). `None` disables prefix reuse; `Some(0)`
     /// is rejected by the CLI up front (a zero-budget trie could never
@@ -148,7 +169,10 @@ impl Default for CoordinatorConfig {
             threads: 0,
             fused: true,
             scheduler: SchedulerKind::Fifo,
-            cold_tier_dir: None,
+            disk_dir: None,
+            warm_budget_bytes: None,
+            pager_scoring: EvictionScoring::Attention,
+            pager_prefetch: true,
             prefix_cache_bytes: None,
             request_timeout: None,
             faults: FaultInjector::none(),
@@ -179,7 +203,7 @@ struct Active {
     failed: Option<String>,
 }
 
-/// One preempted sequence: its KV state is parked in the cold tier; only
+/// One preempted sequence: its KV state is parked in the pager; only
 /// the request bookkeeping stays resident.
 struct Swapped {
     req: Request,
@@ -190,6 +214,12 @@ struct Swapped {
     tok_latencies: Vec<f64>,
     cost_bytes: usize,
     preemptions: usize,
+    /// Rounds spent parked since the last swap-out. Past
+    /// [`STARVATION_ROUNDS`], admission reserves this sequence's
+    /// footprint out of the headroom it offers the scheduler — the
+    /// resume-cost pricing that keeps preemption storms from starving
+    /// restores.
+    parked_rounds: usize,
 }
 
 /// One admitted-this-round sequence, waiting for the fused prefill.
@@ -600,7 +630,7 @@ struct Worker<'a> {
     cfg: &'a CoordinatorConfig,
     metrics: &'a Metrics,
     scheduler: Box<dyn Scheduler>,
-    tier: ColdTier,
+    pager: Pager,
     pending: VecDeque<Request>,
     active: Vec<Active>,
     swapped: Vec<Swapped>,
@@ -615,10 +645,14 @@ struct Worker<'a> {
     /// round.
     spare: Option<Box<dyn SequenceBackend>>,
     /// `Some` while a graceful drain is in progress: no admissions, no
-    /// cold-tier resumes; actives run until the deadline, then
+    /// pager resumes; actives run until the deadline, then
     /// [`Worker::complete_drain`] migrates everything left.
     drain: Option<DrainGoal>,
 }
+
+/// Rounds a swapped sequence may sit parked before admission starts
+/// reserving its resume footprint out of the scheduler's headroom.
+const STARVATION_ROUNDS: usize = 4;
 
 impl Worker<'_> {
     /// KV bytes the budget must reserve for the hot tier: every active
@@ -698,7 +732,7 @@ impl Worker<'_> {
             match Verdict::of(&self.swapped[i].req) {
                 Some(v) => {
                     let s = self.swapped.swap_remove(i);
-                    self.tier.discard(s.req.id);
+                    self.pager.discard(s.req.id);
                     let total_s = s.started.elapsed().as_secs_f64() + s.queue_wait_s;
                     v.record(total_s, self.metrics);
                     let resp = Response {
@@ -720,8 +754,8 @@ impl Worker<'_> {
         reaped
     }
 
-    /// Swap the `idx`-th active sequence out to the cold tier. Returns
-    /// false (and leaves the sequence hot) if the snapshot or the tier
+    /// Swap the `idx`-th active sequence out to the pager. Returns
+    /// false (and leaves the sequence hot) if the snapshot or the pager
     /// write fails — preemption is an optimization, never a correctness
     /// risk.
     fn preempt(&mut self, idx: usize) -> bool {
@@ -733,13 +767,17 @@ impl Worker<'_> {
                 return false;
             }
         };
-        if let Err(e) = self.tier.put(id, &snap) {
-            crate::log_error!("cold tier write failed for request {id}: {e:#}; not preempting");
+        // The policy's accumulated attention mass (H2O) ranks this
+        // sequence's history blocks for eviction; scoring only — bytes
+        // round-trip bit-identically regardless.
+        let profile = self.active[idx].backend.attention_profile();
+        if let Err(e) = self.pager.put(id, &snap, profile.as_deref()) {
+            crate::log_error!("pager write failed for request {id}: {e:#}; not preempting");
             return false;
         }
         let a = self.active.swap_remove(idx);
         // Dropping the backend releases the hot KV memory; only the
-        // compressed snapshot (cold tier) and the bookkeeping survive.
+        // compressed snapshot (pager tiers) and the bookkeeping survive.
         self.swapped.push(Swapped {
             req: a.req,
             generated: a.generated,
@@ -749,8 +787,9 @@ impl Worker<'_> {
             tok_latencies: a.tok_latencies,
             cost_bytes: a.cost_bytes,
             preemptions: a.preemptions + 1,
+            parked_rounds: 0,
         });
-        self.metrics.record_preemption(self.tier.bytes_resident());
+        self.metrics.record_preemption(self.pager.bytes_resident());
         true
     }
 
@@ -758,9 +797,9 @@ impl Worker<'_> {
     /// have headroom, smallest remaining work first. Runs *after* the
     /// round's admissions, so queued work the scheduler prefers always
     /// outranks a restore — a parked sequence can't ping-pong through
-    /// the cold tier while shorter requests keep arriving. When nothing
+    /// the pager while shorter requests keep arriving. When nothing
     /// else is runnable (no actives, no pending), one sequence is
-    /// resumed unconditionally so the cold tier can always drain.
+    /// resumed unconditionally so the pager can always drain.
     fn resume_round(&mut self, factory: &mut BackendFactory) -> usize {
         let mut resumed = 0;
         while !self.swapped.is_empty() && self.active.len() < self.cfg.max_batch {
@@ -781,13 +820,17 @@ impl Worker<'_> {
                 return resumed;
             }
             let s = self.swapped.swap_remove(idx);
-            let snap = match self.tier.take(s.req.id) {
+            // Wall-clock this take blocks the round — near zero when the
+            // prefetch thread already landed the disk blocks.
+            let take_started = Instant::now();
+            let snap = match self.pager.take(s.req.id) {
                 Ok(x) => x,
                 Err(e) => {
-                    fail_swapped(s, &format!("cold tier read failed: {e:#}"), self.metrics);
+                    fail_swapped(s, &format!("pager read failed: {e:#}"), self.metrics);
                     continue;
                 }
             };
+            let restore_stall_s = take_started.elapsed().as_secs_f64();
             let mut backend = match self.take_or_build_backend(factory) {
                 Ok(b) => b,
                 Err(e) => {
@@ -805,7 +848,8 @@ impl Worker<'_> {
                 fail_swapped(s, &format!("restore failed: {e:#}"), self.metrics);
                 continue;
             }
-            self.metrics.record_restore(self.tier.bytes_resident());
+            self.metrics
+                .record_restore(self.pager.bytes_resident(), restore_stall_s);
             self.active.push(Active {
                 req: s.req,
                 backend,
@@ -824,12 +868,51 @@ impl Worker<'_> {
         resumed
     }
 
+    /// Queue pager prefetches for the sequences the *next* resume round
+    /// is likely to pick — same smallest-remaining-work order as
+    /// [`Worker::resume_round`], bounded by the batch headroom those
+    /// resumes could actually use. Runs between resume and decode, so
+    /// the background reads overlap the decode round about to execute
+    /// instead of stalling the following one. Pure I/O: a wrong guess
+    /// wastes a read, never changes bytes.
+    fn prefetch_expected_resumes(&mut self) {
+        if self.swapped.is_empty() || self.drain.is_some() {
+            return;
+        }
+        let mut order: Vec<(usize, u64)> = self
+            .swapped
+            .iter()
+            .map(|s| (s.req.n_new.saturating_sub(s.generated.len()), s.req.id))
+            .collect();
+        order.sort_unstable();
+        // At least one candidate even with a full batch: retirement can
+        // open a slot before the next resume round runs.
+        let slots = (self.cfg.max_batch - self.active.len().min(self.cfg.max_batch)).max(1);
+        let ids: Vec<u64> = order.into_iter().take(slots).map(|(_, id)| id).collect();
+        self.pager.prefetch(&ids);
+    }
+
     /// Collect this round's admission set under the batch-size and
     /// KV-budget constraints, consulting the scheduler for ordering and
     /// (under pressure) preemption. See the module docs for the round
     /// structure and the escape hatch.
     fn collect_admissions(&mut self, factory: &mut BackendFactory) -> Vec<Admit> {
         let mut admitted: Vec<Admit> = Vec::new();
+        // Resume-cost pricing: sequences parked past the starvation
+        // threshold get their footprint reserved out of the headroom
+        // the scheduler is offered, so this round's admissions leave
+        // room for next round's restores. The escape hatch below is
+        // deliberately exempt — when nothing is running, admitting over
+        // budget is still better than idling.
+        for s in &mut self.swapped {
+            s.parked_rounds += 1;
+        }
+        let resume_reserved: usize = self
+            .swapped
+            .iter()
+            .filter(|s| s.parked_rounds >= STARVATION_ROUNDS)
+            .map(|s| s.cost_bytes)
+            .sum();
         // Queue descriptors, priced once per round (every fresh backend
         // carries the same policy configuration, so one backend prices
         // every candidate's pre-charge) and kept in lockstep with
@@ -882,7 +965,10 @@ impl Worker<'_> {
                     .collect();
             }
             let committed = self.committed_bytes(&admitted);
-            let headroom = self.cfg.kv_budget_bytes.map(|b| b.saturating_sub(committed));
+            let headroom = self
+                .cfg
+                .kv_budget_bytes
+                .map(|b| b.saturating_sub(committed + resume_reserved));
             let pick = match self.scheduler.pick_admission(&queued, headroom) {
                 Some(i) => i,
                 None => {
@@ -1311,7 +1397,7 @@ impl Worker<'_> {
             }
         }
         for s in std::mem::take(&mut self.swapped) {
-            match self.tier.take(s.req.id) {
+            match self.pager.take(s.req.id) {
                 Ok(snap) => {
                     self.metrics.record_drained();
                     let resp = Response {
@@ -1334,7 +1420,7 @@ impl Worker<'_> {
                     });
                 }
                 Err(e) => {
-                    fail_swapped(s, &format!("cold tier read failed during drain: {e:#}"), self.metrics);
+                    fail_swapped(s, &format!("pager read failed during drain: {e:#}"), self.metrics);
                 }
             }
         }
@@ -1351,8 +1437,11 @@ impl Worker<'_> {
             let _ = req.reply.send(resp);
         }
         self.metrics.record_kv(0, 0);
-        self.metrics
-            .record_cold_tier(self.tier.bytes_resident(), self.tier.stats());
+        self.metrics.record_pager(
+            self.pager.warm_bytes_resident(),
+            self.pager.disk_bytes_resident(),
+            self.pager.stats(),
+        );
         let _ = goal.reply.send(DrainBundle { seqs });
     }
 }
@@ -1367,7 +1456,16 @@ fn worker_loop(
         cfg,
         metrics,
         scheduler: cfg.scheduler.build(),
-        tier: ColdTier::with_faults(cfg.cold_tier_dir.clone(), cfg.faults.clone()),
+        pager: Pager::with_faults(
+            PagerConfig {
+                disk_dir: cfg.disk_dir.clone(),
+                warm_budget_bytes: cfg.warm_budget_bytes,
+                block_bytes: super::pager::DEFAULT_BLOCK_BYTES,
+                scoring: cfg.pager_scoring,
+                prefetch: cfg.pager_prefetch,
+            },
+            cfg.faults.clone(),
+        ),
         pending: VecDeque::new(),
         active: Vec::new(),
         swapped: Vec::new(),
@@ -1435,6 +1533,10 @@ fn worker_loop(
         } else {
             w.resume_round(factory)
         };
+        // Overlap: kick background restores for the sequences the *next*
+        // round is expected to resume, so their disk blocks land while
+        // this round's decode GEMMs run.
+        w.prefetch_expected_resumes();
 
         let kv_now: usize = w.active.iter().map(|a| a.backend.kv_bytes()).sum();
         metrics.record_kv(kv_now, w.active.len());
@@ -1443,11 +1545,15 @@ fn worker_loop(
         let retired = w.retire_finished();
 
         // Refresh the drain-state gauges *after* retirement so a fully
-        // drained plane reads zero committed KV and an empty cold tier —
+        // drained plane reads zero committed KV and empty pager tiers —
         // the no-leak observable the chaos suite asserts on.
         let kv_after: usize = w.active.iter().map(|a| a.backend.kv_bytes()).sum();
         metrics.record_kv(kv_after, w.active.len());
-        metrics.record_cold_tier(w.tier.bytes_resident(), w.tier.stats());
+        metrics.record_pager(
+            w.pager.warm_bytes_resident(),
+            w.pager.disk_bytes_resident(),
+            w.pager.stats(),
+        );
 
         // A drain completes when the hot tier empties or the grace
         // deadline passes — whichever comes first. Afterwards the worker
@@ -1610,11 +1716,11 @@ mod tests {
     }
 
     /// The preemptive tentpole, end to end: a long generation hogging
-    /// the whole budget is swapped out to the cold tier when a short
+    /// the whole budget is swapped out to the pager when a short
     /// request arrives, the short request runs to completion first, and
     /// the long one resumes **bit-identically** — same token stream as
-    /// an unpreempted direct-engine run. Exercised against both cold
-    /// tiers (in-memory and disk spill).
+    /// an unpreempted direct-engine run. Exercised against both pager
+    /// shapes (warm-only and disk spill).
     #[test]
     fn preemptive_swaps_out_long_sequence_and_resumes_bit_identically() {
         let cfg = ModelConfig::test_small();
@@ -1630,7 +1736,7 @@ mod tests {
         let disk_dir = std::env::temp_dir()
             .join(format!("cskv-preempt-test-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&disk_dir);
-        for cold_tier_dir in [None, Some(disk_dir.clone())] {
+        for disk_dir in [None, Some(disk_dir.clone())] {
             // Budget fits the long projection (126 tokens) but not long
             // + short (131): admitting the short request requires
             // swapping the long one out.
@@ -1641,7 +1747,7 @@ mod tests {
                     max_batch: 4,
                     kv_budget_bytes: Some(budget),
                     scheduler: SchedulerKind::Preemptive,
-                    cold_tier_dir,
+                    disk_dir,
                     ..Default::default()
                 },
             );

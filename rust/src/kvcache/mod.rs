@@ -87,7 +87,7 @@ pub mod snapshot;
 pub use bibranch::{CskvCache, CskvConfig, QuantMode};
 pub use full::FullCache;
 pub use prefix::{PrefixCache, PrefixRef, PrefixStats};
-pub use snapshot::{KvSnapshot, SnapReader, SnapWriter};
+pub use snapshot::{merge_blocks, split_blocks, KvSnapshot, SnapReader, SnapWriter, SnapshotBlock};
 
 use crate::compress::quant::{quantize_block, QuantAxis, QuantizedBlock, GROUP};
 use crate::tensor::{ops, Mat};
@@ -460,6 +460,17 @@ pub trait KvCachePolicy: Send {
     /// memory. Estimates use full-precision accounting (an upper bound
     /// for quantized stores), which keeps admission conservative.
     fn kv_bytes_projected(&self, tokens: usize) -> usize;
+
+    /// Accumulated attention mass per **absolute token position**, for
+    /// policies that track it (H2O's eviction scores). The pager uses
+    /// this to rank a preempted sequence's history blocks — low-mass
+    /// spans spill to colder tiers first. `None` (the default) means the
+    /// policy has no signal and the pager falls back to age/position
+    /// scoring. Purely an eviction-ordering hint: it never affects
+    /// restored state or token streams.
+    fn attention_profile(&self) -> Option<Vec<f32>> {
+        None
+    }
 
     /// Serialize the complete cache state in the policy's **own**
     /// representation (CSKV: low-rank features / int4 groups + window;

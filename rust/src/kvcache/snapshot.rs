@@ -184,6 +184,144 @@ impl KvSnapshot {
     }
 }
 
+/// `"KVBK"` — a block run of a split snapshot, distinct from a whole
+/// snapshot so a stray block file can never decode as one.
+const BLOCK_MAGIC: u32 = 0x4b56_424b;
+
+/// Block frame: magic + index + total + payload length, then the
+/// payload, then a CRC-32 of everything before it.
+const BLOCK_HEADER_BYTES: usize = 16;
+const BLOCK_FOOTER_BYTES: usize = 4;
+
+/// One independently storable run of a split snapshot.
+///
+/// The pager spills and promotes these instead of whole-sequence blobs:
+/// a run is a contiguous byte range of the snapshot's **encoded** form
+/// (`[KvSnapshot::encode]` output), framed with its own position
+/// (`index` of `total`) and CRC-32 so corruption at rest is detected
+/// per block, before reassembly. Because runs are byte ranges of the
+/// canonical encoding, [`merge_blocks`] reproduces the original encoded
+/// bytes exactly — bit-identical for every policy at every boundary —
+/// and the merged form still carries the snapshot's own end-to-end CRC,
+/// which [`KvSnapshot::decode`] re-verifies.
+///
+/// Since every policy payload stores each layer's rows in token order,
+/// a run's byte offset fraction tracks the token-position fraction to
+/// first order — which is what lets the pager map per-token attention
+/// mass onto byte blocks for eviction scoring (see
+/// `coordinator::pager`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotBlock {
+    /// Position of this run within the split (0-based).
+    pub index: usize,
+    /// Number of runs the snapshot was split into.
+    pub total: usize,
+    /// Raw byte range of the encoded snapshot.
+    pub payload: Vec<u8>,
+}
+
+impl SnapshotBlock {
+    /// Bytes this block occupies in its at-rest encoded form.
+    pub fn size_bytes(&self) -> usize {
+        BLOCK_HEADER_BYTES + self.payload.len() + BLOCK_FOOTER_BYTES
+    }
+
+    /// Self-describing at-rest form (magic + index + total + length +
+    /// payload + CRC-32) — what the warm tier holds and the disk tier
+    /// stores one file per block.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes());
+        out.extend_from_slice(&BLOCK_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(self.index as u32).to_le_bytes());
+        out.extend_from_slice(&(self.total as u32).to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<SnapshotBlock> {
+        anyhow::ensure!(
+            bytes.len() >= BLOCK_HEADER_BYTES + BLOCK_FOOTER_BYTES,
+            "snapshot block truncated: {} bytes",
+            bytes.len()
+        );
+        let word = |i: usize| u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+        anyhow::ensure!(word(0) == BLOCK_MAGIC, "bad snapshot block magic {:#x}", word(0));
+        let body = bytes.len() - BLOCK_FOOTER_BYTES;
+        let (stored, computed) = (word(body), crc32(&bytes[..body]));
+        anyhow::ensure!(
+            stored == computed,
+            "snapshot block checksum mismatch (stored {stored:#010x}, computed {computed:#010x}): \
+             block corrupted"
+        );
+        let (index, total, len) = (word(4) as usize, word(8) as usize, word(12) as usize);
+        anyhow::ensure!(
+            len == body - BLOCK_HEADER_BYTES,
+            "snapshot block length prefix {len} != body {}",
+            body - BLOCK_HEADER_BYTES
+        );
+        anyhow::ensure!(total > 0 && index < total, "snapshot block index {index} of {total}");
+        Ok(SnapshotBlock {
+            index,
+            total,
+            payload: bytes[BLOCK_HEADER_BYTES..body].to_vec(),
+        })
+    }
+}
+
+/// Split an encoded snapshot (the [`KvSnapshot::encode`] byte form) into
+/// `ceil(len / block_bytes)` runs of at most `block_bytes` each. Every
+/// byte lands in exactly one run, in order; `block_bytes` of 0 is
+/// treated as 1.
+pub fn split_blocks(encoded: &[u8], block_bytes: usize) -> Vec<SnapshotBlock> {
+    let step = block_bytes.max(1);
+    let total = encoded.len().div_ceil(step).max(1);
+    (0..total)
+        .map(|i| SnapshotBlock {
+            index: i,
+            total,
+            payload: encoded[i * step..((i + 1) * step).min(encoded.len())].to_vec(),
+        })
+        .collect()
+}
+
+/// Reassemble the runs of one snapshot back into its encoded byte form.
+/// Accepts the blocks in any order; verifies that exactly `total` runs
+/// with contiguous indices 0..total are present (each exactly once) and
+/// that they agree on `total`. The output is bit-identical to the
+/// `encoded` slice that was split, so `KvSnapshot::decode` re-verifies
+/// the snapshot's own CRC end to end.
+pub fn merge_blocks(blocks: &[SnapshotBlock]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(!blocks.is_empty(), "merge of zero snapshot blocks");
+    let total = blocks[0].total;
+    anyhow::ensure!(
+        blocks.len() == total,
+        "snapshot block set incomplete: {} of {total} runs",
+        blocks.len()
+    );
+    let mut ordered: Vec<Option<&SnapshotBlock>> = vec![None; total];
+    for b in blocks {
+        anyhow::ensure!(
+            b.total == total,
+            "snapshot block run-count mismatch ({} vs {total})",
+            b.total
+        );
+        anyhow::ensure!(b.index < total, "snapshot block index {} of {total}", b.index);
+        anyhow::ensure!(
+            ordered[b.index].replace(b).is_none(),
+            "duplicate snapshot block index {}",
+            b.index
+        );
+    }
+    let mut out = Vec::with_capacity(blocks.iter().map(|b| b.payload.len()).sum());
+    for slot in ordered {
+        out.extend_from_slice(&slot.expect("all indices present").payload);
+    }
+    Ok(out)
+}
+
 /// Append-only payload writer. All integers are LE u64 (usize) / u32 /
 /// u8; f32 slices are raw LE bits, so round-trips are bit-exact.
 #[derive(Default)]
@@ -484,6 +622,54 @@ mod tests {
         r.expect_end().unwrap();
         assert_eq!(back.tag(), tags::ASVD);
         assert_eq!(back.payload(), inner.payload());
+    }
+
+    #[test]
+    fn block_split_merge_bit_identical_at_every_boundary() {
+        let snap = KvSnapshot::new(tags::CSKV, (0..=255u8).cycle().take(777).collect());
+        let encoded = snap.encode();
+        for block_bytes in [1, 2, 3, 7, 64, 100, encoded.len() - 1, encoded.len(), 10_000] {
+            let blocks = split_blocks(&encoded, block_bytes);
+            assert_eq!(blocks.len(), encoded.len().div_ceil(block_bytes.max(1)).max(1));
+            // At-rest round-trip per block, then reassembly in shuffled order.
+            let mut stored: Vec<SnapshotBlock> = blocks
+                .iter()
+                .map(|b| SnapshotBlock::decode(&b.encode()).unwrap())
+                .collect();
+            stored.reverse();
+            let merged = merge_blocks(&stored).unwrap();
+            assert_eq!(merged, encoded, "block_bytes={block_bytes}");
+            let back = KvSnapshot::decode(&merged).unwrap();
+            assert_eq!(back.tag(), snap.tag());
+            assert_eq!(back.payload(), snap.payload());
+        }
+    }
+
+    #[test]
+    fn block_codec_rejects_corruption_and_bad_sets() {
+        let snap = KvSnapshot::new(tags::H2O, (0..200u8).collect());
+        let blocks = split_blocks(&snap.encode(), 64);
+        assert!(blocks.len() >= 3);
+        // Any single-byte flip in a block's at-rest form is rejected.
+        let bytes = blocks[1].encode();
+        for off in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x20;
+            assert!(SnapshotBlock::decode(&bad).is_err(), "flip at {off}");
+        }
+        assert!(SnapshotBlock::decode(&bytes[..bytes.len() - 1]).is_err());
+        // A block file is not a snapshot and vice versa.
+        assert!(KvSnapshot::decode(&bytes).is_err());
+        assert!(SnapshotBlock::decode(&snap.encode()).is_err());
+        // Incomplete, duplicated, and cross-snapshot sets are rejected.
+        assert!(merge_blocks(&blocks[..blocks.len() - 1]).is_err());
+        let mut dup = blocks.clone();
+        dup[0] = dup[1].clone();
+        assert!(merge_blocks(&dup).is_err());
+        let mut crossed = blocks.clone();
+        crossed[2].total = 99;
+        assert!(merge_blocks(&crossed).is_err());
+        assert!(merge_blocks(&[]).is_err());
     }
 
     #[test]

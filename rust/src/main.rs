@@ -11,21 +11,25 @@
 //! --kv-budget-kb N --threads N --sequential` plus the control plane:
 //! `--scheduler {fifo,size-aware,preemptive}` picks the admission/
 //! preemption policy (fifo = strict arrival order; size-aware = shortest
-//! work first within the KV budget; preemptive = size-aware + cold-tier
-//! swap-out under budget pressure), `--cold-tier <dir>` spills
-//! preempted KV snapshots to a directory instead of holding them in
-//! memory (requires `--scheduler preemptive`), and
-//! `--prefix-cache-kb N` enables the coordinator's radix prefix cache
-//! with an N-KiB byte budget (admission then charges only each
-//! request's unshared suffix), and `--request-timeout <secs>` gives
-//! every request a deadline — a request still queued or decoding past
-//! it is answered `"deadline exceeded"` (with its partial tokens, if
-//! any) and its KV/cold-tier state released at the next round boundary.
-//! Invalid combinations — a zero prefix budget, a non-positive request
-//! timeout, an unwritable cold-tier dir, a cold tier without the
-//! preemptive scheduler, or zero `--requests/--n-new/--ctx/--max-batch`
-//! — are rejected up front with a clear error instead of failing
-//! mid-round.
+//! work first within the KV budget; preemptive = size-aware + pager
+//! swap-out under budget pressure). The pager's tier hierarchy is sized
+//! by `--hot-kb N` (alias of `--kv-budget-kb`: the hot-tier KV budget),
+//! `--warm-kb N` (byte budget for preempted block runs held encoded in
+//! RAM), and `--disk-dir <dir>` (`--cold-tier` kept as an alias: where
+//! over-budget blocks spill; all three pager flags require `--scheduler
+//! preemptive`); `--pager-scoring {attention,age}` picks the eviction
+//! priority and `--no-prefetch` disables overlapped restores (A/B
+//! baselines for `bench_perf_paging`). `--prefix-cache-kb N` enables
+//! the coordinator's radix prefix cache with an N-KiB byte budget
+//! (admission then charges only each request's unshared suffix), and
+//! `--request-timeout <secs>` gives every request a deadline — a
+//! request still queued or decoding past it is answered `"deadline
+//! exceeded"` (with its partial tokens, if any) and its KV/pager state
+//! released at the next round boundary. Invalid combinations — a zero
+//! prefix budget, a non-positive request timeout, an unwritable disk
+//! dir, pager tiers without the preemptive scheduler, or zero
+//! `--requests/--n-new/--ctx/--max-batch` — are rejected up front with
+//! a clear error instead of failing mid-round.
 //!
 //! With `--listen <ip:port>` the demo loop is replaced by the HTTP/1.1
 //! front-end ([`cskv::coordinator::http`]): `POST /generate` streams
@@ -293,15 +297,38 @@ fn validate_serve_flags(args: &Args, coord_cfg: &CoordinatorConfig) -> anyhow::R
              (omit the flag to let requests wait indefinitely)"
         );
     }
-    if let Some(dir) = &coord_cfg.cold_tier_dir {
+    if let Some(dir) = &coord_cfg.disk_dir {
         anyhow::ensure!(
             matches!(coord_cfg.scheduler, cskv::coordinator::SchedulerKind::Preemptive),
-            "--cold-tier only takes effect with --scheduler preemptive \
+            "--disk-dir only takes effect with --scheduler preemptive \
              (got {}); drop the flag or switch scheduler",
             coord_cfg.scheduler.name()
         );
-        cskv::coordinator::ColdTier::probe_dir(dir)
-            .map_err(|e| anyhow::anyhow!("--cold-tier dir unusable: {e}"))?;
+        cskv::coordinator::Pager::probe_dir(dir)
+            .map_err(|e| anyhow::anyhow!("--disk-dir unusable: {e}"))?;
+    }
+    if let Some(v) = args.get_opt("hot-kb") {
+        anyhow::ensure!(
+            v.parse::<usize>().is_ok(),
+            "--hot-kb must be a non-negative KiB budget, got {v:?} \
+             (0 disables the hot-tier budget, like --kv-budget-kb)"
+        );
+    }
+    if let Some(v) = args.get_opt("warm-kb") {
+        anyhow::ensure!(
+            matches!(coord_cfg.scheduler, cskv::coordinator::SchedulerKind::Preemptive),
+            "--warm-kb only takes effect with --scheduler preemptive \
+             (got {}); drop the flag or switch scheduler",
+            coord_cfg.scheduler.name()
+        );
+        anyhow::ensure!(
+            v.parse::<usize>().is_ok(),
+            "--warm-kb must be a non-negative KiB budget, got {v:?} \
+             (0 spills every preempted block to --disk-dir)"
+        );
+    }
+    if let Some(v) = args.get_opt("pager-scoring") {
+        cskv::coordinator::EvictionScoring::parse(&v)?;
     }
     // HTTP front-end flags (only meaningful with --listen, but validated
     // whenever supplied so a typo'd invocation fails loudly either way).
@@ -346,7 +373,12 @@ fn validate_serve_flags(args: &Args, coord_cfg: &CoordinatorConfig) -> anyhow::R
 fn serve(args: &Args) -> anyhow::Result<()> {
     let n_req = args.get_usize("requests", 16);
     let n_new = args.get_usize("n-new", vocab::VALUE_LEN);
-    let budget_kb = args.get_usize("kv-budget-kb", 0);
+    // --hot-kb is the pager-era spelling of the hot-tier KV budget;
+    // --kv-budget-kb stays as the original alias.
+    let budget_kb = match args.get_opt("hot-kb") {
+        Some(v) => v.parse::<usize>().unwrap_or(0),
+        None => args.get_usize("kv-budget-kb", 0),
+    };
     let coord_cfg = CoordinatorConfig {
         max_batch: args.get_usize("max-batch", 4),
         kv_budget_bytes: if budget_kb == 0 { None } else { Some(budget_kb * 1024) },
@@ -359,8 +391,26 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         scheduler: cskv::coordinator::SchedulerKind::parse(
             &args.get_str("scheduler", "fifo"),
         )?,
-        // --cold-tier <dir>: spill preempted KV snapshots to disk.
-        cold_tier_dir: args.get_opt("cold-tier").map(std::path::PathBuf::from),
+        // --disk-dir <dir> (--cold-tier kept as an alias): spill
+        // over-budget pager blocks to disk.
+        disk_dir: args
+            .get_opt("disk-dir")
+            .or_else(|| args.get_opt("cold-tier"))
+            .map(std::path::PathBuf::from),
+        // --warm-kb N: RAM budget for preempted block runs (encoded).
+        warm_budget_bytes: args
+            .get_opt("warm-kb")
+            .and_then(|v| v.parse::<usize>().ok().map(|kb| kb * 1024)),
+        // --pager-scoring attention|age: spill-priority policy.
+        pager_scoring: args
+            .get_opt("pager-scoring")
+            .map(|v| {
+                cskv::coordinator::EvictionScoring::parse(&v)
+                    .expect("checked by validate_serve_flags")
+            })
+            .unwrap_or_default(),
+        // --no-prefetch: disable overlapped restores (A/B baseline).
+        pager_prefetch: !args.get_flag("no-prefetch"),
         // --prefix-cache-kb N: shared-prefix KV reuse across requests.
         prefix_cache_bytes: args.get_opt("prefix-cache-kb").and_then(|v| {
             v.parse::<usize>().ok().map(|kb| kb * 1024)
@@ -449,8 +499,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             cskv::util::table::bytes(snap.prefix_bytes_peak),
         );
     }
-    if let Some(health) = snap.cold_tier_health() {
-        println!("  cold tier: {health}");
+    if let Some(tiers) = snap.pager_tiers() {
+        println!("  pager: {tiers}");
+    }
+    if let Some(health) = snap.pager_health() {
+        println!("  pager health: {health}");
     }
     println!("  retrieval accuracy: {:.2}", correct as f64 / n_req as f64);
     snap.summary_table().print();

@@ -132,8 +132,15 @@ impl Bencher {
 
     /// Write all recorded results as JSON: `{bench, git_rev, unit,
     /// results: {name: {median_ns, mean_ns, p95_ns, iters}}}`. Used to
-    /// track the perf trajectory across PRs.
+    /// track the perf trajectory across PRs. Creates the parent
+    /// directory (`runs/` under a fresh checkout or CI workspace) so a
+    /// bench never fails at the write-out step.
     pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
         let mut results = Json::obj();
         for r in &self.results {
             results.set(

@@ -3,7 +3,7 @@
 //! Production I/O faults (a full disk, a flaky mount, a corrupted blob)
 //! are rare and unreproducible; this module makes them *scheduled*. A
 //! [`FaultInjector`] is a registry of **named fault points** — strings
-//! like `"coldtier.write"` — that production code consults on its error
+//! like `"pager.write"` — that production code consults on its error
 //! paths. Each armed point carries a [`FaultMode`] deciding which hits
 //! fire (fail-the-Nth, fail-from-the-Nth, fail-with-probability) and a
 //! PRNG forked deterministically from the injector's seed and the point
@@ -19,9 +19,9 @@
 //!
 //! | point | consulted by | effect when fired |
 //! |-------|--------------|-------------------|
-//! | `coldtier.write` | each spill-write attempt | that attempt errors |
-//! | `coldtier.read`  | each spill-read attempt  | that attempt errors |
-//! | `snapshot.corrupt` | cold-tier restore, pre-decode | one seeded byte of the encoded blob is flipped |
+//! | `pager.write` | each block spill-write attempt | that attempt errors |
+//! | `pager.read`  | each block read attempt (sync restore *and* background prefetch) | that attempt errors |
+//! | `snapshot.corrupt` | pager restore, pre-decode | one seeded byte of the re-merged blob is flipped |
 //! | `backend.build` | worker backend construction | the build errors |
 //! | `http.accept` | the HTTP accept loop, per connection | the connection is dropped before any byte is read (client sees a reset) |
 //! | `http.write` | each SSE data frame (pings exempt) | the frame is truncated mid-write ("short write"), surfacing `BrokenPipe` → the request is cancelled |

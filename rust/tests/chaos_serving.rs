@@ -9,17 +9,20 @@
 //! * **Exactly one `Response` per submit** — faulted requests answer
 //!   with an error (plus any partial tokens), never a dropped channel.
 //! * **No hang** — every `recv` below returns; `shutdown` drains.
-//! * **No budget leak** — after drain, committed KV bytes and cold-tier
-//!   residency both read zero.
+//! * **No budget leak** — after drain, committed KV bytes and pager
+//!   residency (warm + disk) both read zero.
 //! * **Blast-radius containment** — co-scheduled sequences untouched by
 //!   the fault produce token streams bit-identical to a fault-free run
 //!   (the direct-engine oracle).
 //!
-//! Fault points exercised: `coldtier.write` (transient → retry;
-//! persistent → degrade-to-memory), `coldtier.read` (persistent → one
-//! failed restore), `snapshot.corrupt` (CRC-32 rejection), and
-//! `backend.build` (one failed admission). Deadline expiry, mid-decode
-//! cancellation, and submit-time validation round out the lifecycle.
+//! Fault points exercised: `pager.write` (transient → retry; persistent
+//! → degrade-to-warm), `pager.read` (transient → prefetch falls back to
+//! a successful synchronous restore; persistent → one failed restore),
+//! `snapshot.corrupt` (CRC-32 rejection), and `backend.build` (one
+//! failed admission). Deadline expiry, mid-decode cancellation,
+//! submit-time validation, and warm-tier pressure (budget exceeded with
+//! no disk to spill to — admission must keep making progress) round out
+//! the lifecycle.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -91,10 +94,10 @@ fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
 }
 
 /// The no-leak invariant: a drained plane holds zero committed KV bytes
-/// and an empty cold tier.
+/// and an empty pager (both tiers).
 fn assert_drained(snap: &MetricsSnapshot) {
     assert_eq!(snap.kv_bytes_current, 0, "committed KV must refund to zero after drain");
-    assert_eq!(snap.cold_bytes_current, 0, "cold tier must be empty after drain");
+    assert_eq!(snap.cold_bytes_current, 0, "pager must be empty after drain");
 }
 
 /// The proven preemption geometry (same as the scheduler tests): a long
@@ -108,7 +111,7 @@ fn preemptive_cfg(budget_tokens: usize, faults: FaultInjector, dir: Option<std::
         max_batch: 4,
         kv_budget_bytes: Some(ModelConfig::test_small().kv_bytes_full(budget_tokens)),
         scheduler: SchedulerKind::Preemptive,
-        cold_tier_dir: dir,
+        disk_dir: dir,
         faults,
         ..Default::default()
     }
@@ -130,7 +133,7 @@ fn transient_spill_write_fault_is_retried_and_invisible() {
     let _ = std::fs::remove_dir_all(&dir);
 
     let faults = FaultInjector::seeded(chaos_seed());
-    faults.arm("coldtier.write", FaultMode::Nth(1));
+    faults.arm("pager.write", FaultMode::Nth(1));
     let coord = Coordinator::start(full_setup(5), preemptive_cfg(128, faults, Some(dir.clone())));
     let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
     wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
@@ -145,8 +148,8 @@ fn transient_spill_write_fault_is_retried_and_invisible() {
     assert_eq!(snap.requests_completed, 2);
     assert_eq!(snap.requests_failed, 0);
     assert!(snap.preemptions >= 1);
-    assert!(snap.cold_tier.spill_retries >= 1, "the injected write fault was retried");
-    assert!(!snap.cold_tier.degraded, "one transient fault must not degrade the tier");
+    assert!(snap.pager.spill_retries >= 1, "the injected write fault was retried");
+    assert!(!snap.pager.degraded, "one transient fault must not degrade the tier");
     assert_drained(&snap);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -165,7 +168,7 @@ fn persistent_spill_faults_degrade_tier_without_losing_requests() {
     let _ = std::fs::remove_dir_all(&dir);
 
     let faults = FaultInjector::seeded(chaos_seed() ^ 1);
-    faults.arm("coldtier.write", FaultMode::FromNth(1));
+    faults.arm("pager.write", FaultMode::FromNth(1));
     // Budget fits the long projection (1206 tokens) but not long + short.
     let coord = Coordinator::start(full_setup(6), preemptive_cfg(1206, faults, Some(dir.clone())));
     let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
@@ -194,8 +197,8 @@ fn persistent_spill_faults_degrade_tier_without_losing_requests() {
     assert_eq!(snap.requests_failed, 0, "a failing disk must not fail any request");
     assert!(snap.preemptions >= 2, "got {} preemptions", snap.preemptions);
     assert_eq!(snap.restores, snap.preemptions);
-    assert!(snap.cold_tier.spill_retries >= 4);
-    assert!(snap.cold_tier.degraded, "persistent write faults must degrade the tier");
+    assert!(snap.pager.spill_retries >= 4);
+    assert!(snap.pager.degraded, "persistent write faults must degrade the tier");
     assert_drained(&snap);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -212,7 +215,7 @@ fn unreadable_cold_blob_fails_only_its_own_sequence() {
     let _ = std::fs::remove_dir_all(&dir);
 
     let faults = FaultInjector::seeded(chaos_seed() ^ 2);
-    faults.arm("coldtier.read", FaultMode::FromNth(1));
+    faults.arm("pager.read", FaultMode::FromNth(1));
     let coord = Coordinator::start(full_setup(7), preemptive_cfg(128, faults.clone(), Some(dir.clone())));
     let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
     wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
@@ -231,9 +234,9 @@ fn unreadable_cold_blob_fails_only_its_own_sequence() {
     let snap = coord.shutdown();
     assert_eq!(snap.requests_completed, 1);
     assert_eq!(snap.requests_failed, 1);
-    assert!(snap.cold_tier.read_retries >= 3, "all read attempts were retried");
+    assert!(snap.pager.read_retries >= 3, "all read attempts were retried");
     assert_drained(&snap);
-    assert!(faults.trips("coldtier.read") >= 3);
+    assert!(faults.trips("pager.read") >= 3);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -266,7 +269,7 @@ fn corrupt_snapshot_is_rejected_by_checksum_not_decoded() {
     let snap = coord.shutdown();
     assert_eq!(snap.requests_completed, 1);
     assert_eq!(snap.requests_failed, 1);
-    assert_eq!(snap.cold_tier.corrupt_restores, 1);
+    assert_eq!(snap.pager.corrupt_restores, 1);
     assert_drained(&snap);
 }
 
@@ -424,5 +427,89 @@ fn invalid_submits_get_immediate_error_responses() {
     let snap = coord.shutdown();
     assert_eq!(snap.requests_failed, 2);
     assert_eq!(snap.requests_completed, 1);
+    assert_drained(&snap);
+}
+
+/// A transient `pager.read` fault hits the overlapped prefetch (or the
+/// first synchronous attempt — whichever the schedule reaches first):
+/// the restore degrades to a successful synchronous re-read, both
+/// streams stay bit-identical to the fault-free oracle, and no request
+/// fails.
+#[test]
+fn prefetch_read_fault_degrades_to_synchronous_restore() {
+    let (long_n, short_n) = (120usize, 2usize);
+    let want_long = oracle(14, &LONG_PROMPT, long_n);
+    let want_short = oracle(14, &SHORT_PROMPT, short_n);
+    let dir = tmp("pfdegrade");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let faults = FaultInjector::seeded(chaos_seed() ^ 5);
+    faults.arm("pager.read", FaultMode::Nth(1));
+    let coord = Coordinator::start(full_setup(14), preemptive_cfg(128, faults.clone(), Some(dir.clone())));
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    let short = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+    assert!(short.error.is_none(), "{:?}", short.error);
+    assert_eq!(short.tokens, want_short, "co-scheduled stream must be untouched");
+    let long = long_rx.recv().unwrap();
+    assert!(
+        long.error.is_none(),
+        "a transient read fault must degrade to a sync restore, not fail: {:?}",
+        long.error
+    );
+    assert_eq!(long.tokens, want_long, "degraded restore must stay bit-identical");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 2);
+    assert_eq!(snap.requests_failed, 0);
+    assert!(snap.preemptions >= 1);
+    assert_eq!(snap.restores, snap.preemptions, "every swap still resumes");
+    assert_eq!(faults.trips("pager.read"), 1, "exactly the armed attempt fired");
+    assert!(snap.pager.read_retries >= 1, "the failed attempt is visible in health");
+    assert_drained(&snap);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Persistent warm-tier pressure — a warm budget far too small for even
+/// one parked sequence and *no* disk tier to spill to — must never
+/// deadlock admission: the pager holds blocks warm over budget rather
+/// than dropping them, every preempted sequence restores bit-identically,
+/// and the plane still drains to zero.
+#[test]
+fn warm_tier_pressure_never_deadlocks_admission() {
+    let (long_n, short_n) = (120usize, 2usize);
+    let want_long = oracle(15, &LONG_PROMPT, long_n);
+    let want_short = oracle(15, &SHORT_PROMPT, short_n);
+
+    let mut cfg = preemptive_cfg(128, FaultInjector::none(), None);
+    // A handful of bytes: every parked block run exceeds this.
+    cfg.warm_budget_bytes = Some(64);
+    let coord = Coordinator::start(full_setup(15), cfg);
+    let long_rx = coord.submit(LONG_PROMPT.to_vec(), long_n);
+    wait_until("long request hot", || coord.metrics().kv_bytes_current() > 0);
+    // Repeated short requests keep re-triggering preemption while the
+    // warm tier is permanently over budget.
+    for _ in 0..3 {
+        let short = coord.submit_wait(SHORT_PROMPT.to_vec(), short_n);
+        assert!(short.error.is_none(), "{:?}", short.error);
+        assert_eq!(short.tokens, want_short);
+    }
+    let long = long_rx.recv().unwrap();
+    assert!(long.error.is_none(), "{:?}", long.error);
+    assert_eq!(
+        long.tokens, want_long,
+        "over-budget warm blocks must still restore bit-identically"
+    );
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests_completed, 4);
+    assert_eq!(snap.requests_failed, 0, "warm pressure must not fail requests");
+    assert!(snap.preemptions >= 1);
+    assert_eq!(snap.restores, snap.preemptions);
+    assert!(
+        snap.pager.warm_bytes_peak > 64,
+        "blocks were held warm past the budget rather than dropped"
+    );
+    assert!(!snap.pager.degraded, "over-budget warm is pressure, not degradation");
     assert_drained(&snap);
 }

@@ -10,7 +10,8 @@ use cskv::compress::{LayerFactors, LowRankFactors, ModelFactors};
 use cskv::baselines::{AsvdCache, H2oCache, StreamingLlmCache};
 use cskv::tensor::matmul;
 use cskv::kvcache::{
-    CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy, KvSnapshot, QuantMode,
+    merge_blocks, split_blocks, CskvCache, CskvConfig, DecodeView, FullCache, KvCachePolicy,
+    KvSnapshot, QuantMode,
 };
 use cskv::model::engine::DecodeState;
 use cskv::model::{engine::Engine, ModelConfig, ModelWeights};
@@ -491,6 +492,73 @@ fn snapshot_restore_decode_bit_identical_to_unpreempted() {
                     assert_eq!(a.rope_pos, b.rope_pos, "{name}: rope L{li}");
                     assert_eq!(a.abs_pos, b.abs_pos, "{name}: abs L{li}");
                 }
+            }
+        }
+    }
+}
+
+/// The pager's block codec contract, over *real* policy snapshots: for
+/// every policy variant, splitting the encoded snapshot into block runs
+/// at arbitrary boundaries, round-tripping each block through its own
+/// framed byte form (what the warm/disk tiers store), and re-merging —
+/// in any assembly order — must reproduce the original encoded bytes
+/// exactly, and the re-merged form must decode + restore bit-identically.
+/// This is what makes block-granular spill/promote safe for all six
+/// policies: blocks are byte ranges of the canonical encoding, so no
+/// policy-specific structure can straddle a boundary incorrectly.
+#[test]
+fn snapshot_block_split_merge_bit_identical_for_all_policies() {
+    let cfg = ModelConfig::test_small();
+    let engine = Engine::new(Arc::new(ModelWeights::init(&cfg, 11)));
+    let ctx = 64usize;
+    let mut rng = Pcg64::new(0xB10C);
+    let tokens: Vec<usize> = (0..ctx).map(|_| rng.range(16, 250)).collect();
+    let n_policies = preemptable_policies().len();
+    for pi in 0..n_policies {
+        let mut policy = preemptable_policies().swap_remove(pi);
+        let name = policy.name();
+        let rec = engine.prefill(&tokens, Some(policy.as_mut()));
+        let mut state = DecodeState::new(&engine.w.cfg);
+        let mut tok = ops::argmax(rec.logits.row(ctx - 1));
+        for i in 0..3 {
+            tok = ops::argmax(engine.decode_step_with(policy.as_mut(), tok, ctx + i, &mut state));
+        }
+        let encoded = policy.snapshot().encode();
+        // Arbitrary boundaries: degenerate 1-byte blocks, primes that
+        // leave ragged tails, the exact length, and oversized.
+        for block_bytes in [1usize, 7, 64, 1024, encoded.len().max(2) - 1, encoded.len(), encoded.len() + 9] {
+            let blocks = split_blocks(&encoded, block_bytes);
+            assert_eq!(
+                blocks.iter().map(|b| b.payload.len()).sum::<usize>(),
+                encoded.len(),
+                "{name}: blocks partition the encoding (block_bytes={block_bytes})"
+            );
+            // Frame round-trip per block, reassembled in reverse order —
+            // merge must sort by index, not arrival.
+            let mut framed: Vec<_> = blocks
+                .iter()
+                .map(|b| {
+                    cskv::kvcache::SnapshotBlock::decode(&b.encode())
+                        .unwrap_or_else(|e| panic!("{name}: block frame round-trip: {e:#}"))
+                })
+                .collect();
+            framed.reverse();
+            let merged = merge_blocks(&framed)
+                .unwrap_or_else(|e| panic!("{name}: merge failed (block_bytes={block_bytes}): {e:#}"));
+            assert_eq!(
+                merged, encoded,
+                "{name}: split/merge must be bit-identical (block_bytes={block_bytes})"
+            );
+            let snap = KvSnapshot::decode(&merged)
+                .unwrap_or_else(|e| panic!("{name}: re-merged decode: {e:#}"));
+            let mut restored = preemptable_policies().swap_remove(pi);
+            restored
+                .restore(&snap)
+                .unwrap_or_else(|e| panic!("{name}: restore from re-merged blocks: {e:#}"));
+            for li in 0..engine.w.cfg.n_layers {
+                let (a, b) = (policy.materialize(li), restored.materialize(li));
+                assert_eq!(a.k.data, b.k.data, "{name}: K state L{li} block_bytes={block_bytes}");
+                assert_eq!(a.v.data, b.v.data, "{name}: V state L{li} block_bytes={block_bytes}");
             }
         }
     }
